@@ -1,0 +1,37 @@
+//! `cargo bench --bench ablations` — the design-choice ablations DESIGN.md
+//! calls out: (a) graph vs VM with host boundaries vs VM with device
+//! chaining (isolating the staging share of the executor gap); (b) VM on
+//! fp32 (executor penalty exists without quantization); (c) memory-planner
+//! arena vs unshared allocation; (d) fusion group counts.
+
+use tvmq::bench::{ablations, memplan_ablation, BenchCtx, BenchOpts};
+use tvmq::graph::passes::FusionPass;
+use tvmq::graph::build_resnet_ir;
+use tvmq::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts {
+        epochs: std::env::var("TVMQ_BENCH_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(110),
+        warmup: 10,
+    };
+    let ctx = BenchCtx::new(&tvmq::default_artifacts_dir(), opts)?;
+    ablations(&ctx)?.print();
+    memplan_ablation(&ctx)?.print();
+
+    // Fusion-group ablation on the IR (analysis: dispatches saved).
+    let g = build_resnet_ir(1, 32, 7)?;
+    let fused = FusionPass { enabled: true }.plan(&g)?;
+    let unfused = FusionPass { enabled: false }.plan(&g)?;
+    let mut t = Table::new(
+        "Fusion ablation — dispatch groups (IR analysis)",
+        &["Config", "Groups", "Dispatches saved"],
+    );
+    t.row(vec!["fused".into(), fused.group_count().to_string(), "-".into()]);
+    t.row(vec![
+        "unfused (per-op)".into(),
+        unfused.group_count().to_string(),
+        format!("{}", unfused.group_count() - fused.group_count()),
+    ]);
+    t.print();
+    Ok(())
+}

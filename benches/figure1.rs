@@ -1,0 +1,40 @@
+//! `cargo bench --bench figure1` — regenerates Figure 1: NCHW{c} spatial
+//! packing.  Measures the locality effect directly (packed vs unpacked conv
+//! of identical math in the rust interpreter) plus pack/unpack transform
+//! costs across block sizes.
+
+use std::time::Instant;
+
+use tvmq::layout::{pack_nchwc, unpack_nchwc, Nchw};
+use tvmq::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let reps = std::env::var("TVMQ_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let table = tvmq::bench::figure1(reps)?;
+    table.print();
+
+    // Transform micro-costs.
+    let (n, c, h, w) = (1usize, 64usize, 32usize, 32usize);
+    let d = Nchw { n, c, h, w };
+    let x: Vec<f32> = (0..n * c * h * w).map(|i| (i % 97) as f32 * 0.01).collect();
+    let mut t = Table::new(
+        "Figure 1 (cont.) — pack/unpack transform cost",
+        &["c_block", "pack (µs)", "unpack (µs)"],
+    );
+    for cb in [4usize, 8, 16] {
+        let t0 = Instant::now();
+        let mut xp = Vec::new();
+        for _ in 0..50 {
+            xp = pack_nchwc(&x, d, cb)?;
+        }
+        let pack_us = t0.elapsed().as_secs_f64() * 1e6 / 50.0;
+        let t1 = Instant::now();
+        for _ in 0..50 {
+            std::hint::black_box(unpack_nchwc(&xp, d, cb)?);
+        }
+        let unpack_us = t1.elapsed().as_secs_f64() * 1e6 / 50.0;
+        t.row(vec![cb.to_string(), format!("{pack_us:.1}"), format!("{unpack_us:.1}")]);
+    }
+    t.print();
+    Ok(())
+}

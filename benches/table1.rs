@@ -1,0 +1,30 @@
+//! `cargo bench --bench table1` — regenerates Table 1 (executor comparison,
+//! batch 1): eager fp32 / graph fp32 / VM int8 (the bug) / graph int8 (the
+//! fix), under the paper's 110-epoch protocol.
+//!
+//! Offline build: no criterion; the in-tree harness (`tvmq::metrics`)
+//! provides the measurement protocol and table rendering.
+
+use tvmq::bench::{table1, BenchCtx, BenchOpts};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts {
+        epochs: std::env::var("TVMQ_BENCH_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(110),
+        warmup: 10,
+    };
+    let ctx = BenchCtx::new(&tvmq::default_artifacts_dir(), opts)?;
+    let (table, rows) = table1(&ctx)?;
+    table.print();
+    // Shape assertions from DESIGN.md §5: int8+VM slower than fp32+graph,
+    // int8+graph faster; eager slowest.
+    let ms = |label: &str| {
+        rows.iter().find(|r| r.label.contains(label)).map(|r| r.mean_ms).unwrap_or(f64::NAN)
+    };
+    let (eager, fp32, vm, fix) =
+        (ms("Eager"), ms("tvmq"), ms("tvmq-Quant"), ms("tvmq-Quant-Graph"));
+    println!(
+        "shape check: eager({eager:.2}) > vm-int8({vm:.2}) > fp32({fp32:.2}) > graph-int8({fix:.2})  => {}",
+        if eager > fp32 && vm > fp32 && fix < fp32 { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! `cargo bench --bench table2` — regenerates Table 2: the five
+//! schedule × layout × precision rows at batch 1 plus the ideal-speedup
+//! column from the analytic perfmodel.
+
+use tvmq::bench::{table2, BenchCtx, BenchOpts};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts {
+        epochs: std::env::var("TVMQ_BENCH_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(110),
+        warmup: 10,
+    };
+    let ctx = BenchCtx::new(&tvmq::default_artifacts_dir(), opts)?;
+    let (table, rows) = table2(&ctx)?;
+    table.print();
+    // Shape: NCHW sp int8 fastest int8; NHWC sp fp32 slowest overall.
+    let ms = |l: &str, s: &str, p: &str| {
+        rows.iter()
+            .find(|r| r.layout == l && r.schedule == s && r.precision == p)
+            .map(|r| r.mean_ms)
+            .unwrap_or(f64::NAN)
+    };
+    let best = ms("NCHW", "spatial_pack", "int8");
+    let worst = ms("NHWC", "spatial_pack", "fp32");
+    let fp32 = ms("NCHW", "spatial_pack", "fp32");
+    let holds = best < fp32
+        && worst > fp32
+        && best <= ms("NCHW", "simd", "int8")
+        && best <= ms("NHWC", "interleaved", "int8");
+    println!(
+        "shape check: packed-int8({best:.2}) fastest, NHWC-fp32({worst:.2}) slowest => {}",
+        if holds { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! `cargo bench --bench table3` — regenerates Table 3: the fp32-vs-int8
+//! batch sweep under the best layout/schedule, with the memory column from
+//! the footprint model (intermediates fp32 in both precisions, §3.2.2).
+
+use tvmq::bench::{table3, BenchCtx, BenchOpts};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts {
+        epochs: std::env::var("TVMQ_BENCH_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(110),
+        warmup: 10,
+    };
+    let ctx = BenchCtx::new(&tvmq::default_artifacts_dir(), opts)?;
+    let batches = ctx.manifest.batch_buckets("NCHW", "spatial_pack", "int8", "graph");
+    let (table, rows) = table3(&ctx, &batches)?;
+    table.print();
+    // Shape: int8 improvement grows (or at least does not shrink much) with
+    // batch size — the memory-bandwidth story.
+    let imp: Vec<(usize, f64)> = batches
+        .iter()
+        .map(|&b| {
+            let r = rows
+                .iter()
+                .find(|r| r.label == format!("b{b}/int8"))
+                .expect("int8 row");
+            (b, r.improvement_pct)
+        })
+        .collect();
+    println!("int8 improvement by batch: {imp:?}");
+    if let (Some(first), Some(last)) = (imp.first(), imp.last()) {
+        println!(
+            "shape check: improvement b{}({:.1}%) -> b{}({:.1}%) {}",
+            first.0, first.1, last.0, last.1,
+            if last.1 >= first.1 * 0.9 { "HOLDS (grows/holds)" } else { "VIOLATED (shrinks)" }
+        );
+    }
+    Ok(())
+}

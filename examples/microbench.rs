@@ -1,0 +1,79 @@
+//! Micro-benchmark: load an arbitrary single-function HLO text file and time
+//! it on the PJRT CPU client.  Used during the perf pass to compare the
+//! runtime's executed speed of individual ops (e.g. int8 vs f32 dots)
+//! against the jax-side numbers.
+//!
+//! Usage:
+//!   cargo run --release --example microbench -- <hlo.txt> \
+//!       --inputs "1024x512:s8,512x256:s8" [--reps 50]
+
+use anyhow::{bail, Context, Result};
+use tvmq::runtime::{DType, TensorData};
+use tvmq::util::cli::Args;
+use tvmq::util::rng::Rng64;
+
+fn parse_inputs(spec: &str) -> Result<Vec<(Vec<usize>, DType)>> {
+    spec.split(',')
+        .map(|item| {
+            let (dims, dt) = item
+                .split_once(':')
+                .with_context(|| format!("input spec {item:?}: want DIMSxDIMS:dtype"))?;
+            let shape: Vec<usize> = dims
+                .split('x')
+                .map(|d| d.parse().with_context(|| format!("bad dim {d:?}")))
+                .collect::<Result<_>>()?;
+            Ok((shape, DType::parse(dt)))
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let Some(path) = args.subcommand.clone() else {
+        bail!("usage: microbench <hlo.txt> --inputs SHAPE:dtype[,..] [--reps 50]");
+    };
+    let inputs = parse_inputs(&args.str("inputs", "1024x512:s8,512x256:s8"))?;
+    let reps = args.usize("reps", 50)?;
+
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compile: {e}"))?;
+
+    let mut rng = Rng64::seed_from_u64(7);
+    let lits: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|(shape, dt)| {
+            let n: usize = shape.iter().product();
+            let t = match dt {
+                DType::S8 => {
+                    let v: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+                    TensorData::from_i8(shape.clone(), &v)
+                }
+                DType::F32 => {
+                    let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                    TensorData::from_f32(shape.clone(), &v)
+                }
+                DType::S32 => {
+                    let v: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32 % 1000).collect();
+                    TensorData::from_i32(shape.clone(), &v)
+                }
+            }?;
+            tvmq::runtime::to_literal(&t)
+        })
+        .collect::<Result<_>>()?;
+
+    // Warmup.
+    for _ in 0..3 {
+        exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let r = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow::anyhow!("{e}"))?;
+        std::hint::black_box(&r);
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!("{path}: {ms:.3} ms/exec over {reps} reps");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quantization pipeline walkthrough on the rust graph IR: build a ResNet
+//! IR, calibrate on synthetic data, realize int8, inspect scales and error
+//! metrics, then show the layout-alteration pipeline — the full TVM-style
+//! compile flow without touching the AOT artifacts.
+//!
+//! Run: `cargo run --release --example quantize_calibrate`
+
+use anyhow::Result;
+use tvmq::graph::passes::{
+    calibrate_graph, quantize_graph_with_report, AlterConvLayout, CancelLayoutTransforms,
+    ConstantFold, FusionPass, PassManager,
+};
+use tvmq::graph::{build_resnet_ir, calibrate_ir, evaluate, Op};
+use tvmq::metrics::Table;
+use tvmq::quant::{abs_max_scale, quant_error};
+
+fn main() -> Result<()> {
+    let g = build_resnet_ir(1, 32, 7)?;
+    println!(
+        "IR: {} nodes, {} KiB of constants",
+        g.len(),
+        g.const_bytes() / 1024
+    );
+
+    // --- Calibration ---
+    let calib = calibrate_ir(&g, 42);
+    let scales = calibrate_graph(&g, &calib)?;
+    let mut t = Table::new(
+        "Per-anchor calibration scales (abs-max / 127)",
+        &["Node", "Scale", "Weight scale", "Weight SQNR (dB)"],
+    );
+    for node in &g.nodes {
+        if let Some(s) = scales.get(&node.id) {
+            let w_node = &g.nodes[node.inputs[1]];
+            if let Op::Constant(tvmq::graph::ir::ConstValue::F32(w)) = &w_node.op {
+                let sw = abs_max_scale(w);
+                let err = quant_error(w, sw);
+                t.row(vec![
+                    node.name.clone(),
+                    format!("{s:.5}"),
+                    format!("{sw:.5}"),
+                    format!("{:.1}", err.sqnr_db),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // --- Realize + end-to-end quality ---
+    let eval = calibrate_ir(&g, 77);
+    let (qg, sqnr) = quantize_graph_with_report(&g, &calib, &eval)?;
+    println!(
+        "realized int8 graph: {} -> {} nodes, output SQNR {:.1} dB",
+        g.len(), qg.len(), sqnr
+    );
+    let f_cls = evaluate(&g, &eval)?.argmax_last()?;
+    let q_cls = evaluate(&qg, &eval)?.argmax_last()?;
+    println!("fp32 class {:?} vs int8 class {:?}", f_cls, q_cls);
+
+    // --- Layout + fusion pipeline ---
+    let pm = PassManager::new()
+        .add(AlterConvLayout { c_block: 16, k_block: 16 })
+        .add(CancelLayoutTransforms)
+        .add(ConstantFold);
+    let packed = pm.run(&g)?;
+    let fused = FusionPass { enabled: true }.plan(&g)?;
+    let unfused = FusionPass { enabled: false }.plan(&g)?;
+    println!(
+        "layout pipeline: {} -> {} nodes; fusion: {} groups (vs {} per-op dispatches)",
+        g.len(), packed.len(), fused.group_count(), unfused.group_count()
+    );
+    println!("quantize_calibrate OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Quickstart — the end-to-end driver (DESIGN.md §End-to-end validation).
+//!
+//! Loads the AOT-compiled quantized ResNet artifacts, starts the batching
+//! inference server (graph executor, int8 best schedule), drives it with
+//! concurrent synthetic clients, and reports latency/throughput plus the
+//! executor-contrast sanity check the paper's Table 1 is built on.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use tvmq::coordinator::{InferenceServer, ServeConfig};
+use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
+use tvmq::manifest::Manifest;
+use tvmq::runtime::{synthetic_images, Runtime, TensorData};
+
+fn main() -> Result<()> {
+    let artifacts = tvmq::default_artifacts_dir();
+    let m = Manifest::load(&artifacts)?;
+    println!(
+        "model: {} @ {}px, {} params, {} artifact bundles",
+        m.arch, m.image_size, m.param_count, m.bundles.len()
+    );
+
+    // --- 1. Single inference through both executors (the paper's contrast) ---
+    let rt = std::rc::Rc::new(Runtime::new()?);
+    let x = synthetic_images(1, &[m.in_channels, m.image_size, m.image_size], 42);
+
+    let graph = GraphExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph")?,
+    )?;
+    let vm = VmExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "vm")?,
+    )?;
+    let t0 = Instant::now();
+    let lg = graph.run(&x)?;
+    let graph_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let lv = vm.run(&x)?;
+    let vm_ms = t1.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "graph executor: {:.2} ms (1 dispatch)   vm executor: {:.2} ms ({} dispatches, {} dynamic allocs)",
+        graph_ms, vm_ms,
+        vm.counters().dispatches, vm.counters().dynamic_allocs
+    );
+    assert_eq!(lg.argmax_last()?, lv.argmax_last()?, "executors disagree");
+
+    // --- 2. Batched serving (the memory-bound regime of Table 3) ---
+    let server = Arc::new(InferenceServer::start(
+        artifacts.clone(),
+        ServeConfig {
+            max_batch: 64,
+            batch_timeout: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )?);
+    println!("serving with batch buckets {:?}", server.buckets);
+
+    let clients = 16usize;
+    let per_client = 32usize;
+    let t2 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let rest = vec![m.in_channels, m.image_size, m.image_size];
+        handles.push(std::thread::spawn(move || -> Result<Vec<usize>> {
+            let mut classes = Vec::new();
+            for i in 0..per_client {
+                let img: TensorData = synthetic_images(1, &rest, (c * 1000 + i) as u64);
+                classes.push(s.submit_blocking(img)?.class);
+            }
+            Ok(classes)
+        }));
+    }
+    let mut served = 0usize;
+    for h in handles {
+        served += h.join().expect("client thread")?.len();
+    }
+    let wall = t2.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let lat = stats.latency_stats();
+    println!(
+        "served {served} requests in {wall:.2}s -> {:.1} req/s, mean batch {:.1}",
+        served as f64 / wall,
+        stats.mean_batch()
+    );
+    println!(
+        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms  (batches={}, padded slots={})",
+        lat.p50_ms, lat.p95_ms, lat.p99_ms, stats.batches, stats.padded_slots
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+"""HLO-text lowering: the jax → rust interchange layer.
+
+The interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Functions are lowered single-output (``return_tuple=False``) so PJRT hands
+back plain array buffers the VM can chain device-to-device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+_DTYPES = {"f32": jnp.float32, "s8": jnp.int8, "s32": jnp.int32}
+
+
+def dtype_of(tag: str):
+    return _DTYPES[tag]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: every module here is single-output, and untupled
+    # results let the VM chain device buffers directly (PJRT returns the
+    # tuple as one opaque 8-byte buffer otherwise).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, in_specs, batch: int) -> str:
+    """Lower ``fn(*xs) -> y`` at a concrete batch size to HLO text.
+
+    ``in_specs`` is a list of ``(shape, dtype_tag)``; shapes use -1 for the
+    batch dimension.
+    """
+    specs = [
+        jax.ShapeDtypeStruct(
+            tuple(batch if d == -1 else d for d in shape), dtype_of(dtype)
+        )
+        for shape, dtype in in_specs
+    ]
+    lowered = jax.jit(lambda *xs: (fn(*xs),)).lower(*specs)
+    return to_hlo_text(lowered)

@@ -1,0 +1,39 @@
+"""L1: Pallas kernels — the tensor-optimization layer (TVM schedules, rebuilt).
+
+One kernel per (schedule × precision) conv2d strategy the paper benchmarks
+(Table 2), plus the qnn boundary operators and dense.  Everything here is
+lowered with ``interpret=True`` (see ``pallas_utils.INTERPRET``) so the HLO
+runs on the rust CPU PJRT client; ``ref.py`` holds the pure-jnp oracles.
+"""
+
+from .conv_interleaved import conv2d_quantized_interleaved_nhwc, im2col_nhwc
+from .conv_nhwc import conv2d_spatial_pack_nhwc
+from .conv_simd import conv2d_simd_int8
+from .conv_spatial_pack import conv2d_spatial_pack_nchw
+from .nn_ops import (
+    add,
+    bias_add,
+    dense,
+    global_avgpool,
+    maxpool2d,
+    relu,
+)
+from .qdq import dequantize, quantize, requantize, requantize_fixed_point
+
+__all__ = [
+    "conv2d_quantized_interleaved_nhwc",
+    "conv2d_simd_int8",
+    "conv2d_spatial_pack_nchw",
+    "conv2d_spatial_pack_nhwc",
+    "im2col_nhwc",
+    "add",
+    "bias_add",
+    "dense",
+    "global_avgpool",
+    "maxpool2d",
+    "relu",
+    "quantize",
+    "dequantize",
+    "requantize",
+    "requantize_fixed_point",
+]

@@ -1,0 +1,99 @@
+"""NHWC ``spatial_pack`` conv2d — the paper's worst-performing schedule.
+
+In TVM's NHWC spatial pack "the data is WC-packed, and it only parallelizes
+the H axis by a factor of 4 without additional blocking" (§3.2.1) — no
+channel blocking, no K slabs, fp32 math.  The paper measures it at 35.15 ms
+vs 13.29 ms for the NCHW packed schedule: the deliberate weak point of
+Table 2, kept weak here for fidelity.
+
+Structure: grid = (N, output-row tiles of 4) only.  Each step computes ALL K
+output channels for its 4 rows in one un-blocked fp32 contraction — large
+working set, no reuse slab, minimal parallel structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .pallas_utils import INTERPRET, cdiv, round_up
+from . import ref
+
+
+def _nhwc_conv_kernel(x_ref, w_ref, o_ref, *, stride, R, S, OW, TH, C, K):
+    """One (n, ht) grid step: a (TH, OW, K) output slab (all channels).
+
+    x_ref: (1, Hp, Wp, C) fp32; w_ref: (R, S, C, K) fp32;
+    o_ref: (1, TH, OW, K) fp32.
+    """
+    ht = pl.program_id(1)
+    xb = x_ref[0]
+    th_in = (TH - 1) * stride + R
+    xwin = lax.dynamic_slice(xb, (ht * TH * stride, 0, 0), (th_in, xb.shape[1], C))
+    wb = w_ref[...]
+
+    acc = jnp.zeros((TH * OW, K), jnp.float32)
+    for r in range(R):
+        for s in range(S):
+            patch = lax.slice(
+                xwin,
+                (r, s, 0),
+                (r + (TH - 1) * stride + 1, s + (OW - 1) * stride + 1, C),
+                (stride, stride, 1),
+            )  # (TH, OW, C) — channels-last, no gather needed…
+            acc = acc + lax.dot_general(
+                patch.reshape(TH * OW, C),
+                wb[r, s],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # …but fp32 and un-blocked over K.
+    o_ref[0] = acc.reshape(TH, OW, K)
+
+
+def conv2d_spatial_pack_nhwc(
+    x,
+    w,
+    stride: int = 1,
+    padding: int = 0,
+    h_tile: int = 4,
+):
+    """NHWC spatial-pack conv2d (fp32).
+
+    ``x``: (N, H, W, C) fp32; ``w``: (R, S, C, K) fp32 (HWIO).
+    Returns (N, OH, OW, K) fp32.
+    """
+    N, H, W, C = x.shape
+    R, S, Cw, K = w.shape
+    assert C == Cw
+
+    OH = ref.conv_out_size(H, R, stride, padding)
+    OW = ref.conv_out_size(W, S, stride, padding)
+    TH = min(h_tile, OH)
+    OHt = cdiv(OH, TH)
+
+    need_h = (OHt * TH - 1) * stride + R
+    hp_total = max(H + 2 * padding, need_h)
+    xp = jnp.pad(
+        x, ((0, 0), (padding, hp_total - H - padding), (padding, padding), (0, 0))
+    )
+    Hp, Wp = xp.shape[1], xp.shape[2]
+
+    kernel = functools.partial(
+        _nhwc_conv_kernel, stride=stride, R=R, S=S, OW=OW, TH=TH, C=C, K=K
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(N, OHt),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda n, ht: (n, 0, 0, 0)),
+            pl.BlockSpec((R, S, C, K), lambda n, ht: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TH, OW, K), lambda n, ht: (n, ht, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, OHt * TH, OW, K), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, w)
+    return out[:, :OH]

@@ -1,0 +1,170 @@
+"""``nchw_spatial_pack`` conv2d — the paper's NCHW{c} blocked schedule (Fig. 1).
+
+TVM's ``nchw_spatial_pack`` converts activations to NCHW{c} (channel-blocked)
+and weights to OIHW{i}{o}, so the innermost loops walk contiguous ``c_block``
+lanes, and parallelizes H in tiles of 4.  The TPU/Pallas re-expression
+(DESIGN.md §Hardware-Adaptation):
+
+- the channel block becomes the minor-most (lane) dimension of the packed
+  arrays — a single cheap gather per grid step instead of one per filter tap;
+- the H×4 parallelism becomes a grid axis over output-row tiles;
+- the K (output channel) blocking becomes a grid axis over ``k_block`` slabs;
+- the filter-tap loop is unrolled into R*S strided-slice + matmul pairs whose
+  contraction runs over the *packed-contiguous* channel axis.
+
+Both precisions share one kernel body.  The int8 variant keeps tensors s8
+through memory (the storage/bandwidth advantage this substrate can express)
+and contracts via the exact f32 emulation described in ``pallas_utils`` —
+the deployment XLA (0.5.1 CPU) has no s8 GEMM fast path, so the ALU-width
+speedup is modelled analytically (perfmodel), not executed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .pallas_utils import EXACT_CHUNK, INTERPRET, cdiv, pad_axis_to, round_up
+from . import ref
+
+
+def _packed_conv_kernel(
+    x_ref, w_ref, o_ref, *, stride, R, S, OW, TH, C, kb, accum_dtype
+):
+    """One (n, ko, ht) grid step: a (TH, OW, kb) output tile.
+
+    x_ref: (1, Hp, Wp, C)   — sample ``n``, channel-packed (co*cb flattened)
+    w_ref: (1, R, S, C, kb) — weight slab ``ko``
+    o_ref: (1, 1, TH, OW, kb)
+    """
+    ht = pl.program_id(2)
+    xb = x_ref[0]  # (Hp, Wp, C)
+    th_in = (TH - 1) * stride + R
+    hin0 = ht * TH * stride
+    # Input row window for this output-row tile.  The wrapper pads H so this
+    # slice is always in bounds (dynamic_slice clamping would mis-align rows).
+    xwin = lax.dynamic_slice(xb, (hin0, 0, 0), (th_in, xb.shape[1], C))
+    wb = w_ref[0]  # (R, S, C, kb)
+
+    int8_in = accum_dtype == jnp.int32
+    if int8_in:
+        # int8 path (exact f32 emulation, see pallas_utils): the s8 window
+        # is widened ONCE — all nine overlapping tap reads then hit the
+        # cache-resident f32 copy, while the cold-memory traffic stayed s8.
+        # Tap results are narrowed to int32 before accumulation so partial
+        # sums never leave the exact range (9 taps × C ≤ 1040 × 127² can
+        # exceed 2^24 in f32, one tap cannot).
+        xwin = xwin.astype(jnp.float32)
+        wb = wb.astype(jnp.float32)
+    acc = jnp.zeros((TH * OW, kb), accum_dtype)
+    for r in range(R):
+        for s in range(S):
+            patch = lax.slice(
+                xwin,
+                (r, s, 0),
+                (r + (TH - 1) * stride + 1, s + (OW - 1) * stride + 1, C),
+                (stride, stride, 1),
+            )  # (TH, OW, C)
+            pm = patch.reshape(TH * OW, C)
+            tap = lax.dot_general(
+                pm, wb[r, s], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc + (tap.astype(jnp.int32) if int8_in else tap)
+    o_ref[0, 0] = acc.reshape(TH, OW, kb)
+
+
+def conv2d_spatial_pack_nchw(
+    x,
+    w,
+    stride: int = 1,
+    padding: int = 0,
+    c_block: int = 16,
+    k_block: int = 16,
+    h_tile: int = 4,
+):
+    """Spatially-packed conv2d, NCHW in / NCHW out.
+
+    ``x``: (N, C, H, W) fp32 or int8; ``w``: (K, C, R, S) same dtype.
+    Returns (N, K, OH, OW) — fp32 for fp32 inputs, int32 accumulators for
+    int8 inputs (requantization is a separate graph operator, as in TVM).
+    """
+    N, C, H, W = x.shape
+    K, Cw, R, S = w.shape
+    assert C == Cw, f"channel mismatch {C} vs {Cw}"
+    int8_in = x.dtype == jnp.int8
+    accum_dtype = jnp.int32 if int8_in else jnp.float32
+    if int8_in:
+        assert C <= EXACT_CHUNK, (
+            f"int8 spatial_pack: C={C} exceeds the exact f32-emulation range"
+        )
+
+    OH = ref.conv_out_size(H, R, stride, padding)
+    OW = ref.conv_out_size(W, S, stride, padding)
+    TH = min(h_tile, OH)
+    OHt = cdiv(OH, TH)
+    kb = min(k_block, K)
+    Kp = round_up(K, kb)
+
+    # Channel-pack: pad C to the block, move the block to the minor axis.
+    cb = min(c_block, C)
+    Cp = round_up(C, cb)
+    xq = pad_axis_to(x, 1, Cp)
+    wq = pad_axis_to(pad_axis_to(w, 1, Cp), 0, Kp)
+
+    # NCHW -> N H W (Co*cb): the Figure-1 packed layout with the co/cb pair
+    # flattened so kernels contract over one contiguous axis.
+    xp = (
+        xq.reshape(N, Cp // cb, cb, H, W)
+        .transpose(0, 3, 4, 1, 2)
+        .reshape(N, H, W, Cp)
+    )
+    # Weights -> (Ko, R, S, Co*cb, kb), co-major to match the activation pack.
+    wp = (
+        wq.reshape(Kp // kb, kb, Cp // cb, cb, R, S)
+        .transpose(0, 4, 5, 2, 3, 1)
+        .reshape(Kp // kb, R, S, Cp, kb)
+    )
+
+    # Spatial pad; extend H so every output-row tile's input window is
+    # in-bounds (see kernel comment).
+    need_h = (OHt * TH - 1) * stride + R
+    hp_total = max(H + 2 * padding, need_h)
+    xp = jnp.pad(
+        xp,
+        ((0, 0), (padding, hp_total - H - padding), (padding, padding), (0, 0)),
+    )
+    Hp, Wp = xp.shape[1], xp.shape[2]
+
+    kernel = functools.partial(
+        _packed_conv_kernel,
+        stride=stride,
+        R=R,
+        S=S,
+        OW=OW,
+        TH=TH,
+        C=Cp,
+        kb=kb,
+        accum_dtype=accum_dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(N, Kp // kb, OHt),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cp), lambda n, ko, ht: (n, 0, 0, 0)),
+            pl.BlockSpec((1, R, S, Cp, kb), lambda n, ko, ht: (ko, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, TH, OW, kb), lambda n, ko, ht: (n, ko, ht, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, Kp // kb, OHt * TH, OW, kb), accum_dtype),
+        interpret=INTERPRET,
+    )(xp, wp)
+
+    # Unpack NKhw{k} -> NKHW and strip padding.
+    out = out.transpose(0, 1, 4, 2, 3).reshape(N, Kp, OHt * TH, OW)
+    return out[:, :K, :OH, :]

@@ -1,0 +1,93 @@
+"""Remaining network operators: dense (Pallas), pooling, residual add.
+
+The paper's analysis centres on conv2d ("the most computationally intensive
+task in our model", §3.2.1); dense is the only other MXU-shaped op in
+ResNet and gets Pallas kernels in both precisions.  Pooling and element-wise
+ops are bandwidth-bound and stay plain XLA ops — exactly as TVM leaves them
+to generic schedules.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .pallas_utils import INTERPRET, cdiv, int8_matmul, pad_axis_to, round_up
+from . import ref
+
+
+def _dense_kernel(x_ref, w_ref, o_ref, *, accum_dtype):
+    if accum_dtype == jnp.int32:
+        o_ref[...] = int8_matmul(x_ref[...], w_ref[...])
+    else:
+        o_ref[...] = lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=accum_dtype,
+        )
+
+
+def dense(x, w, m_tile: int = 128):
+    """Tiled matmul: (M, K) @ (K, N) -> (M, N).
+
+    fp32 -> fp32; int8 -> int32 accumulators (operands stay int8 in the dot).
+    """
+    M, K = x.shape
+    Kw, N = w.shape
+    assert K == Kw
+    int8_in = x.dtype == jnp.int8
+    accum_dtype = jnp.int32 if int8_in else jnp.float32
+
+    TM = min(m_tile, M)
+    Mp = round_up(M, TM)
+    xq = pad_axis_to(x, 0, Mp)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, accum_dtype=accum_dtype),
+        grid=(Mp // TM,),
+        in_specs=[
+            pl.BlockSpec((TM, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), accum_dtype),
+        interpret=INTERPRET,
+    )(xq, w)
+    return out[:M]
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-bound ops (plain XLA, both layouts)
+# ---------------------------------------------------------------------------
+
+def maxpool2d(x, window: int, stride: int, padding: int = 0, layout: str = "NCHW"):
+    if layout == "NCHW":
+        dims, strides = (1, 1, window, window), (1, 1, stride, stride)
+        pads = [(0, 0), (0, 0), (padding, padding), (padding, padding)]
+    else:  # NHWC
+        dims, strides = (1, window, window, 1), (1, stride, stride, 1)
+        pads = [(0, 0), (padding, padding), (padding, padding), (0, 0)]
+    return lax.reduce_window(x, -jnp.inf, lax.max, dims, strides, pads)
+
+
+def global_avgpool(x, layout: str = "NCHW"):
+    axes = (2, 3) if layout == "NCHW" else (1, 2)
+    return jnp.mean(x, axis=axes)
+
+
+def add(a, b):
+    return a + b
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def bias_add(x, bias, layout: str = "NCHW"):
+    """Add a per-output-channel bias to a conv result."""
+    if layout == "NCHW":
+        return x + bias[None, :, None, None]
+    return x + bias[None, None, None, :]

@@ -1,0 +1,136 @@
+"""Shared plumbing for the Pallas kernel layer.
+
+All kernels in this package are lowered with ``interpret=True``: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret-mode ``pallas_call``
+lowers to plain HLO that any backend (including the rust runtime's
+``PjRtClient::cpu()``) runs.  On a real TPU the same kernels would be lowered
+with ``interpret=False`` — BlockSpecs are already shaped for VMEM tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Single switch for the whole kernel library; real-TPU builds flip this off.
+INTERPRET = True
+
+# Element count per grid step for element-wise kernels.  8192 * 4 B = 32 KiB
+# per block — comfortably inside a VMEM budget and large enough to amortize
+# grid overhead on CPU.
+ELEMWISE_BLOCK = 8192
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def elementwise_call(body, x, out_dtype):
+    """Run ``body(x_block) -> out_block`` over ``x`` tiled in 1-D blocks.
+
+    ``x`` may have any shape; it is flattened, zero-padded to a block
+    multiple, processed on a 1-D grid, and reshaped back.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    blk = min(ELEMWISE_BLOCK, round_up(max(n, 1), 128))
+    padded = round_up(max(n, 1), blk)
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = body(x_ref[...])
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), out_dtype),
+        interpret=INTERPRET,
+    )(flat)
+    return out[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# int8 contraction strategy
+# ---------------------------------------------------------------------------
+# The deployment runtime is xla_extension 0.5.1, whose CPU backend has no
+# fast s8×s8→s32 GEMM (it falls back to a naive loop ~5× slower than f32).
+# This is the substrate analogue of "hardware without int8 SIMD".  We
+# therefore lower int8 contractions as f32 GEMMs over the int8 operands —
+# EXACT as long as every partial sum stays below 2^24 (each int8×int8
+# product ≤ 127² = 16129 is exactly representable; f32 integer arithmetic is
+# exact up to 2^24).  Contractions longer than _EXACT_CHUNK taps are split
+# and accumulated in int32, preserving bit-exactness unconditionally.  The
+# int8 *storage* advantage (4× smaller operands through memory and cache)
+# is preserved, which is the mechanism this substrate can honestly express;
+# see DESIGN.md §Hardware-Adaptation.
+#
+# 1040 * 127 * 127 < 2^24 ≤ 1041 * 127 * 127.
+_EXACT_CHUNK = 1024
+EXACT_CHUNK = _EXACT_CHUNK
+
+import jax.lax as _lax
+
+
+def int8_matmul(a, b):
+    """(M, K) int8 × (K, N) int8 → (M, N) int32, bit-exact.
+
+    Contraction is chunked so each f32 partial sum stays in the exact
+    integer range; chunks accumulate in int32.
+    """
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    m, k = a.shape
+    _, n = b.shape
+    dims = (((1,), (0,)), ((), ()))
+
+    def one(a_c, b_c):
+        r = _lax.dot_general(
+            a_c.astype(jnp.float32), b_c.astype(jnp.float32), dims,
+            preferred_element_type=jnp.float32,
+        )
+        return r.astype(jnp.int32)
+
+    if k <= _EXACT_CHUNK:
+        return one(a, b)
+    acc = jnp.zeros((m, n), jnp.int32)
+    for start in range(0, k, _EXACT_CHUNK):
+        stop = min(start + _EXACT_CHUNK, k)
+        acc = acc + one(a[:, start:stop], b[start:stop, :])
+    return acc
+
+
+def int8_dot_general(a, b, dimension_numbers, contraction_size: int):
+    """General int8 contraction → int32 via exact f32 emulation.
+
+    ``contraction_size`` is the total number of reduced elements; it must be
+    within the exact range (callers with longer reductions use
+    :func:`int8_matmul`'s chunking or split themselves).
+    """
+    assert contraction_size <= _EXACT_CHUNK, (
+        f"contraction {contraction_size} exceeds exact f32 range; chunk it"
+    )
+    r = _lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32), dimension_numbers,
+        preferred_element_type=jnp.float32,
+    )
+    return r.astype(jnp.int32)
+
+
+def pad_axis_to(x, axis: int, size: int):
+    """Zero-pad ``x`` along ``axis`` up to ``size`` (no-op if already there)."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(x, pads)

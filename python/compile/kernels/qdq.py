@@ -1,0 +1,84 @@
+"""Quantize / dequantize / requantize Pallas kernels.
+
+These are TVM's qnn boundary operators, rebuilt: the paper (§3.2.2) observes
+that TVM's quantized graphs are stitched out of exactly two memory-traffic
+patterns — "one operator reads int8 values and writes fp32 values into
+memory, while the other reads fp32 and writes int8" — and that scales stay
+fp32.  These kernels are those operators.
+
+Scales are *static* Python floats: after calibration the quantization pass
+bakes them into the graph as constants, exactly as TVM's ``relay.quantize``
+realize step does.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .pallas_utils import elementwise_call
+
+QMIN = ref.QMIN
+QMAX = ref.QMAX
+
+
+def quantize(x, scale: float):
+    """fp32 -> int8 at per-tensor symmetric ``scale`` (reads fp32, writes int8)."""
+    inv = float(1.0 / scale)
+
+    def body(v):
+        return jnp.clip(jnp.round(v * inv), QMIN, QMAX).astype(jnp.int8)
+
+    return elementwise_call(body, x, jnp.int8)
+
+
+def dequantize(q, scale: float):
+    """int8/int32 -> fp32 at ``scale`` (reads int, writes fp32)."""
+    s = float(scale)
+
+    def body(v):
+        return v.astype(jnp.float32) * s
+
+    return elementwise_call(body, q, jnp.float32)
+
+
+def requantize(acc, in_scale: float, out_scale: float):
+    """int32 accumulator at ``in_scale`` -> int8 at ``out_scale``.
+
+    Float rescale path (TVM also offers this via ``rounding="UPWARD"`` float
+    fallback); the pure-integer path is :func:`requantize_fixed_point`.
+    """
+    m = float(in_scale / out_scale)
+
+    def body(v):
+        return jnp.clip(jnp.round(v.astype(jnp.float32) * m), QMIN, QMAX).astype(
+            jnp.int8
+        )
+
+    return elementwise_call(body, acc, jnp.int8)
+
+
+def requantize_fixed_point(acc, multiplier: int, shift: int):
+    """Pure-integer requantize (Q31 fixed-point), no float ops on the path.
+
+    Matches :func:`ref.requantize_fixed_point` bit-for-bit; use
+    :func:`ref.choose_quant_multiplier` to derive ``(multiplier, shift)``.
+    The Q31 product needs 62 bits, so tracing runs under ``enable_x64``
+    (dtypes are baked into the jaxpr; the surrounding program stays 32-bit).
+    """
+    from jax.experimental import enable_x64
+
+    mult = int(multiplier)
+    total = 31 - int(shift)
+    if total <= 0:
+        raise ValueError(f"shift={shift} too large (total={total})")
+    rounding = 1 << (total - 1)
+
+    def body(v):
+        acc64 = v.astype(jnp.int64) * jnp.int64(mult)
+        r = jnp.where(acc64 >= 0, jnp.int64(rounding), jnp.int64(rounding - 1))
+        q = (acc64 + r) >> total
+        return jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+    with enable_x64():
+        return elementwise_call(body, acc, jnp.int8)

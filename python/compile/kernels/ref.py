@@ -1,0 +1,187 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: slow, obvious, layout-naive
+implementations that the Pallas kernels (and the L2 model built from them)
+are tested against.  Integer paths are bit-exact (int32 accumulation); float
+paths are compared with ``assert_allclose``.
+
+Conventions
+-----------
+- NCHW activations are ``(N, C, H, W)``; weights are OIHW ``(K, C, R, S)``.
+- NHWC activations are ``(N, H, W, C)``; weights are HWIO ``(R, S, C, K)``.
+- ``padding`` is a single symmetric spatial pad; ``stride`` is isotropic.
+- Quantization is per-tensor symmetric int8: ``q = clip(round(x/s), -127, 127)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+QMIN = -127
+QMAX = 127
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+# ---------------------------------------------------------------------------
+
+def conv2d_nchw(x, w, stride: int = 1, padding: int = 0):
+    """fp32 reference conv, NCHW/OIHW."""
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), [(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_nchw_int8(x, w, stride: int = 1, padding: int = 0):
+    """Bit-exact int8 conv: int8 x, int8 w -> int32 accumulator.
+
+    Widened to int32 *before* the convolution so the result is exact; this is
+    the oracle only — production kernels keep operands int8 for speed.
+    """
+    return lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_nhwc(x, w, stride: int = 1, padding: int = 0):
+    """fp32 reference conv, NHWC/HWIO."""
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), [(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_nhwc_int8(x, w, stride: int = 1, padding: int = 0):
+    """Bit-exact int8 NHWC conv -> int32."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_out_size(size: int, r: int, stride: int, padding: int) -> int:
+    return (size + 2 * padding - r) // stride + 1
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize / requantize
+# ---------------------------------------------------------------------------
+
+def quantize(x, scale):
+    """fp32 -> int8, per-tensor symmetric."""
+    return jnp.clip(jnp.round(x / scale), QMIN, QMAX).astype(jnp.int8)
+
+
+def dequantize(q, scale):
+    """int8 (or int32 accumulator) -> fp32."""
+    return q.astype(jnp.float32) * scale
+
+
+def requantize(acc, in_scale, out_scale):
+    """int32 accumulator at ``in_scale`` -> int8 at ``out_scale``."""
+    return jnp.clip(
+        jnp.round(acc.astype(jnp.float32) * (in_scale / out_scale)), QMIN, QMAX
+    ).astype(jnp.int8)
+
+
+def requantize_fixed_point(acc, multiplier: int, shift: int):
+    """Pure-integer requantize: ``(acc * m) >> (31 - shift)`` with
+    round-half-away-from-zero, as TVM's qnn.requantize does it.
+
+    ``multiplier`` is a Q31 fixed-point mantissa in [2^30, 2^31); ``shift``
+    is the (possibly negative) exponent from :func:`choose_quant_multiplier`.
+    """
+    acc64 = acc.astype(jnp.int64) * jnp.int64(multiplier)
+    total = 31 - shift
+    rounding = jnp.int64(1) << (total - 1)
+    q = (acc64 + jnp.where(acc64 >= 0, rounding, rounding - 1)) >> total
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+
+def choose_quant_multiplier(real_multiplier: float) -> tuple[int, int]:
+    """Decompose a positive real multiplier into (Q31 mantissa, shift)."""
+    import math
+
+    if real_multiplier <= 0:
+        raise ValueError("multiplier must be positive")
+    mant, exp = math.frexp(real_multiplier)  # mant in [0.5, 1)
+    q = int(round(mant * (1 << 31)))
+    if q == (1 << 31):  # rounding overflow: mant was ~1.0
+        q //= 2
+        exp += 1
+    return q, exp
+
+
+def abs_max_scale(x, bits: int = 8) -> jnp.ndarray:
+    """Calibration: symmetric per-tensor scale from the absolute maximum."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+
+
+# ---------------------------------------------------------------------------
+# Dense / pooling / misc
+# ---------------------------------------------------------------------------
+
+def dense(x, w):
+    """fp32 matmul reference: (M, K) @ (K, N)."""
+    return x @ w
+
+
+def dense_int8(x, w):
+    """Bit-exact int8 matmul -> int32."""
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def maxpool2d_nchw(x, window: int, stride: int, padding: int = 0):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, window, window), (1, 1, stride, stride),
+        [(0, 0), (0, 0), (padding, padding), (padding, padding)],
+    )
+
+
+def avgpool2d_nchw(x, window: int, stride: int):
+    s = lax.reduce_window(
+        x, 0.0, lax.add, (1, 1, window, window), (1, 1, stride, stride), "VALID"
+    )
+    return s / (window * window)
+
+
+def global_avgpool_nchw(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+# ---------------------------------------------------------------------------
+# Layout packing (Figure 1: NCHW -> NCHW{c})
+# ---------------------------------------------------------------------------
+
+def pack_nchw_to_nchwc(x, c_block: int):
+    """(N, C, H, W) -> (N, C//cb, H, W, cb).  C must divide by c_block."""
+    n, c, h, w = x.shape
+    assert c % c_block == 0, f"C={c} not divisible by c_block={c_block}"
+    return x.reshape(n, c // c_block, c_block, h, w).transpose(0, 1, 3, 4, 2)
+
+
+def unpack_nchwc_to_nchw(xp):
+    """(N, Co, H, W, cb) -> (N, Co*cb, H, W)."""
+    n, co, h, w, cb = xp.shape
+    return xp.transpose(0, 1, 4, 2, 3).reshape(n, co * cb, h, w)
+
+
+def pack_oihw_to_oihwio(w, c_block: int, k_block: int):
+    """(K, C, R, S) -> (K//kb, C//cb, R, S, cb, kb)."""
+    k, c, r, s = w.shape
+    assert c % c_block == 0 and k % k_block == 0
+    return (
+        w.reshape(k // k_block, k_block, c // c_block, c_block, r, s)
+        .transpose(0, 2, 4, 5, 3, 1)
+    )

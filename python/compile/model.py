@@ -1,0 +1,609 @@
+"""L2: ResNet in JAX, built from the L1 schedule kernels.
+
+The model is expressed as a list of *segments* — the unit of partitioning
+that the paper's executor analysis revolves around (§3.1):
+
+- the **graph executor** path composes all segments into one jax function and
+  lowers it to a single fused HLO module (static graph, every op pre-defined);
+- the **VM executor** path lowers each segment to its own HLO module, and the
+  rust VM interpreter dispatches them one instruction at a time with dynamic
+  allocation — TVM's default for quantized models, the paper's bug.
+
+For int8 models the segment boundaries carry int8 tensors ("the quantized
+data space"): a *prefix* segment quantizes the input, *middle* segments are
+the core quantized network, and the *suffix* dequantizes into logits —
+exactly the three-way split the paper describes.  Inside segments the
+quantized conv unit follows TVM's realized pattern (§3.2.2): int8 conv with
+int32 accumulators, dequantize to fp32 for bias/relu/residual arithmetic,
+re-quantize at the next boundary; scales stay fp32 throughout.
+
+Weights are baked into the lowered modules as constants, mirroring the graph
+executor's parameter binding; batch-norm is assumed folded (inference).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels as K
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+# (channels, num_blocks, first_stride) per stage.
+ARCHS = {
+    # CIFAR-scale: the default bench model (fast enough for interpret-mode
+    # Pallas through the whole table sweep).
+    "resnet10": dict(
+        stem_kernel=3, stem_stride=1, stem_pool=False,
+        stages=[(16, 1, 1), (32, 1, 2), (64, 1, 2), (128, 1, 2)],
+    ),
+    # The paper's model, spatially scaled (DESIGN.md §Substitutions): full
+    # basic-block layout, 7x7 stem + maxpool.
+    "resnet18": dict(
+        stem_kernel=7, stem_stride=2, stem_pool=True,
+        stages=[(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)],
+    ),
+    # Minimal arch for fast unit tests.
+    "resnet4": dict(
+        stem_kernel=3, stem_stride=1, stem_pool=False,
+        stages=[(8, 1, 2)],
+    ),
+}
+
+SCHEDULES = ("spatial_pack", "simd", "interleaved", "reference")
+LAYOUTS = ("NCHW", "NHWC")
+PRECISIONS = ("fp32", "int8")
+
+# (layout, schedule, precision) combinations TVM actually provides — the
+# paper's point that "different settings map to different schedules".
+VALID_COMBOS = {
+    ("NCHW", "spatial_pack", "fp32"),   # Table 2 row 1 (TVM fp32 default)
+    ("NCHW", "spatial_pack", "int8"),   # Table 2 row 2 (best)
+    ("NCHW", "simd", "int8"),           # Table 2 row 3 (vmlal)
+    ("NHWC", "spatial_pack", "fp32"),   # Table 2 row 4 (worst)
+    ("NHWC", "interleaved", "int8"),    # Table 2 row 5 (MMLA)
+    ("NCHW", "reference", "fp32"),      # eager baseline (PyTorch row)
+    ("NHWC", "reference", "fp32"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str = "resnet10"
+    image_size: int = 32
+    in_channels: int = 3
+    num_classes: int = 10
+    layout: str = "NCHW"
+    schedule: str = "spatial_pack"
+    precision: str = "fp32"
+    c_block: int = 16
+    k_block: int = 16
+    h_tile: int = 4
+
+    def __post_init__(self):
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}")
+        combo = (self.layout, self.schedule, self.precision)
+        if combo not in VALID_COMBOS:
+            raise ValueError(
+                f"no TVM schedule for {combo}; valid: {sorted(VALID_COMBOS)}"
+            )
+
+    @property
+    def variant_id(self) -> str:
+        return (
+            f"{self.arch}_{self.image_size}_{self.layout.lower()}"
+            f"_{self.schedule}_{self.precision}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameters (canonical storage: OIHW fp32; layout applied at build time)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """He-initialized fp32 parameters; BN assumed pre-folded."""
+    rng = np.random.default_rng(seed)
+    arch = ARCHS[cfg.arch]
+
+    def conv_w(k_out, k_in, r):
+        std = float(np.sqrt(2.0 / (k_in * r * r)))
+        return rng.standard_normal((k_out, k_in, r, r)).astype(np.float32) * std
+
+    def bias(k):
+        return rng.standard_normal((k,)).astype(np.float32) * 0.05
+
+    params: dict = {}
+    r0 = arch["stem_kernel"]
+    c0 = arch["stages"][0][0]
+    params["stem"] = {"w": conv_w(c0, cfg.in_channels, r0), "b": bias(c0)}
+
+    blocks = []
+    in_ch = c0
+    for ch, nblocks, first_stride in arch["stages"]:
+        for i in range(nblocks):
+            stride = first_stride if i == 0 else 1
+            blk = {
+                "conv1": {"w": conv_w(ch, in_ch, 3), "b": bias(ch)},
+                "conv2": {"w": conv_w(ch, ch, 3), "b": bias(ch)},
+                "stride": stride,
+            }
+            if stride != 1 or in_ch != ch:
+                blk["down"] = {"w": conv_w(ch, in_ch, 1), "b": bias(ch)}
+            blocks.append(blk)
+            in_ch = ch
+    params["blocks"] = blocks
+    params["head"] = {
+        "w": rng.standard_normal((in_ch, cfg.num_classes)).astype(np.float32)
+        * float(np.sqrt(1.0 / in_ch)),
+        "b": bias(cfg.num_classes),
+    }
+    return params
+
+
+def param_count(params: dict) -> int:
+    n = params["stem"]["w"].size + params["stem"]["b"].size
+    for blk in params["blocks"]:
+        for key in ("conv1", "conv2", "down"):
+            if key in blk:
+                n += blk[key]["w"].size + blk[key]["b"].size
+    n += params["head"]["w"].size + params["head"]["b"].size
+    return int(n)
+
+
+def weight_scale(w: np.ndarray) -> float:
+    """Per-tensor symmetric weight scale (abs-max calibration)."""
+    return float(np.maximum(np.abs(np.asarray(w, np.float32)).max(), 1e-8) / 127.0)
+
+
+def quantize_weight(w: np.ndarray, s_w: float) -> np.ndarray:
+    return np.clip(np.round(np.asarray(w, np.float32) / s_w), -127, 127).astype(
+        np.int8
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conv dispatch: one entry point per (layout, schedule, precision)
+# ---------------------------------------------------------------------------
+
+def _conv_fp32(x, w_oihw, stride, padding, cfg: ModelConfig):
+    """fp32 conv in the configured layout/schedule.  x in cfg.layout."""
+    if cfg.layout == "NCHW":
+        if cfg.schedule == "reference":
+            return ref.conv2d_nchw(x, w_oihw, stride, padding)
+        return K.conv2d_spatial_pack_nchw(
+            x, w_oihw, stride, padding,
+            c_block=cfg.c_block, k_block=cfg.k_block, h_tile=cfg.h_tile,
+        )
+    w_hwio = jnp.transpose(w_oihw, (2, 3, 1, 0))
+    if cfg.schedule == "reference":
+        return ref.conv2d_nhwc(x, w_hwio, stride, padding)
+    return K.conv2d_spatial_pack_nhwc(x, w_hwio, stride, padding, h_tile=cfg.h_tile)
+
+
+def _conv_int8(x_q, w_q_oihw, stride, padding, cfg: ModelConfig):
+    """int8 conv -> int32 accumulators in the configured schedule."""
+    if cfg.schedule == "spatial_pack":
+        return K.conv2d_spatial_pack_nchw(
+            x_q, w_q_oihw, stride, padding,
+            c_block=cfg.c_block, k_block=cfg.k_block, h_tile=cfg.h_tile,
+        )
+    if cfg.schedule == "simd":
+        return K.conv2d_simd_int8(x_q, w_q_oihw, stride, padding, k_tile=cfg.k_block)
+    if cfg.schedule == "interleaved":
+        w_hwio = jnp.transpose(w_q_oihw, (2, 3, 1, 0))
+        return K.conv2d_quantized_interleaved_nhwc(x_q, w_hwio, stride, padding)
+    raise ValueError(f"no int8 schedule {cfg.schedule!r}")
+
+
+def conv_unit_fp32(x, p, stride, padding, cfg, relu=True):
+    y = _conv_fp32(x, jnp.asarray(p["w"]), stride, padding, cfg)
+    y = K.bias_add(y, jnp.asarray(p["b"]), cfg.layout)
+    return K.relu(y) if relu else y
+
+
+def conv_unit_int8(x_q, p, s_in, stride, padding, cfg, relu=True):
+    """TVM's realized quantized conv unit: int8 in, fp32 out.
+
+    ``x_q`` is int8 at scale ``s_in``; the weight is quantized at build time
+    with its own per-tensor abs-max scale; the int32 accumulator is
+    dequantized at ``s_in * s_w`` — the "reads int8, writes fp32" operator of
+    §3.2.2.
+    """
+    s_w = weight_scale(p["w"])
+    w_q = jnp.asarray(quantize_weight(p["w"], s_w))
+    acc = _conv_int8(x_q, w_q, stride, padding, cfg)
+    y = K.dequantize(acc, float(s_in) * s_w)
+    y = K.bias_add(y, jnp.asarray(p["b"]), cfg.layout)
+    return K.relu(y) if relu else y
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Segment:
+    """One partition unit: a jax function plus its boundary specs.
+
+    Shapes use -1 for the batch dimension; it is resolved at lowering time.
+    """
+
+    name: str
+    fn: Callable
+    in_shape: tuple
+    in_dtype: str   # "f32" | "s8"
+    out_shape: tuple
+    out_dtype: str
+    role: str       # "prefix" | "middle" | "suffix"
+
+
+def _spatial(cfg: ModelConfig, n: int, c: int, hw: int) -> tuple:
+    if cfg.layout == "NCHW":
+        return (n, c, hw, hw)
+    return (n, hw, hw, c)
+
+
+def _block_specs(cfg: ModelConfig):
+    specs = []
+    for ch, nblocks, first_stride in ARCHS[cfg.arch]["stages"]:
+        for i in range(nblocks):
+            specs.append((ch, first_stride if i == 0 else 1))
+    return specs
+
+
+def _trace_shapes(cfg: ModelConfig):
+    """(name, channels, spatial) at every segment boundary (post-segment)."""
+    arch = ARCHS[cfg.arch]
+    hw = cfg.image_size
+    hw = ref.conv_out_size(hw, arch["stem_kernel"], arch["stem_stride"],
+                           arch["stem_kernel"] // 2)
+    if arch["stem_pool"]:
+        hw = ref.conv_out_size(hw, 3, 2, 1)
+    shapes = [("stem", arch["stages"][0][0], hw)]
+    for bi, (ch, stride) in enumerate(_block_specs(cfg)):
+        hw = ref.conv_out_size(hw, 3, stride, 1)
+        shapes.append((f"block{bi}", ch, hw))
+    return shapes
+
+
+def _maxpool_if_needed(x, cfg):
+    if ARCHS[cfg.arch]["stem_pool"]:
+        return K.maxpool2d(x, 3, 2, 1, layout=cfg.layout)
+    return x
+
+
+def _basic_block_fp32(x, blk, cfg):
+    stride = blk["stride"]
+    y = conv_unit_fp32(x, blk["conv1"], stride, 1, cfg, relu=True)
+    y = conv_unit_fp32(y, blk["conv2"], 1, 1, cfg, relu=False)
+    if "down" in blk:
+        skip = conv_unit_fp32(x, blk["down"], stride, 0, cfg, relu=False)
+    else:
+        skip = x
+    return K.relu(K.add(y, skip))
+
+
+def _basic_block_int8(x_q, blk, scales, name, cfg):
+    """int8-boundary residual block: int8@s_in -> int8@s_out."""
+    stride = blk["stride"]
+    s_in = float(scales[name + ".conv1.in"])
+    y = conv_unit_int8(x_q, blk["conv1"], s_in, stride, 1, cfg, relu=True)
+    # Second conv re-enters the quantized space at the mid-block scale.
+    s_mid = float(scales[name + ".conv2.in"])
+    y_q = K.quantize(y, s_mid)
+    y = conv_unit_int8(y_q, blk["conv2"], s_mid, 1, 1, cfg, relu=False)
+    if "down" in blk:
+        skip = conv_unit_int8(x_q, blk["down"], s_in, stride, 0, cfg, relu=False)
+    else:
+        skip = K.dequantize(x_q, s_in)
+    z = K.relu(K.add(y, skip))
+    return K.quantize(z, float(scales[name + ".out"]))
+
+
+def build_segments(cfg: ModelConfig, params: dict, scales: dict | None = None):
+    """Return the list of :class:`Segment` for this config.
+
+    fp32 models exchange fp32 tensors; int8 models exchange int8 tensors with
+    a quantizing prefix and a dequantizing suffix (the paper's VM partition).
+    """
+    if cfg.precision == "int8" and scales is None:
+        raise ValueError("int8 model requires calibration scales")
+    arch = ARCHS[cfg.arch]
+    n = -1
+    bshapes = _trace_shapes(cfg)
+    img_shape = _spatial(cfg, n, cfg.in_channels, cfg.image_size)
+    segs: list[Segment] = []
+    stem_pad = arch["stem_kernel"] // 2
+
+    if cfg.precision == "fp32":
+        def stem_fn(x, _p=params["stem"]):
+            y = conv_unit_fp32(x, _p, arch["stem_stride"], stem_pad, cfg)
+            return _maxpool_if_needed(y, cfg)
+
+        segs.append(Segment(
+            "stem", stem_fn, img_shape, "f32",
+            _spatial(cfg, n, bshapes[0][1], bshapes[0][2]), "f32", "middle",
+        ))
+        for bi, blk in enumerate(params["blocks"]):
+            def blk_fn(x, _blk=blk):
+                return _basic_block_fp32(x, _blk, cfg)
+            segs.append(Segment(
+                f"block{bi}", blk_fn,
+                _spatial(cfg, n, bshapes[bi][1], bshapes[bi][2]), "f32",
+                _spatial(cfg, n, bshapes[bi + 1][1], bshapes[bi + 1][2]), "f32",
+                "middle",
+            ))
+
+        def head_fn(x, _p=params["head"]):
+            pooled = K.global_avgpool(x, cfg.layout)
+            return K.dense(pooled, jnp.asarray(_p["w"])) + jnp.asarray(_p["b"])
+
+        segs.append(Segment(
+            "head", head_fn,
+            _spatial(cfg, n, bshapes[-1][1], bshapes[-1][2]), "f32",
+            (n, cfg.num_classes), "f32", "suffix",
+        ))
+        return segs
+
+    # ---- int8: prefix / middle / suffix over int8 boundaries ----
+    s_img = float(scales["input"])
+
+    def prefix_fn(x):
+        return K.quantize(x, s_img)
+
+    segs.append(Segment(
+        "prefix", prefix_fn, img_shape, "f32", img_shape, "s8", "prefix",
+    ))
+
+    def stem_fn_q(x_q, _p=params["stem"]):
+        y = conv_unit_int8(x_q, _p, s_img, arch["stem_stride"], stem_pad, cfg)
+        y = _maxpool_if_needed(y, cfg)
+        return K.quantize(y, float(scales["stem.out"]))
+
+    segs.append(Segment(
+        "stem", stem_fn_q, img_shape, "s8",
+        _spatial(cfg, n, bshapes[0][1], bshapes[0][2]), "s8", "middle",
+    ))
+
+    for bi, blk in enumerate(params["blocks"]):
+        def blk_fn_q(x_q, _blk=blk, _name=f"block{bi}"):
+            return _basic_block_int8(x_q, _blk, scales, _name, cfg)
+        segs.append(Segment(
+            f"block{bi}", blk_fn_q,
+            _spatial(cfg, n, bshapes[bi][1], bshapes[bi][2]), "s8",
+            _spatial(cfg, n, bshapes[bi + 1][1], bshapes[bi + 1][2]), "s8",
+            "middle",
+        ))
+
+    def head_fn_q(x_q, _p=params["head"]):
+        x = K.dequantize(x_q, float(scales["head.in"]))
+        pooled = K.global_avgpool(x, cfg.layout)
+        s_h = float(scales["head.dense.in"])
+        p_q = K.quantize(pooled, s_h)
+        s_w = weight_scale(_p["w"])
+        w_q = jnp.asarray(quantize_weight(_p["w"], s_w))
+        acc = K.dense(p_q, w_q)
+        return K.dequantize(acc, s_h * s_w) + jnp.asarray(_p["b"])
+
+    segs.append(Segment(
+        "head", head_fn_q,
+        _spatial(cfg, n, bshapes[-1][1], bshapes[-1][2]), "s8",
+        (n, cfg.num_classes), "f32", "suffix",
+    ))
+    return segs
+
+
+def fused_forward(cfg: ModelConfig, params: dict, scales: dict | None = None):
+    """The graph-executor view: all segments composed into one function."""
+    segs = build_segments(cfg, params, scales)
+
+    def fwd(x):
+        for seg in segs:
+            x = seg.fn(x)
+        return x
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Calibration taps (fp32 forward that records conv-unit inputs)
+# ---------------------------------------------------------------------------
+
+def forward_fp32_with_taps(cfg: ModelConfig, params: dict, x):
+    """Run the fp32 model recording activations at every quantization point.
+
+    Returns (logits, taps): taps map scale names to activations, mirroring
+    the int8 model's quantize sites exactly.  Calibration runs against the
+    reference schedule so scales are schedule-independent.
+    """
+    fcfg = dataclasses.replace(cfg, precision="fp32", schedule="reference")
+    arch = ARCHS[fcfg.arch]
+    taps: dict = {"input": x}
+
+    y = conv_unit_fp32(x, params["stem"], arch["stem_stride"],
+                       arch["stem_kernel"] // 2, fcfg)
+    y = _maxpool_if_needed(y, fcfg)
+    taps["stem.out"] = y
+
+    for bi, blk in enumerate(params["blocks"]):
+        name = f"block{bi}"
+        taps[name + ".conv1.in"] = y
+        stride = blk["stride"]
+        m = conv_unit_fp32(y, blk["conv1"], stride, 1, fcfg, relu=True)
+        taps[name + ".conv2.in"] = m
+        m = conv_unit_fp32(m, blk["conv2"], 1, 1, fcfg, relu=False)
+        if "down" in blk:
+            skip = conv_unit_fp32(y, blk["down"], stride, 0, fcfg, relu=False)
+        else:
+            skip = y
+        y = K.relu(K.add(m, skip))
+        taps[name + ".out"] = y
+
+    taps["head.in"] = y
+    pooled = K.global_avgpool(y, fcfg.layout)
+    taps["head.dense.in"] = pooled
+    logits = K.dense(pooled, jnp.asarray(params["head"]["w"])) + jnp.asarray(
+        params["head"]["b"]
+    )
+    return logits, taps
+
+
+# ---------------------------------------------------------------------------
+# Op-level units (the VM executor's instruction granularity)
+# ---------------------------------------------------------------------------
+# TVM's relay VM dispatches one InvokePacked instruction per primitive
+# function; the paper's VM slowdown is paid at THIS granularity, not at the
+# coarse prefix/middle/suffix level (those name the partition's roles).
+# ``build_op_units`` decomposes the model into that instruction stream: a
+# DAG of small functions over value ids (value 0 = the model input), which
+# aot.py lowers one module each and the rust VM executes instruction by
+# instruction with dynamic allocation.
+
+
+@dataclasses.dataclass
+class OpUnit:
+    """One VM instruction: ``fn(*args)`` over earlier value ids."""
+
+    name: str
+    fn: Callable
+    arg_ids: list          # value ids (0 = model input; i>0 = unit i-1's out)
+    in_specs: list         # [(shape, dtype_tag)] per arg
+    out_shape: tuple
+    out_dtype: str
+    role: str              # "prefix" | "middle" | "suffix"
+
+
+def build_op_units(cfg: ModelConfig, params: dict, scales: dict | None = None):
+    """Decompose the model into per-op units (VM instruction granularity)."""
+    if cfg.precision == "int8" and scales is None:
+        raise ValueError("int8 model requires calibration scales")
+    arch = ARCHS[cfg.arch]
+    n = -1
+    bshapes = _trace_shapes(cfg)
+    img = _spatial(cfg, n, cfg.in_channels, cfg.image_size)
+    stem_pad = arch["stem_kernel"] // 2
+    units: list[OpUnit] = []
+
+    def emit(name, fn, arg_ids, in_specs, out_shape, out_dtype, role="middle"):
+        units.append(OpUnit(name, fn, list(arg_ids), list(in_specs),
+                            tuple(out_shape), out_dtype, role))
+        return len(units)  # value id produced by this unit
+
+    if cfg.precision == "fp32":
+        def stem_fn(x, _p=params["stem"]):
+            y = conv_unit_fp32(x, _p, arch["stem_stride"], stem_pad, cfg)
+            return _maxpool_if_needed(y, cfg)
+
+        cur_shape = _spatial(cfg, n, bshapes[0][1], bshapes[0][2])
+        cur = emit("stem", stem_fn, [0], [(img, "f32")], cur_shape, "f32")
+
+        for bi, blk in enumerate(params["blocks"]):
+            name = f"block{bi}"
+            in_shape = _spatial(cfg, n, bshapes[bi][1], bshapes[bi][2])
+            out_shape = _spatial(cfg, n, bshapes[bi + 1][1], bshapes[bi + 1][2])
+            stride = blk["stride"]
+
+            def c1(x, _blk=blk, _s=stride):
+                return conv_unit_fp32(x, _blk["conv1"], _s, 1, cfg, relu=True)
+
+            v1 = emit(f"{name}.conv1", c1, [cur], [(in_shape, "f32")], out_shape, "f32")
+
+            def c2(y, _blk=blk):
+                return conv_unit_fp32(y, _blk["conv2"], 1, 1, cfg, relu=False)
+
+            v2 = emit(f"{name}.conv2", c2, [v1], [(out_shape, "f32")], out_shape, "f32")
+
+            def sk(y, x, _blk=blk, _s=stride):
+                if "down" in _blk:
+                    skip = conv_unit_fp32(x, _blk["down"], _s, 0, cfg, relu=False)
+                else:
+                    skip = x
+                return K.relu(K.add(y, skip))
+
+            cur = emit(f"{name}.skip_add", sk, [v2, cur],
+                       [(out_shape, "f32"), (in_shape, "f32")], out_shape, "f32")
+
+        def head_fn(x, _p=params["head"]):
+            pooled = K.global_avgpool(x, cfg.layout)
+            return K.dense(pooled, jnp.asarray(_p["w"])) + jnp.asarray(_p["b"])
+
+        last_shape = _spatial(cfg, n, bshapes[-1][1], bshapes[-1][2])
+        emit("head", head_fn, [cur], [(last_shape, "f32")],
+             (n, cfg.num_classes), "f32", role="suffix")
+        return units
+
+    # ---- int8 ----
+    s_img = float(scales["input"])
+    cur = emit("quantize_input", lambda x: K.quantize(x, s_img), [0],
+               [(img, "f32")], img, "s8", role="prefix")
+
+    def stem_fn_q(x_q, _p=params["stem"]):
+        y = conv_unit_int8(x_q, _p, s_img, arch["stem_stride"], stem_pad, cfg)
+        y = _maxpool_if_needed(y, cfg)
+        return K.quantize(y, float(scales["stem.out"]))
+
+    cur_shape = _spatial(cfg, n, bshapes[0][1], bshapes[0][2])
+    cur = emit("stem", stem_fn_q, [cur], [(img, "s8")], cur_shape, "s8")
+
+    for bi, blk in enumerate(params["blocks"]):
+        name = f"block{bi}"
+        in_shape = _spatial(cfg, n, bshapes[bi][1], bshapes[bi][2])
+        out_shape = _spatial(cfg, n, bshapes[bi + 1][1], bshapes[bi + 1][2])
+        stride = blk["stride"]
+        s_in = float(scales[name + ".conv1.in"])
+        s_mid = float(scales[name + ".conv2.in"])
+        s_out = float(scales[name + ".out"])
+
+        def c1(x_q, _blk=blk, _s=stride, _si=s_in, _sm=s_mid):
+            y = conv_unit_int8(x_q, _blk["conv1"], _si, _s, 1, cfg, relu=True)
+            return K.quantize(y, _sm)
+
+        v1 = emit(f"{name}.conv1", c1, [cur], [(in_shape, "s8")], out_shape, "s8")
+
+        def c2(y_q, _blk=blk, _sm=s_mid):
+            return conv_unit_int8(y_q, _blk["conv2"], _sm, 1, 1, cfg, relu=False)
+
+        v2 = emit(f"{name}.conv2", c2, [v1], [(out_shape, "s8")], out_shape, "f32")
+
+        def sk(z, x_q, _blk=blk, _s=stride, _si=s_in, _so=s_out):
+            if "down" in _blk:
+                skip = conv_unit_int8(x_q, _blk["down"], _si, _s, 0, cfg, relu=False)
+            else:
+                skip = K.dequantize(x_q, _si)
+            return K.quantize(K.relu(K.add(z, skip)), _so)
+
+        cur = emit(f"{name}.skip_add", sk, [v2, cur],
+                   [(out_shape, "f32"), (in_shape, "s8")], out_shape, "s8")
+
+    def head_fn_q(x_q, _p=params["head"]):
+        x = K.dequantize(x_q, float(scales["head.in"]))
+        pooled = K.global_avgpool(x, cfg.layout)
+        s_h = float(scales["head.dense.in"])
+        p_q = K.quantize(pooled, s_h)
+        s_w = weight_scale(_p["w"])
+        w_q = jnp.asarray(quantize_weight(_p["w"], s_w))
+        acc = K.dense(p_q, w_q)
+        return K.dequantize(acc, s_h * s_w) + jnp.asarray(_p["b"])
+
+    last_shape = _spatial(cfg, n, bshapes[-1][1], bshapes[-1][2])
+    emit("head", head_fn_q, [cur], [(last_shape, "s8")],
+         (n, cfg.num_classes), "f32", role="suffix")
+    return units
+
+
+def op_units_forward(units, x):
+    """Execute the unit DAG in python (consistency oracle for tests)."""
+    values = [x]
+    for u in units:
+        args = [values[i] for i in u.arg_ids]
+        values.append(u.fn(*args))
+    return values[-1]

@@ -1,0 +1,100 @@
+"""Post-training quantization pass: calibrate → annotate → realize.
+
+TVM's ``relay.quantize`` pipeline, rebuilt for the segment model:
+
+1. **calibrate** — run the fp32 model over a calibration batch, record the
+   activation distribution at every quantization point (abs-max, the same
+   ``global_scale``-free power-of-two-less scheme TVM's ``kind=global``
+   calibration approximates);
+2. **annotate** — the tap names emitted by ``model.forward_fp32_with_taps``
+   *are* the annotation: one scale per quantize site, weights get per-tensor
+   scales at realize time;
+3. **realize** — ``model.build_segments(cfg, params, scales)`` rewrites the
+   graph into quantize → int8-conv(int32) → dequantize chains with the
+   scales baked in as fp32 constants.
+
+Also provides the quantization-quality metrics (SQNR, cosine similarity,
+top-1 agreement) recorded into the artifact manifest — the paper reports no
+accuracy numbers, so these serve as the "acceptable model accuracy" check
+its §1.1.1 presumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+
+def calibration_batch(cfg: M.ModelConfig, batch: int = 8, seed: int = 42):
+    """Synthetic calibration data: seeded, normalized Gaussian images.
+
+    Stands in for the paper's ImageNet validation batches (DESIGN.md
+    §Substitutions): scale calibration only needs representative activation
+    magnitudes, which the fp32 forward produces for any input distribution.
+    """
+    rng = np.random.default_rng(seed)
+    shape = (
+        (batch, cfg.in_channels, cfg.image_size, cfg.image_size)
+        if cfg.layout == "NCHW"
+        else (batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    )
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def calibrate(cfg: M.ModelConfig, params: dict, calib_x=None) -> dict:
+    """Abs-max calibration over every quantization point.
+
+    Returns ``{tap_name: float_scale}``; keys match what
+    ``model.build_segments`` expects.
+    """
+    if calib_x is None:
+        calib_x = calibration_batch(cfg)
+    _, taps = M.forward_fp32_with_taps(cfg, params, calib_x)
+    return {name: float(ref.abs_max_scale(act)) for name, act in taps.items()}
+
+
+# ---------------------------------------------------------------------------
+# Quantization quality metrics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantReport:
+    sqnr_db: float
+    cosine: float
+    top1_agreement: float
+    max_abs_err: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def quant_report(cfg: M.ModelConfig, params: dict, scales: dict,
+                 eval_x=None) -> QuantReport:
+    """Compare int8 vs fp32 model outputs on an evaluation batch."""
+    if eval_x is None:
+        eval_x = calibration_batch(cfg, batch=16, seed=77)
+    fcfg = dataclasses.replace(cfg, precision="fp32", schedule="reference")
+    ref_logits = np.asarray(M.fused_forward(fcfg, params)(eval_x))
+    q_logits = np.asarray(M.fused_forward(cfg, params, scales)(eval_x))
+
+    err = q_logits - ref_logits
+    sig = float(np.mean(ref_logits**2))
+    noise = float(np.mean(err**2))
+    sqnr = 10.0 * np.log10(sig / max(noise, 1e-20))
+    cos = float(
+        np.sum(ref_logits * q_logits)
+        / max(np.linalg.norm(ref_logits) * np.linalg.norm(q_logits), 1e-20)
+    )
+    top1 = float(np.mean(np.argmax(ref_logits, -1) == np.argmax(q_logits, -1)))
+    return QuantReport(
+        sqnr_db=float(sqnr),
+        cosine=cos,
+        top1_agreement=top1,
+        max_abs_err=float(np.abs(err).max()),
+    )

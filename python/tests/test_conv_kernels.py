@@ -1,0 +1,226 @@
+"""L1 conv kernels vs the pure-jnp oracle.
+
+int8 paths must be bit-exact (int32 accumulation is associative); fp32 paths
+use allclose.  Hypothesis sweeps shapes, strides, paddings and filter sizes —
+including the awkward ones (C/K not multiples of the blocks, 1x1 filters,
+stride > filter, inputs barely larger than the filter).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def f32(*shape):
+    return jnp.array(RNG.standard_normal(shape), jnp.float32)
+
+
+def i8(*shape):
+    return jnp.array(RNG.integers(-127, 128, shape), jnp.int8)
+
+
+def to_nhwc(x):
+    return jnp.transpose(x, (0, 2, 3, 1))
+
+
+def to_hwio(w):
+    return jnp.transpose(w, (2, 3, 1, 0))
+
+
+# Shared strategy: valid conv configs with small sizes (interpret mode).
+conv_cfgs = st.tuples(
+    st.integers(1, 2),               # N
+    st.integers(1, 24),              # C
+    st.sampled_from([1, 3, 5, 7]),   # R (=S)
+    st.integers(1, 2),               # stride
+    st.integers(0, 3),               # padding
+    st.integers(1, 20),              # K
+    st.integers(0, 6),               # H slack beyond minimum
+).filter(lambda t: t[2] + 2 * t[4] >= t[2])  # always true; placeholder guard
+
+
+def hw_for(r, stride, pad, slack):
+    """Smallest H that yields >= 1 output, plus slack."""
+    h = max(r - 2 * pad, 1) + slack
+    # ensure at least one full window
+    while (h + 2 * pad - r) < 0:
+        h += 1
+    return h
+
+
+class TestSpatialPackNCHW:
+    @pytest.mark.parametrize("stride,pad,r", [(1, 1, 3), (2, 1, 3), (2, 3, 7), (1, 0, 1)])
+    def test_f32_matches_ref(self, stride, pad, r):
+        x, w = f32(2, 16, 12, 12), f32(32, 16, r, r)
+        got = K.conv2d_spatial_pack_nchw(x, w, stride, pad)
+        np.testing.assert_allclose(got, ref.conv2d_nchw(x, w, stride, pad), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("stride,pad,r", [(1, 1, 3), (2, 1, 3), (2, 3, 7), (1, 0, 1)])
+    def test_int8_bit_exact(self, stride, pad, r):
+        x, w = i8(2, 16, 12, 12), i8(32, 16, r, r)
+        got = K.conv2d_spatial_pack_nchw(x, w, stride, pad)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(got, ref.conv2d_nchw_int8(x, w, stride, pad))
+
+    @pytest.mark.parametrize("c_block,k_block,h_tile", [(4, 4, 2), (8, 16, 4), (16, 8, 3), (32, 32, 8)])
+    def test_block_sizes_dont_change_result(self, c_block, k_block, h_tile):
+        x, w = i8(1, 24, 10, 10), i8(20, 24, 3, 3)
+        got = K.conv2d_spatial_pack_nchw(x, w, 1, 1, c_block=c_block, k_block=k_block, h_tile=h_tile)
+        np.testing.assert_array_equal(got, ref.conv2d_nchw_int8(x, w, 1, 1))
+
+    def test_non_divisible_channels(self):
+        # C=5, K=7: neither divides the default blocks -> zero-pad path.
+        x, w = i8(1, 5, 9, 9), i8(7, 5, 3, 3)
+        np.testing.assert_array_equal(
+            K.conv2d_spatial_pack_nchw(x, w, 1, 1), ref.conv2d_nchw_int8(x, w, 1, 1)
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(conv_cfgs)
+    def test_hypothesis_int8(self, cfg):
+        n, c, r, stride, pad, k, slack = cfg
+        h = hw_for(r, stride, pad, slack)
+        if h + 2 * pad < r:
+            h = r  # guarantee one window
+        x, w = i8(n, c, h, h), i8(k, c, r, r)
+        np.testing.assert_array_equal(
+            K.conv2d_spatial_pack_nchw(x, w, stride, pad),
+            ref.conv2d_nchw_int8(x, w, stride, pad),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(conv_cfgs)
+    def test_hypothesis_f32(self, cfg):
+        n, c, r, stride, pad, k, slack = cfg
+        h = max(hw_for(r, stride, pad, slack), r)
+        x, w = f32(n, c, h, h), f32(k, c, r, r)
+        np.testing.assert_allclose(
+            K.conv2d_spatial_pack_nchw(x, w, stride, pad),
+            ref.conv2d_nchw(x, w, stride, pad),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestSimdInt8:
+    @pytest.mark.parametrize("stride,pad,r", [(1, 1, 3), (2, 1, 3), (2, 3, 7), (1, 0, 1)])
+    def test_bit_exact(self, stride, pad, r):
+        x, w = i8(2, 16, 12, 12), i8(32, 16, r, r)
+        np.testing.assert_array_equal(
+            K.conv2d_simd_int8(x, w, stride, pad), ref.conv2d_nchw_int8(x, w, stride, pad)
+        )
+
+    def test_channels_not_multiple_of_dot_width(self):
+        x, w = i8(1, 6, 8, 8), i8(8, 6, 3, 3)
+        np.testing.assert_array_equal(
+            K.conv2d_simd_int8(x, w, 1, 1), ref.conv2d_nchw_int8(x, w, 1, 1)
+        )
+
+    @pytest.mark.parametrize("k_tile", [4, 8, 32])
+    def test_k_tile_invariance(self, k_tile):
+        x, w = i8(1, 8, 8, 8), i8(24, 8, 3, 3)
+        np.testing.assert_array_equal(
+            K.conv2d_simd_int8(x, w, 1, 1, k_tile=k_tile),
+            ref.conv2d_nchw_int8(x, w, 1, 1),
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(conv_cfgs)
+    def test_hypothesis(self, cfg):
+        n, c, r, stride, pad, k, slack = cfg
+        h = max(hw_for(r, stride, pad, slack), r)
+        x, w = i8(n, c, h, h), i8(k, c, r, r)
+        np.testing.assert_array_equal(
+            K.conv2d_simd_int8(x, w, stride, pad),
+            ref.conv2d_nchw_int8(x, w, stride, pad),
+        )
+
+
+class TestSpatialPackNHWC:
+    @pytest.mark.parametrize("stride,pad,r", [(1, 1, 3), (2, 1, 3), (2, 3, 7), (1, 0, 1)])
+    def test_matches_ref(self, stride, pad, r):
+        x, w = f32(2, 12, 12, 16), f32(r, r, 16, 32)
+        np.testing.assert_allclose(
+            K.conv2d_spatial_pack_nhwc(x, w, stride, pad),
+            ref.conv2d_nhwc(x, w, stride, pad),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @pytest.mark.parametrize("h_tile", [1, 2, 4, 7])
+    def test_h_tile_invariance(self, h_tile):
+        x, w = f32(1, 9, 9, 8), f32(3, 3, 8, 12)
+        np.testing.assert_allclose(
+            K.conv2d_spatial_pack_nhwc(x, w, 1, 1, h_tile=h_tile),
+            ref.conv2d_nhwc(x, w, 1, 1),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(conv_cfgs)
+    def test_hypothesis(self, cfg):
+        n, c, r, stride, pad, k, slack = cfg
+        h = max(hw_for(r, stride, pad, slack), r)
+        x, w = f32(n, h, h, c), f32(r, r, c, k)
+        np.testing.assert_allclose(
+            K.conv2d_spatial_pack_nhwc(x, w, stride, pad),
+            ref.conv2d_nhwc(x, w, stride, pad),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestQuantizedInterleaved:
+    @pytest.mark.parametrize("stride,pad,r", [(1, 1, 3), (2, 1, 3), (2, 3, 7), (1, 0, 1)])
+    def test_bit_exact(self, stride, pad, r):
+        x, w = i8(2, 12, 12, 16), i8(r, r, 16, 32)
+        np.testing.assert_array_equal(
+            K.conv2d_quantized_interleaved_nhwc(x, w, stride, pad),
+            ref.conv2d_nhwc_int8(x, w, stride, pad),
+        )
+
+    @pytest.mark.parametrize("m_tile,n_tile", [(4, 4), (16, 8), (64, 64), (128, 32)])
+    def test_tile_invariance(self, m_tile, n_tile):
+        x, w = i8(1, 8, 8, 8), i8(3, 3, 8, 24)
+        np.testing.assert_array_equal(
+            K.conv2d_quantized_interleaved_nhwc(x, w, 1, 1, m_tile=m_tile, n_tile=n_tile),
+            ref.conv2d_nhwc_int8(x, w, 1, 1),
+        )
+
+    def test_im2col_shape(self):
+        x = i8(2, 10, 10, 6)
+        a, oh, ow = K.im2col_nhwc(x, 3, 3, 2, 1)
+        assert (oh, ow) == (5, 5)
+        assert a.shape == (2 * 5 * 5, 3 * 3 * 6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(conv_cfgs)
+    def test_hypothesis(self, cfg):
+        n, c, r, stride, pad, k, slack = cfg
+        h = max(hw_for(r, stride, pad, slack), r)
+        x, w = i8(n, h, h, c), i8(r, r, c, k)
+        np.testing.assert_array_equal(
+            K.conv2d_quantized_interleaved_nhwc(x, w, stride, pad),
+            ref.conv2d_nhwc_int8(x, w, stride, pad),
+        )
+
+
+class TestCrossSchedule:
+    """All int8 schedules agree with each other on the same problem."""
+
+    def test_all_int8_schedules_identical(self):
+        x, w = i8(2, 16, 14, 14), i8(24, 16, 3, 3)
+        a = K.conv2d_spatial_pack_nchw(x, w, 1, 1)
+        b = K.conv2d_simd_int8(x, w, 1, 1)
+        c = K.conv2d_quantized_interleaved_nhwc(to_nhwc(x), to_hwio(w), 1, 1)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(np.transpose(np.asarray(c), (0, 3, 1, 2)), a)
+
+    def test_layouts_agree_f32(self):
+        x, w = f32(1, 8, 10, 10), f32(12, 8, 3, 3)
+        a = K.conv2d_spatial_pack_nchw(x, w, 2, 1)
+        b = K.conv2d_spatial_pack_nhwc(to_nhwc(x), to_hwio(w), 2, 1)
+        np.testing.assert_allclose(np.transpose(np.asarray(b), (0, 3, 1, 2)), a, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,100 @@
+"""Dense kernel, pooling ops, and the Figure-1 layout packing."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+
+class TestDense:
+    @pytest.mark.parametrize("m,k,n", [(1, 8, 10), (37, 24, 10), (128, 64, 100), (200, 16, 3)])
+    def test_f32(self, m, k, n):
+        x = jnp.array(RNG.standard_normal((m, k)), jnp.float32)
+        w = jnp.array(RNG.standard_normal((k, n)), jnp.float32)
+        np.testing.assert_allclose(K.dense(x, w), ref.dense(x, w), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [(1, 8, 10), (37, 24, 10), (130, 64, 100)])
+    def test_int8_bit_exact(self, m, k, n):
+        x = jnp.array(RNG.integers(-127, 128, (m, k)), jnp.int8)
+        w = jnp.array(RNG.integers(-127, 128, (k, n)), jnp.int8)
+        got = K.dense(x, w)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(got, ref.dense_int8(x, w))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 300), st.integers(1, 64), st.integers(1, 40), st.integers(8, 256))
+    def test_hypothesis_tiles(self, m, k, n, m_tile):
+        x = jnp.array(RNG.integers(-127, 128, (m, k)), jnp.int8)
+        w = jnp.array(RNG.integers(-127, 128, (k, n)), jnp.int8)
+        np.testing.assert_array_equal(K.dense(x, w, m_tile=m_tile), ref.dense_int8(x, w))
+
+
+class TestPooling:
+    def test_maxpool_nchw(self):
+        x = jnp.array(RNG.standard_normal((2, 4, 12, 12)), jnp.float32)
+        np.testing.assert_allclose(
+            K.maxpool2d(x, 3, 2, 1, layout="NCHW"), ref.maxpool2d_nchw(x, 3, 2, 1)
+        )
+
+    def test_maxpool_layouts_agree(self):
+        x = jnp.array(RNG.standard_normal((2, 4, 12, 12)), jnp.float32)
+        a = K.maxpool2d(x, 2, 2, 0, layout="NCHW")
+        b = K.maxpool2d(jnp.transpose(x, (0, 2, 3, 1)), 2, 2, 0, layout="NHWC")
+        np.testing.assert_allclose(jnp.transpose(b, (0, 3, 1, 2)), a)
+
+    def test_global_avgpool(self):
+        x = jnp.array(RNG.standard_normal((3, 7, 5, 5)), jnp.float32)
+        np.testing.assert_allclose(
+            K.global_avgpool(x, "NCHW"), ref.global_avgpool_nchw(x), rtol=1e-6
+        )
+
+    def test_bias_add_layouts(self):
+        x = jnp.array(RNG.standard_normal((2, 6, 4, 4)), jnp.float32)
+        b = jnp.array(RNG.standard_normal((6,)), jnp.float32)
+        a = K.bias_add(x, b, "NCHW")
+        c = K.bias_add(jnp.transpose(x, (0, 2, 3, 1)), b, "NHWC")
+        np.testing.assert_allclose(jnp.transpose(c, (0, 3, 1, 2)), a)
+
+
+class TestLayoutPacking:
+    """Figure 1: NCHW <-> NCHW{c} packing."""
+
+    @pytest.mark.parametrize("cb", [1, 2, 4, 8, 16])
+    def test_roundtrip(self, cb):
+        x = jnp.array(RNG.standard_normal((2, 16, 5, 7)), jnp.float32)
+        xp = ref.pack_nchw_to_nchwc(x, cb)
+        assert xp.shape == (2, 16 // cb, 5, 7, cb)
+        np.testing.assert_array_equal(ref.unpack_nchwc_to_nchw(xp), x)
+
+    def test_pack_layout_semantics(self):
+        """Packed element (n, co, h, w, ci) == original (n, co*cb + ci, h, w)."""
+        x = jnp.arange(1 * 8 * 2 * 2, dtype=jnp.float32).reshape(1, 8, 2, 2)
+        xp = np.asarray(ref.pack_nchw_to_nchwc(x, 4))
+        xo = np.asarray(x)
+        for co in range(2):
+            for ci in range(4):
+                np.testing.assert_array_equal(xp[0, co, :, :, ci], xo[0, co * 4 + ci])
+
+    def test_pack_rejects_indivisible(self):
+        x = jnp.zeros((1, 6, 2, 2), jnp.float32)
+        with pytest.raises(AssertionError):
+            ref.pack_nchw_to_nchwc(x, 4)
+
+    def test_weight_pack_shape(self):
+        w = jnp.array(RNG.standard_normal((32, 16, 3, 3)), jnp.float32)
+        wp = ref.pack_oihw_to_oihwio(w, 8, 16)
+        assert wp.shape == (2, 2, 3, 3, 8, 16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from([4, 8, 16]), st.integers(1, 6), st.integers(1, 6), st.integers(1, 4))
+    def test_hypothesis_roundtrip(self, n, cb, h, w, comult):
+        c = cb * comult
+        x = jnp.array(RNG.standard_normal((n, c, h, w)), jnp.float32)
+        np.testing.assert_array_equal(
+            ref.unpack_nchwc_to_nchw(ref.pack_nchw_to_nchwc(x, cb)), x
+        )

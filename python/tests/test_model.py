@@ -1,0 +1,146 @@
+"""L2 model layer: segments, op-units, quantization pass, and lowering."""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import quantize_pass as Q
+from compile.hlo import lower_fn
+
+
+def small_cfg(**kw):
+    return M.ModelConfig(arch="resnet4", image_size=16, **kw)
+
+
+class TestConfig:
+    def test_rejects_invalid_combo(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(layout="NHWC", schedule="simd", precision="int8")
+        with pytest.raises(ValueError):
+            M.ModelConfig(layout="NCHW", schedule="interleaved", precision="int8")
+        with pytest.raises(ValueError):
+            M.ModelConfig(arch="resnet999")
+
+    def test_all_valid_combos_construct(self):
+        for (lay, sched, prec) in M.VALID_COMBOS:
+            cfg = M.ModelConfig(layout=lay, schedule=sched, precision=prec)
+            assert cfg.variant_id
+
+    def test_param_count_scales_with_arch(self):
+        p10 = M.init_params(M.ModelConfig(arch="resnet10"))
+        p4 = M.init_params(small_cfg())
+        assert M.param_count(p10) > M.param_count(p4) > 0
+
+
+class TestSegmentsAndUnits:
+    @pytest.mark.parametrize("combo", sorted(M.VALID_COMBOS))
+    def test_segments_compose_to_fused(self, combo):
+        lay, sched, prec = combo
+        cfg = small_cfg(layout=lay, schedule=sched, precision=prec)
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params) if prec == "int8" else None
+        x = Q.calibration_batch(cfg, batch=2, seed=1)
+        fused = M.fused_forward(cfg, params, scales)(x)
+        z = x
+        for seg in M.build_segments(cfg, params, scales):
+            z = seg.fn(z)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(z))
+
+    @pytest.mark.parametrize("prec,sched", [("fp32", "spatial_pack"), ("int8", "spatial_pack"), ("int8", "simd")])
+    def test_op_units_compose_to_fused(self, prec, sched):
+        cfg = small_cfg(precision=prec, schedule=sched)
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params) if prec == "int8" else None
+        x = Q.calibration_batch(cfg, batch=1, seed=2)
+        fused = M.fused_forward(cfg, params, scales)(x)
+        units = M.build_op_units(cfg, params, scales)
+        got = M.op_units_forward(units, x)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(got))
+
+    def test_int8_units_have_prefix_middle_suffix(self):
+        cfg = small_cfg(precision="int8")
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params)
+        units = M.build_op_units(cfg, params, scales)
+        roles = [u.role for u in units]
+        assert roles[0] == "prefix" and roles[-1] == "suffix"
+        assert roles.count("middle") >= 3
+        # Boundary dtypes: prefix emits s8 (the quantized data space).
+        assert units[0].out_dtype == "s8"
+        assert units[-1].out_dtype == "f32"
+
+    def test_unit_dag_wiring_is_topological(self):
+        cfg = M.ModelConfig(precision="int8")
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params)
+        units = M.build_op_units(cfg, params, scales)
+        for i, u in enumerate(units):
+            assert len(u.arg_ids) == len(u.in_specs)
+            assert all(a <= i for a in u.arg_ids), f"{u.name} uses later value"
+        # residual blocks consume two values
+        assert any(len(u.arg_ids) == 2 for u in units)
+
+
+class TestQuantizePass:
+    def test_calibration_covers_expected_taps(self):
+        cfg = M.ModelConfig(arch="resnet10")
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params)
+        assert "input" in scales and "stem.out" in scales and "head.dense.in" in scales
+        for bi in range(4):
+            for tap in (".conv1.in", ".conv2.in", ".out"):
+                assert f"block{bi}{tap}" in scales
+        assert all(s > 0 for s in scales.values())
+
+    def test_quant_report_quality(self):
+        cfg = M.ModelConfig(arch="resnet10", precision="int8")
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params)
+        rep = Q.quant_report(cfg, params, scales)
+        assert rep.sqnr_db > 20
+        assert rep.cosine > 0.99
+        assert rep.top1_agreement >= 0.9
+
+    def test_calibration_deterministic(self):
+        cfg = M.ModelConfig()
+        params = M.init_params(cfg)
+        a = Q.calibrate(cfg, params)
+        b = Q.calibrate(cfg, params)
+        assert a == b
+
+    def test_weight_quantization_exact_range(self):
+        w = np.linspace(-2, 2, 101).astype(np.float32)
+        s = M.weight_scale(w)
+        q = M.quantize_weight(w, s)
+        assert q.min() >= -127 and q.max() == 127
+
+
+class TestLowering:
+    def test_lower_fn_emits_hlo_text(self):
+        cfg = small_cfg()
+        params = M.init_params(cfg)
+        segs = M.build_segments(cfg, params)
+        text = lower_fn(segs[0].fn, [(segs[0].in_shape, segs[0].in_dtype)], 1)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # Single (non-tuple) root: the VM chains raw buffers.
+        assert "f32[" in text
+
+    def test_lower_multi_arg_unit(self):
+        cfg = small_cfg(precision="int8")
+        params = M.init_params(cfg)
+        scales = Q.calibrate(cfg, params)
+        units = M.build_op_units(cfg, params, scales)
+        two_arg = next(u for u in units if len(u.arg_ids) == 2)
+        text = lower_fn(two_arg.fn, two_arg.in_specs, 1)
+        assert text.count("parameter(") >= 2
+
+    def test_batch_dim_resolution(self):
+        cfg = small_cfg()
+        params = M.init_params(cfg)
+        segs = M.build_segments(cfg, params)
+        t4 = lower_fn(segs[-1].fn, [(segs[-1].in_shape, segs[-1].in_dtype)], 4)
+        assert "f32[4," in t4

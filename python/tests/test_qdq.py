@@ -1,0 +1,109 @@
+"""qnn boundary operators: quantize / dequantize / requantize."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.experimental import enable_x64
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+class TestQuantize:
+    def test_matches_ref(self):
+        x = jnp.array(RNG.standard_normal((4, 9, 3)) * 5, jnp.float32)
+        s = float(ref.abs_max_scale(x))
+        np.testing.assert_array_equal(K.quantize(x, s), ref.quantize(x, s))
+
+    def test_saturates(self):
+        x = jnp.array([1e9, -1e9, 0.0], jnp.float32)
+        q = np.asarray(K.quantize(x, 0.1))
+        assert q.tolist() == [127, -127, 0]
+
+    def test_abs_max_scale_covers_range(self):
+        x = jnp.array(RNG.standard_normal((128,)) * 3, jnp.float32)
+        s = float(ref.abs_max_scale(x))
+        q = np.asarray(ref.quantize(x, s))
+        # abs-max calibration must not saturate anything except the max itself
+        assert np.abs(q).max() == 127
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(1, 4096),
+        st.floats(1e-4, 1e3, allow_nan=False, allow_infinity=False),
+    )
+    def test_hypothesis_shapes_scales(self, n, scale):
+        x = jnp.array(RNG.standard_normal((n,)) * scale * 10, jnp.float32)
+        np.testing.assert_array_equal(K.quantize(x, scale), ref.quantize(x, scale))
+
+    def test_roundtrip_error_bound(self):
+        """|dequantize(quantize(x)) - x| <= scale/2 for unsaturated x."""
+        x = jnp.array(RNG.uniform(-1, 1, (1000,)), jnp.float32)
+        s = float(ref.abs_max_scale(x))
+        err = np.abs(np.asarray(K.dequantize(K.quantize(x, s), s)) - np.asarray(x))
+        assert err.max() <= s / 2 + 1e-7
+
+
+class TestDequantize:
+    def test_matches_ref_int8(self):
+        q = jnp.array(RNG.integers(-127, 128, (33,)), jnp.int8)
+        np.testing.assert_allclose(K.dequantize(q, 0.05), ref.dequantize(q, 0.05))
+
+    def test_matches_ref_int32_accumulator(self):
+        acc = jnp.array(RNG.integers(-(2**20), 2**20, (17, 5)), jnp.int32)
+        np.testing.assert_allclose(
+            K.dequantize(acc, 1.7e-4), ref.dequantize(acc, 1.7e-4), rtol=1e-6
+        )
+
+
+class TestRequantize:
+    def test_matches_ref(self):
+        acc = jnp.array(RNG.integers(-50000, 50000, (64,)), jnp.int32)
+        np.testing.assert_array_equal(
+            K.requantize(acc, 0.001, 0.07), ref.requantize(acc, 0.001, 0.07)
+        )
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.floats(1e-5, 1.0, allow_nan=False),
+        st.floats(1e-3, 1.0, allow_nan=False),
+    )
+    def test_hypothesis_scales(self, s_in, s_out):
+        acc = jnp.array(RNG.integers(-100000, 100000, (256,)), jnp.int32)
+        np.testing.assert_array_equal(
+            K.requantize(acc, s_in, s_out), ref.requantize(acc, s_in, s_out)
+        )
+
+
+class TestRequantizeFixedPoint:
+    @pytest.mark.parametrize("rm", [0.9, 1.0 / 70, 1.7, 3e-5, 0.5])
+    def test_bit_exact_vs_ref(self, rm):
+        acc = jnp.array(RNG.integers(-(2**30), 2**30, (128,)), jnp.int32)
+        m, sh = ref.choose_quant_multiplier(rm)
+        with enable_x64():
+            want = ref.requantize_fixed_point(acc, m, sh)
+        np.testing.assert_array_equal(K.requantize_fixed_point(acc, m, sh), want)
+
+    @pytest.mark.parametrize("rm", [0.9, 1.0 / 70, 3e-5])
+    def test_agrees_with_float_path(self, rm):
+        """The integer-only path may differ from float rescale by at most 1
+        LSB, and only at exact .5 rounding boundaries (rare)."""
+        acc = jnp.array(RNG.integers(-100000, 100000, (4096,)), jnp.int32)
+        m, sh = ref.choose_quant_multiplier(rm)
+        fx = np.asarray(K.requantize_fixed_point(acc, m, sh), np.int32)
+        fl = np.asarray(ref.requantize(acc, rm, 1.0), np.int32)
+        assert np.abs(fx - fl).max() <= 1
+        assert np.mean(fx != fl) < 0.001
+
+    def test_multiplier_decomposition(self):
+        for rm in [1e-6, 0.3, 0.999, 1.0, 7.3, 1000.0]:
+            m, sh = ref.choose_quant_multiplier(rm)
+            assert 2**30 <= m <= 2**31
+            np.testing.assert_allclose(m * 2.0 ** (sh - 31), rm, rtol=1e-8)
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            ref.choose_quant_multiplier(0.0)

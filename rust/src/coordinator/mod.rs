@@ -1,0 +1,328 @@
+//! Inference coordinator: request queue → dynamic batcher → executor worker.
+//!
+//! The serving layer that hosts the paper's memory-bound experiments
+//! (Table 3) as a real system: clients submit single images; the batcher
+//! gathers them under a max-batch/timeout policy and routes each batch to
+//! the executor compiled for the smallest fitting **bucket** (XLA modules
+//! are static-shaped, so the AOT path emits one per batch size — vLLM-style
+//! bucket batching).
+//!
+//! PJRT handles are `!Send`, so the runtime and executors live on one
+//! dedicated worker thread; clients talk to it over channels and get their
+//! replies via oneshot.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::executor::{Executor, GraphExecutor, VmExecutor};
+use crate::manifest::Manifest;
+use crate::metrics::EpochStats;
+use crate::runtime::{Runtime, TensorData};
+
+/// Which model variant the server runs, plus batching policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub layout: String,
+    pub schedule: String,
+    pub precision: String,
+    pub executor: String,
+    /// Upper bound on gathered batch size (clamped to largest bucket).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            layout: "NCHW".into(),
+            schedule: "spatial_pack".into(),
+            precision: "int8".into(),
+            executor: "graph".into(),
+            max_batch: 64,
+            batch_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One inference reply.
+#[derive(Debug, Clone)]
+pub struct InferenceReply {
+    pub logits: TensorData,
+    pub class: usize,
+    /// Batch size the request was served in (bucket).
+    pub batch: usize,
+    pub latency: Duration,
+}
+
+/// One-shot reply channel (std-based; the offline build has no tokio).
+type ReplyTx = std::sync::mpsc::SyncSender<Result<InferenceReply>>;
+
+/// A pending reply: wait on it to get the inference result.
+pub struct PendingReply(std::sync::mpsc::Receiver<Result<InferenceReply>>);
+
+impl PendingReply {
+    pub fn wait(self) -> Result<InferenceReply> {
+        self.0.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<InferenceReply> {
+        self.0
+            .recv_timeout(d)
+            .map_err(|_| anyhow!("timed out or server dropped request"))?
+    }
+}
+
+struct Job {
+    image: TensorData,
+    enqueued: Instant,
+    reply: ReplyTx,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_histogram: std::collections::BTreeMap<usize, u64>,
+    pub latencies_ms: Vec<f64>,
+    pub padded_slots: u64,
+}
+
+impl ServerStats {
+    pub fn latency_stats(&self) -> EpochStats {
+        EpochStats::from_samples(&self.latencies_ms, 0)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        let total: u64 = self
+            .batch_histogram
+            .iter()
+            .map(|(b, n)| *b as u64 * n)
+            .sum();
+        total as f64 / self.batches as f64
+    }
+}
+
+pub struct InferenceServer {
+    tx: std::sync::mpsc::Sender<Msg>,
+    stats: Arc<Mutex<ServerStats>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    pub buckets: Vec<usize>,
+}
+
+impl InferenceServer {
+    /// Start the worker thread: loads the manifest, compiles the bucket
+    /// executors, then serves until shutdown.
+    pub fn start(artifacts: std::path::PathBuf, cfg: ServeConfig) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts)?;
+        let buckets =
+            manifest.batch_buckets(&cfg.layout, &cfg.schedule, &cfg.precision, &cfg.executor);
+        if buckets.is_empty() {
+            return Err(anyhow!(
+                "no bundles for {}/{}/{} {}",
+                cfg.layout, cfg.schedule, cfg.precision, cfg.executor
+            ));
+        }
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+        let worker_stats = stats.clone();
+        let worker_buckets = buckets.clone();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("tvmq-worker".into())
+            .spawn(move || {
+                worker_loop(manifest, cfg, worker_buckets, rx, worker_stats, ready_tx)
+            })
+            .map_err(|e| anyhow!("spawning worker: {e}"))?;
+        // Wait for executor compilation so `submit` never races startup.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+        Ok(Self { tx, stats, handle: Some(handle), buckets })
+    }
+
+    /// Fire-and-wait-later submit: enqueue the image, get a pending reply.
+    pub fn submit(&self, image: TensorData) -> Result<PendingReply> {
+        let (reply, rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Job(Job { image, enqueued: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(PendingReply(rx))
+    }
+
+    /// Submit and wait (for simple callers and benches).
+    pub fn submit_blocking(&self, image: TensorData) -> Result<InferenceReply> {
+        self.submit(image)?.wait()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().expect("stats lock").clone()
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn build_executor(
+    rt: std::rc::Rc<Runtime>,
+    manifest: &Manifest,
+    cfg: &ServeConfig,
+    batch: usize,
+) -> Result<Box<dyn Executor>> {
+    let bundle = manifest.find(
+        &cfg.layout, &cfg.schedule, &cfg.precision, batch, &cfg.executor,
+    )?;
+    Ok(match cfg.executor.as_str() {
+        "graph" => Box::new(GraphExecutor::new(rt, manifest, bundle)?),
+        "vm" => Box::new(VmExecutor::new(rt, manifest, bundle)?),
+        other => return Err(anyhow!("unknown executor {other:?}")),
+    })
+}
+
+fn worker_loop(
+    manifest: Manifest,
+    cfg: ServeConfig,
+    buckets: Vec<usize>,
+    rx: std::sync::mpsc::Receiver<Msg>,
+    stats: Arc<Mutex<ServerStats>>,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    // Compile every bucket executor up front (startup, not request path).
+    let rt = match Runtime::new() {
+        Ok(rt) => std::rc::Rc::new(rt),
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("{e}")));
+            return Err(e);
+        }
+    };
+    let mut executors: Vec<(usize, Box<dyn Executor>)> = Vec::new();
+    for &b in &buckets {
+        match build_executor(rt.clone(), &manifest, &cfg, b) {
+            Ok(e) => executors.push((b, e)),
+            Err(e) => {
+                let _ = ready.send(Err(anyhow!("{e}")));
+                return Err(e);
+            }
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    let max_bucket = *buckets.last().expect("non-empty buckets");
+    let max_batch = cfg.max_batch.min(max_bucket).max(1);
+
+    'serve: loop {
+        // Block for the first job.
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Shutdown) | Err(_) => break 'serve,
+        };
+        let mut jobs = vec![first];
+        // Gather until the batch fills or the timeout expires.
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j)) => jobs.push(j),
+                Ok(Msg::Shutdown) => {
+                    process_batch(&executors, &buckets, jobs, &stats);
+                    break 'serve;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    process_batch(&executors, &buckets, jobs, &stats);
+                    break 'serve;
+                }
+            }
+        }
+        process_batch(&executors, &buckets, jobs, &stats);
+    }
+    Ok(())
+}
+
+fn process_batch(
+    executors: &[(usize, Box<dyn Executor>)],
+    buckets: &[usize],
+    jobs: Vec<Job>,
+    stats: &Arc<Mutex<ServerStats>>,
+) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    // Smallest bucket that fits; if none (shouldn't happen: max_batch is
+    // clamped), fall back to the largest.
+    let bucket = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .unwrap_or_else(|| *buckets.last().expect("buckets"));
+    let exec = &executors
+        .iter()
+        .find(|(b, _)| *b == bucket)
+        .expect("bucket executor")
+        .1;
+
+    let run = (|| -> Result<Vec<TensorData>> {
+        let imgs: Vec<&TensorData> = jobs.iter().map(|j| &j.image).collect();
+        let stacked = TensorData::stack(&imgs)?;
+        let padded = stacked.pad_rows(bucket)?;
+        let out = exec.run(&padded)?;
+        let logits = out.truncate_rows(n)?;
+        logits.split_rows(1)
+    })();
+
+    match run {
+        Ok(per_job) => {
+            let mut s = stats.lock().expect("stats lock");
+            s.requests += n as u64;
+            s.batches += 1;
+            *s.batch_histogram.entry(bucket).or_insert(0) += 1;
+            s.padded_slots += (bucket - n) as u64;
+            for (job, logits) in jobs.into_iter().zip(per_job) {
+                let latency = job.enqueued.elapsed();
+                s.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                let class = logits.argmax_last().map(|v| v[0]).unwrap_or(0);
+                let _ = job.reply.send(Ok(InferenceReply {
+                    logits,
+                    class,
+                    batch: bucket,
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e}");
+            for job in jobs {
+                let _ = job.reply.send(Err(anyhow!("batch failed: {msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Graph executor: the paper's fix (Table 1, `TVM-Quant-Graph`).
+//!
+//! "The Graph Executor is designed for efficient execution of pre-optimized
+//! computation graphs.  It takes a static model graph, where every operation
+//! is pre-defined, and optimizes it through various graph-level
+//! optimizations for the target hardware." (§3.1)
+//!
+//! Concretely: the whole model is ONE fused HLO module — XLA performs the
+//! cross-operator fusion and static buffer planning that TVM's graph
+//! executor gets from its memory planner — and serving an inference is a
+//! single executable dispatch with no interpretation and no per-node
+//! allocation.
+
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+
+use anyhow::{anyhow, Result};
+
+use super::{ExecCounters, ExecSnapshot, Executor};
+use crate::manifest::{Bundle, Manifest};
+use crate::memplan::StaticPlan;
+use crate::runtime::{LoadedModule, Runtime, TensorData};
+
+pub struct GraphExecutor {
+    rt: Rc<Runtime>,
+    module: Rc<LoadedModule>,
+    /// Static memory plan over the (single-module) execution — degenerate
+    /// here but recorded for footprint accounting parity with the VM.
+    pub plan: StaticPlan,
+    name: String,
+    batch: usize,
+    counters: ExecCounters,
+}
+
+impl GraphExecutor {
+    pub fn new(rt: Rc<Runtime>, manifest: &Manifest, bundle: &Bundle) -> Result<Self> {
+        if bundle.executor != "graph" {
+            return Err(anyhow!(
+                "bundle {:?} is a {:?} bundle, not graph",
+                bundle.id, bundle.executor
+            ));
+        }
+        let module = rt.load_module(&manifest.root, &bundle.modules[0])?;
+        let plan = StaticPlan::for_chain(&bundle.modules);
+        Ok(Self {
+            rt,
+            module,
+            plan,
+            name: bundle.id.clone(),
+            batch: bundle.batch,
+            counters: ExecCounters::default(),
+        })
+    }
+}
+
+impl Executor for GraphExecutor {
+    fn run(&self, input: &TensorData) -> Result<TensorData> {
+        if input.shape != self.module.inputs[0].shape {
+            return Err(anyhow!(
+                "{}: input shape {:?} != compiled {:?}",
+                self.name, input.shape, self.module.inputs[0].shape
+            ));
+        }
+        self.counters.invocations.fetch_add(1, Ordering::Relaxed);
+        self.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.rt.execute_host(&self.module, &[input])
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn counters(&self) -> ExecSnapshot {
+        self.counters.snapshot()
+    }
+}

@@ -1,0 +1,215 @@
+//! Graph builders: seeded test networks for the IR pipeline, pass tests,
+//! and the Figure-1 / ablation benches.
+//!
+//! Weights here are rust-side (seeded ChaCha8) — independent of the AOT
+//! artifacts, which bake their own weights.  The IR layer is the in-process
+//! compile pipeline; the artifacts are the AOT one.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng64;
+
+use super::ir::{conv_out_size, Graph, Layout, NodeId, Op, TensorTy};
+use crate::runtime::TensorData;
+
+/// Spec for a small conv net: a stack of conv+bias+relu stages with
+/// optional residual links, ending in global-avg-pool + dense.
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    pub batch: usize,
+    pub image: usize,
+    pub in_channels: usize,
+    pub stages: Vec<StageSpec>,
+    pub classes: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub channels: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub residual: bool,
+}
+
+impl NetSpec {
+    /// The default IR demo net: CIFAR-scale, 4 stages, one residual.
+    pub fn small(batch: usize) -> Self {
+        NetSpec {
+            batch,
+            image: 16,
+            in_channels: 3,
+            stages: vec![
+                StageSpec { channels: 16, kernel: 3, stride: 1, residual: false },
+                StageSpec { channels: 16, kernel: 3, stride: 1, residual: true },
+                StageSpec { channels: 32, kernel: 3, stride: 2, residual: false },
+            ],
+            classes: 10,
+            seed: 7,
+        }
+    }
+}
+
+fn he_weights(rng: &mut Rng64, k: usize, c: usize, r: usize) -> Vec<f32> {
+    let std = (2.0 / (c * r * r) as f32).sqrt();
+    (0..k * c * r * r)
+        .map(|_| (rng.f32() * 2.0 - 1.0) * 1.73 * std)
+        .collect()
+}
+
+/// Build a conv net per spec (NCHW, fp32).
+pub fn build_conv_net(spec: &NetSpec) -> Result<Graph> {
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(spec.seed);
+    let x = g.add_input(
+        "data",
+        TensorTy::f32(vec![spec.batch, spec.in_channels, spec.image, spec.image]),
+    );
+    let mut cur: NodeId = x;
+    let mut c = spec.in_channels;
+    let mut hw = spec.image;
+    for (i, st) in spec.stages.iter().enumerate() {
+        let name = format!("conv{i}");
+        let pad = st.kernel / 2;
+        let w = g.add_const_f32(
+            format!("{name}.w"),
+            vec![st.channels, c, st.kernel, st.kernel],
+            he_weights(&mut rng, st.channels, c, st.kernel),
+        )?;
+        let b = g.add_const_f32(
+            format!("{name}.b"),
+            vec![st.channels],
+            (0..st.channels).map(|_| rng.f32() * 0.1 - 0.05).collect(),
+        )?;
+        let conv = g.add(
+            name.clone(),
+            Op::Conv2d { stride: st.stride, padding: pad, layout: Layout::Nchw },
+            vec![cur, w],
+        )?;
+        let biased = g.add(
+            format!("{name}.bias"),
+            Op::BiasAdd { layout: Layout::Nchw },
+            vec![conv, b],
+        )?;
+        let act = g.add(format!("{name}.relu"), Op::Relu, vec![biased])?;
+        cur = if st.residual && st.stride == 1 && st.channels == c {
+            g.add(format!("{name}.skip"), Op::Add, vec![act, cur])?
+        } else {
+            act
+        };
+        c = st.channels;
+        hw = conv_out_size(hw, st.kernel, st.stride, pad);
+        let _ = hw;
+    }
+    let pooled = g.add(
+        "gap",
+        Op::GlobalAvgPool { layout: Layout::Nchw },
+        vec![cur],
+    )?;
+    let wd = g.add_const_f32(
+        "fc.w",
+        vec![c, spec.classes],
+        (0..c * spec.classes)
+            .map(|_| (rng.f32() * 2.0 - 1.0) / (c as f32).sqrt())
+            .collect(),
+    )?;
+    let logits = g.add("fc", Op::Dense, vec![pooled, wd])?;
+    g.output = logits;
+    g.validate()?;
+    Ok(g)
+}
+
+/// The ResNet-10-shaped IR (mirrors the python `resnet10` arch) — used by
+/// the compile-pipeline demo so pass statistics refer to the real model.
+pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(seed);
+    let x = g.add_input("data", TensorTy::f32(vec![batch, 3, image, image]));
+
+    let mut add_conv = |g: &mut Graph,
+                        rng: &mut Rng64,
+                        name: &str,
+                        input: NodeId,
+                        cin: usize,
+                        cout: usize,
+                        kernel: usize,
+                        stride: usize,
+                        pad: usize,
+                        relu: bool|
+     -> Result<NodeId> {
+        let w = g.add_const_f32(
+            format!("{name}.w"),
+            vec![cout, cin, kernel, kernel],
+            he_weights(rng, cout, cin, kernel),
+        )?;
+        let b = g.add_const_f32(
+            format!("{name}.b"),
+            vec![cout],
+            (0..cout).map(|_| rng.f32() * 0.1 - 0.05).collect(),
+        )?;
+        let conv = g.add(
+            name.to_string(),
+            Op::Conv2d { stride, padding: pad, layout: Layout::Nchw },
+            vec![input, w],
+        )?;
+        let biased = g.add(
+            format!("{name}.bias"),
+            Op::BiasAdd { layout: Layout::Nchw },
+            vec![conv, b],
+        )?;
+        if relu {
+            g.add(format!("{name}.relu"), Op::Relu, vec![biased])
+        } else {
+            Ok(biased)
+        }
+    };
+
+    let mut cur = add_conv(&mut g, &mut rng, "stem", x, 3, 16, 3, 1, 1, true)?;
+    let mut cin = 16;
+    for (bi, (cout, stride)) in [(16usize, 1usize), (32, 2), (64, 2), (128, 2)]
+        .into_iter()
+        .enumerate()
+    {
+        let name = format!("block{bi}");
+        let m1 = add_conv(
+            &mut g, &mut rng, &format!("{name}.conv1"), cur, cin, cout, 3, stride, 1, true,
+        )?;
+        let m2 = add_conv(
+            &mut g, &mut rng, &format!("{name}.conv2"), m1, cout, cout, 3, 1, 1, false,
+        )?;
+        let skip = if stride != 1 || cin != cout {
+            add_conv(
+                &mut g, &mut rng, &format!("{name}.down"), cur, cin, cout, 1, stride, 0, false,
+            )?
+        } else {
+            cur
+        };
+        let sum = g.add(format!("{name}.add"), Op::Add, vec![m2, skip])?;
+        cur = g.add(format!("{name}.relu"), Op::Relu, vec![sum])?;
+        cin = cout;
+    }
+    let pooled = g.add("gap", Op::GlobalAvgPool { layout: Layout::Nchw }, vec![cur])?;
+    let wd = g.add_const_f32(
+        "fc.w",
+        vec![cin, 10],
+        (0..cin * 10)
+            .map(|_| (rng.f32() * 2.0 - 1.0) / (cin as f32).sqrt())
+            .collect(),
+    )?;
+    g.output = g.add("fc", Op::Dense, vec![pooled, wd])?;
+    g.validate()?;
+    Ok(g)
+}
+
+/// Seeded input batch for IR evaluation.
+pub fn calibrate_ir(g: &Graph, seed: u64) -> TensorData {
+    let ty = &g.nodes[g.input].ty;
+    let mut rng = Rng64::seed_from_u64(seed);
+    let vals: Vec<f32> = (0..ty.element_count())
+        .map(|_| {
+            let s: f32 = (0..4).map(|_| rng.f32()).sum::<f32>() - 2.0;
+            s * 0.866
+        })
+        .collect();
+    TensorData::from_f32(ty.shape.clone(), &vals).expect("input shape")
+}

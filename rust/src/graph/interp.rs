@@ -1,0 +1,528 @@
+//! Reference interpreter over the graph IR — the semantic oracle.
+//!
+//! Every pass must preserve `evaluate(g, x)`; the pass tests and proptests
+//! check exactly that.  Implementations are deliberately naive (clarity
+//! over speed) except the NCHW{c} conv, whose *relative* speed vs the
+//! unpacked conv is itself a measurement (Figure 1 bench): packing makes
+//! the inner loop unit-stride, and that locality is visible even in
+//! straightforward rust.
+
+use anyhow::{anyhow, Result};
+
+use super::ir::{dims_of, ConstValue, Graph, IrDType, Layout, Node, Op};
+use crate::runtime::{DType, TensorData};
+
+fn to_dtype(ir: IrDType) -> DType {
+    match ir {
+        IrDType::F32 => DType::F32,
+        IrDType::S8 => DType::S8,
+        IrDType::S32 => DType::S32,
+    }
+}
+
+/// Evaluate the whole graph on one input tensor.
+pub fn evaluate(g: &Graph, input: &TensorData) -> Result<TensorData> {
+    let live = g.live_set();
+    let mut env: Vec<Option<TensorData>> = vec![None; g.nodes.len()];
+    for node in &g.nodes {
+        if !live[node.id] {
+            continue;
+        }
+        let value = eval_node(g, node, &env, input)?;
+        env[node.id] = Some(value);
+    }
+    env[g.output]
+        .take()
+        .ok_or_else(|| anyhow!("output node not evaluated"))
+}
+
+/// Evaluate a single node given an environment (used by constant folding
+/// with an empty environment and by group-wise execution in fusion tests).
+pub fn eval_node(
+    g: &Graph,
+    node: &Node,
+    env: &[Option<TensorData>],
+    input: &TensorData,
+) -> Result<TensorData> {
+    let arg = |i: usize| -> Result<&TensorData> {
+        let id = node.inputs[i];
+        env[id]
+            .as_ref()
+            .ok_or_else(|| anyhow!("node {} input {} unevaluated", node.name, id))
+    };
+    let out = match &node.op {
+        Op::Input => {
+            if input.shape != node.ty.shape || input.dtype != to_dtype(node.ty.dtype) {
+                return Err(anyhow!(
+                    "input {:?}/{:?} != declared {:?}/{:?}",
+                    input.shape, input.dtype, node.ty.shape, node.ty.dtype
+                ));
+            }
+            input.clone()
+        }
+        Op::Constant(c) => match c {
+            ConstValue::F32(v) => TensorData::from_f32(node.ty.shape.clone(), v)?,
+            ConstValue::I8(v) => TensorData::from_i8(node.ty.shape.clone(), v)?,
+        },
+        Op::Conv2d { stride, padding, layout } => {
+            conv2d(arg(0)?, arg(1)?, *stride, *padding, *layout, &node.ty.shape)?
+        }
+        Op::Dense => dense(arg(0)?, arg(1)?)?,
+        Op::BiasAdd { layout } => bias_add(arg(0)?, arg(1)?, *layout)?,
+        Op::Relu => relu(arg(0)?)?,
+        Op::Add => add(arg(0)?, arg(1)?)?,
+        Op::MaxPool { window, stride, padding, layout } => {
+            maxpool(arg(0)?, *window, *stride, *padding, *layout, &node.ty.shape)?
+        }
+        Op::GlobalAvgPool { layout } => global_avgpool(arg(0)?, *layout)?,
+        Op::Quantize { scale } => {
+            let q = crate::quant::quantize(&arg(0)?.as_f32()?, *scale);
+            TensorData::from_i8(node.ty.shape.clone(), &q)?
+        }
+        Op::Dequantize { scale } => {
+            let x = arg(0)?;
+            let vals: Vec<f32> = match x.dtype {
+                DType::S8 => x.as_i8()?.iter().map(|v| *v as f32 * scale).collect(),
+                DType::S32 => x.as_i32()?.iter().map(|v| *v as f32 * scale).collect(),
+                DType::F32 => return Err(anyhow!("dequantize of f32")),
+            };
+            TensorData::from_f32(node.ty.shape.clone(), &vals)?
+        }
+        Op::LayoutTransform { from, to } => layout_transform(arg(0)?, *from, *to, &node.ty.shape)?,
+    };
+    if out.shape != node.ty.shape {
+        return Err(anyhow!(
+            "node {} produced shape {:?}, typed {:?}",
+            node.name, out.shape, node.ty.shape
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Operator implementations
+// ---------------------------------------------------------------------------
+
+fn conv2d(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    layout: Layout,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    match (x.dtype, w.dtype) {
+        (DType::F32, DType::F32) => match layout {
+            Layout::Nchw => conv2d_nchw_f32(x, w, stride, padding, out_shape),
+            Layout::Nhwc => conv2d_nhwc_f32(x, w, stride, padding, out_shape),
+            Layout::Nchwc(cb) => conv2d_nchwc_f32(x, w, stride, padding, cb, out_shape),
+        },
+        (DType::S8, DType::S8) => match layout {
+            Layout::Nchw => conv2d_nchw_i8(x, w, stride, padding, out_shape),
+            _ => Err(anyhow!("int8 conv implemented for NCHW only in the interpreter")),
+        },
+        other => Err(anyhow!("conv dtype combination {:?}", other)),
+    }
+}
+
+pub fn conv2d_nchw_f32(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let wv = w.as_f32()?;
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (k, _, r, s) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (out_shape[2], out_shape[3]);
+    let mut out = vec![0f32; n * k * oh * ow];
+    for ni in 0..n {
+        for ki in 0..k {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0f32;
+                    for ci in 0..c {
+                        for ry in 0..r {
+                            let iy = oy * stride + ry;
+                            if iy < padding || iy >= h + padding {
+                                continue;
+                            }
+                            let iy = iy - padding;
+                            for sx in 0..s {
+                                let ix = ox * stride + sx;
+                                if ix < padding || ix >= wd + padding {
+                                    continue;
+                                }
+                                let ix = ix - padding;
+                                acc += xv[((ni * c + ci) * h + iy) * wd + ix]
+                                    * wv[((ki * c + ci) * r + ry) * s + sx];
+                            }
+                        }
+                    }
+                    out[((ni * k + ki) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    TensorData::from_f32(out_shape.to_vec(), &out)
+}
+
+fn conv2d_nchw_i8(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_i8()?;
+    let wv = w.as_i8()?;
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (k, _, r, s) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (out_shape[2], out_shape[3]);
+    let mut out = vec![0i32; n * k * oh * ow];
+    for ni in 0..n {
+        for ki in 0..k {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i32;
+                    for ci in 0..c {
+                        for ry in 0..r {
+                            let iy = oy * stride + ry;
+                            if iy < padding || iy >= h + padding {
+                                continue;
+                            }
+                            let iy = iy - padding;
+                            for sx in 0..s {
+                                let ix = ox * stride + sx;
+                                if ix < padding || ix >= wd + padding {
+                                    continue;
+                                }
+                                let ix = ix - padding;
+                                acc += xv[((ni * c + ci) * h + iy) * wd + ix] as i32
+                                    * wv[((ki * c + ci) * r + ry) * s + sx] as i32;
+                            }
+                        }
+                    }
+                    out[((ni * k + ki) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    TensorData::from_i32(out_shape.to_vec(), &out)
+}
+
+fn conv2d_nhwc_f32(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let wv = w.as_f32()?; // HWIO
+    let (n, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (r, s, _, k) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (out_shape[1], out_shape[2]);
+    let mut out = vec![0f32; n * oh * ow * k];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ki in 0..k {
+                    let mut acc = 0f32;
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            for ci in 0..c {
+                                acc += xv[((ni * h + iy) * wd + ix) * c + ci]
+                                    * wv[((ry * s + sx) * c + ci) * k + ki];
+                            }
+                        }
+                    }
+                    out[((ni * oh + oy) * ow + ox) * k + ki] = acc;
+                }
+            }
+        }
+    }
+    TensorData::from_f32(out_shape.to_vec(), &out)
+}
+
+/// Packed conv: data NCHW{cb}, weight OIHW{i}{o}.  The inner `ci` loop is
+/// unit-stride on both operands — the Figure-1 payoff.
+pub fn conv2d_nchwc_f32(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    cb: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let wv = w.as_f32()?;
+    let (n, co, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (ko, _, r, s, _, kb) = (
+        w.shape[0], w.shape[1], w.shape[2], w.shape[3], w.shape[4], w.shape[5],
+    );
+    let (oh, ow) = (out_shape[2], out_shape[3]);
+    let mut out = vec![0f32; n * ko * oh * ow * kb];
+    for ni in 0..n {
+        for ok in 0..ko {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = vec![0f32; kb];
+                    for oc in 0..co {
+                        for ry in 0..r {
+                            let iy = oy * stride + ry;
+                            if iy < padding || iy >= h + padding {
+                                continue;
+                            }
+                            let iy = iy - padding;
+                            for sx in 0..s {
+                                let ix = ox * stride + sx;
+                                if ix < padding || ix >= wd + padding {
+                                    continue;
+                                }
+                                let ix = ix - padding;
+                                let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                                let wbase =
+                                    ((((ok * co + oc) * r + ry) * s + sx) * cb) * kb;
+                                for ci in 0..cb {
+                                    let xi = xv[xbase + ci];
+                                    let wrow = wbase + ci * kb;
+                                    for ki in 0..kb {
+                                        acc[ki] += xi * wv[wrow + ki];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let obase = (((ni * ko + ok) * oh + oy) * ow + ox) * kb;
+                    out[obase..obase + kb].copy_from_slice(&acc);
+                }
+            }
+        }
+    }
+    TensorData::from_f32(out_shape.to_vec(), &out)
+}
+
+fn dense(x: &TensorData, w: &TensorData) -> Result<TensorData> {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let n = w.shape[1];
+    match (x.dtype, w.dtype) {
+        (DType::F32, DType::F32) => {
+            let (xv, wv) = (x.as_f32()?, w.as_f32()?);
+            let mut out = vec![0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let xik = xv[i * k + kk];
+                    for j in 0..n {
+                        out[i * n + j] += xik * wv[kk * n + j];
+                    }
+                }
+            }
+            TensorData::from_f32(vec![m, n], &out)
+        }
+        (DType::S8, DType::S8) => {
+            let (xv, wv) = (x.as_i8()?, w.as_i8()?);
+            let mut out = vec![0i32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let xik = xv[i * k + kk] as i32;
+                    for j in 0..n {
+                        out[i * n + j] += xik * wv[kk * n + j] as i32;
+                    }
+                }
+            }
+            TensorData::from_i32(vec![m, n], &out)
+        }
+        other => Err(anyhow!("dense dtypes {:?}", other)),
+    }
+}
+
+fn bias_add(x: &TensorData, b: &TensorData, layout: Layout) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let bv = b.as_f32()?;
+    let (_, c, _, _) = dims_of(&x.shape, layout)?;
+    let mut out = xv;
+    match layout {
+        Layout::Nchw => {
+            let hw: usize = x.shape[2] * x.shape[3];
+            for (i, v) in out.iter_mut().enumerate() {
+                *v += bv[(i / hw) % c];
+            }
+        }
+        Layout::Nhwc => {
+            for (i, v) in out.iter_mut().enumerate() {
+                *v += bv[i % c];
+            }
+        }
+        Layout::Nchwc(cb) => {
+            let hw = x.shape[2] * x.shape[3];
+            let co = x.shape[1];
+            for (i, v) in out.iter_mut().enumerate() {
+                let ci = i % cb;
+                let oc = (i / (cb * hw)) % co;
+                *v += bv[oc * cb + ci];
+            }
+        }
+    }
+    TensorData::from_f32(x.shape.clone(), &out)
+}
+
+fn relu(x: &TensorData) -> Result<TensorData> {
+    match x.dtype {
+        DType::F32 => {
+            let v: Vec<f32> = x.as_f32()?.iter().map(|v| v.max(0.0)).collect();
+            TensorData::from_f32(x.shape.clone(), &v)
+        }
+        DType::S32 => {
+            let v: Vec<i32> = x.as_i32()?.iter().map(|v| (*v).max(0)).collect();
+            TensorData::from_i32(x.shape.clone(), &v)
+        }
+        DType::S8 => {
+            let v: Vec<i8> = x.as_i8()?.iter().map(|v| (*v).max(0)).collect();
+            TensorData::from_i8(x.shape.clone(), &v)
+        }
+    }
+}
+
+fn add(a: &TensorData, b: &TensorData) -> Result<TensorData> {
+    if a.shape != b.shape || a.dtype != b.dtype {
+        return Err(anyhow!("add mismatch"));
+    }
+    match a.dtype {
+        DType::F32 => {
+            let v: Vec<f32> =
+                a.as_f32()?.iter().zip(b.as_f32()?).map(|(x, y)| x + y).collect();
+            TensorData::from_f32(a.shape.clone(), &v)
+        }
+        DType::S32 => {
+            let v: Vec<i32> =
+                a.as_i32()?.iter().zip(b.as_i32()?).map(|(x, y)| x + y).collect();
+            TensorData::from_i32(a.shape.clone(), &v)
+        }
+        DType::S8 => {
+            let v: Vec<i8> = a
+                .as_i8()?
+                .iter()
+                .zip(b.as_i8()?)
+                .map(|(x, y)| x.saturating_add(y))
+                .collect();
+            TensorData::from_i8(a.shape.clone(), &v)
+        }
+    }
+}
+
+fn maxpool(
+    x: &TensorData,
+    window: usize,
+    stride: usize,
+    padding: usize,
+    layout: Layout,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let (n, c, h, w) = dims_of(&x.shape, layout)?;
+    let (_, _, oh, ow) = dims_of(out_shape, layout)?;
+    let get = |ni: usize, ci: usize, y: usize, xx: usize| -> f32 {
+        match layout {
+            Layout::Nchw => xv[((ni * c + ci) * h + y) * w + xx],
+            Layout::Nhwc => xv[((ni * h + y) * w + xx) * c + ci],
+            Layout::Nchwc(cb) => {
+                let co = ci / cb;
+                let cl = ci % cb;
+                xv[((((ni * (c / cb)) + co) * h + y) * w + xx) * cb + cl]
+            }
+        }
+    };
+    let mut out = vec![f32::NEG_INFINITY; out_shape.iter().product()];
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ry in 0..window {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        for rx in 0..window {
+                            let ix = ox * stride + rx;
+                            if ix < padding || ix >= w + padding {
+                                continue;
+                            }
+                            m = m.max(get(ni, ci, iy - padding, ix - padding));
+                        }
+                    }
+                    let oi = match layout {
+                        Layout::Nchw => ((ni * c + ci) * oh + oy) * ow + ox,
+                        Layout::Nhwc => ((ni * oh + oy) * ow + ox) * c + ci,
+                        Layout::Nchwc(cb) => {
+                            ((((ni * (c / cb)) + ci / cb) * oh + oy) * ow + ox) * cb + ci % cb
+                        }
+                    };
+                    out[oi] = m;
+                }
+            }
+        }
+    }
+    TensorData::from_f32(out_shape.to_vec(), &out)
+}
+
+fn global_avgpool(x: &TensorData, layout: Layout) -> Result<TensorData> {
+    let xv = x.as_f32()?;
+    let (n, c, h, w) = dims_of(&x.shape, layout)?;
+    let mut out = vec![0f32; n * c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut s = 0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += match layout {
+                        Layout::Nchw => xv[((ni * c + ci) * h + y) * w + xx],
+                        Layout::Nhwc => xv[((ni * h + y) * w + xx) * c + ci],
+                        Layout::Nchwc(cb) => {
+                            xv[((((ni * (c / cb)) + ci / cb) * h + y) * w + xx) * cb + ci % cb]
+                        }
+                    };
+                }
+            }
+            out[ni * c + ci] = s / (h * w) as f32;
+        }
+    }
+    TensorData::from_f32(vec![n, c], &out)
+}
+
+fn layout_transform(
+    x: &TensorData,
+    from: Layout,
+    to: Layout,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    use crate::layout as L;
+    let (n, c, h, w) = dims_of(&x.shape, from)?;
+    let d = L::Nchw { n, c, h, w };
+    let xv = x.as_f32()?;
+    // Normalize to NCHW, then to target.
+    let nchw = match from {
+        Layout::Nchw => xv,
+        Layout::Nhwc => L::nhwc_to_nchw(&xv, d)?,
+        Layout::Nchwc(cb) => L::unpack_nchwc(&xv, d, cb)?,
+    };
+    let out = match to {
+        Layout::Nchw => nchw,
+        Layout::Nhwc => L::nchw_to_nhwc(&nchw, d)?,
+        Layout::Nchwc(cb) => L::pack_nchwc(&nchw, d, cb)?,
+    };
+    TensorData::from_f32(out_shape.to_vec(), &out)
+}

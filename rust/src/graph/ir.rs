@@ -1,0 +1,504 @@
+//! The dataflow IR: typed nodes in an append-only (hence topologically
+//! ordered) graph.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    Nchw,
+    Nhwc,
+    /// Channel-blocked NCHW{c} with the given block (Figure 1).
+    Nchwc(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IrDType {
+    F32,
+    S8,
+    S32,
+}
+
+impl IrDType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            IrDType::F32 | IrDType::S32 => 4,
+            IrDType::S8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorTy {
+    pub shape: Vec<usize>,
+    pub dtype: IrDType,
+}
+
+impl TensorTy {
+    pub fn f32(shape: Vec<usize>) -> Self {
+        Self { shape, dtype: IrDType::F32 }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// Constant payloads (weights, biases, quantized weights).
+#[derive(Debug, Clone)]
+pub enum ConstValue {
+    F32(Arc<Vec<f32>>),
+    I8(Arc<Vec<i8>>),
+}
+
+impl ConstValue {
+    pub fn len(&self) -> usize {
+        match self {
+            ConstValue::F32(v) => v.len(),
+            ConstValue::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> IrDType {
+        match self {
+            ConstValue::F32(_) => IrDType::F32,
+            ConstValue::I8(_) => IrDType::S8,
+        }
+    }
+}
+
+/// Operator set: the ResNet inference vocabulary plus the qnn boundary ops
+/// and layout transforms — what TVM's relay level sees for this workload.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Input,
+    Constant(ConstValue),
+    /// inputs: [data, weight].  Weight layout follows `layout`:
+    /// OIHW for Nchw, HWIO for Nhwc, OIHW{i}{o} for Nchwc.
+    Conv2d { stride: usize, padding: usize, layout: Layout },
+    /// inputs: [x (M,K), w (K,N)]
+    Dense,
+    /// inputs: [x, bias(C)]
+    BiasAdd { layout: Layout },
+    Relu,
+    /// inputs: [a, b] (same type)
+    Add,
+    MaxPool { window: usize, stride: usize, padding: usize, layout: Layout },
+    GlobalAvgPool { layout: Layout },
+    /// fp32 -> int8 at a static scale (realized quantization).
+    Quantize { scale: f32 },
+    /// int8/int32 -> fp32 at a static scale.
+    Dequantize { scale: f32 },
+    LayoutTransform { from: Layout, to: Layout },
+}
+
+impl Op {
+    /// Anchor ops start fusion groups; elementwise/injective ops get fused
+    /// into their producer's group (TVM's `kOutEWiseFusable` / injective
+    /// classification, distilled).
+    pub fn is_anchor(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::Dense)
+    }
+
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            Op::BiasAdd { .. } | Op::Relu | Op::Add | Op::Quantize { .. } | Op::Dequantize { .. }
+        )
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Constant(_) => "constant",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Dense => "dense",
+            Op::BiasAdd { .. } => "bias_add",
+            Op::Relu => "relu",
+            Op::Add => "add",
+            Op::MaxPool { .. } => "max_pool",
+            Op::GlobalAvgPool { .. } => "global_avg_pool",
+            Op::Quantize { .. } => "quantize",
+            Op::Dequantize { .. } => "dequantize",
+            Op::LayoutTransform { .. } => "layout_transform",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub ty: TensorTy,
+}
+
+/// Append-only dataflow graph; node ids are topologically ordered by
+/// construction (inputs always precede users).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub input: NodeId,
+    pub output: NodeId,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: Vec<NodeId>) -> Result<NodeId> {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            if i >= id {
+                return Err(anyhow!("node {:?} input {} not yet defined", name.into(), i));
+            }
+        }
+        let in_tys: Vec<&TensorTy> = inputs.iter().map(|&i| &self.nodes[i].ty).collect();
+        let ty = infer_type(&op, &in_tys)?;
+        self.nodes.push(Node { id, name: name.into(), op, inputs, ty });
+        Ok(id)
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Users of each node (computed on demand).
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut users = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                users[i].push(n.id);
+            }
+        }
+        users
+    }
+
+    /// Nodes reachable from the output (for DCE and validation).
+    pub fn live_set(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack = vec![self.output];
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            stack.extend(self.nodes[id].inputs.iter().copied());
+        }
+        live
+    }
+
+    /// Structural validation: ids consistent, output in range, types okay.
+    pub fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(anyhow!("node {} has id {}", i, n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(anyhow!("node {} uses later node {}", i, inp));
+                }
+            }
+            match &n.op {
+                // Inputs/constants carry explicit shapes; check consistency
+                // (inference cannot reconstruct a constant's rank).
+                Op::Input => {}
+                Op::Constant(c) => {
+                    if n.ty.element_count() != c.len() || n.ty.dtype != c.dtype() {
+                        return Err(anyhow!(
+                            "constant {} ty {:?} != payload ({} x {:?})",
+                            n.name, n.ty, c.len(), c.dtype()
+                        ));
+                    }
+                }
+                op => {
+                    let in_tys: Vec<&TensorTy> =
+                        n.inputs.iter().map(|&x| &self.nodes[x].ty).collect();
+                    let want = infer_type(op, &in_tys)?;
+                    if want != n.ty {
+                        return Err(anyhow!(
+                            "node {} ({}) type {:?} != inferred {:?}",
+                            n.name, op.kind_name(), n.ty, want
+                        ));
+                    }
+                }
+            }
+        }
+        if self.output >= self.nodes.len() {
+            return Err(anyhow!("output id out of range"));
+        }
+        Ok(())
+    }
+
+    /// Total constant (weight) bytes — the memory-accounting input.
+    pub fn const_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Constant(c) => c.len() * c.dtype().size_bytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+pub fn conv_out_size(size: usize, r: usize, stride: usize, padding: usize) -> usize {
+    (size + 2 * padding - r) / stride + 1
+}
+
+/// Shape/dtype inference for every operator.
+pub fn infer_type(op: &Op, inputs: &[&TensorTy]) -> Result<TensorTy> {
+    let need = |n: usize| -> Result<()> {
+        if inputs.len() != n {
+            return Err(anyhow!("{} expects {} inputs, got {}", op.kind_name(), n, inputs.len()));
+        }
+        Ok(())
+    };
+    match op {
+        Op::Input => Err(anyhow!("input type must be set explicitly via add_input")),
+        Op::Constant(c) => Ok(TensorTy { shape: vec![c.len()], dtype: c.dtype() }),
+        Op::Conv2d { stride, padding, layout } => {
+            need(2)?;
+            conv2d_type(inputs[0], inputs[1], *stride, *padding, *layout)
+        }
+        Op::Dense => {
+            need(2)?;
+            let (x, w) = (inputs[0], inputs[1]);
+            if x.shape.len() != 2 || w.shape.len() != 2 || x.shape[1] != w.shape[0] {
+                return Err(anyhow!("dense shapes {:?} x {:?}", x.shape, w.shape));
+            }
+            let dtype = match (x.dtype, w.dtype) {
+                (IrDType::F32, IrDType::F32) => IrDType::F32,
+                (IrDType::S8, IrDType::S8) => IrDType::S32,
+                other => return Err(anyhow!("dense dtypes {:?}", other)),
+            };
+            Ok(TensorTy { shape: vec![x.shape[0], w.shape[1]], dtype })
+        }
+        Op::BiasAdd { layout } => {
+            need(2)?;
+            let (x, b) = (inputs[0], inputs[1]);
+            let (_, c, _, _) = dims_of(&x.shape, *layout)?;
+            if b.shape != vec![c] {
+                return Err(anyhow!("bias shape {:?} for C={}", b.shape, c));
+            }
+            if x.dtype != IrDType::F32 || b.dtype != IrDType::F32 {
+                return Err(anyhow!("bias_add requires f32"));
+            }
+            Ok(x.clone())
+        }
+        Op::Relu => {
+            need(1)?;
+            Ok(inputs[0].clone())
+        }
+        Op::Add => {
+            need(2)?;
+            if inputs[0] != inputs[1] {
+                return Err(anyhow!("add type mismatch {:?} vs {:?}", inputs[0], inputs[1]));
+            }
+            Ok(inputs[0].clone())
+        }
+        Op::MaxPool { window, stride, padding, layout } => {
+            need(1)?;
+            let x = inputs[0];
+            let (n, c, h, w) = dims_of(&x.shape, *layout)?;
+            let oh = conv_out_size(h, *window, *stride, *padding);
+            let ow = conv_out_size(w, *window, *stride, *padding);
+            Ok(TensorTy { shape: shape_of(n, c, oh, ow, *layout), dtype: x.dtype })
+        }
+        Op::GlobalAvgPool { layout } => {
+            need(1)?;
+            let (n, c, _, _) = dims_of(&inputs[0].shape, *layout)?;
+            Ok(TensorTy { shape: vec![n, c], dtype: inputs[0].dtype })
+        }
+        Op::Quantize { .. } => {
+            need(1)?;
+            if inputs[0].dtype != IrDType::F32 {
+                return Err(anyhow!("quantize input must be f32"));
+            }
+            Ok(TensorTy { shape: inputs[0].shape.clone(), dtype: IrDType::S8 })
+        }
+        Op::Dequantize { .. } => {
+            need(1)?;
+            if inputs[0].dtype == IrDType::F32 {
+                return Err(anyhow!("dequantize input must be integer"));
+            }
+            Ok(TensorTy { shape: inputs[0].shape.clone(), dtype: IrDType::F32 })
+        }
+        Op::LayoutTransform { from, to } => {
+            need(1)?;
+            let (n, c, h, w) = dims_of(&inputs[0].shape, *from)?;
+            Ok(TensorTy { shape: shape_of(n, c, h, w, *to), dtype: inputs[0].dtype })
+        }
+    }
+}
+
+fn conv2d_type(
+    x: &TensorTy,
+    w: &TensorTy,
+    stride: usize,
+    padding: usize,
+    layout: Layout,
+) -> Result<TensorTy> {
+    let out_dtype = match (x.dtype, w.dtype) {
+        (IrDType::F32, IrDType::F32) => IrDType::F32,
+        (IrDType::S8, IrDType::S8) => IrDType::S32,
+        other => return Err(anyhow!("conv dtypes {:?}", other)),
+    };
+    let (n, c, h, wd) = dims_of(&x.shape, layout)?;
+    let (k, cw, r, s) = match layout {
+        Layout::Nchw => {
+            if w.shape.len() != 4 {
+                return Err(anyhow!("OIHW weight rank {:?}", w.shape));
+            }
+            (w.shape[0], w.shape[1], w.shape[2], w.shape[3])
+        }
+        Layout::Nhwc => {
+            if w.shape.len() != 4 {
+                return Err(anyhow!("HWIO weight rank {:?}", w.shape));
+            }
+            (w.shape[3], w.shape[2], w.shape[0], w.shape[1])
+        }
+        Layout::Nchwc(cb) => {
+            // OIHW{i}{o}: (K/kb, C/cb, R, S, cb, kb)
+            if w.shape.len() != 6 || w.shape[4] != cb {
+                return Err(anyhow!("OIHWio weight shape {:?} (cb={})", w.shape, cb));
+            }
+            (
+                w.shape[0] * w.shape[5],
+                w.shape[1] * w.shape[4],
+                w.shape[2],
+                w.shape[3],
+            )
+        }
+    };
+    if c != cw {
+        return Err(anyhow!("conv channel mismatch {} vs {}", c, cw));
+    }
+    let oh = conv_out_size(h, r, stride, padding);
+    let ow = conv_out_size(wd, s, stride, padding);
+    Ok(TensorTy { shape: shape_of(n, k, oh, ow, layout), dtype: out_dtype })
+}
+
+pub fn dims_of(shape: &[usize], layout: Layout) -> Result<(usize, usize, usize, usize)> {
+    match layout {
+        Layout::Nchw => {
+            if shape.len() != 4 {
+                return Err(anyhow!("NCHW rank {:?}", shape));
+            }
+            Ok((shape[0], shape[1], shape[2], shape[3]))
+        }
+        Layout::Nhwc => {
+            if shape.len() != 4 {
+                return Err(anyhow!("NHWC rank {:?}", shape));
+            }
+            Ok((shape[0], shape[3], shape[1], shape[2]))
+        }
+        Layout::Nchwc(cb) => {
+            if shape.len() != 5 || shape[4] != cb {
+                return Err(anyhow!("NCHW{}c rank {:?}", cb, shape));
+            }
+            Ok((shape[0], shape[1] * cb, shape[2], shape[3]))
+        }
+    }
+}
+
+pub fn shape_of(n: usize, c: usize, h: usize, w: usize, layout: Layout) -> Vec<usize> {
+    match layout {
+        Layout::Nchw => vec![n, c, h, w],
+        Layout::Nhwc => vec![n, h, w, c],
+        Layout::Nchwc(cb) => vec![n, c / cb, h, w, cb],
+    }
+}
+
+impl Graph {
+    /// Add the (single) graph input with an explicit type.
+    pub fn add_input(&mut self, name: impl Into<String>, ty: TensorTy) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), op: Op::Input, inputs: vec![], ty });
+        self.input = id;
+        id
+    }
+
+    /// Add an f32 constant with an explicit shape.
+    pub fn add_const_f32(
+        &mut self,
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<NodeId> {
+        if shape.iter().product::<usize>() != values.len() {
+            return Err(anyhow!("const shape {:?} != {} values", shape, values.len()));
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op: Op::Constant(ConstValue::F32(Arc::new(values))),
+            inputs: vec![],
+            ty: TensorTy { shape, dtype: IrDType::F32 },
+        });
+        Ok(id)
+    }
+
+    /// Clone a node from another graph with remapped inputs, preserving
+    /// explicit types for inputs/constants and re-inferring the rest.
+    pub fn add_clone(&mut self, node: &Node, inputs: Vec<NodeId>) -> Result<NodeId> {
+        match &node.op {
+            Op::Input => Ok(self.add_input(node.name.clone(), node.ty.clone())),
+            Op::Constant(_) => {
+                let id = self.nodes.len();
+                self.nodes.push(Node {
+                    id,
+                    name: node.name.clone(),
+                    op: node.op.clone(),
+                    inputs: vec![],
+                    ty: node.ty.clone(),
+                });
+                Ok(id)
+            }
+            _ => self.add(node.name.clone(), node.op.clone(), inputs),
+        }
+    }
+
+    /// Add an int8 constant (quantized weights).
+    pub fn add_const_i8(
+        &mut self,
+        name: impl Into<String>,
+        shape: Vec<usize>,
+        values: Vec<i8>,
+    ) -> Result<NodeId> {
+        if shape.iter().product::<usize>() != values.len() {
+            return Err(anyhow!("const shape {:?} != {} values", shape, values.len()));
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op: Op::Constant(ConstValue::I8(Arc::new(values))),
+            inputs: vec![],
+            ty: TensorTy { shape, dtype: IrDType::S8 },
+        });
+        Ok(id)
+    }
+}

@@ -1,0 +1,24 @@
+//! Relay-like graph IR + the graph-level optimization layer.
+//!
+//! "TVM comprises two optimization layers.  The first layer focuses on
+//! computation graph optimization, addressing high-level dataflow
+//! rewriting." (§1.1.2)  This module is that layer, rebuilt: a dataflow IR
+//! over typed tensors, a reference interpreter (the semantic oracle the
+//! pass tests check against), and the passes the paper's analysis leans on —
+//! operator fusion, constant folding, layout transformation (Figure 1), and
+//! the quantize annotate/calibrate/realize pipeline.
+//!
+//! The compiled artifacts the executors run are produced by the *python*
+//! compile path; this rust IR is the in-process counterpart used by the
+//! `tvmq compile` pipeline demo, the pass ablations, and the Figure-1
+//! bench — i.e. the substrate TVM provides that the paper's experiments
+//! assume.
+
+pub mod builder;
+pub mod interp;
+pub mod ir;
+pub mod passes;
+
+pub use builder::{build_conv_net, build_resnet_ir, calibrate_ir, NetSpec, StageSpec};
+pub use interp::evaluate;
+pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

@@ -1,0 +1,33 @@
+//! Dead-node elimination: drop everything unreachable from the output.
+
+use anyhow::Result;
+
+use super::Pass;
+use crate::graph::ir::Graph;
+
+pub struct DeadCodeElim;
+
+impl Pass for DeadCodeElim {
+    fn name(&self) -> &'static str {
+        "dead_code_elim"
+    }
+
+    fn run(&self, g: &Graph) -> Result<Graph> {
+        let live = g.live_set();
+        let mut remap = vec![usize::MAX; g.nodes.len()];
+        let mut out = Graph::new();
+        for node in &g.nodes {
+            if !live[node.id] {
+                continue;
+            }
+            let mut n = node.clone();
+            n.id = out.nodes.len();
+            n.inputs = n.inputs.iter().map(|&i| remap[i]).collect();
+            remap[node.id] = n.id;
+            out.nodes.push(n);
+        }
+        out.input = remap[g.input];
+        out.output = remap[g.output];
+        Ok(out)
+    }
+}

@@ -1,0 +1,62 @@
+//! Constant folding: pre-evaluate nodes whose inputs are all constants.
+//!
+//! This is where packed weights come from: `AlterConvLayout` inserts
+//! layout transforms over weight constants, and this pass collapses them
+//! into pre-packed constants — TVM does exactly this at build time.
+
+use anyhow::{anyhow, Result};
+
+use super::Pass;
+use crate::graph::interp::eval_node;
+use crate::graph::ir::{ConstValue, Graph, Op};
+use crate::runtime::{DType, TensorData};
+
+pub struct ConstantFold;
+
+impl Pass for ConstantFold {
+    fn name(&self) -> &'static str {
+        "constant_fold"
+    }
+
+    fn run(&self, g: &Graph) -> Result<Graph> {
+        let mut out = g.clone();
+        // Track which nodes are constant-valued; evaluate as we walk (ids
+        // are topologically ordered).
+        let mut env: Vec<Option<TensorData>> = vec![None; out.nodes.len()];
+        let dummy = TensorData::zeros(DType::F32, vec![0]);
+        for id in 0..out.nodes.len() {
+            let node = out.nodes[id].clone();
+            let foldable = match node.op {
+                Op::Constant(_) => {
+                    env[id] = Some(eval_node(&out, &node, &env, &dummy)?);
+                    false
+                }
+                Op::Input => false,
+                _ => node.inputs.iter().all(|&i| env[i].is_some()),
+            };
+            if !foldable {
+                continue;
+            }
+            let value = eval_node(&out, &node, &env, &dummy)?;
+            let op = match value.dtype {
+                DType::F32 => Op::Constant(ConstValue::F32(std::sync::Arc::new(
+                    value.as_f32()?,
+                ))),
+                DType::S8 => Op::Constant(ConstValue::I8(std::sync::Arc::new(
+                    value.as_i8()?,
+                ))),
+                DType::S32 => {
+                    // No i32 constants in the IR: leave unfolded.
+                    continue;
+                }
+            };
+            env[id] = Some(value);
+            out.nodes[id].op = op;
+            out.nodes[id].inputs = vec![];
+            // NOTE: node.ty keeps its (possibly multi-dim) shape; Constant
+            // type inference flattens, so keep the declared ty as-is.
+        }
+        // Folding can orphan inputs of folded nodes.
+        super::DeadCodeElim.run(&out).map_err(|e| anyhow!("dce after fold: {e}"))
+    }
+}

@@ -1,0 +1,153 @@
+//! Operator fusion: group anchor ops (conv/dense) with their elementwise
+//! consumers into primitive functions.
+//!
+//! TVM's `FuseOps` classifies ops (out-elemwise-fusable / injective /
+//! opaque) and greedily merges along single-consumer edges; each group
+//! becomes one compiled primitive.  The *number of groups* is the number of
+//! executor dispatches — the quantity whose difference drives Table 1
+//! (graph executor: fused groups over one module; VM: one packed call per
+//! group plus interpretation).
+//!
+//! The pass produces a [`FusionPlan`] (a partition of node ids) rather than
+//! rewriting the graph: groups keep IR semantics intact and the plan is
+//! checked executable-in-order by the tests.
+
+use anyhow::{anyhow, Result};
+
+use super::Pass;
+use crate::graph::ir::{Graph, NodeId, Op};
+
+/// A partition of the graph into dispatch groups, each headed by an anchor
+/// or a chain of injective ops.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    /// node ids per group, in topological order within and across groups.
+    pub groups: Vec<Vec<NodeId>>,
+}
+
+impl FusionPlan {
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// group index of every node.
+    pub fn group_of(&self, n_nodes: usize) -> Vec<usize> {
+        let mut of = vec![usize::MAX; n_nodes];
+        for (gi, grp) in self.groups.iter().enumerate() {
+            for &id in grp {
+                of[id] = gi;
+            }
+        }
+        of
+    }
+
+    /// Validate: every non-trivial node in exactly one group; groups
+    /// respect topological order (a group's external inputs come from
+    /// strictly earlier groups); each group is contiguous-executable.
+    pub fn validate(&self, g: &Graph) -> Result<()> {
+        let of = self.group_of(g.len());
+        for node in &g.nodes {
+            let skip = matches!(node.op, Op::Input | Op::Constant(_));
+            if skip != (of[node.id] == usize::MAX) {
+                return Err(anyhow!(
+                    "node {} ({}) grouping inconsistent",
+                    node.name, node.op.kind_name()
+                ));
+            }
+        }
+        for (gi, grp) in self.groups.iter().enumerate() {
+            if grp.is_empty() {
+                return Err(anyhow!("empty group {gi}"));
+            }
+            for w in grp.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(anyhow!("group {gi} not topologically sorted"));
+                }
+            }
+            for &id in grp {
+                for &inp in &g.nodes[id].inputs {
+                    if of[inp] != usize::MAX && of[inp] > gi {
+                        return Err(anyhow!(
+                            "group {gi} consumes node {} from later group {}",
+                            inp, of[inp]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+pub struct FusionPass {
+    /// When false, every compute node is its own group — the "no fusion"
+    /// ablation (what the VM effectively pays).
+    pub enabled: bool,
+}
+
+impl FusionPass {
+    pub fn plan(&self, g: &Graph) -> Result<FusionPlan> {
+        let users = g.users();
+        let mut group_of: Vec<Option<usize>> = vec![None; g.len()];
+        let mut groups: Vec<Vec<NodeId>> = Vec::new();
+
+        for node in &g.nodes {
+            if matches!(node.op, Op::Input | Op::Constant(_)) {
+                continue;
+            }
+            if !self.enabled {
+                group_of[node.id] = Some(groups.len());
+                groups.push(vec![node.id]);
+                continue;
+            }
+            // Try to join the group of a data producer when this node is
+            // elementwise/injective and the producer edge is single-consumer.
+            // Ordering constraint: a node may only join the *latest* of its
+            // producers' groups — joining an earlier one would make that
+            // group consume a value produced by a later group, breaking the
+            // sequential dispatch order (caught by FusionPlan::validate).
+            let mut joined = None;
+            if node.op.is_elementwise() || matches!(node.op, Op::LayoutTransform { .. }) {
+                let max_in_group = node
+                    .inputs
+                    .iter()
+                    .filter_map(|&inp| group_of[inp])
+                    .max();
+                if let Some(gmax) = max_in_group {
+                    let join_ok = node.inputs.iter().any(|&inp| {
+                        group_of[inp] == Some(gmax) && users[inp].len() == 1
+                    });
+                    if join_ok {
+                        joined = Some(gmax);
+                    }
+                }
+            }
+            match joined {
+                Some(gi) => {
+                    groups[gi].push(node.id);
+                    group_of[node.id] = Some(gi);
+                }
+                None => {
+                    group_of[node.id] = Some(groups.len());
+                    groups.push(vec![node.id]);
+                }
+            }
+        }
+        let plan = FusionPlan { groups };
+        plan.validate(g)?;
+        Ok(plan)
+    }
+}
+
+impl Pass for FusionPass {
+    fn name(&self) -> &'static str {
+        "fuse_ops"
+    }
+
+    /// As a `Pass`, fusion is analysis-only (the plan is consumed by the
+    /// executor lowering); the graph passes through unchanged.
+    fn run(&self, g: &Graph) -> Result<Graph> {
+        self.plan(g)?;
+        Ok(g.clone())
+    }
+}

@@ -1,0 +1,62 @@
+//! Graph-level optimization passes (TVM's first optimization layer).
+//!
+//! Every pass preserves `interp::evaluate` semantics (modulo fp tolerance
+//! for layout/quantize rewrites); the pass tests and proptests enforce it.
+
+mod dce;
+mod fold;
+mod fusion;
+mod layout_pass;
+mod quantize_pass;
+
+use anyhow::Result;
+
+pub use dce::DeadCodeElim;
+pub use fold::ConstantFold;
+pub use fusion::{FusionPass, FusionPlan};
+pub use layout_pass::{AlterConvLayout, CancelLayoutTransforms};
+pub use quantize_pass::{calibrate_graph, quantize_graph_with_report, QuantizeRealize};
+
+use super::ir::Graph;
+
+/// A graph-to-graph rewrite.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &Graph) -> Result<Graph>;
+}
+
+/// Sequential pass pipeline with per-pass logging hooks.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    pub verbose: bool,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        Self { passes: Vec::new(), verbose: false }
+    }
+
+    pub fn add(mut self, pass: impl Pass + 'static) -> Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    pub fn run(&self, g: &Graph) -> Result<Graph> {
+        let mut cur = g.clone();
+        for p in &self.passes {
+            let before = cur.len();
+            cur = p.run(&cur)?;
+            cur.validate()?;
+            if self.verbose {
+                eprintln!("pass {:20} {} -> {} nodes", p.name(), before, cur.len());
+            }
+        }
+        Ok(cur)
+    }
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}

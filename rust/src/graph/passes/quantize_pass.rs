@@ -1,0 +1,138 @@
+//! Quantize realize: rewrite fp32 convs/dense into
+//! `quantize → int8 op (int32 accum) → dequantize` chains.
+//!
+//! The rust-side mirror of the python `quantize_pass` (calibrate → annotate
+//! → realize), operating on the IR: given per-node input scales from
+//! [`calibrate_graph`], each anchor op is bracketed with the qnn boundary
+//! operators and its weight constant is replaced by a pre-quantized int8
+//! constant — exactly TVM's `relay.quantize.realize` output shape, and the
+//! paper's §3.2.2 "reads fp32 writes int8 / reads int8 writes fp32" pattern.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::Pass;
+use crate::graph::interp::evaluate;
+use crate::graph::ir::{ConstValue, Graph, Layout, NodeId, Op};
+use crate::quant::{abs_max_scale, quantize};
+use crate::runtime::TensorData;
+
+/// Run the fp32 graph on a calibration batch and record the abs-max scale
+/// of every anchor-op *data input* (weights get their scales at realize).
+pub fn calibrate_graph(g: &Graph, calib: &TensorData) -> Result<HashMap<NodeId, f32>> {
+    // Evaluate and keep every intermediate.
+    let live = g.live_set();
+    let mut env: Vec<Option<TensorData>> = vec![None; g.len()];
+    for node in &g.nodes {
+        if !live[node.id] {
+            continue;
+        }
+        let v = crate::graph::interp::eval_node(g, node, &env, calib)?;
+        env[node.id] = Some(v);
+    }
+    let mut scales = HashMap::new();
+    for node in &g.nodes {
+        if node.op.is_anchor() {
+            let data = node.inputs[0];
+            let t = env[data]
+                .as_ref()
+                .ok_or_else(|| anyhow!("calibration missed node {}", data))?;
+            scales.insert(node.id, abs_max_scale(&t.as_f32()?));
+        }
+    }
+    Ok(scales)
+}
+
+/// The realize rewrite.  Only NCHW convs and dense are quantized (matching
+/// the schedule library); everything else stays fp32.
+pub struct QuantizeRealize {
+    pub scales: HashMap<NodeId, f32>,
+}
+
+impl Pass for QuantizeRealize {
+    fn name(&self) -> &'static str {
+        "quantize_realize"
+    }
+
+    fn run(&self, g: &Graph) -> Result<Graph> {
+        let mut out = Graph::new();
+        let mut remap: Vec<NodeId> = vec![usize::MAX; g.len()];
+        for node in &g.nodes {
+            let inputs: Vec<NodeId> = node.inputs.iter().map(|&i| remap[i]).collect();
+            let quantizable = match &node.op {
+                Op::Conv2d { layout: Layout::Nchw, .. } | Op::Dense => {
+                    self.scales.contains_key(&node.id)
+                        && matches!(
+                            g.nodes[node.inputs[1]].op,
+                            Op::Constant(ConstValue::F32(_))
+                        )
+                }
+                _ => false,
+            };
+            let new_id = if quantizable {
+                let s_in = self.scales[&node.id];
+                let w_node = &g.nodes[node.inputs[1]];
+                let w_vals = match &w_node.op {
+                    Op::Constant(ConstValue::F32(v)) => v.clone(),
+                    _ => unreachable!(),
+                };
+                let s_w = abs_max_scale(&w_vals);
+                let w_q = quantize(&w_vals, s_w);
+                let w_q_id = out.add_const_i8(
+                    format!("{}.w_q", node.name),
+                    w_node.ty.shape.clone(),
+                    w_q,
+                )?;
+                let q_in = out.add(
+                    format!("{}.quantize", node.name),
+                    Op::Quantize { scale: s_in },
+                    vec![inputs[0]],
+                )?;
+                let op_q = match &node.op {
+                    Op::Conv2d { stride, padding, layout } => Op::Conv2d {
+                        stride: *stride,
+                        padding: *padding,
+                        layout: *layout,
+                    },
+                    Op::Dense => Op::Dense,
+                    _ => unreachable!(),
+                };
+                let acc = out.add(node.name.clone(), op_q, vec![q_in, w_q_id])?;
+                out.add(
+                    format!("{}.dequantize", node.name),
+                    Op::Dequantize { scale: s_in * s_w },
+                    vec![acc],
+                )?
+            } else {
+                out.add_clone(node, inputs)?
+            };
+            remap[node.id] = new_id;
+        }
+        out.input = remap[g.input];
+        out.output = remap[g.output];
+        super::DeadCodeElim.run(&out)
+    }
+}
+
+/// End-to-end helper: calibrate on `calib`, realize, and report the output
+/// SQNR of the quantized graph vs the fp32 graph on `eval` input.
+pub fn quantize_graph_with_report(
+    g: &Graph,
+    calib: &TensorData,
+    eval: &TensorData,
+) -> Result<(Graph, f64)> {
+    let scales = calibrate_graph(g, calib)?;
+    let qg = QuantizeRealize { scales }.run(g)?;
+    qg.validate()?;
+    let ref_out = evaluate(g, eval)?.as_f32()?;
+    let q_out = evaluate(&qg, eval)?.as_f32()?;
+    let sig: f64 = ref_out.iter().map(|v| (*v as f64).powi(2)).sum();
+    let noise: f64 = ref_out
+        .iter()
+        .zip(&q_out)
+        .map(|(a, b)| ((*a - *b) as f64).powi(2))
+        .sum();
+    let sqnr = 10.0 * (sig / noise.max(1e-30)).log10();
+    Ok((qg, sqnr))
+}

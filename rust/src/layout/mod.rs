@@ -1,0 +1,163 @@
+//! Layout machinery: Figure 1's NCHW → NCHW{c} spatial packing, in rust.
+//!
+//! The packed layout groups channels into blocks of `c` and makes the block
+//! the innermost (unit-stride) dimension, so a conv's inner loop walks
+//! contiguous memory regardless of which channel slab it is reducing —
+//! oneDNN's `nChw16c`, TVM's `NCHW16c`.  These routines power the layout
+//! pass of the graph IR, the Figure-1 bench (packed vs unpacked locality),
+//! and the block-size ablation.
+
+use anyhow::{anyhow, Result};
+
+/// Dimensions of an NCHW tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Nchw {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Nchw {
+    pub fn len(&self) -> usize {
+        self.n * self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// NCHW -> NCHW{cb}: `(N, C, H, W)` → `(N, C/cb, H, W, cb)`.
+/// C must divide by `cb`.
+pub fn pack_nchwc(src: &[f32], d: Nchw, cb: usize) -> Result<Vec<f32>> {
+    if d.c % cb != 0 {
+        return Err(anyhow!("C={} not divisible by c_block={}", d.c, cb));
+    }
+    if src.len() != d.len() {
+        return Err(anyhow!("src len {} != dims {:?}", src.len(), d));
+    }
+    let co = d.c / cb;
+    let mut out = vec![0f32; src.len()];
+    let hw = d.h * d.w;
+    for n in 0..d.n {
+        for o in 0..co {
+            for ci in 0..cb {
+                let c = o * cb + ci;
+                let src_base = (n * d.c + c) * hw;
+                for p in 0..hw {
+                    // dst index: (((n*co + o)*hw + p)*cb + ci)
+                    out[((n * co + o) * hw + p) * cb + ci] = src[src_base + p];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// NCHW{cb} -> NCHW (inverse of [`pack_nchwc`]).
+pub fn unpack_nchwc(src: &[f32], d: Nchw, cb: usize) -> Result<Vec<f32>> {
+    if d.c % cb != 0 || src.len() != d.len() {
+        return Err(anyhow!("bad unpack dims {:?} cb={}", d, cb));
+    }
+    let co = d.c / cb;
+    let hw = d.h * d.w;
+    let mut out = vec![0f32; src.len()];
+    for n in 0..d.n {
+        for o in 0..co {
+            for ci in 0..cb {
+                let c = o * cb + ci;
+                let dst_base = (n * d.c + c) * hw;
+                for p in 0..hw {
+                    out[dst_base + p] = src[((n * co + o) * hw + p) * cb + ci];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// NCHW -> NHWC.
+pub fn nchw_to_nhwc(src: &[f32], d: Nchw) -> Result<Vec<f32>> {
+    if src.len() != d.len() {
+        return Err(anyhow!("src len {} != dims {:?}", src.len(), d));
+    }
+    let mut out = vec![0f32; src.len()];
+    for n in 0..d.n {
+        for c in 0..d.c {
+            for h in 0..d.h {
+                for w in 0..d.w {
+                    out[((n * d.h + h) * d.w + w) * d.c + c] =
+                        src[((n * d.c + c) * d.h + h) * d.w + w];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// NHWC -> NCHW.
+pub fn nhwc_to_nchw(src: &[f32], d: Nchw) -> Result<Vec<f32>> {
+    if src.len() != d.len() {
+        return Err(anyhow!("src len {} != dims {:?}", src.len(), d));
+    }
+    let mut out = vec![0f32; src.len()];
+    for n in 0..d.n {
+        for h in 0..d.h {
+            for w in 0..d.w {
+                for c in 0..d.c {
+                    out[((n * d.c + c) * d.h + h) * d.w + w] =
+                        src[((n * d.h + h) * d.w + w) * d.c + c];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// OIHW -> OIHW{i}{o}: `(K, C, R, S)` → `(K/kb, C/cb, R, S, cb, kb)`.
+pub fn pack_oihw(src: &[f32], k: usize, c: usize, r: usize, s: usize,
+                 cb: usize, kb: usize) -> Result<Vec<f32>> {
+    if k % kb != 0 || c % cb != 0 {
+        return Err(anyhow!("K={k}/kb={kb} or C={c}/cb={cb} not divisible"));
+    }
+    if src.len() != k * c * r * s {
+        return Err(anyhow!("weight len mismatch"));
+    }
+    let (ko, co) = (k / kb, c / cb);
+    let mut out = vec![0f32; src.len()];
+    for okk in 0..ko {
+        for ki in 0..kb {
+            for occ in 0..co {
+                for ci in 0..cb {
+                    for rr in 0..r {
+                        for ss in 0..s {
+                            let kk = okk * kb + ki;
+                            let cc = occ * cb + ci;
+                            let src_i = ((kk * c + cc) * r + rr) * s + ss;
+                            let dst_i = (((((okk * co + occ) * r + rr) * s + ss) * cb + ci)
+                                * kb) + ki;
+                            out[dst_i] = src[src_i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Render the Figure-1 packing diagram for a tiny tensor (docs/bench output).
+pub fn render_packing_diagram(c: usize, cb: usize) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("NCHW   (C={c}):      ch  0 1 2 ... laid out plane-by-plane\n"));
+    s.push_str(&format!("NCHW{cb}c (C/{cb}={}) : ", c / cb));
+    for o in 0..(c / cb) {
+        s.push_str(&format!("[c{}..c{}]", o * cb, o * cb + cb - 1));
+        if o + 1 < c / cb {
+            s.push_str(" -> ");
+        }
+    }
+    s.push_str("\n                    block is innermost: conv inner loop is unit-stride\n");
+    s
+}

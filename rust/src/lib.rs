@@ -1,0 +1,51 @@
+//! # tvmq — a quantized-inference compiler/runtime
+//!
+//! Reproduction of *Analyzing Quantization in TVM* (Guo, 2023) as a
+//! three-layer Rust + JAX + Pallas stack.  This crate is Layer 3: the
+//! compiler's graph-optimization layer and the two executors whose contrast
+//! is the paper's central finding — the static **graph executor** vs the
+//! dynamic **VM executor** that TVM's quantization path selects by default
+//! (the "bug" of Table 1).
+//!
+//! Python (Layers 1–2) runs only at build time (`make artifacts`), lowering
+//! the schedule kernels + model segments to HLO text; this crate loads those
+//! artifacts over PJRT and serves inference without Python anywhere on the
+//! request path.
+//!
+//! Module map (DESIGN.md §2):
+//! - [`manifest`] — artifact manifest schema + loader
+//! - [`runtime`]  — PJRT client wrapper, tensors, executable cache
+//! - [`graph`]    — Relay-like graph IR + optimization passes
+//! - [`executor`] — GraphExecutor vs VmExecutor (the paper's contrast)
+//! - [`memplan`]  — static memory planner vs dynamic allocation
+//! - [`layout`]   — NCHW{c} packing machinery (Figure 1)
+//! - [`quant`]    — host-side quantization + memory footprint accounting
+//! - [`coordinator`] — batching inference server
+//! - [`perfmodel`] — analytic roofline / ideal-speedup model (Table 2)
+//! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
+//! - [`bench`]    — harnesses that regenerate every paper table & figure
+
+pub mod bench;
+pub mod coordinator;
+pub mod executor;
+pub mod graph;
+pub mod layout;
+pub mod manifest;
+pub mod memplan;
+pub mod metrics;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use manifest::Manifest;
+pub use runtime::{DType, Runtime, TensorData};
+
+/// Default artifacts directory, relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("TVMQ_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

@@ -1,0 +1,230 @@
+//! `tvmq` CLI — leader entrypoint for the coordinator and the paper-table
+//! bench harnesses.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use tvmq::bench::{
+    ablations, figure1, memplan_ablation, table1, table2, table3, BenchCtx, BenchOpts,
+};
+use tvmq::coordinator::{InferenceServer, ServeConfig};
+use tvmq::graph::passes::{
+    calibrate_graph, AlterConvLayout, CancelLayoutTransforms, ConstantFold, FusionPass, Pass,
+    PassManager, QuantizeRealize,
+};
+use tvmq::runtime::synthetic_images;
+use tvmq::util::cli::Args;
+
+const USAGE: &str = "\
+tvmq — quantized-inference runtime reproducing 'Analyzing Quantization in TVM'
+
+USAGE: tvmq <COMMAND> [--artifacts DIR] [flags]
+
+COMMANDS:
+  inspect           List bundles in the artifact manifest
+  run               One inference: --layout NCHW --schedule spatial_pack
+                    --precision int8 --executor graph --batch 1 --seed 42
+  serve             Batched serving demo: --precision int8 --executor graph
+                    --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
+  bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
+  bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
+  bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
+  bench-fig1        Figure 1 (layout packing)          [--reps 5]
+  bench-ablations   Executor-mechanism ablations
+  compile-demo      In-process graph-IR pass pipeline  [--batch 1 --c-block 16]
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let artifacts: PathBuf = args
+        .opt_str("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(tvmq::default_artifacts_dir);
+
+    let opts = BenchOpts {
+        epochs: args.usize("epochs", 110)?,
+        warmup: args.usize("warmup", 10)?,
+    };
+
+    match args.subcommand.as_deref() {
+        Some("inspect") => inspect(&artifacts)?,
+        Some("run") => run_one(&artifacts, &args)?,
+        Some("serve") => serve_demo(&artifacts, &args)?,
+        Some("bench-table1") => {
+            table1(&BenchCtx::new(&artifacts, opts)?)?.0.print();
+        }
+        Some("bench-table2") => {
+            table2(&BenchCtx::new(&artifacts, opts)?)?.0.print();
+        }
+        Some("bench-table3") => {
+            let batches = args.usize_list("batches", &[1, 16, 64])?;
+            table3(&BenchCtx::new(&artifacts, opts)?, &batches)?.0.print();
+        }
+        Some("bench-fig1") => {
+            figure1(args.usize("reps", 5)?)?.print();
+        }
+        Some("bench-ablations") => {
+            let ctx = BenchCtx::new(&artifacts, opts)?;
+            ablations(&ctx)?.print();
+            memplan_ablation(&ctx)?.print();
+        }
+        Some("compile-demo") => {
+            compile_demo(args.usize("batch", 1)?, args.usize("c-block", 16)?)?;
+        }
+        Some(other) => bail!("unknown command {other:?}\n\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn inspect(artifacts: &PathBuf) -> Result<()> {
+    let m = tvmq::Manifest::load(artifacts)?;
+    println!(
+        "arch={} image={} classes={} params={}",
+        m.arch, m.image_size, m.num_classes, m.param_count
+    );
+    println!("{:62} {:6} {:6} {:8}", "bundle", "exec", "batch", "modules");
+    for b in &m.bundles {
+        println!(
+            "{:62} {:6} {:6} {:8}{}",
+            b.id,
+            b.executor,
+            b.batch,
+            b.modules.len(),
+            b.quant
+                .as_ref()
+                .map(|q| format!("  sqnr={:.1}dB top1={:.2}", q.sqnr_db, q.top1_agreement))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
+    let layout = args.str("layout", "NCHW");
+    let schedule = args.str("schedule", "spatial_pack");
+    let precision = args.str("precision", "int8");
+    let executor = args.str("executor", "graph");
+    let batch = args.usize("batch", 1)?;
+    let seed = args.u64("seed", 42)?;
+
+    let m = tvmq::Manifest::load(artifacts)?;
+    let rt = std::rc::Rc::new(tvmq::Runtime::new()?);
+    let bundle = m.find(&layout, &schedule, &precision, batch, &executor)?;
+    let exec: Box<dyn Executor> = match executor.as_str() {
+        "graph" => Box::new(GraphExecutor::new(rt, &m, bundle)?),
+        _ => Box::new(VmExecutor::new(rt, &m, bundle)?),
+    };
+    let rest = if layout == "NCHW" {
+        vec![m.in_channels, m.image_size, m.image_size]
+    } else {
+        vec![m.image_size, m.image_size, m.in_channels]
+    };
+    let x = synthetic_images(batch, &rest, seed);
+    let t0 = std::time::Instant::now();
+    let logits = exec.run(&x)?;
+    println!("ran {} in {:.2} ms", bundle.id, t0.elapsed().as_secs_f64() * 1e3);
+    println!("classes: {:?}", logits.argmax_last()?);
+    println!("logits[0]: {:?}", &logits.as_f32()?[..m.num_classes.min(10)]);
+    Ok(())
+}
+
+fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let cfg = ServeConfig {
+        precision: args.str("precision", "int8"),
+        executor: args.str("executor", "graph"),
+        max_batch: args.usize("max-batch", 64)?,
+        batch_timeout: Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
+        ..Default::default()
+    };
+    let requests = args.usize("requests", 512)?;
+    let clients = args.usize("clients", 32)?.max(1);
+
+    let server = std::sync::Arc::new(InferenceServer::start(artifacts.clone(), cfg)?);
+    println!("buckets: {:?}", server.buckets);
+    let m = tvmq::Manifest::load(artifacts)?;
+    let rest = vec![m.in_channels, m.image_size, m.image_size];
+
+    let t0 = std::time::Instant::now();
+    let per_client = (requests / clients).max(1);
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = server.clone();
+        let rest = rest.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let img = synthetic_images(1, &rest, (c * 1000 + i) as u64);
+                let _ = server.submit_blocking(img);
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let lat = stats.latency_stats();
+    println!(
+        "served {} requests in {:.2}s  ({:.1} req/s)",
+        stats.requests,
+        wall,
+        stats.requests as f64 / wall
+    );
+    println!(
+        "latency ms: p50={:.2} p95={:.2} p99={:.2}  mean batch={:.1}  batches={} padded={}",
+        lat.p50_ms, lat.p95_ms, lat.p99_ms, stats.mean_batch(), stats.batches, stats.padded_slots
+    );
+    Ok(())
+}
+
+/// The graph-IR compile pipeline end to end: build → calibrate → quantize →
+/// layout-alter → fold → fuse, printing per-pass statistics.
+fn compile_demo(batch: usize, c_block: usize) -> Result<()> {
+    use tvmq::graph::{build_resnet_ir, calibrate_ir, evaluate};
+    let g = build_resnet_ir(batch, 32, 7)?;
+    println!("built resnet10 IR: {} nodes, {} const bytes", g.len(), g.const_bytes());
+
+    let calib = calibrate_ir(&g, 42);
+    let ref_out = evaluate(&g, &calib)?;
+
+    // Quantize pipeline.
+    let scales = calibrate_graph(&g, &calib)?;
+    println!("calibrated {} conv/dense scales", scales.len());
+    let q = QuantizeRealize { scales }.run(&g)?;
+    println!("quantize_realize: {} -> {} nodes", g.len(), q.len());
+    let q_out = evaluate(&q, &calib)?;
+    let (r, qv) = (ref_out.as_f32()?, q_out.as_f32()?);
+    let num: f64 = r.iter().zip(&qv).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+    let den: f64 = r.iter().map(|a| (*a as f64).powi(2)).sum();
+    println!("int8 IR sqnr: {:.1} dB", 10.0 * (den / num.max(1e-30)).log10());
+
+    // Layout pipeline on the fp32 graph.
+    let pm = PassManager::new()
+        .add(AlterConvLayout { c_block, k_block: c_block })
+        .add(CancelLayoutTransforms)
+        .add(ConstantFold);
+    let packed = pm.run(&g)?;
+    println!("layout pipeline: {} -> {} nodes (c_block={c_block})", g.len(), packed.len());
+    let p_out = evaluate(&packed, &calib)?.as_f32()?;
+    let max_err = r.iter().zip(&p_out).fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    println!("packed-vs-NCHW max |err|: {max_err:.2e}");
+
+    // Fusion statistics.
+    let plan = FusionPass { enabled: true }.plan(&g)?;
+    let nofuse = FusionPass { enabled: false }.plan(&g)?;
+    println!(
+        "fusion: {} groups fused vs {} unfused ({} compute nodes)",
+        plan.group_count(),
+        nofuse.group_count(),
+        g.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, tvmq::graph::Op::Input | tvmq::graph::Op::Constant(_)))
+            .count()
+    );
+    Ok(())
+}

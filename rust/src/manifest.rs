@@ -1,0 +1,336 @@
+//! Artifact manifest: the contract between the AOT compile path (python)
+//! and the runtime (this crate).
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered bundle: its model configuration, executor kind (graph = one fused
+//! module, vm = per-segment modules), batch size, module I/O specs, and
+//! quantization metadata.  Parsed with the in-tree JSON parser
+//! ([`crate::util::json`]) — the offline build has no serde.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub arch: String,
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub param_count: u64,
+    /// Calibration scales (NCHW tap names) — recorded for inspection.
+    pub scales: HashMap<String, f64>,
+    pub batches: Vec<usize>,
+    pub bundles: Vec<Bundle>,
+    /// Directory the manifest was loaded from.
+    pub root: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Bundle {
+    pub id: String,
+    pub config: ModelConfig,
+    /// "graph" (one fused module) or "vm" (per-segment modules).
+    pub executor: String,
+    pub batch: usize,
+    pub modules: Vec<ModuleSpec>,
+    pub quant: Option<QuantReport>,
+    /// Parameter bytes at this bundle's precision.
+    pub weight_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub arch: String,
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub layout: String,
+    pub schedule: String,
+    pub precision: String,
+    pub c_block: usize,
+    pub k_block: usize,
+    pub h_tile: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: String,
+    /// Which bundle value feeds each argument: 0 = the bundle input,
+    /// i > 0 = the output of module i-1 (the VM's register wiring).
+    pub args: Vec<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    /// "prefix" | "middle" | "suffix" for vm bundles; None for fused.
+    pub role: Option<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * crate::runtime::DType::parse(&self.dtype).size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantReport {
+    pub sqnr_db: f64,
+    pub cosine: f64,
+    pub top1_agreement: f64,
+    pub max_abs_err: f64,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let m = Self::from_json(&j, dir.to_path_buf()).context("decoding manifest.json")?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_json(j: &Json, root: PathBuf) -> Result<Self> {
+        let mut scales = HashMap::new();
+        if let Some(s) = j.opt("scales") {
+            for (k, v) in s.as_obj()? {
+                scales.insert(k.clone(), v.as_f64()?);
+            }
+        }
+        Ok(Manifest {
+            version: j.get("version")?.as_usize()? as u32,
+            arch: j.get("arch")?.as_str()?.to_string(),
+            image_size: j.get("image_size")?.as_usize()?,
+            in_channels: j.get("in_channels")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            param_count: j.get("param_count")?.as_u64()?,
+            scales,
+            batches: j
+                .get("batches")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            bundles: j
+                .get("bundles")?
+                .as_arr()?
+                .iter()
+                .map(Bundle::from_json)
+                .collect::<Result<_>>()?,
+            root,
+        })
+    }
+
+    /// Structural validation: ids unique, files exist, vm chains type-check.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for b in &self.bundles {
+            if !seen.insert(&b.id) {
+                bail!("duplicate bundle id {:?}", b.id);
+            }
+            if b.executor != "graph" && b.executor != "vm" {
+                bail!("bundle {:?}: unknown executor {:?}", b.id, b.executor);
+            }
+            if b.executor == "graph" && b.modules.len() != 1 {
+                bail!("graph bundle {:?} must have exactly 1 module", b.id);
+            }
+            if b.modules.is_empty() {
+                bail!("bundle {:?} has no modules", b.id);
+            }
+            for m in &b.modules {
+                let p = self.root.join(&m.file);
+                if !p.exists() {
+                    bail!("bundle {:?}: missing HLO file {}", b.id, p.display());
+                }
+            }
+            // The value DAG must type-check: every arg refers to an
+            // earlier value and its declared spec matches the producer.
+            let input_spec = b
+                .modules
+                .first()
+                .and_then(|m| m.inputs.first())
+                .ok_or_else(|| anyhow!("bundle {:?}: no input spec", b.id))?
+                .clone();
+            for (i, m) in b.modules.iter().enumerate() {
+                if m.args.len() != m.inputs.len() {
+                    bail!("bundle {:?}/{}: args/inputs arity mismatch", b.id, m.name);
+                }
+                for (arg, spec) in m.args.iter().zip(&m.inputs) {
+                    let producer = if *arg == 0 {
+                        &input_spec
+                    } else if *arg <= i {
+                        &b.modules[*arg - 1].output
+                    } else {
+                        bail!(
+                            "bundle {:?}/{}: arg {} refers to a later value",
+                            b.id, m.name, arg
+                        );
+                    };
+                    if producer != spec {
+                        bail!(
+                            "bundle {:?}/{}: value {} spec mismatch",
+                            b.id, m.name, arg
+                        );
+                    }
+                }
+            }
+            if input_spec.shape.first() != Some(&b.batch) {
+                bail!("bundle {:?}: batch dim != declared batch", b.id);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn bundle(&self, id: &str) -> Result<&Bundle> {
+        self.bundles.iter().find(|b| b.id == id).ok_or_else(|| {
+            anyhow!(
+                "no bundle {:?} (have: {:?})",
+                id,
+                self.bundles.iter().map(|b| &b.id).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Find a bundle by (layout, schedule, precision, batch, executor).
+    pub fn find(
+        &self,
+        layout: &str,
+        schedule: &str,
+        precision: &str,
+        batch: usize,
+        executor: &str,
+    ) -> Result<&Bundle> {
+        self.bundles
+            .iter()
+            .find(|b| {
+                b.config.layout == layout
+                    && b.config.schedule == schedule
+                    && b.config.precision == precision
+                    && b.batch == batch
+                    && b.executor == executor
+            })
+            .ok_or_else(|| {
+                anyhow!("no bundle for {layout}/{schedule}/{precision} b{batch} {executor}")
+            })
+    }
+
+    /// Batch sizes available for a given variant — the serving bucket set.
+    pub fn batch_buckets(
+        &self,
+        layout: &str,
+        schedule: &str,
+        precision: &str,
+        executor: &str,
+    ) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .bundles
+            .iter()
+            .filter(|b| {
+                b.config.layout == layout
+                    && b.config.schedule == schedule
+                    && b.config.precision == precision
+                    && b.executor == executor
+            })
+            .map(|b| b.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+impl Bundle {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Bundle {
+            id: j.get("id")?.as_str()?.to_string(),
+            config: ModelConfig::from_json(j.get("config")?)?,
+            executor: j.get("executor")?.as_str()?.to_string(),
+            batch: j.get("batch")?.as_usize()?,
+            modules: j
+                .get("modules")?
+                .as_arr()?
+                .iter()
+                .map(ModuleSpec::from_json)
+                .collect::<Result<_>>()?,
+            quant: match j.opt("quant") {
+                Some(q) => Some(QuantReport {
+                    sqnr_db: q.get("sqnr_db")?.as_f64()?,
+                    cosine: q.get("cosine")?.as_f64()?,
+                    top1_agreement: q.get("top1_agreement")?.as_f64()?,
+                    max_abs_err: q.get("max_abs_err")?.as_f64()?,
+                }),
+                None => None,
+            },
+            weight_bytes: j.get("weight_bytes")?.as_u64()?,
+        })
+    }
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            arch: j.get("arch")?.as_str()?.to_string(),
+            image_size: j.get("image_size")?.as_usize()?,
+            in_channels: j.get("in_channels")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            layout: j.get("layout")?.as_str()?.to_string(),
+            schedule: j.get("schedule")?.as_str()?.to_string(),
+            precision: j.get("precision")?.as_str()?.to_string(),
+            c_block: j.get("c_block")?.as_usize()?,
+            k_block: j.get("k_block")?.as_usize()?,
+            h_tile: j.get("h_tile")?.as_usize()?,
+        })
+    }
+}
+
+impl ModuleSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModuleSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            file: j.get("file")?.as_str()?.to_string(),
+            args: j
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            inputs: j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            output: TensorSpec::from_json(j.get("output")?)?,
+            role: j.opt("role").map(|r| r.as_str().map(String::from)).transpose()?,
+        })
+    }
+}

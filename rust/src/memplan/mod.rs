@@ -1,0 +1,164 @@
+//! Memory planning: the resource-management half of the executor contrast.
+//!
+//! TVM's graph executor runs a **static memory planner** at build time:
+//! liveness analysis over the (topologically ordered) graph, then first-fit
+//! placement into a shared arena so non-overlapping intermediates reuse the
+//! same storage.  The relay VM instead allocates storage dynamically per
+//! instruction.  Both are implemented here; the planner also powers the
+//! Table 3 memory accounting and the `memplan` ablation bench.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::manifest::ModuleSpec;
+
+/// One value to place: alive from `def_step` through `last_use_step`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValueLife {
+    pub name: String,
+    pub bytes: usize,
+    pub def_step: usize,
+    pub last_use_step: usize,
+}
+
+/// A placed value: offset into the arena.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub name: String,
+    pub offset: usize,
+    pub bytes: usize,
+    pub def_step: usize,
+    pub last_use_step: usize,
+}
+
+/// A static memory plan: arena size + per-value offsets.
+#[derive(Debug, Clone, Default)]
+pub struct StaticPlan {
+    pub placements: Vec<Placement>,
+    pub arena_bytes: usize,
+    /// What the same values would cost without reuse (the VM's way).
+    pub unshared_bytes: usize,
+}
+
+impl StaticPlan {
+    /// Plan a module DAG: value i (module i's output) is live from its
+    /// definition until its last consumer (or the end, for the result).
+    pub fn for_chain(modules: &[ModuleSpec]) -> StaticPlan {
+        let n = modules.len();
+        let mut last_use: Vec<usize> = (0..n).map(|i| i + 1).collect();
+        for (i, m) in modules.iter().enumerate() {
+            for &a in &m.args {
+                if a > 0 {
+                    last_use[a - 1] = last_use[a - 1].max(i);
+                }
+            }
+        }
+        if n > 0 {
+            last_use[n - 1] = n; // the returned value survives to the end
+        }
+        let lives: Vec<ValueLife> = modules
+            .iter()
+            .enumerate()
+            .map(|(i, m)| ValueLife {
+                name: m.name.clone(),
+                bytes: m.output.byte_len(),
+                def_step: i,
+                last_use_step: last_use[i],
+            })
+            .collect();
+        Self::first_fit(&lives)
+    }
+
+    /// First-fit arena placement with liveness-based reuse — TVM's
+    /// `GraphPlanMemory`, distilled.
+    ///
+    /// Values are placed in def order; a value may share arena space with
+    /// any value whose lifetime `[def, last_use]` does not overlap.
+    pub fn first_fit(lives: &[ValueLife]) -> StaticPlan {
+        let mut placements: Vec<Placement> = Vec::with_capacity(lives.len());
+        let mut arena = 0usize;
+        let mut order: Vec<&ValueLife> = lives.iter().collect();
+        order.sort_by_key(|v| (v.def_step, std::cmp::Reverse(v.bytes)));
+
+        for v in order {
+            // Candidate offsets: 0 plus the end of every placed interval.
+            let mut candidates: Vec<usize> = std::iter::once(0)
+                .chain(placements.iter().map(|p| p.offset + p.bytes))
+                .collect();
+            candidates.sort_unstable();
+            candidates.dedup();
+            let off = candidates
+                .into_iter()
+                .find(|&off| {
+                    placements.iter().all(|p| {
+                        let space_disjoint = off + v.bytes <= p.offset || off >= p.offset + p.bytes;
+                        let time_disjoint =
+                            v.last_use_step < p.def_step || p.last_use_step < v.def_step;
+                        space_disjoint || time_disjoint
+                    })
+                })
+                .expect("offset past all placements always fits");
+            arena = arena.max(off + v.bytes);
+            placements.push(Placement {
+                name: v.name.clone(),
+                offset: off,
+                bytes: v.bytes,
+                def_step: v.def_step,
+                last_use_step: v.last_use_step,
+            });
+        }
+        StaticPlan {
+            arena_bytes: arena,
+            unshared_bytes: lives.iter().map(|v| v.bytes).sum(),
+            placements,
+        }
+    }
+
+    /// Invariant check: no two *simultaneously live* values overlap in space.
+    pub fn verify(&self) -> Result<(), String> {
+        for (i, a) in self.placements.iter().enumerate() {
+            if a.last_use_step < a.def_step {
+                return Err(format!("{}: negative lifetime", a.name));
+            }
+            for b in &self.placements[i + 1..] {
+                let time_overlap =
+                    a.def_step <= b.last_use_step && b.def_step <= a.last_use_step;
+                let space_overlap =
+                    a.offset < b.offset + b.bytes && b.offset < a.offset + a.bytes;
+                if time_overlap && space_overlap {
+                    return Err(format!(
+                        "overlap: {} [{}+{}] and {} [{}+{}]",
+                        a.name, a.offset, a.bytes, b.name, b.offset, b.bytes
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reuse ratio achieved by the planner (1.0 = no reuse).
+    pub fn reuse_factor(&self) -> f64 {
+        if self.arena_bytes == 0 {
+            return 1.0;
+        }
+        self.unshared_bytes as f64 / self.arena_bytes as f64
+    }
+}
+
+/// The VM's allocator: no plan, just counted mallocs.
+#[derive(Debug, Default)]
+pub struct DynamicAllocator {
+    allocs: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl DynamicAllocator {
+    pub fn record_alloc(&self, bytes: usize) {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// (total allocations, total bytes)
+    pub fn stats(&self) -> (u64, u64) {
+        (self.allocs.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
+    }
+}

@@ -1,0 +1,153 @@
+//! Measurement protocol + table emitters.
+//!
+//! The paper: "For each experiment, we average the performance over 110
+//! epochs with the first 10 epochs used for warm-up." (§2.2)  [`measure`]
+//! implements exactly that protocol; emitters render rows in the paper's
+//! table format (Time (ms) / Improvement %).
+
+use std::time::Instant;
+
+/// Summary statistics over the measured (post-warmup) epochs.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochStats {
+    pub epochs: usize,
+    pub warmup: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl EpochStats {
+    pub fn from_samples(samples_ms: &[f64], warmup: usize) -> EpochStats {
+        let measured = &samples_ms[warmup.min(samples_ms.len())..];
+        let n = measured.len().max(1);
+        let mean = measured.iter().sum::<f64>() / n as f64;
+        let var = measured.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> = measured.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx]
+        };
+        EpochStats {
+            epochs: samples_ms.len(),
+            warmup,
+            mean_ms: mean,
+            std_ms: var.sqrt(),
+            min_ms: sorted.first().copied().unwrap_or(0.0),
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// The paper's protocol: `epochs` runs, first `warmup` discarded.
+pub fn measure<F: FnMut() -> anyhow::Result<()>>(
+    epochs: usize,
+    warmup: usize,
+    mut f: F,
+) -> anyhow::Result<EpochStats> {
+    let mut samples = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        let t0 = Instant::now();
+        f()?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(EpochStats::from_samples(&samples, warmup))
+}
+
+/// "Improvement" in the paper's sense: baseline_time / this_time, as a
+/// percentage (100% = parity, 160.70% = 1.607× faster than baseline).
+pub fn improvement_pct(baseline_ms: f64, this_ms: f64) -> f64 {
+    100.0 * baseline_ms / this_ms
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering
+// ---------------------------------------------------------------------------
+
+/// A paper-style results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+pub fn fmt_ms(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{v:.2}%")
+}
+
+pub fn fmt_mib(bytes: u64) -> String {
+    format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
+}

@@ -1,0 +1,156 @@
+//! Host-side quantization substrate + the Table 3 memory accounting.
+//!
+//! Per-tensor symmetric int8 (`q = clip(round(x/s), -127, 127)`), matching
+//! the L1 `qdq` kernels bit-for-bit so host-prepared tensors agree with the
+//! compiled pipeline.  The footprint model reproduces the paper's §3.2.2
+//! observation: intermediates stay fp32 in memory in *both* precisions
+//! (quantized operators read one precision and write the other; scales stay
+//! fp32), so resident memory is nearly constant across precisions — what
+//! int8 saves is *bandwidth*, and weights.
+
+use crate::manifest::{Bundle, Manifest};
+use crate::runtime::{DType, TensorData};
+
+pub const QMAX: f32 = 127.0;
+
+/// Per-tensor symmetric scale from the absolute maximum.
+pub fn abs_max_scale(values: &[f32]) -> f32 {
+    let amax = values.iter().fold(0f32, |m, v| m.max(v.abs()));
+    (amax.max(1e-8)) / QMAX
+}
+
+/// fp32 → int8 at `scale`.
+pub fn quantize(values: &[f32], scale: f32) -> Vec<i8> {
+    values
+        .iter()
+        .map(|v| (v / scale).round().clamp(-QMAX, QMAX) as i8)
+        .collect()
+}
+
+/// int8 → fp32 at `scale`.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|v| *v as f32 * scale).collect()
+}
+
+/// Quantize a whole tensor (the host half of the prefix operator).
+pub fn quantize_tensor(t: &TensorData, scale: f32) -> anyhow::Result<TensorData> {
+    let q = quantize(&t.as_f32()?, scale);
+    TensorData::from_i8(t.shape.clone(), &q)
+}
+
+/// Round-trip error metrics for a quantization choice.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantError {
+    pub max_abs: f32,
+    pub rmse: f32,
+    pub sqnr_db: f32,
+}
+
+pub fn quant_error(values: &[f32], scale: f32) -> QuantError {
+    let deq = dequantize(&quantize(values, scale), scale);
+    let mut max_abs = 0f32;
+    let mut se = 0f64;
+    let mut sig = 0f64;
+    for (a, b) in values.iter().zip(&deq) {
+        let e = (a - b).abs();
+        max_abs = max_abs.max(e);
+        se += (e as f64) * (e as f64);
+        sig += (*a as f64) * (*a as f64);
+    }
+    let n = values.len().max(1) as f64;
+    QuantError {
+        max_abs,
+        rmse: ((se / n) as f32).sqrt(),
+        sqnr_db: (10.0 * (sig / se.max(1e-30)).log10()) as f32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Memory footprint (Table 3's Memory column)
+// ---------------------------------------------------------------------------
+
+/// Byte accounting for one bundle at one batch size.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryFootprint {
+    /// Parameters at the bundle's precision.
+    pub weight_bytes: u64,
+    /// Peak simultaneously-live activation bytes (static plan arena).
+    pub activation_arena_bytes: u64,
+    /// Sum of all boundary activations with no reuse (the VM's cost).
+    pub activation_unshared_bytes: u64,
+    /// Extra q/dq staging buffers an int8 pipeline carries (int8 copies of
+    /// boundary tensors) — why the paper's int8 rows use slightly *more*
+    /// memory (5331 vs 5279 MiB at batch 1).
+    pub qdq_overhead_bytes: u64,
+}
+
+impl MemoryFootprint {
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.activation_arena_bytes + self.qdq_overhead_bytes
+    }
+}
+
+pub fn footprint(_manifest: &Manifest, bundle: &Bundle) -> MemoryFootprint {
+    let plan = crate::memplan::StaticPlan::for_chain(&bundle.modules);
+    // Boundary tensors are what the executors move; inside fused modules the
+    // intermediates are fp32 both ways (§3.2.2), captured by scaling the
+    // boundary bytes to fp32 width.
+    let widen = |bytes: usize, dtype: &str| -> u64 {
+        match dtype {
+            "s8" => bytes as u64 * 4, // stored fp32 internally
+            _ => bytes as u64,
+        }
+    };
+    let mut arena = 0u64;
+    let mut unshared = 0u64;
+    let mut qdq = 0u64;
+    for (p, m) in plan.placements.iter().zip(&bundle.modules) {
+        let w = widen(p.bytes, &m.output.dtype);
+        unshared += w;
+        if m.output.dtype == "s8" {
+            // the int8 copy exists alongside the fp32 working tensor
+            qdq += p.bytes as u64;
+        }
+        arena = arena.max(w);
+    }
+    // Linear chain: at steady state two boundary tensors are live (in+out).
+    MemoryFootprint {
+        weight_bytes: bundle.weight_bytes,
+        activation_arena_bytes: arena * 2,
+        activation_unshared_bytes: unshared,
+        qdq_overhead_bytes: qdq,
+    }
+}
+
+/// Bandwidth accounting: bytes that must cross memory per inference — the
+/// quantity whose reduction drives Table 3's growing int8 advantage.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthModel {
+    pub weight_bytes: u64,
+    pub activation_bytes: u64,
+}
+
+impl BandwidthModel {
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.activation_bytes
+    }
+}
+
+pub fn bandwidth(bundle: &Bundle) -> BandwidthModel {
+    let act: usize = bundle
+        .modules
+        .iter()
+        .map(|m| {
+            m.inputs.iter().map(|i| i.byte_len()).sum::<usize>() + m.output.byte_len()
+        })
+        .sum();
+    BandwidthModel {
+        weight_bytes: bundle.weight_bytes,
+        activation_bytes: act as u64,
+    }
+}
+
+/// Convenience: element dtype of a spec tag.
+pub fn dtype_of(tag: &str) -> DType {
+    DType::parse(tag)
+}

@@ -1,0 +1,243 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 via the PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`.  The interchange format is HLO *text* — jax ≥ 0.5 serialized
+//! protos use 64-bit instruction ids this XLA rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are raw pointers (`!Send`): the coordinator confines a
+//! [`Runtime`] to one worker thread and talks to it over channels.
+
+mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use tensor::{synthetic_images, DType, TensorData};
+
+use crate::manifest::{ModuleSpec, TensorSpec};
+
+/// Execution statistics, accumulated across a runtime's lifetime.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: AtomicU64,
+    pub executions: AtomicU64,
+    pub bytes_h2d: AtomicU64,
+    pub bytes_d2h: AtomicU64,
+}
+
+/// A PJRT CPU client plus a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<LoadedModule>>>,
+    pub stats: RuntimeStats,
+}
+
+/// One compiled HLO module with its I/O contract.
+pub struct LoadedModule {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            cache: Default::default(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one module (cached by absolute path).
+    pub fn load_module(
+        &self,
+        root: &Path,
+        spec: &ModuleSpec,
+    ) -> Result<std::rc::Rc<LoadedModule>> {
+        let path = root.join(&spec.file);
+        if let Some(hit) = self.cache.borrow().get(&path) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        let module = std::rc::Rc::new(LoadedModule {
+            name: spec.name.clone(),
+            inputs: spec.inputs.clone(),
+            output: spec.output.clone(),
+            exe,
+        });
+        self.cache.borrow_mut().insert(path, module.clone());
+        Ok(module)
+    }
+
+    pub fn cached_modules(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute a module host-to-host: literal in, literal out.
+    ///
+    /// This is one "packed function" invocation in TVM terms: the input is
+    /// staged into a fresh device buffer, the output copied back — the
+    /// per-call cost the VM executor pays at every instruction.
+    pub fn execute_host(
+        &self,
+        module: &LoadedModule,
+        inputs: &[&TensorData],
+    ) -> Result<TensorData> {
+        let lits = inputs.iter().map(|t| to_literal(t)).collect::<Result<Vec<_>>>()?;
+        for t in inputs {
+            self.stats
+                .bytes_h2d
+                .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+        }
+        let result = module
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {}: {e}", module.name))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output of {}: {e}", module.name))?;
+        let out = from_literal(&out_lit, &module.output)
+            .with_context(|| format!("decoding output of {}", module.name))?;
+        self.stats
+            .bytes_d2h
+            .fetch_add(out.byte_len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Stage a host tensor into a device buffer (graph-executor input path).
+    ///
+    /// Goes through a literal rather than `buffer_from_host_raw_bytes`: the
+    /// crate's raw-bytes path passes the `ElementType` discriminant where a
+    /// `PrimitiveType` is expected (F32 → F16), corrupting the buffer type.
+    pub fn to_device(&self, t: &TensorData) -> Result<xla::PjRtBuffer> {
+        self.stats
+            .bytes_h2d
+            .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+        let lit = to_literal(t)?;
+        self.client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("host->device: {e}"))
+    }
+
+    /// Execute device-to-device: buffers in, buffer out (no host staging).
+    pub fn execute_buffers(
+        &self,
+        module: &LoadedModule,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
+        let mut result = module
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", module.name))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let buf = result
+            .drain(..)
+            .next()
+            .and_then(|mut replicas| replicas.drain(..).next())
+            .ok_or_else(|| anyhow!("no output buffer from {}", module.name))?;
+        Ok(buf)
+    }
+
+    /// Copy a device buffer back to the host.
+    pub fn to_host(&self, buf: &xla::PjRtBuffer, spec: &TensorSpec) -> Result<TensorData> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e}"))?;
+        let t = from_literal(&lit, spec)?;
+        self.stats
+            .bytes_d2h
+            .fetch_add(t.byte_len() as u64, Ordering::Relaxed);
+        Ok(t)
+    }
+}
+
+/// TensorData → PJRT literal.
+pub fn to_literal(t: &TensorData) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        t.dtype.element_type(),
+        &t.shape,
+        &t.data,
+    )
+    .map_err(|e| anyhow!("creating literal: {e}"))
+}
+
+/// PJRT literal → TensorData.  Modules are lowered untupled, so the common
+/// case copies straight out of the literal; legacy tuple outputs are still
+/// handled (decompose) for robustness.
+///
+/// §Perf: this is the request path's D2H copy.  The original implementation
+/// cloned the literal (untuple handling) and staged through a typed Vec —
+/// two extra full copies per inference; both are gone (EXPERIMENTS.md §Perf).
+pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<TensorData> {
+    let dtype = DType::parse(&spec.dtype);
+    let want_bytes = spec.byte_len();
+    if lit.ty().is_err() {
+        // Tuple literal: decompose (rare, legacy artifacts only).
+        let mut c = lit.clone();
+        let parts = c
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing tuple: {e}"))?;
+        let first = parts
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty tuple literal"))?;
+        return from_literal(&first, spec);
+    }
+    if lit.size_bytes() != want_bytes {
+        return Err(anyhow!(
+            "literal size {} != spec {:?}/{} ({} bytes)",
+            lit.size_bytes(), spec.shape, spec.dtype, want_bytes
+        ));
+    }
+    let mut data = vec![0u8; want_bytes];
+    copy_literal_bytes(lit, dtype, &mut data)?;
+    TensorData::new(dtype, spec.shape.clone(), data)
+}
+
+fn copy_literal_bytes(lit: &xla::Literal, dtype: DType, dst: &mut [u8]) -> Result<()> {
+    // Copy directly into the destination byte buffer: reinterpret it as the
+    // element type (safe on this little-endian target; alignment of the Vec
+    // allocation is checked by align_to_mut).
+    match dtype {
+        DType::F32 => {
+            let (pre, mid, post) = unsafe { dst.align_to_mut::<f32>() };
+            if !pre.is_empty() || !post.is_empty() {
+                return Err(anyhow!("unaligned f32 buffer"));
+            }
+            lit.copy_raw_to(mid).map_err(|e| anyhow!("copy f32: {e}"))?;
+        }
+        DType::S32 => {
+            let (pre, mid, post) = unsafe { dst.align_to_mut::<i32>() };
+            if !pre.is_empty() || !post.is_empty() {
+                return Err(anyhow!("unaligned s32 buffer"));
+            }
+            lit.copy_raw_to(mid).map_err(|e| anyhow!("copy s32: {e}"))?;
+        }
+        DType::S8 => {
+            let (_, mid, _) = unsafe { dst.align_to_mut::<i8>() };
+            lit.copy_raw_to(mid).map_err(|e| anyhow!("copy s8: {e}"))?;
+        }
+    }
+    Ok(())
+}

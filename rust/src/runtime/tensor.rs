@@ -1,0 +1,222 @@
+//! Host tensors: the typed byte buffers that cross the PJRT boundary.
+
+use anyhow::{anyhow, Result};
+use xla::ElementType;
+
+/// The three dtypes the quantized pipeline moves across module boundaries:
+/// fp32 activations, int8 quantized tensors, int32 accumulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    S8,
+    S32,
+}
+
+impl DType {
+    /// Parse the manifest dtype tag.
+    pub fn parse(tag: &str) -> Self {
+        match tag {
+            "f32" => DType::F32,
+            "s8" => DType::S8,
+            "s32" => DType::S32,
+            other => panic!("unknown dtype tag {other:?}"),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S8 => "s8",
+            DType::S32 => "s32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::S32 => 4,
+            DType::S8 => 1,
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::S8 => ElementType::S8,
+            DType::S32 => ElementType::S32,
+        }
+    }
+}
+
+/// A host-side tensor: dtype + shape + raw bytes.
+///
+/// This is the coordinator's working currency; conversion to/from PJRT
+/// literals and buffers lives in [`crate::runtime`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorData {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl TensorData {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let want = shape.iter().product::<usize>() * dtype.size_bytes();
+        if data.len() != want {
+            return Err(anyhow!(
+                "tensor data length {} != shape {:?} * {} = {}",
+                data.len(), shape, dtype.size_bytes(), want
+            ));
+        }
+        Ok(Self { dtype, shape, data })
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let len = shape.iter().product::<usize>() * dtype.size_bytes();
+        Self { dtype, shape, data: vec![0u8; len] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(DType::F32, shape, data)
+    }
+
+    pub fn from_i8(shape: Vec<usize>, values: &[i8]) -> Result<Self> {
+        let data = values.iter().map(|v| *v as u8).collect();
+        Self::new(DType::S8, shape, data)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(DType::S32, shape, data)
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(anyhow!("not f32: {:?}", self.dtype));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        if self.dtype != DType::S8 {
+            return Err(anyhow!("not s8: {:?}", self.dtype));
+        }
+        Ok(self.data.iter().map(|b| *b as i8).collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::S32 {
+            return Err(anyhow!("not s32: {:?}", self.dtype));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Argmax over the last axis — logits → class ids.
+    pub fn argmax_last(&self) -> Result<Vec<usize>> {
+        let vals = self.as_f32()?;
+        let last = *self.shape.last().ok_or_else(|| anyhow!("scalar tensor"))?;
+        Ok(vals
+            .chunks_exact(last)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Stack batch-1 tensors along axis 0 (the batcher's gather step).
+    pub fn stack(items: &[&TensorData]) -> Result<TensorData> {
+        let first = items.first().ok_or_else(|| anyhow!("empty stack"))?;
+        let mut data =
+            Vec::with_capacity(items.iter().map(|t| t.data.len()).sum::<usize>());
+        for t in items {
+            if t.shape != first.shape || t.dtype != first.dtype {
+                return Err(anyhow!("stack: mismatched item specs"));
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = first.shape.clone();
+        if shape.is_empty() {
+            return Err(anyhow!("stack: scalar items"));
+        }
+        shape[0] = items.iter().map(|t| t.shape[0]).sum();
+        TensorData::new(first.dtype, shape, data)
+    }
+
+    /// Split along axis 0 into per-`rows` chunks (the batcher's scatter step).
+    pub fn split_rows(&self, rows: usize) -> Result<Vec<TensorData>> {
+        if self.shape.is_empty() || self.shape[0] % rows != 0 {
+            return Err(anyhow!("split_rows({rows}) on shape {:?}", self.shape));
+        }
+        let row_bytes = self.byte_len() / self.shape[0] * rows;
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        self.data
+            .chunks_exact(row_bytes)
+            .map(|c| TensorData::new(self.dtype, shape.clone(), c.to_vec()))
+            .collect()
+    }
+
+    /// Take the first `rows` rows (strip batch padding).
+    pub fn truncate_rows(&self, rows: usize) -> Result<TensorData> {
+        if self.shape.is_empty() || rows > self.shape[0] {
+            return Err(anyhow!("truncate_rows({rows}) on shape {:?}", self.shape));
+        }
+        let row_bytes = self.byte_len() / self.shape[0];
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        TensorData::new(self.dtype, shape, self.data[..row_bytes * rows].to_vec())
+    }
+
+    /// Zero-pad along axis 0 up to `rows` (bucket batching).
+    pub fn pad_rows(&self, rows: usize) -> Result<TensorData> {
+        if self.shape.is_empty() || rows < self.shape[0] {
+            return Err(anyhow!("pad_rows({rows}) on shape {:?}", self.shape));
+        }
+        let row_bytes = self.byte_len() / self.shape[0];
+        let mut data = self.data.clone();
+        data.resize(row_bytes * rows, 0);
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        TensorData::new(self.dtype, shape, data)
+    }
+}
+
+/// Deterministic synthetic image batches (the paper's validation data stand-in).
+pub fn synthetic_images(
+    batch: usize,
+    shape_rest: &[usize],
+    seed: u64,
+) -> TensorData {
+    let mut rng = crate::util::rng::Rng64::seed_from_u64(seed);
+    let mut shape = vec![batch];
+    shape.extend_from_slice(shape_rest);
+    let n: usize = shape.iter().product();
+    let values: Vec<f32> = (0..n).map(|_| rng.normal() * 0.5).collect();
+    TensorData::from_f32(shape, &values).expect("synthetic shape")
+}

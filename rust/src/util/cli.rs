@@ -1,0 +1,115 @@
+//! Minimal CLI argument parsing (clap replacement for the offline build).
+//!
+//! Supports `--flag value`, `--flag=value`, bare `--flag` booleans, and a
+//! positional subcommand, with generated usage text.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Result<Args> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter(items: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad integer {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --max-batch 8 --precision=int8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize("max-batch", 1).unwrap(), 8);
+        assert_eq!(a.str("precision", "fp32"), "int8");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("bench --batches 1,16,64");
+        assert_eq!(a.usize_list("batches", &[1]).unwrap(), vec![1, 16, 64]);
+        assert_eq!(a.usize_list("other", &[2, 3]).unwrap(), vec![2, 3]);
+    }
+}

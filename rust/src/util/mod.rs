@@ -1,0 +1,9 @@
+//! In-tree substrates for an offline build: JSON, CLI parsing, PRNG.
+//!
+//! The build environment vendors only the `xla` bridge's dependency
+//! closure, so the usual ecosystem crates (serde_json, clap, rand, …) are
+//! implemented here at the scale this system needs.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,99 @@
+//! Deterministic PRNG (splitmix64 + xoshiro256**), replacing the rand crate
+//! in the offline build.  Quality is ample for synthetic workloads, seeded
+//! weights, and property-test case generation.
+
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        // splitmix64 expansion, as the xoshiro authors recommend.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng64 { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        // xoshiro256**
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi].
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// int8 uniform in [-127, 127].
+    pub fn i8(&mut self) -> i8 {
+        self.range_i64(-127, 127) as i8
+    }
+
+    /// Approximate standard normal (Irwin–Hall of 4 uniforms, rescaled).
+    pub fn normal(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.f32()).sum::<f32>() - 2.0;
+        s * 0.866 * 2.0
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng64::seed_from_u64(7);
+        let mut b = Rng64::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng64::seed_from_u64(1);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng64::seed_from_u64(2);
+        for _ in 0..1000 {
+            let v = r.range_i64(-3, 5);
+            assert!((-3..=5).contains(&v));
+        }
+    }
+}

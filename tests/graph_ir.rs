@@ -1,0 +1,279 @@
+//! Graph IR + passes: construction, validation, interpreter semantics, and
+//! the semantic-preservation property every pass must satisfy.
+//!
+//! Property-style tests use the in-tree seeded PRNG (the offline build has
+//! no proptest): each runs dozens of randomized cases deterministically.
+
+use tvmq::graph::passes::quantize_graph_with_report as _qg;
+use tvmq::graph::passes::{
+    calibrate_graph, AlterConvLayout, CancelLayoutTransforms, ConstantFold, DeadCodeElim,
+    FusionPass, Pass, PassManager,
+};
+use tvmq::graph::{
+    build_conv_net, build_resnet_ir, calibrate_ir, evaluate, Graph, Layout, NetSpec, Op,
+    TensorTy,
+};
+use tvmq::runtime::TensorData;
+use tvmq::util::rng::Rng64;
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+fn random_net(rng: &mut Rng64) -> NetSpec {
+    let stages = (1..=rng.range_usize(1, 3))
+        .map(|i| tvmq::graph::builder::StageSpec {
+            channels: [4usize, 8, 16][rng.range_usize(0, 2)],
+            kernel: [1usize, 3][rng.range_usize(0, 1)],
+            stride: rng.range_usize(1, 2),
+            residual: rng.bool() && i > 1,
+        })
+        .collect();
+    NetSpec {
+        batch: rng.range_usize(1, 2),
+        image: rng.range_usize(6, 12),
+        in_channels: rng.range_usize(1, 4),
+        stages,
+        classes: rng.range_usize(2, 10),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn build_and_validate_small_net() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    g.validate().unwrap();
+    assert!(g.len() > 10);
+    assert!(g.const_bytes() > 0);
+}
+
+#[test]
+fn interp_produces_finite_logits() {
+    let g = build_resnet_ir(2, 16, 3).unwrap();
+    let x = calibrate_ir(&g, 1);
+    let out = evaluate(&g, &x).unwrap();
+    assert_eq!(out.shape, vec![2, 10]);
+    assert!(out.as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn validation_rejects_type_mismatch() {
+    let mut g = Graph::new();
+    let x = g.add_input("x", TensorTy::f32(vec![1, 4, 8, 8]));
+    let w = g
+        .add_const_f32("w", vec![8, 5, 3, 3], vec![0.0; 8 * 5 * 3 * 3])
+        .unwrap();
+    // C mismatch: 4 vs 5.
+    assert!(g
+        .add("conv", Op::Conv2d { stride: 1, padding: 1, layout: Layout::Nchw }, vec![x, w])
+        .is_err());
+}
+
+#[test]
+fn validation_rejects_forward_reference() {
+    let mut g = Graph::new();
+    let x = g.add_input("x", TensorTy::f32(vec![1, 2]));
+    assert!(g.add("bad", Op::Relu, vec![x + 5]).is_err());
+}
+
+#[test]
+fn dce_removes_dead_nodes_and_preserves_semantics() {
+    let mut g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let keep_out = g.output;
+    // Add a dead branch.
+    let dead = g.add("dead.relu", Op::Relu, vec![g.input]).unwrap();
+    let _ = g.add("dead.relu2", Op::Relu, vec![dead]).unwrap();
+    g.output = keep_out;
+    let before = g.len();
+    let x = calibrate_ir(&g, 2);
+    let want = evaluate(&g, &x).unwrap();
+    let g2 = DeadCodeElim.run(&g).unwrap();
+    g2.validate().unwrap();
+    assert!(g2.len() < before);
+    let got = evaluate(&g2, &x).unwrap();
+    assert_eq!(want, got);
+}
+
+#[test]
+fn constant_fold_preserves_semantics() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let x = calibrate_ir(&g, 3);
+    let want = evaluate(&g, &x).unwrap();
+    let g2 = ConstantFold.run(&g).unwrap();
+    g2.validate().unwrap();
+    let got = evaluate(&g2, &x).unwrap();
+    assert_eq!(want, got);
+}
+
+#[test]
+fn fusion_plan_valid_and_smaller_than_per_op() {
+    let g = build_resnet_ir(1, 16, 5).unwrap();
+    let fused = FusionPass { enabled: true }.plan(&g).unwrap();
+    let unfused = FusionPass { enabled: false }.plan(&g).unwrap();
+    fused.validate(&g).unwrap();
+    unfused.validate(&g).unwrap();
+    assert!(fused.group_count() < unfused.group_count());
+    // Every anchor op heads at most one group with its elementwise tail.
+    let compute_nodes = g
+        .nodes
+        .iter()
+        .filter(|n| !matches!(n.op, Op::Input | Op::Constant(_)))
+        .count();
+    assert_eq!(
+        unfused.group_count(),
+        compute_nodes,
+        "per-op mode must have one group per compute node"
+    );
+}
+
+#[test]
+fn prop_fusion_plan_valid_on_random_graphs() {
+    let mut rng = Rng64::seed_from_u64(99);
+    for _ in 0..25 {
+        let spec = random_net(&mut rng);
+        let g = build_conv_net(&spec).unwrap();
+        for enabled in [true, false] {
+            let plan = FusionPass { enabled }.plan(&g).unwrap();
+            plan.validate(&g).unwrap();
+        }
+    }
+}
+
+#[test]
+fn alter_layout_preserves_semantics_when_divisible() {
+    let g = build_resnet_ir(1, 16, 7).unwrap();
+    let x = calibrate_ir(&g, 4);
+    let want = evaluate(&g, &x).unwrap().as_f32().unwrap();
+    for cb in [4usize, 8, 16] {
+        let pm = PassManager::new()
+            .add(AlterConvLayout { c_block: cb, k_block: cb })
+            .add(CancelLayoutTransforms)
+            .add(ConstantFold);
+        let g2 = pm.run(&g).unwrap();
+        g2.validate().unwrap();
+        let got = evaluate(&g2, &x).unwrap().as_f32().unwrap();
+        let err = max_abs_diff(&want, &got);
+        assert!(err < 1e-3, "cb={cb}: packed conv diverged by {err}");
+    }
+}
+
+#[test]
+fn alter_layout_packs_eligible_convs() {
+    let g = build_resnet_ir(1, 16, 7).unwrap();
+    let g2 = AlterConvLayout { c_block: 16, k_block: 16 }.run(&g).unwrap();
+    let packed = g2
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::Conv2d { layout: Layout::Nchwc(_), .. }))
+        .count();
+    // All convs except the 3-channel stem pack at cb=16.
+    assert!(packed >= 8, "expected most convs packed, got {packed}");
+    // Semantics preserved through the cancellation pass (resnet has
+    // elementwise ops between convs, so no adjacent pairs cancel here;
+    // direct-chain cancellation is covered below).
+    let g3 = CancelLayoutTransforms.run(&g2).unwrap();
+    let x = calibrate_ir(&g, 5);
+    let a = evaluate(&g, &x).unwrap().as_f32().unwrap();
+    let b = evaluate(&g3, &x).unwrap().as_f32().unwrap();
+    assert!(max_abs_diff(&a, &b) < 1e-3);
+}
+
+#[test]
+fn cancel_layout_transforms_on_direct_conv_chain() {
+    // conv -> conv with no elementwise in between: the unpack/pack pair at
+    // the boundary must cancel so the interior stays packed.
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(41);
+    let x = g.add_input("x", TensorTy::f32(vec![1, 8, 8, 8]));
+    let mut rand_w = |k: usize, c: usize| -> Vec<f32> {
+        (0..k * c * 9).map(|_| rng.normal() * 0.2).collect()
+    };
+    let w1 = g.add_const_f32("w1", vec![8, 8, 3, 3], rand_w(8, 8)).unwrap();
+    let c1 = g
+        .add("c1", Op::Conv2d { stride: 1, padding: 1, layout: Layout::Nchw }, vec![x, w1])
+        .unwrap();
+    let w2 = g.add_const_f32("w2", vec![8, 8, 3, 3], rand_w(8, 8)).unwrap();
+    let c2 = g
+        .add("c2", Op::Conv2d { stride: 1, padding: 1, layout: Layout::Nchw }, vec![c1, w2])
+        .unwrap();
+    g.output = c2;
+    g.validate().unwrap();
+
+    let packed = AlterConvLayout { c_block: 4, k_block: 4 }.run(&g).unwrap();
+    let count = |gr: &Graph| {
+        gr.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::LayoutTransform { .. }))
+            .count()
+    };
+    let before = count(&packed);
+    assert_eq!(before, 4, "pack/unpack around each of two convs");
+    let cancelled = CancelLayoutTransforms.run(&packed).unwrap();
+    assert_eq!(count(&cancelled), 2, "interior unpack+pack pair must cancel");
+
+    let xin = calibrate_ir(&g, 6);
+    let want = evaluate(&g, &xin).unwrap().as_f32().unwrap();
+    let got = evaluate(&cancelled, &xin).unwrap().as_f32().unwrap();
+    assert!(max_abs_diff(&want, &got) < 1e-3);
+}
+
+#[test]
+fn quantize_realize_high_sqnr() {
+    let g = build_resnet_ir(1, 16, 11).unwrap();
+    let calib = calibrate_ir(&g, 6);
+    let eval = calibrate_ir(&g, 7);
+    let (qg, sqnr) = _qg(&g, &calib, &eval).unwrap();
+    qg.validate().unwrap();
+    assert!(sqnr > 20.0, "int8 IR sqnr too low: {sqnr} dB");
+    // The realized graph must contain the qnn boundary operators.
+    let quants = qg
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::Quantize { .. }))
+        .count();
+    let deqs = qg
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, Op::Dequantize { .. }))
+        .count();
+    assert!(quants >= 9 && deqs >= 9, "q={quants} dq={deqs}");
+}
+
+#[test]
+fn calibrate_graph_covers_all_anchors() {
+    let g = build_resnet_ir(1, 16, 13).unwrap();
+    let scales = calibrate_graph(&g, &calibrate_ir(&g, 8)).unwrap();
+    let anchors = g.nodes.iter().filter(|n| n.op.is_anchor()).count();
+    assert_eq!(scales.len(), anchors);
+    assert!(scales.values().all(|s| *s > 0.0));
+}
+
+#[test]
+fn prop_pass_pipeline_random_nets() {
+    let mut rng = Rng64::seed_from_u64(2024);
+    for _ in 0..10 {
+        let spec = random_net(&mut rng);
+        let g = build_conv_net(&spec).unwrap();
+        let x = calibrate_ir(&g, rng.next_u64());
+        let want = evaluate(&g, &x).unwrap().as_f32().unwrap();
+        let pm = PassManager::new()
+            .add(ConstantFold)
+            .add(DeadCodeElim)
+            .add(AlterConvLayout { c_block: 4, k_block: 4 })
+            .add(CancelLayoutTransforms)
+            .add(ConstantFold);
+        let g2 = pm.run(&g).unwrap();
+        let got = evaluate(&g2, &x).unwrap().as_f32().unwrap();
+        assert!(
+            max_abs_diff(&want, &got) < 1e-3,
+            "pipeline diverged on {spec:?}"
+        );
+    }
+}
+
+#[test]
+fn interp_rejects_wrong_input_shape() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let bad = TensorData::zeros(tvmq::runtime::DType::F32, vec![1, 3, 4, 4]);
+    assert!(evaluate(&g, &bad).is_err());
+}

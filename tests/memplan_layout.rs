@@ -1,0 +1,153 @@
+//! Memory planner invariants + layout packing properties (randomized,
+//! seeded — the offline build's proptest substitute).
+
+use tvmq::layout::{
+    nchw_to_nhwc, nhwc_to_nchw, pack_nchwc, pack_oihw, unpack_nchwc, Nchw,
+};
+use tvmq::memplan::{StaticPlan, ValueLife};
+use tvmq::util::rng::Rng64;
+
+fn random_lives(rng: &mut Rng64, n: usize) -> Vec<ValueLife> {
+    (0..n)
+        .map(|i| {
+            let def = rng.range_usize(0, 20);
+            ValueLife {
+                name: format!("v{i}"),
+                bytes: rng.range_usize(1, 4096),
+                def_step: def,
+                last_use_step: def + rng.range_usize(0, 10),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_first_fit_never_overlaps() {
+    let mut rng = Rng64::seed_from_u64(5);
+    for _ in 0..100 {
+        let n = rng.range_usize(1, 24);
+        let lives = random_lives(&mut rng, n);
+        let plan = StaticPlan::first_fit(&lives);
+        plan.verify().expect("planner produced overlapping placements");
+        assert!(plan.arena_bytes <= plan.unshared_bytes);
+        assert!(plan.reuse_factor() >= 1.0);
+    }
+}
+
+#[test]
+fn disjoint_lifetimes_share_space() {
+    let lives = vec![
+        ValueLife { name: "a".into(), bytes: 100, def_step: 0, last_use_step: 1 },
+        ValueLife { name: "b".into(), bytes: 100, def_step: 2, last_use_step: 3 },
+        ValueLife { name: "c".into(), bytes: 100, def_step: 4, last_use_step: 5 },
+    ];
+    let plan = StaticPlan::first_fit(&lives);
+    assert_eq!(plan.arena_bytes, 100, "fully disjoint values must share one slot");
+    assert_eq!(plan.unshared_bytes, 300);
+}
+
+#[test]
+fn overlapping_lifetimes_get_distinct_space() {
+    let lives = vec![
+        ValueLife { name: "a".into(), bytes: 64, def_step: 0, last_use_step: 5 },
+        ValueLife { name: "b".into(), bytes: 64, def_step: 1, last_use_step: 4 },
+        ValueLife { name: "c".into(), bytes: 64, def_step: 2, last_use_step: 3 },
+    ];
+    let plan = StaticPlan::first_fit(&lives);
+    assert_eq!(plan.arena_bytes, 192, "all live at step 2-3: no sharing possible");
+    plan.verify().unwrap();
+}
+
+#[test]
+fn verify_catches_bad_plan() {
+    let mut plan = StaticPlan::first_fit(&[
+        ValueLife { name: "a".into(), bytes: 10, def_step: 0, last_use_step: 2 },
+        ValueLife { name: "b".into(), bytes: 10, def_step: 1, last_use_step: 3 },
+    ]);
+    // Sabotage: force overlap.
+    plan.placements[1].offset = plan.placements[0].offset;
+    assert!(plan.verify().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Layout packing (Figure 1)
+// ---------------------------------------------------------------------------
+
+fn rand_tensor(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    let mut rng = Rng64::seed_from_u64(17);
+    for _ in 0..50 {
+        let cb = [1usize, 2, 4, 8, 16][rng.range_usize(0, 4)];
+        let d = Nchw {
+            n: rng.range_usize(1, 3),
+            c: cb * rng.range_usize(1, 6),
+            h: rng.range_usize(1, 9),
+            w: rng.range_usize(1, 9),
+        };
+        let x = rand_tensor(&mut rng, d.len());
+        let packed = pack_nchwc(&x, d, cb).unwrap();
+        let back = unpack_nchwc(&packed, d, cb).unwrap();
+        assert_eq!(x, back, "roundtrip failed for {d:?} cb={cb}");
+    }
+}
+
+#[test]
+fn pack_semantics_pointwise() {
+    // packed[n][co][h][w][ci] == src[n][co*cb+ci][h][w]
+    let d = Nchw { n: 1, c: 8, h: 2, w: 2 };
+    let x: Vec<f32> = (0..d.len()).map(|i| i as f32).collect();
+    let cb = 4;
+    let p = pack_nchwc(&x, d, cb).unwrap();
+    for co in 0..2 {
+        for ci in 0..cb {
+            for h in 0..2 {
+                for w in 0..2 {
+                    let src = x[((co * cb + ci) * 2 + h) * 2 + w];
+                    let dst = p[((co * (2 * 2)) + h * 2 + w) * cb + ci];
+                    assert_eq!(src, dst);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_nhwc_roundtrip() {
+    let mut rng = Rng64::seed_from_u64(23);
+    for _ in 0..50 {
+        let d = Nchw {
+            n: rng.range_usize(1, 3),
+            c: rng.range_usize(1, 8),
+            h: rng.range_usize(1, 7),
+            w: rng.range_usize(1, 7),
+        };
+        let x = rand_tensor(&mut rng, d.len());
+        let t = nchw_to_nhwc(&x, d).unwrap();
+        let back = nhwc_to_nchw(&t, d).unwrap();
+        assert_eq!(x, back);
+    }
+}
+
+#[test]
+fn pack_rejects_indivisible_channels() {
+    let d = Nchw { n: 1, c: 6, h: 2, w: 2 };
+    assert!(pack_nchwc(&vec![0.0; d.len()], d, 4).is_err());
+}
+
+#[test]
+fn weight_pack_shape_and_content() {
+    let (k, c, r, s) = (8usize, 4usize, 3usize, 3usize);
+    let w: Vec<f32> = (0..k * c * r * s).map(|i| i as f32).collect();
+    let (cb, kb) = (2usize, 4usize);
+    let p = pack_oihw(&w, k, c, r, s, cb, kb).unwrap();
+    assert_eq!(p.len(), w.len());
+    // spot-check: packed[(ko,co,r,s,ci,ki)] == w[(ko*kb+ki, co*cb+ci, r, s)]
+    let (ko, co, rr, ss, ci, ki) = (1usize, 1usize, 2usize, 0usize, 1usize, 3usize);
+    let src = w[(((ko * kb + ki) * c + (co * cb + ci)) * r + rr) * s + ss];
+    let dst = p[(((((ko * (c / cb) + co) * r + rr) * s + ss) * cb + ci) * kb) + ki];
+    assert_eq!(src, dst);
+}

@@ -1,0 +1,291 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime: executor
+//! equivalence, coordinator serving, failure injection.
+//!
+//! Requires `make artifacts` to have run (the Makefile's `test` target
+//! guarantees it).
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use tvmq::coordinator::{InferenceServer, ServeConfig};
+use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
+use tvmq::manifest::Manifest;
+use tvmq::runtime::{synthetic_images, Runtime, TensorData};
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = tvmq::default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn image(m: &Manifest, batch: usize, layout: &str, seed: u64) -> TensorData {
+    let rest = if layout == "NCHW" {
+        vec![m.in_channels, m.image_size, m.image_size]
+    } else {
+        vec![m.image_size, m.image_size, m.in_channels]
+    };
+    synthetic_images(batch, &rest, seed)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let m = Manifest::load(artifacts()).unwrap();
+    assert!(m.bundles.len() >= 10);
+    assert!(m.param_count > 100_000);
+    assert!(!m.scales.is_empty());
+    // Every Table-2 combo exists as a graph bundle at batch 1.
+    for (l, s, p) in [
+        ("NCHW", "spatial_pack", "fp32"),
+        ("NCHW", "spatial_pack", "int8"),
+        ("NCHW", "simd", "int8"),
+        ("NHWC", "spatial_pack", "fp32"),
+        ("NHWC", "interleaved", "int8"),
+    ] {
+        m.find(l, s, p, 1, "graph").unwrap();
+    }
+}
+
+#[test]
+fn graph_and_vm_executors_agree() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let x = image(&m, 1, "NCHW", 7);
+
+    let gb = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
+    let vb = m.find("NCHW", "spatial_pack", "int8", 1, "vm").unwrap();
+    let ge = GraphExecutor::new(rt.clone(), &m, gb).unwrap();
+    let ve = VmExecutor::new(rt.clone(), &m, vb).unwrap();
+
+    let a = ge.run(&x).unwrap().as_f32().unwrap();
+    let b = ve.run(&x).unwrap().as_f32().unwrap();
+    // Same math, different fusion: tolerate f32 reassociation only.
+    assert!(max_abs_diff(&a, &b) < 1e-3, "executors diverged");
+
+    // Counters expose the mechanistic contrast.
+    let gc = ge.counters();
+    let vc = ve.counters();
+    assert_eq!(gc.dispatches, 1);
+    assert_eq!(gc.dynamic_allocs, 0);
+    assert!(vc.dispatches > 10, "vm must dispatch per primitive");
+    assert!(vc.dynamic_allocs > 10);
+    assert!(vc.boundary_bytes > 0);
+}
+
+#[test]
+fn vm_device_chaining_agrees_with_host_path() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let x = image(&m, 1, "NCHW", 9);
+    let vb = m.find("NCHW", "spatial_pack", "int8", 1, "vm").unwrap();
+    let host = VmExecutor::with_options(rt.clone(), &m, vb, false).unwrap();
+    let dev = VmExecutor::with_options(rt.clone(), &m, vb, true).unwrap();
+    let a = host.run(&x).unwrap().as_f32().unwrap();
+    let b = dev.run(&x).unwrap().as_f32().unwrap();
+    assert_eq!(a, b, "device chaining changed results");
+    assert_eq!(dev.counters().boundary_bytes, 0);
+}
+
+#[test]
+fn int8_tracks_fp32_model() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let x = image(&m, 1, "NCHW", 21);
+    let f = GraphExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "fp32", 1, "graph").unwrap(),
+    )
+    .unwrap();
+    let q = GraphExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+    )
+    .unwrap();
+    let lf = f.run(&x).unwrap();
+    let lq = q.run(&x).unwrap();
+    // Quantization noise is bounded; classes agree on this seed.
+    assert_eq!(lf.argmax_last().unwrap(), lq.argmax_last().unwrap());
+    let (a, b) = (lf.as_f32().unwrap(), lq.as_f32().unwrap());
+    assert!(max_abs_diff(&a, &b) < 1.0, "int8 drifted too far from fp32");
+}
+
+#[test]
+fn all_table2_variants_execute_and_agree_on_class() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let mut classes = Vec::new();
+    for (l, s, p) in [
+        ("NCHW", "spatial_pack", "fp32"),
+        ("NCHW", "spatial_pack", "int8"),
+        ("NCHW", "simd", "int8"),
+        ("NHWC", "spatial_pack", "fp32"),
+        ("NHWC", "interleaved", "int8"),
+    ] {
+        let e = GraphExecutor::new(rt.clone(), &m, m.find(l, s, p, 1, "graph").unwrap()).unwrap();
+        let logits = e.run(&image(&m, 1, l, 33)).unwrap();
+        classes.push(logits.argmax_last().unwrap()[0]);
+    }
+    assert!(
+        classes.windows(2).all(|w| w[0] == w[1]),
+        "schedules disagree on the predicted class: {classes:?}"
+    );
+}
+
+#[test]
+fn batch_variants_consistent_with_batch1() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let buckets = m.batch_buckets("NCHW", "spatial_pack", "int8", "graph");
+    assert!(buckets.len() >= 3, "need several buckets, have {buckets:?}");
+    let b1 = GraphExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+    )
+    .unwrap();
+    let x1 = image(&m, 1, "NCHW", 5);
+    let want = b1.run(&x1).unwrap().as_f32().unwrap();
+
+    let bb = buckets[1];
+    let eb = GraphExecutor::new(
+        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", bb, "graph").unwrap(),
+    )
+    .unwrap();
+    let xb = x1.pad_rows(bb).unwrap();
+    let got_all = eb.run(&xb).unwrap();
+    let got = got_all.truncate_rows(1).unwrap().as_f32().unwrap();
+    assert!(
+        max_abs_diff(&want, &got) < 1e-3,
+        "same image through a bigger bucket changed logits"
+    );
+}
+
+#[test]
+fn executor_rejects_wrong_shape() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let e = GraphExecutor::new(
+        rt, &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+    )
+    .unwrap();
+    let bad = synthetic_images(1, &[1, 4, 4], 0);
+    assert!(e.run(&bad).is_err());
+}
+
+#[test]
+fn executable_cache_hits_on_reload() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let rt = Rc::new(Runtime::new().unwrap());
+    let b = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
+    let _e1 = GraphExecutor::new(rt.clone(), &m, b).unwrap();
+    let compiles_before = rt.cached_modules();
+    let _e2 = GraphExecutor::new(rt.clone(), &m, b).unwrap();
+    assert_eq!(rt.cached_modules(), compiles_before, "second load must hit the cache");
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poisoned_manifest_rejected() {
+    let dir = tempdir("tvmq-poison");
+    std::fs::write(dir.join("manifest.json"), "{\"version\": 1}").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), "not json at all").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn missing_hlo_file_rejected() {
+    // Copy the manifest but not the HLO files: validation must fail.
+    let src = artifacts();
+    let dir = tempdir("tvmq-missing-hlo");
+    std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing HLO"), "unexpected error: {err}");
+}
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_serves_concurrent_clients() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let server = InferenceServer::start(
+        artifacts(),
+        ServeConfig {
+            max_batch: 16,
+            batch_timeout: Duration::from_millis(3),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let server = std::sync::Arc::new(server);
+
+    let mut handles = Vec::new();
+    for c in 0..8u64 {
+        let s = server.clone();
+        let rest = vec![m.in_channels, m.image_size, m.image_size];
+        handles.push(std::thread::spawn(move || {
+            let mut classes = Vec::new();
+            for i in 0..6u64 {
+                let img = synthetic_images(1, &rest, c * 100 + i);
+                let reply = s.submit_blocking(img).expect("inference reply");
+                assert_eq!(reply.logits.shape[0], 1);
+                classes.push(reply.class);
+            }
+            classes
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        total += h.join().unwrap().len();
+    }
+    assert_eq!(total, 48, "every request must be answered exactly once");
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, 48);
+    assert!(stats.batches <= 48);
+    assert!(stats.batch_histogram.keys().all(|b| server.buckets.contains(b)));
+}
+
+#[test]
+fn server_single_request_matches_direct_execution() {
+    let m = Manifest::load(artifacts()).unwrap();
+    let server = InferenceServer::start(
+        artifacts(),
+        ServeConfig {
+            max_batch: 1,
+            batch_timeout: Duration::from_millis(0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let x = image(&m, 1, "NCHW", 77);
+    let reply = server.submit_blocking(x.clone()).unwrap();
+
+    let rt = Rc::new(Runtime::new().unwrap());
+    let e = GraphExecutor::new(
+        rt, &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+    )
+    .unwrap();
+    let direct = e.run(&x).unwrap();
+    assert_eq!(reply.logits.as_f32().unwrap(), direct.as_f32().unwrap());
+}
+
+#[test]
+fn server_rejects_unknown_variant() {
+    let cfg = ServeConfig { schedule: "nonexistent".into(), ..Default::default() };
+    assert!(InferenceServer::start(artifacts(), cfg).is_err());
+}
