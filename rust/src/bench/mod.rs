@@ -165,6 +165,37 @@ pub fn table1(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
             projected_ms: proj, projected_improvement_pct: pimp,
         });
     }
+
+    // The arena tier, same protocol: the native engine whose mechanism
+    // (fusion + static plan) the graph-executor fix is made of.  Runs the
+    // in-process IR model rather than the AOT artifacts, so its row is a
+    // mechanism cross-check, not a like-for-like model timing.
+    {
+        use crate::executor::ArenaExec;
+        use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+        use crate::graph::{build_resnet_ir, calibrate_ir};
+        let g = build_resnet_ir(1, 32, 7)?;
+        let calib = calibrate_ir(&g, 1);
+        let scales = calibrate_graph(&g, &calib)?;
+        let qg = QuantizeRealize { scales }.run(&g)?;
+        let exec = ArenaExec::with_options(&qg, true, 1)?;
+        let x = calibrate_ir(&qg, 42);
+        let stats = measure(ctx.opts.epochs, ctx.opts.warmup, || exec.run(&x).map(|_| ()))?;
+        let imp = improvement_pct(base, stats.mean_ms);
+        let proj = project(stats.mean_ms, "int8");
+        let pimp = improvement_pct(base, proj);
+        t.row(vec![
+            "tvmq-Arena (IR engine)".into(), "NCHW".into(), "arena/fused".into(),
+            "int8".into(), "arena".into(), fmt_ms(stats.mean_ms), fmt_pct(imp),
+            fmt_ms(proj), fmt_pct(pimp),
+        ]);
+        rows.push(TimedRow {
+            label: "tvmq-Arena".into(), layout: "NCHW".into(),
+            schedule: "arena/fused".into(), precision: "int8".into(),
+            mean_ms: stats.mean_ms, improvement_pct: imp, projected_ms: proj,
+            projected_improvement_pct: pimp,
+        });
+    }
     Ok((t, rows))
 }
 
@@ -386,6 +417,75 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
         "vm fp32 (no quant)".into(), fmt_ms(vfs.mean_ms), "-".into(), "-".into(), "-".into(),
     ]);
 
+    Ok(t)
+}
+
+/// Arena-executor ablation: the fused static-plan engine vs the naive
+/// per-node-allocating interpreter, on the ResNet-style IR chain.  Runs
+/// entirely in-process (no AOT artifacts, no PJRT) — this is the
+/// paper's graph-vs-VM mechanism reproduced natively: the interpreter
+/// rows pay per-node allocation and materialized q/dq boundaries; the
+/// arena rows pay neither.
+pub fn arena_ablation(
+    opts: &BenchOpts,
+    batches: &[usize],
+    image: usize,
+    threads: usize,
+) -> Result<Table> {
+    use crate::executor::ArenaExec;
+    use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+    use crate::graph::{build_resnet_ir, calibrate_ir, evaluate};
+    use crate::metrics::fmt_speedup;
+
+    let mut t = Table::new(
+        format!(
+            "Arena ablation — fused static-plan executor vs interpreter \
+             (resnet10 IR, image {image}, {} epochs, {} thread{})",
+            opts.epochs,
+            threads,
+            if threads == 1 { "" } else { "s" }
+        ),
+        &["Batch", "Config", "Time (ms)", "Speedup", "Steps", "Arena KiB",
+          "Unshared KiB", "Fused"],
+    );
+    for &batch in batches {
+        let g = build_resnet_ir(batch, image, 7)?;
+        let x = calibrate_ir(&g, 42);
+        let scales = calibrate_graph(&g, &x)?;
+        let qg = QuantizeRealize { scales }.run(&g)?;
+
+        let base = measure(opts.epochs, opts.warmup, || evaluate(&g, &x).map(|_| ()))?;
+        let kib = |b: usize| format!("{:.1}", b as f64 / 1024.0);
+        t.row(vec![
+            batch.to_string(), "interp fp32 (oracle)".into(), fmt_ms(base.mean_ms),
+            fmt_speedup(1.0), "-".into(), "-".into(), "-".into(), "-".into(),
+        ]);
+
+        let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
+        t.row(vec![
+            batch.to_string(), "interp int8 (unfused q/dq)".into(), fmt_ms(qi.mean_ms),
+            fmt_speedup(base.mean_ms / qi.mean_ms), "-".into(), "-".into(), "-".into(),
+            "0".into(),
+        ]);
+
+        for (label, graph, fuse) in [
+            ("arena fp32", &g, true),
+            ("arena int8 (unfused)", &qg, false),
+            ("arena int8 (fused)", &qg, true),
+        ] {
+            let exec = ArenaExec::with_options(graph, fuse, threads)?;
+            let stats = measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
+            let cg = exec.compiled();
+            t.row(vec![
+                batch.to_string(), label.into(), fmt_ms(stats.mean_ms),
+                fmt_speedup(base.mean_ms / stats.mean_ms),
+                cg.steps.len().to_string(),
+                kib(cg.arena_bytes),
+                kib(cg.unshared_bytes()),
+                cg.fused_chains.to_string(),
+            ]);
+        }
+    }
     Ok(t)
 }
 

@@ -1,0 +1,848 @@
+//! Arena executor: the static-plan tier the paper says TVM's graph
+//! executor is — fused steps over one pre-planned arena, **zero heap
+//! allocation per inference**.
+//!
+//! Where [`super::GraphExecutor`] and [`super::VmExecutor`] run AOT HLO
+//! artifacts over PJRT, `ArenaExec` compiles the in-process graph IR
+//! directly ([`crate::graph::compile`]): one upfront arena allocation at
+//! build time, then every step writes through pre-placed `&mut` windows.
+//! [`crate::graph::interp::evaluate`] is the semantic oracle — the
+//! differential tests require bit-for-bit equality, which pins every
+//! kernel here to the interpreter's per-output-element operation order
+//! (f32 reduction order is observable; parallelism and blocking are only
+//! applied across independent output elements, and to integer
+//! accumulation, which is order-exact).
+//!
+//! Parallelism: conv/dense kernels split output rows across
+//! `std::thread::scope` workers (batch × out-channel granularity).  With
+//! `threads == 1` everything runs inline — that is the configuration the
+//! allocation-counting test locks down, since spawning scoped threads
+//! itself allocates.
+
+use std::cell::RefCell;
+use std::sync::atomic::Ordering;
+
+use anyhow::{anyhow, Result};
+
+use super::{ExecCounters, ExecSnapshot, Executor};
+use crate::graph::compile::{compile_graph, CompiledGraph, Slot, Step, StepOp};
+use crate::graph::ir::{dims_of, layout_offset, ConstValue, Graph, IrDType, Layout};
+use crate::quant::QMAX;
+use crate::runtime::{DType, TensorData};
+
+fn to_dtype(ir: IrDType) -> DType {
+    match ir {
+        IrDType::F32 => DType::F32,
+        IrDType::S8 => DType::S8,
+        IrDType::S32 => DType::S32,
+    }
+}
+
+pub struct ArenaExec {
+    cg: CompiledGraph,
+    /// u64-backed so the base pointer is 8-aligned; plan offsets are
+    /// `ARENA_ALIGN`-aligned on top of that.  RefCell: the executor runs
+    /// confined to one thread (kernels fan out *inside* a step via scoped
+    /// threads over disjoint windows).
+    arena: RefCell<Vec<u64>>,
+    threads: usize,
+    name: String,
+    batch: usize,
+    counters: ExecCounters,
+}
+
+impl ArenaExec {
+    /// Compile with q/dq fusion on, single-threaded kernels.
+    pub fn compile(g: &Graph) -> Result<Self> {
+        Self::with_options(g, true, 1)
+    }
+
+    /// `fuse_qdq = false` is the unfused ablation; `threads` caps the
+    /// scoped-thread fan-out inside conv/dense kernels.
+    pub fn with_options(g: &Graph, fuse_qdq: bool, threads: usize) -> Result<Self> {
+        let cg = compile_graph(g, fuse_qdq)?;
+        let words = cg.arena_bytes / 8 + 1;
+        let batch = cg.input_ty.shape.first().copied().unwrap_or(1);
+        let name = format!(
+            "arena(b{batch}{})",
+            if fuse_qdq { ",fused" } else { ",unfused" }
+        );
+        Ok(Self {
+            cg,
+            arena: RefCell::new(vec![0u64; words]),
+            threads: threads.max(1),
+            name,
+            batch,
+            counters: ExecCounters::default(),
+        })
+    }
+
+    pub fn compiled(&self) -> &CompiledGraph {
+        &self.cg
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute into a caller-provided output tensor: the zero-allocation
+    /// serving path (with `threads == 1`, no heap traffic at all after
+    /// construction — the allocation-counting test asserts exactly this).
+    pub fn run_into(&self, input: &TensorData, out: &mut TensorData) -> Result<()> {
+        if input.shape != self.cg.input_ty.shape
+            || input.dtype != to_dtype(self.cg.input_ty.dtype)
+        {
+            return Err(anyhow!(
+                "arena: input {:?}/{:?} != compiled {:?}/{:?}",
+                input.shape, input.dtype, self.cg.input_ty.shape, self.cg.input_ty.dtype
+            ));
+        }
+        if out.shape != self.cg.output_ty.shape
+            || out.dtype != to_dtype(self.cg.output_ty.dtype)
+        {
+            return Err(anyhow!(
+                "arena: output buffer {:?}/{:?} != compiled {:?}/{:?}",
+                out.shape, out.dtype, self.cg.output_ty.shape, self.cg.output_ty.dtype
+            ));
+        }
+        self.counters.invocations.fetch_add(1, Ordering::Relaxed);
+        self.counters.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .instructions
+            .fetch_add(self.cg.steps.len() as u64, Ordering::Relaxed);
+
+        // SAFETY: all arena windows below are derived from this one live
+        // mutable borrow.  The static plan guarantees (verified at compile
+        // time) that values with overlapping lifetimes occupy disjoint byte
+        // ranges, so a step's destination/scratch windows never overlap its
+        // source windows, and concurrent kernel threads only ever split the
+        // destination window disjointly.
+        let mut arena = self.arena.borrow_mut();
+        let base = arena.as_mut_ptr() as *mut u8;
+        for step in &self.cg.steps {
+            self.exec_step(step, base, input)
+                .map_err(|e| e.context(format!("step '{}'", step.name)))?;
+        }
+        let (off, bytes) = match self.cg.output_slot {
+            Slot::Arena { offset, bytes } => (offset, bytes),
+            Slot::Const(_) => return Err(anyhow!("arena: constant output slot")),
+        };
+        let src = unsafe { std::slice::from_raw_parts(base.add(off) as *const u8, bytes) };
+        out.data.copy_from_slice(src);
+        drop(arena);
+        Ok(())
+    }
+
+    fn src_bytes<'a>(&'a self, slot: &Slot, base: *const u8) -> &'a [u8] {
+        match slot {
+            Slot::Arena { offset, bytes } => unsafe {
+                std::slice::from_raw_parts(base.add(*offset), *bytes)
+            },
+            Slot::Const(ci) => const_bytes(&self.cg.consts[*ci].0),
+        }
+    }
+
+    /// A bias operand must be an f32 constant (enforced at compile time).
+    fn bias_slice(&self, ci: usize) -> Result<&[f32]> {
+        match &self.cg.consts[ci].0 {
+            ConstValue::F32(v) => Ok(v),
+            other => Err(anyhow!("bias constant is {:?}, not f32", other.dtype())),
+        }
+    }
+
+    fn exec_step(&self, step: &Step, base: *mut u8, input: &TensorData) -> Result<()> {
+        let dst_b = arena_bytes_mut(base, &step.dst)?;
+        let os = &step.dst_ty.shape;
+        let th = self.threads;
+        match &step.op {
+            StepOp::LoadInput => {
+                dst_b.copy_from_slice(&input.data);
+            }
+            StepOp::Conv2d { stride, padding, layout } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
+                match (xt.dtype, layout) {
+                    (IrDType::F32, Layout::Nchw) => conv2d_nchw_f32(
+                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                        *stride, *padding, f32s_mut(dst_b)?, os, th,
+                    ),
+                    (IrDType::F32, Layout::Nhwc) => conv2d_nhwc_f32(
+                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                        *stride, *padding, f32s_mut(dst_b)?, os, th,
+                    ),
+                    (IrDType::F32, Layout::Nchwc(cb)) => conv2d_nchwc_f32(
+                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                        *stride, *padding, *cb, f32s_mut(dst_b)?, os, th,
+                    ),
+                    (IrDType::S8, Layout::Nchw) => conv2d_nchw_i8(
+                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                        *stride, *padding, i32s_mut(dst_b)?, os, th,
+                    ),
+                    other => {
+                        return Err(anyhow!("arena conv: unsupported {:?}", other));
+                    }
+                }
+            }
+            StepOp::QConv2d { qscale, dqscale, stride, padding, epi } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
+                let scratch = step
+                    .scratch
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("fused conv without scratch slot"))?;
+                let qb = arena_bytes_mut(base, scratch)?;
+                let xq = i8s_mut(qb);
+                quantize_into(f32s(xb)?, *qscale, xq);
+                let bias = match epi.bias {
+                    Some(ci) => Some(self.bias_slice(ci)?),
+                    None => None,
+                };
+                qconv2d_nchw(
+                    xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                    *dqscale, bias, epi.relu, f32s_mut(dst_b)?, os, th,
+                );
+            }
+            StepOp::Dense => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
+                match xt.dtype {
+                    IrDType::F32 => dense_f32(
+                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                        f32s_mut(dst_b)?, th,
+                    ),
+                    IrDType::S8 => dense_i8(
+                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                        i32s_mut(dst_b)?, th,
+                    ),
+                    IrDType::S32 => return Err(anyhow!("arena dense: s32 operands")),
+                }
+            }
+            StepOp::QDense { qscale, dqscale, epi } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
+                let scratch = step
+                    .scratch
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("fused dense without scratch slot"))?;
+                let qb = arena_bytes_mut(base, scratch)?;
+                let xq = i8s_mut(qb);
+                quantize_into(f32s(xb)?, *qscale, xq);
+                qdense(
+                    xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, epi.relu,
+                    f32s_mut(dst_b)?, th,
+                );
+            }
+            StepOp::BiasAdd { layout } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let bb = self.src_bytes(&step.srcs[1].0, base);
+                bias_add(f32s(xb)?, &xt.shape, f32s(bb)?, *layout, f32s_mut(dst_b)?)?;
+            }
+            StepOp::Relu => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                match xt.dtype {
+                    IrDType::F32 => {
+                        let (x, o) = (f32s(xb)?, f32s_mut(dst_b)?);
+                        for (d, v) in o.iter_mut().zip(x) {
+                            *d = v.max(0.0);
+                        }
+                    }
+                    IrDType::S32 => {
+                        let (x, o) = (i32s(xb)?, i32s_mut(dst_b)?);
+                        for (d, v) in o.iter_mut().zip(x) {
+                            *d = (*v).max(0);
+                        }
+                    }
+                    IrDType::S8 => {
+                        let (x, o) = (i8s(xb), i8s_mut(dst_b));
+                        for (d, v) in o.iter_mut().zip(x) {
+                            *d = (*v).max(0);
+                        }
+                    }
+                }
+            }
+            StepOp::Add => {
+                let (ab, at) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let bb = self.src_bytes(&step.srcs[1].0, base);
+                match at.dtype {
+                    IrDType::F32 => {
+                        let (a, b, o) = (f32s(ab)?, f32s(bb)?, f32s_mut(dst_b)?);
+                        for i in 0..o.len() {
+                            o[i] = a[i] + b[i];
+                        }
+                    }
+                    IrDType::S32 => {
+                        let (a, b, o) = (i32s(ab)?, i32s(bb)?, i32s_mut(dst_b)?);
+                        for i in 0..o.len() {
+                            o[i] = a[i] + b[i];
+                        }
+                    }
+                    IrDType::S8 => {
+                        let (a, b, o) = (i8s(ab), i8s(bb), i8s_mut(dst_b));
+                        for i in 0..o.len() {
+                            o[i] = a[i].saturating_add(b[i]);
+                        }
+                    }
+                }
+            }
+            StepOp::MaxPool { window, stride, padding, layout } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                if xt.dtype != IrDType::F32 {
+                    return Err(anyhow!("arena maxpool: f32 only"));
+                }
+                maxpool_f32(
+                    f32s(xb)?, &xt.shape, *window, *stride, *padding, *layout,
+                    f32s_mut(dst_b)?, os,
+                )?;
+            }
+            StepOp::GlobalAvgPool { layout } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                if xt.dtype != IrDType::F32 {
+                    return Err(anyhow!("arena global_avg_pool: f32 only"));
+                }
+                global_avgpool_f32(f32s(xb)?, &xt.shape, *layout, f32s_mut(dst_b)?)?;
+            }
+            StepOp::Quantize { scale } => {
+                let xb = self.src_bytes(&step.srcs[0].0, base);
+                quantize_into(f32s(xb)?, *scale, i8s_mut(dst_b));
+            }
+            StepOp::Dequantize { scale } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                let o = f32s_mut(dst_b)?;
+                match xt.dtype {
+                    IrDType::S8 => {
+                        let x = i8s(xb);
+                        for (d, v) in o.iter_mut().zip(x) {
+                            *d = *v as f32 * scale;
+                        }
+                    }
+                    IrDType::S32 => {
+                        let x = i32s(xb)?;
+                        for (d, v) in o.iter_mut().zip(x) {
+                            *d = *v as f32 * scale;
+                        }
+                    }
+                    IrDType::F32 => return Err(anyhow!("arena dequantize of f32")),
+                }
+            }
+            StepOp::LayoutTransform { from, to } => {
+                let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
+                if xt.dtype != IrDType::F32 {
+                    return Err(anyhow!("arena layout_transform: f32 only"));
+                }
+                layout_transform_f32(f32s(xb)?, &xt.shape, *from, *to, f32s_mut(dst_b)?)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Executor for ArenaExec {
+    fn run(&self, input: &TensorData) -> Result<TensorData> {
+        let mut out = TensorData::zeros(
+            to_dtype(self.cg.output_ty.dtype),
+            self.cg.output_ty.shape.clone(),
+        );
+        self.run_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn counters(&self) -> ExecSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed views (the arena is bytes; offsets are cache-line aligned)
+// ---------------------------------------------------------------------------
+
+fn arena_bytes_mut<'a>(base: *mut u8, slot: &Slot) -> Result<&'a mut [u8]> {
+    match slot {
+        Slot::Arena { offset, bytes } => {
+            Ok(unsafe { std::slice::from_raw_parts_mut(base.add(*offset), *bytes) })
+        }
+        Slot::Const(_) => Err(anyhow!("constant slot used as a destination")),
+    }
+}
+
+fn const_bytes(c: &ConstValue) -> &[u8] {
+    match c {
+        ConstValue::F32(v) => unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        },
+        ConstValue::I8(v) => unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+        },
+    }
+}
+
+fn f32s(b: &[u8]) -> Result<&[f32]> {
+    let (pre, mid, post) = unsafe { b.align_to::<f32>() };
+    if !pre.is_empty() || !post.is_empty() {
+        return Err(anyhow!("misaligned f32 view ({} bytes)", b.len()));
+    }
+    Ok(mid)
+}
+
+fn f32s_mut(b: &mut [u8]) -> Result<&mut [f32]> {
+    let (pre, mid, post) = unsafe { b.align_to_mut::<f32>() };
+    if !pre.is_empty() || !post.is_empty() {
+        return Err(anyhow!("misaligned mutable f32 view"));
+    }
+    Ok(mid)
+}
+
+fn i32s(b: &[u8]) -> Result<&[i32]> {
+    let (pre, mid, post) = unsafe { b.align_to::<i32>() };
+    if !pre.is_empty() || !post.is_empty() {
+        return Err(anyhow!("misaligned i32 view"));
+    }
+    Ok(mid)
+}
+
+fn i32s_mut(b: &mut [u8]) -> Result<&mut [i32]> {
+    let (pre, mid, post) = unsafe { b.align_to_mut::<i32>() };
+    if !pre.is_empty() || !post.is_empty() {
+        return Err(anyhow!("misaligned mutable i32 view"));
+    }
+    Ok(mid)
+}
+
+fn i8s(b: &[u8]) -> &[i8] {
+    unsafe { std::slice::from_raw_parts(b.as_ptr() as *const i8, b.len()) }
+}
+
+fn i8s_mut(b: &mut [u8]) -> &mut [i8] {
+    unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut i8, b.len()) }
+}
+
+// ---------------------------------------------------------------------------
+// Row-parallel driver
+// ---------------------------------------------------------------------------
+
+/// Call `f(row_index, row)` for every `row_len`-element row of `out`,
+/// fanning contiguous row bands out over scoped threads.  `threads == 1`
+/// runs inline with zero allocation; bands are disjoint `&mut` windows, so
+/// per-output-element results are identical regardless of fan-out.
+fn par_rows<T: Send>(
+    threads: usize,
+    out: &mut [T],
+    row_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    let rows = out.len() / row_len;
+    let threads = threads.min(rows).max(1);
+    if threads == 1 {
+        for (r, chunk) in out.chunks_mut(row_len).enumerate() {
+            f(r, chunk);
+        }
+        return;
+    }
+    let per = (rows + threads - 1) / threads;
+    let f = &f;
+    std::thread::scope(|s| {
+        for (bi, band) in out.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move || {
+                for (i, chunk) in band.chunks_mut(row_len).enumerate() {
+                    f(bi * per + i, chunk);
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Kernels.  Every per-output-element operation sequence matches
+// `graph::interp` exactly (see module docs); do not "improve" float
+// reduction order here without changing the oracle in lockstep.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchw_f32(
+    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [f32], os: &[usize], threads: usize,
+) {
+    let (c, h, wd) = (xs[1], xs[2], xs[3]);
+    let (k, r, s) = (ws[0], ws[2], ws[3]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(threads, out, oh * ow, |row, plane| {
+        let (ni, ki) = (row / k, row % k);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0f32;
+                for ci in 0..c {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            acc += x[((ni * c + ci) * h + iy) * wd + ix]
+                                * w[((ki * c + ci) * r + ry) * s + sx];
+                        }
+                    }
+                }
+                plane[oy * ow + ox] = acc;
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchw_i8(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [i32], os: &[usize], threads: usize,
+) {
+    let (c, h, wd) = (xs[1], xs[2], xs[3]);
+    let (k, r, s) = (ws[0], ws[2], ws[3]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(threads, out, oh * ow, |row, plane| {
+        let (ni, ki) = (row / k, row % k);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                plane[oy * ow + ox] = i8_conv_acc(
+                    x, w, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                );
+            }
+        }
+    });
+}
+
+/// One int8 output element: i32 accumulation with a unit-stride inner
+/// loop over `sx` where the window is interior (no padding clipping), the
+/// clipped scalar walk otherwise.  Integer addition is order-exact, so
+/// this blocking cannot diverge from the interpreter.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_conv_acc(
+    x: &[i8], w: &[i8], c: usize, h: usize, wd: usize, r: usize, s: usize,
+    stride: usize, padding: usize, ni: usize, ki: usize, oy: usize, ox: usize,
+) -> i32 {
+    let mut acc = 0i32;
+    let x0 = ox * stride;
+    let interior_x = x0 >= padding && x0 + s <= wd + padding;
+    for ci in 0..c {
+        let xplane = (ni * c + ci) * h;
+        let wbase = (ki * c + ci) * r;
+        for ry in 0..r {
+            let iy = oy * stride + ry;
+            if iy < padding || iy >= h + padding {
+                continue;
+            }
+            let iy = iy - padding;
+            if interior_x {
+                let xrow = (xplane + iy) * wd + (x0 - padding);
+                let wrow = (wbase + ry) * s;
+                for sx in 0..s {
+                    acc += x[xrow + sx] as i32 * w[wrow + sx] as i32;
+                }
+            } else {
+                for sx in 0..s {
+                    let ix = x0 + sx;
+                    if ix < padding || ix >= wd + padding {
+                        continue;
+                    }
+                    let ix = ix - padding;
+                    acc += x[(xplane + iy) * wd + ix] as i32
+                        * w[(wbase + ry) * s + sx] as i32;
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Fused quantized conv: int8 data (already quantized into scratch) ×
+/// int8 weights → i32 accumulator → `acc as f32 * dqscale` (+bias)(+relu),
+/// written once.  The interior i32/f32 boundary tensors never materialize.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nchw(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, dqscale: f32, bias: Option<&[f32]>, relu: bool,
+    out: &mut [f32], os: &[usize], threads: usize,
+) {
+    let (c, h, wd) = (xs[1], xs[2], xs[3]);
+    let (k, r, s) = (ws[0], ws[2], ws[3]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(threads, out, oh * ow, |row, plane| {
+        let (ni, ki) = (row / k, row % k);
+        let b = bias.map(|b| b[ki]);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let acc = i8_conv_acc(
+                    x, w, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                );
+                // Exactly dequantize → bias_add → relu, elementwise.
+                let mut v = acc as f32 * dqscale;
+                if let Some(b) = b {
+                    v += b;
+                }
+                if relu {
+                    v = v.max(0.0);
+                }
+                plane[oy * ow + ox] = v;
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nhwc_f32(
+    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [f32], os: &[usize], threads: usize,
+) {
+    let (h, wd, c) = (xs[1], xs[2], xs[3]);
+    let (r, s, k) = (ws[0], ws[1], ws[3]);
+    let (oh, ow) = (os[1], os[2]);
+    par_rows(threads, out, ow * k, |row, slab| {
+        let (ni, oy) = (row / oh, row % oh);
+        for ox in 0..ow {
+            for ki in 0..k {
+                let mut acc = 0f32;
+                for ry in 0..r {
+                    let iy = oy * stride + ry;
+                    if iy < padding || iy >= h + padding {
+                        continue;
+                    }
+                    let iy = iy - padding;
+                    for sx in 0..s {
+                        let ix = ox * stride + sx;
+                        if ix < padding || ix >= wd + padding {
+                            continue;
+                        }
+                        let ix = ix - padding;
+                        for ci in 0..c {
+                            acc += x[((ni * h + iy) * wd + ix) * c + ci]
+                                * w[((ry * s + sx) * c + ci) * k + ki];
+                        }
+                    }
+                }
+                slab[ox * k + ki] = acc;
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchwc_f32(
+    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
+    stride: usize, padding: usize, cb: usize, out: &mut [f32], os: &[usize], threads: usize,
+) {
+    let (co, h, wd) = (xs[1], xs[2], xs[3]);
+    let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(threads, out, oh * ow * kb, |row, plane| {
+        let (ni, ok) = (row / ko, row % ko);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = (oy * ow + ox) * kb;
+                plane[obase..obase + kb].fill(0.0);
+                for oc in 0..co {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                            let wbase = ((((ok * co + oc) * r + ry) * s + sx) * cb) * kb;
+                            for ci in 0..cb {
+                                let xi = x[xbase + ci];
+                                let wrow = wbase + ci * kb;
+                                for ki in 0..kb {
+                                    plane[obase + ki] += xi * w[wrow + ki];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+fn dense_f32(
+    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize], out: &mut [f32], threads: usize,
+) {
+    let k = xs[1];
+    let n = ws[1];
+    par_rows(threads, out, n, |i, row| {
+        row.fill(0.0);
+        for kk in 0..k {
+            let xik = x[i * k + kk];
+            for j in 0..n {
+                row[j] += xik * w[kk * n + j];
+            }
+        }
+    });
+}
+
+fn dense_i8(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize], out: &mut [i32], threads: usize,
+) {
+    let k = xs[1];
+    let n = ws[1];
+    par_rows(threads, out, n, |i, row| {
+        row.fill(0);
+        for kk in 0..k {
+            let xik = x[i * k + kk] as i32;
+            for j in 0..n {
+                row[j] += xik * w[kk * n + j] as i32;
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qdense(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    dqscale: f32, relu: bool, out: &mut [f32], threads: usize,
+) {
+    let k = xs[1];
+    let n = ws[1];
+    par_rows(threads, out, n, |i, row| {
+        for (j, slot) in row.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += x[i * k + kk] as i32 * w[kk * n + j] as i32;
+            }
+            let mut v = acc as f32 * dqscale;
+            if relu {
+                v = v.max(0.0);
+            }
+            *slot = v;
+        }
+    });
+}
+
+fn bias_add(
+    x: &[f32], xs: &[usize], b: &[f32], layout: Layout, out: &mut [f32],
+) -> Result<()> {
+    let (_, c, _, _) = dims_of(xs, layout)?;
+    match layout {
+        Layout::Nchw => {
+            let hw = xs[2] * xs[3];
+            for (i, d) in out.iter_mut().enumerate() {
+                *d = x[i] + b[(i / hw) % c];
+            }
+        }
+        Layout::Nhwc => {
+            for (i, d) in out.iter_mut().enumerate() {
+                *d = x[i] + b[i % c];
+            }
+        }
+        Layout::Nchwc(cb) => {
+            let hw = xs[2] * xs[3];
+            let co = xs[1];
+            for (i, d) in out.iter_mut().enumerate() {
+                let ci = i % cb;
+                let oc = (i / (cb * hw)) % co;
+                *d = x[i] + b[oc * cb + ci];
+            }
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn maxpool_f32(
+    x: &[f32], xs: &[usize], window: usize, stride: usize, padding: usize,
+    layout: Layout, out: &mut [f32], os: &[usize],
+) -> Result<()> {
+    let (n, c, h, w) = dims_of(xs, layout)?;
+    let (_, _, oh, ow) = dims_of(os, layout)?;
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ry in 0..window {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        for rx in 0..window {
+                            let ix = ox * stride + rx;
+                            if ix < padding || ix >= w + padding {
+                                continue;
+                            }
+                            m = m.max(
+                                x[layout_offset(
+                                    layout, c, h, w, ni, ci, iy - padding, ix - padding,
+                                )],
+                            );
+                        }
+                    }
+                    out[layout_offset(layout, c, oh, ow, ni, ci, oy, ox)] = m;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn global_avgpool_f32(
+    x: &[f32], xs: &[usize], layout: Layout, out: &mut [f32],
+) -> Result<()> {
+    let (n, c, h, w) = dims_of(xs, layout)?;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut s = 0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x[layout_offset(layout, c, h, w, ni, ci, y, xx)];
+                }
+            }
+            out[ni * c + ci] = s / (h * w) as f32;
+        }
+    }
+    Ok(())
+}
+
+/// `q = clip(round(x / s))` — must match `crate::quant::quantize` exactly.
+fn quantize_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    for (d, v) in out.iter_mut().zip(x) {
+        *d = (v / scale).round().clamp(-QMAX, QMAX) as i8;
+    }
+}
+
+/// Direct `from → to` permutation.  Equal to the interpreter's two-hop
+/// (via NCHW) composition because both are pure index permutations.
+fn layout_transform_f32(
+    x: &[f32], xs: &[usize], from: Layout, to: Layout, out: &mut [f32],
+) -> Result<()> {
+    let (n, c, h, w) = dims_of(xs, from)?;
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..h {
+                for xx in 0..w {
+                    out[layout_offset(to, c, h, w, ni, ci, y, xx)] =
+                        x[layout_offset(from, c, h, w, ni, ci, y, xx)];
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -7,7 +7,13 @@
 //! graph executor (one static, memory-planned module) recovers the expected
 //! speedup (8.27 ms).  Both executors are implemented here over the same
 //! AOT artifacts so the contrast is mechanistic, not simulated.
+//!
+//! A third tier, [`ArenaExec`], executes the in-process graph IR over a
+//! statically planned arena with fused q/dq boundaries — the mechanism the
+//! graph executor's win is made of, implemented natively (no PJRT
+//! artifacts needed) and checked bit-for-bit against the interpreter.
 
+mod arena_exec;
 mod graph_exec;
 mod vm;
 
@@ -15,6 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
+pub use arena_exec::ArenaExec;
 pub use graph_exec::GraphExecutor;
 pub use vm::{VmExecutor, VmInstr};
 

@@ -1,0 +1,399 @@
+//! Graph → arena-planned instruction stream: the lowering step behind the
+//! [`crate::executor::ArenaExec`] tier.
+//!
+//! TVM's graph executor wins over the relay VM for two mechanistic reasons
+//! the paper isolates: **fusion** (q/dq boundary operators disappear into
+//! their anchor's epilogue instead of materializing int8/fp32 boundary
+//! tensors) and **static memory planning** (every intermediate gets a
+//! pre-computed offset into one shared arena, so serving an inference does
+//! zero dynamic allocation).  This module reproduces both at the IR level:
+//!
+//! 1. `Quantize → Conv2d/Dense(i8, i32 accum) → Dequantize [→ BiasAdd]
+//!    [→ Relu]` chains collapse into one fused step whose interior values
+//!    (the i32 accumulator, the dequantized f32, the biased f32) never
+//!    exist in memory;
+//! 2. remaining nodes lower 1:1 to steps, and every step output gets a
+//!    [`crate::memplan::StaticPlan`] first-fit placement computed from
+//!    graph-IR value lifetimes (def step → last consuming step).
+//!
+//! The semantics contract: executing the stream is **bit-for-bit** equal to
+//! [`super::interp::evaluate`] — fused epilogues apply exactly the same
+//! per-element float operation sequence the unfused ops would (dequantize
+//! multiply, then bias add, then relu max), and integer accumulation is
+//! order-independent.  The differential tests enforce this.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::ir::{ConstValue, Graph, IrDType, Layout, NodeId, Op, TensorTy};
+use super::passes::{DeadCodeElim, Pass};
+use crate::memplan::{StaticPlan, ValueLife};
+
+/// Arena placement alignment: cache-line sized, so typed reinterpretation
+/// is always element-aligned and parallel writers don't share lines.
+pub const ARENA_ALIGN: usize = 64;
+
+/// Where a step operand or result lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// A byte range in the shared arena (offset is `ARENA_ALIGN`-aligned;
+    /// `bytes` is the exact tensor byte length, not the rounded extent).
+    Arena { offset: usize, bytes: usize },
+    /// An entry in the constant pool (weights, biases).
+    Const(usize),
+}
+
+/// Fused elementwise tail applied to an anchor's accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Epilogue {
+    /// Constant-pool index of a per-channel f32 bias (NCHW channel order).
+    pub bias: Option<usize>,
+    pub relu: bool,
+}
+
+/// One executable step.  Operand shapes/dtypes ride along in
+/// [`Step::srcs`] / [`Step::dst_ty`].
+#[derive(Debug, Clone)]
+pub enum StepOp {
+    /// Copy the executor's input tensor into the arena.
+    LoadInput,
+    Conv2d { stride: usize, padding: usize, layout: Layout },
+    /// Fused `quantize → int8 NCHW conv (i32 accum) → dequantize` with
+    /// optional bias/relu epilogue.  `srcs = [f32 data, i8 weight]`; the
+    /// quantized input lives in the step's scratch slot for exactly this
+    /// step — no int8 boundary tensor survives it.
+    QConv2d { qscale: f32, dqscale: f32, stride: usize, padding: usize, epi: Epilogue },
+    Dense,
+    /// Fused `quantize → int8 dense (i32 accum) → dequantize [→ relu]`.
+    QDense { qscale: f32, dqscale: f32, epi: Epilogue },
+    BiasAdd { layout: Layout },
+    Relu,
+    Add,
+    MaxPool { window: usize, stride: usize, padding: usize, layout: Layout },
+    GlobalAvgPool { layout: Layout },
+    Quantize { scale: f32 },
+    Dequantize { scale: f32 },
+    LayoutTransform { from: Layout, to: Layout },
+}
+
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub op: StepOp,
+    /// Operand locations + types, in the op's argument order.
+    pub srcs: Vec<(Slot, TensorTy)>,
+    /// Always an arena slot.
+    pub dst: Slot,
+    pub dst_ty: TensorTy,
+    /// Per-step scratch arena slot (fused steps' quantized input).
+    pub scratch: Option<Slot>,
+    /// Defining IR node's name (diagnostics).
+    pub name: String,
+}
+
+/// The compiled program: steps + constant pool + the arena plan.
+#[derive(Debug, Clone)]
+pub struct CompiledGraph {
+    pub steps: Vec<Step>,
+    pub consts: Vec<(ConstValue, TensorTy)>,
+    /// The static plan (aligned first-fit over value lifetimes).  Verified
+    /// overlap-free at compile time; `arena_bytes` is its extent.
+    pub plan: StaticPlan,
+    pub arena_bytes: usize,
+    pub input_ty: TensorTy,
+    pub output_ty: TensorTy,
+    pub output_slot: Slot,
+    /// Number of q→anchor→dq chains fused away.
+    pub fused_chains: usize,
+}
+
+impl CompiledGraph {
+    /// Bytes the same values would need with no lifetime reuse (the
+    /// dynamic allocator's steady-state cost).
+    pub fn unshared_bytes(&self) -> usize {
+        self.plan.unshared_bytes
+    }
+}
+
+/// A step before placement: operands as node ids, scratch as a byte count.
+struct ProtoStep {
+    op: StepOp,
+    src_nodes: Vec<NodeId>,
+    def_node: NodeId,
+    scratch_bytes: usize,
+    name: String,
+}
+
+/// Lower `g` into an arena-planned step stream.  `fuse_qdq = false` keeps
+/// every node a separate step (the "unfused arena" ablation).
+pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
+    g.validate()?;
+    if !g.live_set()[g.input] {
+        return Err(anyhow!("compile: graph output does not depend on the input"));
+    }
+    // Work on the DCE'd graph so users/lifetimes ignore dead branches.
+    let g = DeadCodeElim.run(g)?;
+    let users = g.users();
+
+    // Constant pool.
+    let mut consts: Vec<(ConstValue, TensorTy)> = Vec::new();
+    let mut const_index: HashMap<NodeId, usize> = HashMap::new();
+    for node in &g.nodes {
+        if let Op::Constant(c) = &node.op {
+            const_index.insert(node.id, consts.len());
+            consts.push((c.clone(), node.ty.clone()));
+        }
+    }
+
+    // ---- Step construction (with q→anchor→dq chain fusion) ----
+    let mut protos: Vec<ProtoStep> = Vec::new();
+    let mut absorbed = vec![false; g.len()];
+    let mut fused_chains = 0usize;
+
+    // A node may be absorbed into a chain only if its value has exactly one
+    // consumer (the next chain link) and is not the graph output.
+    let absorbable = |id: NodeId| users[id].len() == 1 && id != g.output;
+
+    for node in &g.nodes {
+        if absorbed[node.id] || matches!(node.op, Op::Constant(_)) {
+            continue;
+        }
+        if node.id == g.input {
+            protos.push(ProtoStep {
+                op: StepOp::LoadInput,
+                src_nodes: vec![],
+                def_node: node.id,
+                scratch_bytes: 0,
+                name: node.name.clone(),
+            });
+            continue;
+        }
+
+        // Try the fused chain starting at a Quantize node.
+        if fuse_qdq {
+            if let Op::Quantize { scale: qscale } = node.op {
+                if let Some(proto) = try_fuse_chain(&g, &users, node.id, qscale, &const_index, absorbable)? {
+                    for &m in &proto.members {
+                        absorbed[m] = true;
+                    }
+                    fused_chains += 1;
+                    protos.push(proto.step);
+                    continue;
+                }
+            }
+        }
+
+        // 1:1 lowering.
+        let op = match &node.op {
+            Op::Input => return Err(anyhow!("compile: multiple input nodes")),
+            Op::Conv2d { stride, padding, layout } => {
+                StepOp::Conv2d { stride: *stride, padding: *padding, layout: *layout }
+            }
+            Op::Dense => StepOp::Dense,
+            Op::BiasAdd { layout } => StepOp::BiasAdd { layout: *layout },
+            Op::Relu => StepOp::Relu,
+            Op::Add => StepOp::Add,
+            Op::MaxPool { window, stride, padding, layout } => StepOp::MaxPool {
+                window: *window,
+                stride: *stride,
+                padding: *padding,
+                layout: *layout,
+            },
+            Op::GlobalAvgPool { layout } => StepOp::GlobalAvgPool { layout: *layout },
+            Op::Quantize { scale } => StepOp::Quantize { scale: *scale },
+            Op::Dequantize { scale } => StepOp::Dequantize { scale: *scale },
+            Op::LayoutTransform { from, to } => {
+                StepOp::LayoutTransform { from: *from, to: *to }
+            }
+            Op::Constant(_) => unreachable!("constants skipped above"),
+        };
+        protos.push(ProtoStep {
+            op,
+            src_nodes: node.inputs.clone(),
+            def_node: node.id,
+            scratch_bytes: 0,
+            name: node.name.clone(),
+        });
+    }
+
+    // ---- Lifetimes over the step stream ----
+    // A value's def step is its proto's position; its last use is the last
+    // step consuming it (the output survives past the end).
+    let mut last_use: HashMap<NodeId, usize> = HashMap::new();
+    for (i, p) in protos.iter().enumerate() {
+        for &s in &p.src_nodes {
+            if !const_index.contains_key(&s) {
+                let e = last_use.entry(s).or_insert(i);
+                *e = (*e).max(i);
+            }
+        }
+    }
+    // The output value survives past the last step.
+    last_use.insert(g.output, protos.len());
+
+    let mut lives: Vec<ValueLife> = Vec::new();
+    for (i, p) in protos.iter().enumerate() {
+        let ty = &g.nodes[p.def_node].ty;
+        lives.push(ValueLife {
+            name: format!("n{}", p.def_node),
+            bytes: ty.byte_len(),
+            def_step: i,
+            last_use_step: *last_use.get(&p.def_node).unwrap_or(&i),
+        });
+        if p.scratch_bytes > 0 {
+            lives.push(ValueLife {
+                name: format!("s{i}"),
+                bytes: p.scratch_bytes,
+                def_step: i,
+                last_use_step: i,
+            });
+        }
+    }
+
+    let plan = StaticPlan::first_fit_aligned(&lives, ARENA_ALIGN);
+    plan.verify().map_err(|e| anyhow!("arena plan invalid: {e}"))?;
+    let offsets = plan.offset_index();
+    let arena_bytes = plan.arena_bytes;
+
+    let arena_slot = |id: NodeId| -> Result<Slot> {
+        let (off, _) = offsets
+            .get(&format!("n{id}"))
+            .ok_or_else(|| anyhow!("node {id} missing from arena plan"))?;
+        Ok(Slot::Arena { offset: *off, bytes: g.nodes[id].ty.byte_len() })
+    };
+    let resolve = |id: NodeId| -> Result<(Slot, TensorTy)> {
+        let slot = match const_index.get(&id) {
+            Some(&ci) => Slot::Const(ci),
+            None => arena_slot(id)?,
+        };
+        Ok((slot, g.nodes[id].ty.clone()))
+    };
+
+    // ---- Materialize placed steps ----
+    let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+    for (i, p) in protos.into_iter().enumerate() {
+        let srcs = p
+            .src_nodes
+            .iter()
+            .map(|&s| resolve(s))
+            .collect::<Result<Vec<_>>>()?;
+        let scratch = if p.scratch_bytes > 0 {
+            let (off, _) = offsets
+                .get(&format!("s{i}"))
+                .ok_or_else(|| anyhow!("step {i} scratch missing from plan"))?;
+            Some(Slot::Arena { offset: *off, bytes: p.scratch_bytes })
+        } else {
+            None
+        };
+        steps.push(Step {
+            op: p.op,
+            srcs,
+            dst: arena_slot(p.def_node)?,
+            dst_ty: g.nodes[p.def_node].ty.clone(),
+            scratch,
+            name: p.name,
+        });
+    }
+
+    let output_slot = arena_slot(g.output)?;
+    Ok(CompiledGraph {
+        steps,
+        consts,
+        plan,
+        arena_bytes,
+        input_ty: g.nodes[g.input].ty.clone(),
+        output_ty: g.nodes[g.output].ty.clone(),
+        output_slot,
+        fused_chains,
+    })
+}
+
+/// A matched chain: the fused step plus every absorbed node id.
+struct FusedChain {
+    step: ProtoStep,
+    members: Vec<NodeId>,
+}
+
+/// Match `q → conv/dense(i8 const weight) → dq [→ bias] [→ relu]` rooted at
+/// the quantize node `qid`.  Every interior link must be single-consumer
+/// and not the graph output (the closure `absorbable` checks both).
+fn try_fuse_chain(
+    g: &Graph,
+    users: &[Vec<NodeId>],
+    qid: NodeId,
+    qscale: f32,
+    const_index: &HashMap<NodeId, usize>,
+    absorbable: impl Fn(NodeId) -> bool,
+) -> Result<Option<FusedChain>> {
+    if !absorbable(qid) {
+        return Ok(None);
+    }
+    let anchor_id = users[qid][0];
+    let anchor = &g.nodes[anchor_id];
+    // The quantized value must be the anchor's *data* operand and the
+    // weight must be a pre-quantized i8 constant.
+    let (is_conv, stride, padding) = match anchor.op {
+        Op::Conv2d { stride, padding, layout: Layout::Nchw } => (true, stride, padding),
+        Op::Dense => (false, 0, 0),
+        _ => return Ok(None),
+    };
+    if anchor.inputs.len() != 2 || anchor.inputs[0] != qid {
+        return Ok(None);
+    }
+    let wid = anchor.inputs[1];
+    if g.nodes[wid].ty.dtype != IrDType::S8 || !const_index.contains_key(&wid) {
+        return Ok(None);
+    }
+    if !absorbable(anchor_id) {
+        return Ok(None);
+    }
+    let dq_id = users[anchor_id][0];
+    let dqscale = match g.nodes[dq_id].op {
+        Op::Dequantize { scale } => scale,
+        _ => return Ok(None),
+    };
+
+    // Greedily absorb the elementwise tail.
+    let mut members = vec![qid, anchor_id, dq_id];
+    let mut tail = dq_id;
+    let mut epi = Epilogue::default();
+    if is_conv && absorbable(tail) {
+        let cand = users[tail][0];
+        if let Op::BiasAdd { layout: Layout::Nchw } = g.nodes[cand].op {
+            if g.nodes[cand].inputs[0] == tail {
+                if let Some(&bci) = const_index.get(&g.nodes[cand].inputs[1]) {
+                    if g.nodes[g.nodes[cand].inputs[1]].ty.dtype == IrDType::F32 {
+                        epi.bias = Some(bci);
+                        members.push(cand);
+                        tail = cand;
+                    }
+                }
+            }
+        }
+    }
+    if absorbable(tail) {
+        let cand = users[tail][0];
+        if matches!(g.nodes[cand].op, Op::Relu) {
+            epi.relu = true;
+            members.push(cand);
+            tail = cand;
+        }
+    }
+
+    let op = if is_conv {
+        StepOp::QConv2d { qscale, dqscale, stride, padding, epi }
+    } else {
+        StepOp::QDense { qscale, dqscale, epi }
+    };
+    let data_id = g.nodes[qid].inputs[0];
+    Ok(Some(FusedChain {
+        step: ProtoStep {
+            op,
+            src_nodes: vec![data_id, wid],
+            def_node: tail,
+            scratch_bytes: g.nodes[qid].ty.byte_len(),
+            name: format!("{}+fused", anchor.name),
+        },
+        members,
+    }))
+}

@@ -423,6 +423,29 @@ pub fn dims_of(shape: &[usize], layout: Layout) -> Result<(usize, usize, usize, 
     }
 }
 
+/// Flat element offset of logical coordinate `(ni, ci, y, x)` in a tensor
+/// of logical dims `(C, H, W)` stored under `layout`.  One source of truth
+/// for the index arithmetic the kernels and the interpreter share.
+#[inline]
+pub fn layout_offset(
+    layout: Layout,
+    c: usize,
+    h: usize,
+    w: usize,
+    ni: usize,
+    ci: usize,
+    y: usize,
+    x: usize,
+) -> usize {
+    match layout {
+        Layout::Nchw => ((ni * c + ci) * h + y) * w + x,
+        Layout::Nhwc => ((ni * h + y) * w + x) * c + ci,
+        Layout::Nchwc(cb) => {
+            ((((ni * (c / cb)) + ci / cb) * h + y) * w + x) * cb + ci % cb
+        }
+    }
+}
+
 pub fn shape_of(n: usize, c: usize, h: usize, w: usize, layout: Layout) -> Vec<usize> {
     match layout {
         Layout::Nchw => vec![n, c, h, w],

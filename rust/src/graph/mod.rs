@@ -15,10 +15,12 @@
 //! assume.
 
 pub mod builder;
+pub mod compile;
 pub mod interp;
 pub mod ir;
 pub mod passes;
 
 pub use builder::{build_conv_net, build_resnet_ir, calibrate_ir, NetSpec, StageSpec};
+pub use compile::{compile_graph, CompiledGraph};
 pub use interp::evaluate;
 pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

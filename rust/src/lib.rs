@@ -16,7 +16,9 @@
 //! - [`manifest`] — artifact manifest schema + loader
 //! - [`runtime`]  — PJRT client wrapper, tensors, executable cache
 //! - [`graph`]    — Relay-like graph IR + optimization passes
-//! - [`executor`] — GraphExecutor vs VmExecutor (the paper's contrast)
+//! - [`executor`] — GraphExecutor vs VmExecutor (the paper's contrast),
+//!   plus ArenaExec: the native fused, statically-planned engine over the
+//!   graph IR (zero allocation per inference; see `graph::compile`)
 //! - [`memplan`]  — static memory planner vs dynamic allocation
 //! - [`layout`]   — NCHW{c} packing machinery (Figure 1)
 //! - [`quant`]    — host-side quantization + memory footprint accounting
@@ -24,6 +26,13 @@
 //! - [`perfmodel`] — analytic roofline / ideal-speedup model (Table 2)
 //! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
 //! - [`bench`]    — harnesses that regenerate every paper table & figure
+
+// TensorData stores little-endian bytes, and the zero-copy views plus the
+// arena executor reinterpret those bytes as native elements; both are only
+// coherent on a little-endian target (runtime::copy_literal_bytes already
+// assumed this silently — make it loud).
+#[cfg(target_endian = "big")]
+compile_error!("tvmq assumes a little-endian target");
 
 pub mod bench;
 pub mod coordinator;

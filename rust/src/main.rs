@@ -7,7 +7,8 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use tvmq::bench::{
-    ablations, figure1, memplan_ablation, table1, table2, table3, BenchCtx, BenchOpts,
+    ablations, arena_ablation, figure1, memplan_ablation, table1, table2, table3, BenchCtx,
+    BenchOpts,
 };
 use tvmq::coordinator::{InferenceServer, ServeConfig};
 use tvmq::graph::passes::{
@@ -25,14 +26,18 @@ USAGE: tvmq <COMMAND> [--artifacts DIR] [flags]
 COMMANDS:
   inspect           List bundles in the artifact manifest
   run               One inference: --layout NCHW --schedule spatial_pack
-                    --precision int8 --executor graph --batch 1 --seed 42
+                    --precision int8 --executor graph|vm|arena --batch 1 --seed 42
+                    (--executor arena runs the in-process IR engine: no
+                    artifacts needed; --image 32 --threads 1 also apply)
   serve             Batched serving demo: --precision int8 --executor graph
                     --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
   bench-fig1        Figure 1 (layout packing)          [--reps 5]
-  bench-ablations   Executor-mechanism ablations
+  bench-ablations   Executor-mechanism ablations (incl. the arena tier)
+  bench-arena       Arena executor vs interpreter      [--batches 1,8 --image 32
+                    --threads 1 --epochs 20 --warmup 3 | --quick]
   compile-demo      In-process graph-IR pass pipeline  [--batch 1 --c-block 16]
 ";
 
@@ -66,9 +71,21 @@ fn main() -> Result<()> {
             figure1(args.usize("reps", 5)?)?.print();
         }
         Some("bench-ablations") => {
-            let ctx = BenchCtx::new(&artifacts, opts)?;
-            ablations(&ctx)?.print();
-            memplan_ablation(&ctx)?.print();
+            // The arena tier runs on the in-process IR — no artifacts, so it
+            // always prints; the PJRT-backed ablations need `make artifacts`.
+            print_arena_ablation(&args)?;
+            match BenchCtx::new(&artifacts, opts) {
+                Ok(ctx) => {
+                    ablations(&ctx)?.print();
+                    memplan_ablation(&ctx)?.print();
+                }
+                Err(e) => eprintln!(
+                    "skipping artifact-backed ablations ({e}); run `make artifacts`"
+                ),
+            }
+        }
+        Some("bench-arena") => {
+            print_arena_ablation(&args)?;
         }
         Some("compile-demo") => {
             compile_demo(args.usize("batch", 1)?, args.usize("c-block", 16)?)?;
@@ -110,6 +127,9 @@ fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let schedule = args.str("schedule", "spatial_pack");
     let precision = args.str("precision", "int8");
     let executor = args.str("executor", "graph");
+    if executor == "arena" {
+        return run_arena(args);
+    }
     let batch = args.usize("batch", 1)?;
     let seed = args.u64("seed", 42)?;
 
@@ -131,6 +151,71 @@ fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
     println!("ran {} in {:.2} ms", bundle.id, t0.elapsed().as_secs_f64() * 1e3);
     println!("classes: {:?}", logits.argmax_last()?);
     println!("logits[0]: {:?}", &logits.as_f32()?[..m.num_classes.min(10)]);
+    Ok(())
+}
+
+/// The arena-vs-interpreter table, shared by `bench-arena` and the
+/// artifact-free half of `bench-ablations`.  `--quick` shrinks epochs,
+/// batches, and image for CI smoke runs; explicit flags still win.
+fn print_arena_ablation(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let arena_opts = BenchOpts {
+        epochs: args.usize("epochs", if quick { 5 } else { 20 })?,
+        warmup: args.usize("warmup", if quick { 1 } else { 3 })?,
+    };
+    arena_ablation(
+        &arena_opts,
+        &args.usize_list("batches", if quick { &[1, 2] } else { &[1, 8] })?,
+        args.usize("image", if quick { 16 } else { 32 })?,
+        args.usize("threads", 1)?,
+    )?
+    .print();
+    Ok(())
+}
+
+/// `run --executor arena`: the artifact-free tier — build the ResNet-style
+/// IR, optionally quantize-realize it, compile to the arena engine, run.
+fn run_arena(args: &Args) -> Result<()> {
+    use tvmq::executor::{ArenaExec, Executor};
+    use tvmq::graph::passes::QuantizeRealize;
+    use tvmq::graph::{build_resnet_ir, calibrate_ir};
+
+    let batch = args.usize("batch", 1)?;
+    let image = args.usize("image", 32)?;
+    let threads = args.usize("threads", 1)?;
+    let precision = args.str("precision", "int8");
+    let seed = args.u64("seed", 42)?;
+
+    let g = build_resnet_ir(batch, image, 7)?;
+    let g = match precision.as_str() {
+        "fp32" => g,
+        "int8" => {
+            let calib = calibrate_ir(&g, 1);
+            let scales = calibrate_graph(&g, &calib)?;
+            QuantizeRealize { scales }.run(&g)?
+        }
+        other => bail!("--precision {other:?} (arena supports fp32 | int8)"),
+    };
+    let exec = ArenaExec::with_options(&g, true, threads)?;
+    let cg = exec.compiled();
+    println!(
+        "compiled {}: {} steps ({} fused chains), arena {:.1} KiB (unshared {:.1} KiB, {:.2}x reuse)",
+        exec.name(),
+        cg.steps.len(),
+        cg.fused_chains,
+        cg.arena_bytes as f64 / 1024.0,
+        cg.unshared_bytes() as f64 / 1024.0,
+        cg.plan.reuse_factor(),
+    );
+    let x = calibrate_ir(&g, seed);
+    let t0 = std::time::Instant::now();
+    let logits = exec.run(&x)?;
+    println!(
+        "ran {} ({precision}, {threads} thread(s)) in {:.2} ms",
+        exec.name(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("classes: {:?}", logits.argmax_last()?);
     Ok(())
 }
 

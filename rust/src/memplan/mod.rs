@@ -7,9 +7,15 @@
 //! instruction.  Both are implemented here; the planner also powers the
 //! Table 3 memory accounting and the `memplan` ablation bench.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::manifest::ModuleSpec;
+
+/// Round `n` up to the next multiple of `align` (`align` must be nonzero).
+pub fn round_up(n: usize, align: usize) -> usize {
+    (n + align - 1) / align * align
+}
 
 /// One value to place: alive from `def_step` through `last_use_step`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -111,6 +117,30 @@ impl StaticPlan {
             unshared_bytes: lives.iter().map(|v| v.bytes).sum(),
             placements,
         }
+    }
+
+    /// First-fit with every size rounded up to `align` bytes, so all
+    /// placements (and therefore every offset candidate, by induction from
+    /// offset 0) are `align`-aligned.  This is what the arena executor
+    /// plans with: its arena is backed by an 8-byte-aligned allocation and
+    /// kernels reinterpret `[u8]` ranges as typed slices, so offsets must
+    /// be at least element-aligned; we use a cache-line alignment to keep
+    /// parallel writers off each other's lines too.
+    pub fn first_fit_aligned(lives: &[ValueLife], align: usize) -> StaticPlan {
+        let rounded: Vec<ValueLife> = lives
+            .iter()
+            .map(|v| ValueLife { bytes: round_up(v.bytes.max(1), align), ..v.clone() })
+            .collect();
+        Self::first_fit(&rounded)
+    }
+
+    /// Offset+size lookup by value name (the compile step resolves node
+    /// ids through this after planning).
+    pub fn offset_index(&self) -> HashMap<String, (usize, usize)> {
+        self.placements
+            .iter()
+            .map(|p| (p.name.clone(), (p.offset, p.bytes)))
+            .collect()
     }
 
     /// Invariant check: no two *simultaneously live* values overlap in space.

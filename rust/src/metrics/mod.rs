@@ -148,6 +148,11 @@ pub fn fmt_pct(v: f64) -> String {
     format!("{v:.2}%")
 }
 
+/// Speedup ratio cell ("1.00x" = parity with the baseline).
+pub fn fmt_speedup(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
 pub fn fmt_mib(bytes: u64) -> String {
     format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
 }

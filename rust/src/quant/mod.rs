@@ -14,8 +14,17 @@ use crate::runtime::{DType, TensorData};
 pub const QMAX: f32 = 127.0;
 
 /// Per-tensor symmetric scale from the absolute maximum.
+///
+/// Non-finite calibration samples (NaN from a bad divide, ±inf from an
+/// overflowed activation) are excluded: an inf amax would otherwise drive
+/// the scale to inf and quantize the whole tensor to zero, and the paper's
+/// calibration protocol (abs-max over sampled activations) assumes finite
+/// data.  All-non-finite input degrades to the epsilon scale.
 pub fn abs_max_scale(values: &[f32]) -> f32 {
-    let amax = values.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let amax = values
+        .iter()
+        .filter(|v| v.is_finite())
+        .fold(0f32, |m, v| m.max(v.abs()));
     (amax.max(1e-8)) / QMAX
 }
 
@@ -153,4 +162,34 @@ pub fn bandwidth(bundle: &Bundle) -> BandwidthModel {
 /// Convenience: element dtype of a spec tag.
 pub fn dtype_of(tag: &str) -> DType {
     DType::parse(tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abs_max_scale_ignores_non_finite() {
+        let clean = abs_max_scale(&[1.0, -2.0, 0.5]);
+        let dirty = abs_max_scale(&[
+            1.0,
+            f32::NAN,
+            -2.0,
+            f32::INFINITY,
+            0.5,
+            f32::NEG_INFINITY,
+        ]);
+        assert_eq!(clean, dirty, "non-finite samples must not move the scale");
+        assert_eq!(clean, 2.0 / QMAX);
+        // Quantization at the guarded scale stays sane.
+        let q = quantize(&[1.0, -2.0], dirty);
+        assert_eq!(q, vec![64, -127]);
+    }
+
+    #[test]
+    fn abs_max_scale_all_non_finite_degrades_to_epsilon() {
+        let s = abs_max_scale(&[f32::NAN, f32::INFINITY]);
+        assert!(s.is_finite() && s > 0.0);
+        assert_eq!(s, 1e-8 / QMAX);
+    }
 }

@@ -76,23 +76,30 @@ impl TensorData {
     }
 
     pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Result<Self> {
-        let mut data = Vec::with_capacity(values.len() * 4);
-        for v in values {
-            data.extend_from_slice(&v.to_le_bytes());
+        // Bulk byte copy instead of a per-element push loop (§Perf: this is
+        // on the interpreter's per-node output path).  The stored format is
+        // little-endian (what `as_f32` decodes), which equals the native
+        // bytes: big-endian targets fail to compile (see lib.rs).
+        let data = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
         }
+        .to_vec();
         Self::new(DType::F32, shape, data)
     }
 
     pub fn from_i8(shape: Vec<usize>, values: &[i8]) -> Result<Self> {
-        let data = values.iter().map(|v| *v as u8).collect();
-        Self::new(DType::S8, shape, data)
+        // Endian-neutral: single-byte elements.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len())
+        };
+        Self::new(DType::S8, shape, bytes.to_vec())
     }
 
     pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Result<Self> {
-        let mut data = Vec::with_capacity(values.len() * 4);
-        for v in values {
-            data.extend_from_slice(&v.to_le_bytes());
+        let data = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
         }
+        .to_vec();
         Self::new(DType::S32, shape, data)
     }
 
@@ -131,6 +138,74 @@ impl TensorData {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    /// Zero-copy f32 view (no per-call Vec, unlike [`Self::as_f32`]).
+    /// Errors if the dtype mismatches or the buffer is misaligned (Vec<u8>
+    /// allocations are ≥8-aligned in practice; checked, never assumed).
+    pub fn as_f32_slice(&self) -> Result<&[f32]> {
+        if self.dtype != DType::F32 {
+            return Err(anyhow!("not f32: {:?}", self.dtype));
+        }
+        let (pre, mid, post) = unsafe { self.data.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(anyhow!("unaligned f32 tensor buffer"));
+        }
+        Ok(mid)
+    }
+
+    /// Zero-copy mutable f32 view — the arena executor's output window.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        if self.dtype != DType::F32 {
+            return Err(anyhow!("not f32: {:?}", self.dtype));
+        }
+        let (pre, mid, post) = unsafe { self.data.align_to_mut::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(anyhow!("unaligned f32 tensor buffer"));
+        }
+        Ok(mid)
+    }
+
+    /// Zero-copy i32 view.
+    pub fn as_i32_slice(&self) -> Result<&[i32]> {
+        if self.dtype != DType::S32 {
+            return Err(anyhow!("not s32: {:?}", self.dtype));
+        }
+        let (pre, mid, post) = unsafe { self.data.align_to::<i32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(anyhow!("unaligned s32 tensor buffer"));
+        }
+        Ok(mid)
+    }
+
+    /// Zero-copy mutable i32 view.
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        if self.dtype != DType::S32 {
+            return Err(anyhow!("not s32: {:?}", self.dtype));
+        }
+        let (pre, mid, post) = unsafe { self.data.align_to_mut::<i32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(anyhow!("unaligned s32 tensor buffer"));
+        }
+        Ok(mid)
+    }
+
+    /// Zero-copy i8 view (always aligned).
+    pub fn as_i8_slice(&self) -> Result<&[i8]> {
+        if self.dtype != DType::S8 {
+            return Err(anyhow!("not s8: {:?}", self.dtype));
+        }
+        let (_, mid, _) = unsafe { self.data.align_to::<i8>() };
+        Ok(mid)
+    }
+
+    /// Zero-copy mutable i8 view.
+    pub fn as_i8_mut(&mut self) -> Result<&mut [i8]> {
+        if self.dtype != DType::S8 {
+            return Err(anyhow!("not s8: {:?}", self.dtype));
+        }
+        let (_, mid, _) = unsafe { self.data.align_to_mut::<i8>() };
+        Ok(mid)
     }
 
     /// Argmax over the last axis — logits → class ids.

@@ -1,0 +1,82 @@
+//! Zero-allocation property of the arena executor's serving path.
+//!
+//! This lives in its own integration-test binary so the counting global
+//! allocator and its counter see no traffic from unrelated tests running
+//! in sibling threads.  With `threads == 1` (scoped-thread fan-out
+//! disabled — spawning itself allocates), `ArenaExec::run_into` must
+//! perform **zero heap allocations after warm-up**: every intermediate
+//! lives at a pre-planned arena offset.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tvmq::executor::ArenaExec;
+use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+use tvmq::graph::{build_conv_net, calibrate_ir, NetSpec};
+use tvmq::runtime::TensorData;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates straight to System; the counter has no side effects on
+// allocation behaviour.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn run_into_is_allocation_free_after_warmup() {
+    // Quantized graph: exercises the fused q→conv→dq path and scratch use.
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let calib = calibrate_ir(&g, 1);
+    let scales = calibrate_graph(&g, &calib).unwrap();
+    let qg = QuantizeRealize { scales }.run(&g).unwrap();
+
+    let exec = ArenaExec::with_options(&qg, true, 1).unwrap();
+    let x = calibrate_ir(&qg, 2);
+    let mut out = TensorData::zeros(
+        tvmq::runtime::DType::F32,
+        exec.compiled().output_ty.shape.clone(),
+    );
+
+    // Warm-up (first runs may fault in lazily-mapped arena pages; they must
+    // not allocate either, but only the steady state is the contract).
+    exec.run_into(&x, &mut out).unwrap();
+    exec.run_into(&x, &mut out).unwrap();
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        exec.run_into(&x, &mut out).unwrap();
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "ArenaExec::run_into allocated {} times across 5 inferences",
+        after - before
+    );
+
+    // The result is still the real one (guards against dead-code tricks).
+    assert!(out.as_f32_slice().unwrap().iter().all(|v| v.is_finite()));
+}

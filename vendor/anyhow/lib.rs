@@ -1,0 +1,147 @@
+//! Minimal in-tree shim of the `anyhow` crate for the offline build.
+//!
+//! Implements exactly the surface this workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension trait.  Error sources are captured as a message chain (no
+//! downcasting); `Display` renders the full chain `outer: inner: ...` so
+//! diagnostics stay informative without backtrace support.
+
+use std::fmt;
+
+/// A string-chained error value.  Like `anyhow::Error`, this type does NOT
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message (without the source chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts implicitly (the `?` operator's conversion path).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context extension for results.  The blanket `E: Display` bound covers
+/// both std errors and [`Error`] itself (which is `Display` but not
+/// `std::error::Error`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: context.to_string(),
+            source: Some(Box::new(Error::msg(e))),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: f().to_string(),
+            source: Some(Box::new(Error::msg(e))),
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_displays() {
+        let e = fails_io().unwrap_err();
+        let shown = e.to_string();
+        assert!(shown.starts_with("reading config: "), "got {shown:?}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let inline = 7;
+        let e2 = anyhow!("inline {inline}");
+        assert_eq!(e2.to_string(), "inline 7");
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+}

@@ -1,0 +1,221 @@
+//! Offline stub of the `xla` PJRT bridge crate (xla_extension 0.5.1).
+//!
+//! The real crate wraps the PJRT C API; this container has no
+//! xla_extension build, so the PJRT entry points (`PjRtClient::cpu`,
+//! compile, execute) return a descriptive error and the artifact-backed
+//! executors report "unavailable" instead of failing to link.  [`Literal`]
+//! is implemented for real (typed shape + bytes) so host-side conversion
+//! code paths stay exercised by tests.
+//!
+//! Swap this path dependency for the vendored xla_extension bridge to get
+//! real PJRT execution; the API surface below matches what `tvmq` uses.
+
+use std::fmt;
+
+/// Stub error: message-only, `Display`-compatible with the call sites'
+/// `map_err(|e| anyhow!("...: {e}"))` pattern.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: offline xla stub (link the vendored xla_extension bridge for PJRT execution)"
+    ))
+}
+
+/// Element dtypes the tvmq pipeline moves across the boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+impl ElementType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::S8 => 1,
+        }
+    }
+}
+
+/// A host literal: element type + dims + raw bytes.  Fully functional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * ty.size_bytes();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data length {} != shape {:?} ({} bytes)",
+                data.len(),
+                dims,
+                want
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Element type of a non-tuple literal (tuples never occur in the stub).
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Tuple decomposition — stub literals are never tuples.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error("stub literal is not a tuple".to_string()))
+    }
+
+    /// Copy the raw bytes into a typed destination slice.
+    pub fn copy_raw_to<T: Copy>(&self, dst: &mut [T]) -> Result<()> {
+        let dst_bytes = std::mem::size_of::<T>() * dst.len();
+        if dst_bytes != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_to: destination {} bytes != literal {} bytes",
+                dst_bytes,
+                self.data.len()
+            )));
+        }
+        // Raw byte copy; T is Copy and the caller picked the matching type.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Parsed HLO module — the stub cannot parse HLO text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A PJRT device handle (opaque in the stub).
+pub struct PjRtDevice;
+
+/// A PJRT device buffer (opaque; unconstructible through the stub's
+/// failing entry points, so its methods are unreachable at runtime).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// The PJRT client.  `cpu()` fails in the stub; everything downstream is
+/// therefore unreachable but type-checks against the real bridge.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT cpu client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("host-to-device transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals: [f32; 4] = [1.0, -2.0, 3.5, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.size_bytes(), 16);
+        let mut out = [0f32; 4];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S8,
+            &[3],
+            &[0u8; 2]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_fail_cleanly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("offline xla stub"));
+    }
+}
