@@ -468,8 +468,11 @@ pub fn arena_ablation(
             "0".into(),
         ]);
 
+        // fp32 fuses conv+bias+relu (and residual Add) epilogues since the
+        // fusion layer was generalized, so it gets its own ablation pair.
         for (label, graph, fuse) in [
-            ("arena fp32", &g, true),
+            ("arena fp32 (unfused)", &g, false),
+            ("arena fp32 (fused)", &g, true),
             ("arena int8 (unfused)", &qg, false),
             ("arena int8 (fused)", &qg, true),
         ] {

@@ -11,22 +11,29 @@
 //! kernel here to the interpreter's per-output-element operation order
 //! (f32 reduction order is observable; parallelism and blocking are only
 //! applied across independent output elements, and to integer
-//! accumulation, which is order-exact).
+//! accumulation, which is order-exact).  The purely elementwise/pooling
+//! kernels are not even duplicated: both tiers call the shared cores in
+//! [`crate::graph::kernels`].
 //!
-//! Parallelism: conv/dense kernels split output rows across
-//! `std::thread::scope` workers (batch × out-channel granularity).  With
-//! `threads == 1` everything runs inline — that is the configuration the
-//! allocation-counting test locks down, since spawning scoped threads
-//! itself allocates.
+//! Parallelism: conv/dense kernels split output rows across a
+//! **persistent worker pool** ([`super::WorkerPool`]) owned by the
+//! executor — workers are spawned once at build time and each kernel
+//! dispatch hands them disjoint row bands through a lock-protected slot,
+//! so serving an inference allocates nothing at *any* thread count (the
+//! allocation-counting test locks this down for `threads == 1` and
+//! `threads == 4`).  With `threads == 1` no pool exists and everything
+//! runs inline.
 
 use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
+use super::pool::WorkerPool;
 use super::{ExecCounters, ExecSnapshot, Executor};
-use crate::graph::compile::{compile_graph, CompiledGraph, Slot, Step, StepOp};
-use crate::graph::ir::{dims_of, layout_offset, ConstValue, Graph, IrDType, Layout};
+use crate::graph::compile::{compile_graph, CompiledGraph, Epilogue, Residual, Slot, Step, StepOp};
+use crate::graph::ir::{ConstValue, Graph, IrDType, Layout};
+use crate::graph::kernels as gk;
 use crate::quant::QMAX;
 use crate::runtime::{DType, TensorData};
 
@@ -42,9 +49,11 @@ pub struct ArenaExec {
     cg: CompiledGraph,
     /// u64-backed so the base pointer is 8-aligned; plan offsets are
     /// `ARENA_ALIGN`-aligned on top of that.  RefCell: the executor runs
-    /// confined to one thread (kernels fan out *inside* a step via scoped
-    /// threads over disjoint windows).
+    /// confined to one thread (kernels fan out *inside* a step via the
+    /// worker pool over disjoint windows).
     arena: RefCell<Vec<u64>>,
+    /// Persistent kernel fan-out workers; `None` when `threads == 1`.
+    pool: Option<WorkerPool>,
     threads: usize,
     name: String,
     batch: usize,
@@ -52,25 +61,28 @@ pub struct ArenaExec {
 }
 
 impl ArenaExec {
-    /// Compile with q/dq fusion on, single-threaded kernels.
+    /// Compile with fusion on, single-threaded kernels.
     pub fn compile(g: &Graph) -> Result<Self> {
         Self::with_options(g, true, 1)
     }
 
-    /// `fuse_qdq = false` is the unfused ablation; `threads` caps the
-    /// scoped-thread fan-out inside conv/dense kernels.
-    pub fn with_options(g: &Graph, fuse_qdq: bool, threads: usize) -> Result<Self> {
-        let cg = compile_graph(g, fuse_qdq)?;
+    /// `fuse = false` is the unfused ablation; `threads` sets the width of
+    /// the persistent worker pool the conv/dense kernels fan out over.
+    pub fn with_options(g: &Graph, fuse: bool, threads: usize) -> Result<Self> {
+        let cg = compile_graph(g, fuse)?;
         let words = cg.arena_bytes / 8 + 1;
         let batch = cg.input_ty.shape.first().copied().unwrap_or(1);
+        let threads = threads.max(1);
+        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
         let name = format!(
             "arena(b{batch}{})",
-            if fuse_qdq { ",fused" } else { ",unfused" }
+            if fuse { ",fused" } else { ",unfused" }
         );
         Ok(Self {
             cg,
             arena: RefCell::new(vec![0u64; words]),
-            threads: threads.max(1),
+            pool,
+            threads,
             name,
             batch,
             counters: ExecCounters::default(),
@@ -86,8 +98,8 @@ impl ArenaExec {
     }
 
     /// Execute into a caller-provided output tensor: the zero-allocation
-    /// serving path (with `threads == 1`, no heap traffic at all after
-    /// construction — the allocation-counting test asserts exactly this).
+    /// serving path (no heap traffic at all after construction at any
+    /// thread count — the allocation-counting test asserts exactly this).
     pub fn run_into(&self, input: &TensorData, out: &mut TensorData) -> Result<()> {
         if input.shape != self.cg.input_ty.shape
             || input.dtype != to_dtype(self.cg.input_ty.dtype)
@@ -115,8 +127,9 @@ impl ArenaExec {
         // mutable borrow.  The static plan guarantees (verified at compile
         // time) that values with overlapping lifetimes occupy disjoint byte
         // ranges, so a step's destination/scratch windows never overlap its
-        // source windows, and concurrent kernel threads only ever split the
-        // destination window disjointly.
+        // source windows (including a fused step's residual operand), and
+        // concurrent kernel workers only ever split the destination window
+        // disjointly.
         let mut arena = self.arena.borrow_mut();
         let base = arena.as_mut_ptr() as *mut u8;
         for step in &self.cg.steps {
@@ -150,36 +163,60 @@ impl ArenaExec {
         }
     }
 
+    /// Resolve an anchor step's epilogue into element-ready values: the
+    /// bias constant and, for a two-input step, the residual operand
+    /// (always `srcs[2]`, planned disjoint from the destination).
+    fn epi_vals<'a>(&'a self, step: &Step, epi: &Epilogue, base: *const u8) -> Result<EpiVals<'a>> {
+        let bias = match epi.bias {
+            Some(ci) => Some(self.bias_slice(ci)?),
+            None => None,
+        };
+        let res = match epi.residual {
+            Some(pos) => {
+                let slot = step
+                    .srcs
+                    .get(2)
+                    .ok_or_else(|| anyhow!("residual epilogue without a third operand"))?;
+                Some((f32s(self.src_bytes(&slot.0, base))?, pos))
+            }
+            None => None,
+        };
+        Ok(EpiVals { bias, relu: epi.relu, res })
+    }
+
     fn exec_step(&self, step: &Step, base: *mut u8, input: &TensorData) -> Result<()> {
         let dst_b = arena_bytes_mut(base, &step.dst)?;
         let os = &step.dst_ty.shape;
-        let th = self.threads;
+        let pool = self.pool.as_ref();
         match &step.op {
             StepOp::LoadInput => {
                 dst_b.copy_from_slice(&input.data);
             }
-            StepOp::Conv2d { stride, padding, layout } => {
+            StepOp::Conv2d { stride, padding, layout, epi } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
                 let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
                 match (xt.dtype, layout) {
-                    (IrDType::F32, Layout::Nchw) => conv2d_nchw_f32(
+                    (IrDType::F32, Layout::Nchw) => {
+                        let ev = self.epi_vals(step, epi, base)?;
+                        conv2d_nchw_f32(
+                            f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                            *stride, *padding, ev, f32s_mut(dst_b)?, os, pool,
+                        );
+                    }
+                    (IrDType::F32, Layout::Nhwc) if epi.is_identity() => conv2d_nhwc_f32(
                         f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        *stride, *padding, f32s_mut(dst_b)?, os, th,
+                        *stride, *padding, f32s_mut(dst_b)?, os, pool,
                     ),
-                    (IrDType::F32, Layout::Nhwc) => conv2d_nhwc_f32(
+                    (IrDType::F32, Layout::Nchwc(cb)) if epi.is_identity() => conv2d_nchwc_f32(
                         f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        *stride, *padding, f32s_mut(dst_b)?, os, th,
+                        *stride, *padding, *cb, f32s_mut(dst_b)?, os, pool,
                     ),
-                    (IrDType::F32, Layout::Nchwc(cb)) => conv2d_nchwc_f32(
-                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        *stride, *padding, *cb, f32s_mut(dst_b)?, os, th,
-                    ),
-                    (IrDType::S8, Layout::Nchw) => conv2d_nchw_i8(
+                    (IrDType::S8, Layout::Nchw) if epi.is_identity() => conv2d_nchw_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, i32s_mut(dst_b)?, os, th,
+                        *stride, *padding, i32s_mut(dst_b)?, os, pool,
                     ),
                     other => {
-                        return Err(anyhow!("arena conv: unsupported {:?}", other));
+                        return Err(anyhow!("arena conv: unsupported {:?} (epilogue fusion is NCHW f32 only)", other));
                     }
                 }
             }
@@ -193,28 +230,34 @@ impl ArenaExec {
                 let qb = arena_bytes_mut(base, scratch)?;
                 let xq = i8s_mut(qb);
                 quantize_into(f32s(xb)?, *qscale, xq);
-                let bias = match epi.bias {
-                    Some(ci) => Some(self.bias_slice(ci)?),
-                    None => None,
-                };
+                let ev = self.epi_vals(step, epi, base)?;
                 qconv2d_nchw(
                     xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                    *dqscale, bias, epi.relu, f32s_mut(dst_b)?, os, th,
+                    *dqscale, ev, f32s_mut(dst_b)?, os, pool,
                 );
             }
-            StepOp::Dense => {
+            StepOp::Dense { epi } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
                 let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
                 match xt.dtype {
-                    IrDType::F32 => dense_f32(
-                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        f32s_mut(dst_b)?, th,
-                    ),
-                    IrDType::S8 => dense_i8(
+                    IrDType::F32 => {
+                        // BiasAdd is rank-4 only, so the compiler never
+                        // fuses a bias onto Dense; reject loudly rather
+                        // than silently dropping one if that ever changes.
+                        if epi.bias.is_some() {
+                            return Err(anyhow!("arena dense: bias epilogue unsupported"));
+                        }
+                        let ev = self.epi_vals(step, epi, base)?;
+                        dense_f32(
+                            f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                            ev, f32s_mut(dst_b)?, pool,
+                        );
+                    }
+                    IrDType::S8 if epi.is_identity() => dense_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        i32s_mut(dst_b)?, th,
+                        i32s_mut(dst_b)?, pool,
                     ),
-                    IrDType::S32 => return Err(anyhow!("arena dense: s32 operands")),
+                    other => return Err(anyhow!("arena dense: unsupported {:?} operands", other)),
                 }
             }
             StepOp::QDense { qscale, dqscale, epi } => {
@@ -227,15 +270,16 @@ impl ArenaExec {
                 let qb = arena_bytes_mut(base, scratch)?;
                 let xq = i8s_mut(qb);
                 quantize_into(f32s(xb)?, *qscale, xq);
+                let ev = self.epi_vals(step, epi, base)?;
                 qdense(
-                    xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, epi.relu,
-                    f32s_mut(dst_b)?, th,
+                    xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, ev,
+                    f32s_mut(dst_b)?, pool,
                 );
             }
             StepOp::BiasAdd { layout } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
                 let bb = self.src_bytes(&step.srcs[1].0, base);
-                bias_add(f32s(xb)?, &xt.shape, f32s(bb)?, *layout, f32s_mut(dst_b)?)?;
+                gk::bias_add_f32(f32s(xb)?, &xt.shape, f32s(bb)?, *layout, f32s_mut(dst_b)?)?;
             }
             StepOp::Relu => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
@@ -289,7 +333,7 @@ impl ArenaExec {
                 if xt.dtype != IrDType::F32 {
                     return Err(anyhow!("arena maxpool: f32 only"));
                 }
-                maxpool_f32(
+                gk::maxpool_f32(
                     f32s(xb)?, &xt.shape, *window, *stride, *padding, *layout,
                     f32s_mut(dst_b)?, os,
                 )?;
@@ -299,7 +343,7 @@ impl ArenaExec {
                 if xt.dtype != IrDType::F32 {
                     return Err(anyhow!("arena global_avg_pool: f32 only"));
                 }
-                global_avgpool_f32(f32s(xb)?, &xt.shape, *layout, f32s_mut(dst_b)?)?;
+                gk::global_avgpool_f32(f32s(xb)?, &xt.shape, *layout, f32s_mut(dst_b)?)?;
             }
             StepOp::Quantize { scale } => {
                 let xb = self.src_bytes(&step.srcs[0].0, base);
@@ -424,15 +468,76 @@ fn i8s_mut(b: &mut [u8]) -> &mut [i8] {
 }
 
 // ---------------------------------------------------------------------------
+// Epilogue application
+// ---------------------------------------------------------------------------
+
+/// Element-ready epilogue operands: the bias constant and the residual
+/// slice (both borrowed from the constant pool / arena for one step).
+#[derive(Clone, Copy)]
+struct EpiVals<'a> {
+    bias: Option<&'a [f32]>,
+    relu: bool,
+    res: Option<(&'a [f32], Residual)>,
+}
+
+impl EpiVals<'_> {
+    fn is_identity(&self) -> bool {
+        self.bias.is_none() && !self.relu && self.res.is_none()
+    }
+}
+
+/// Apply the fused elementwise tail to one output element, in exactly the
+/// graph's operation order: (bias) → (pre-relu add) → (relu) →
+/// (post-relu add).  `bias` is the per-channel value hoisted by the
+/// caller; `idx` is the element's flat index into the output (and into
+/// the residual operand, which always has the output's shape).  `Add`
+/// operand order is preserved via `chain_lhs` — float addition is not
+/// bit-commutative for NaN.
+#[inline(always)]
+fn epi_apply(
+    mut v: f32,
+    bias: Option<f32>,
+    relu: bool,
+    res: Option<(&[f32], Residual)>,
+    idx: usize,
+) -> f32 {
+    if let Some(b) = bias {
+        v += b;
+    }
+    if let Some((r, pos)) = res {
+        if pos.pre_relu {
+            v = if pos.chain_lhs { v + r[idx] } else { r[idx] + v };
+        }
+    }
+    if relu {
+        v = v.max(0.0);
+    }
+    if let Some((r, pos)) = res {
+        if !pos.pre_relu {
+            v = if pos.chain_lhs { v + r[idx] } else { r[idx] + v };
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
 // Row-parallel driver
 // ---------------------------------------------------------------------------
 
+/// Raw base pointer that may cross into pool workers; the banding below
+/// guarantees the workers write disjoint windows.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Call `f(row_index, row)` for every `row_len`-element row of `out`,
-/// fanning contiguous row bands out over scoped threads.  `threads == 1`
-/// runs inline with zero allocation; bands are disjoint `&mut` windows, so
+/// fanning contiguous row bands out over the persistent pool.  With no
+/// pool (or a single band) everything runs inline; either way the
+/// dispatch allocates nothing, and bands are disjoint windows, so
 /// per-output-element results are identical regardless of fan-out.
 fn par_rows<T: Send>(
-    threads: usize,
+    pool: Option<&WorkerPool>,
     out: &mut [T],
     row_len: usize,
     f: impl Fn(usize, &mut [T]) + Sync,
@@ -440,25 +545,34 @@ fn par_rows<T: Send>(
     if row_len == 0 || out.is_empty() {
         return;
     }
+    // Every kernel passes an exactly-dividing row length; the banded path
+    // below relies on it (a remainder would be written inline but skipped
+    // by the bands).
+    debug_assert_eq!(out.len() % row_len, 0, "par_rows: ragged row length");
     let rows = out.len() / row_len;
-    let threads = threads.min(rows).max(1);
-    if threads == 1 {
+    let bands = pool.map_or(1, |p| p.threads()).min(rows).max(1);
+    if bands == 1 {
         for (r, chunk) in out.chunks_mut(row_len).enumerate() {
             f(r, chunk);
         }
         return;
     }
-    let per = (rows + threads - 1) / threads;
+    let per = (rows + bands - 1) / bands;
+    let base = SendPtr(out.as_mut_ptr());
     let f = &f;
-    std::thread::scope(|s| {
-        for (bi, band) in out.chunks_mut(per * row_len).enumerate() {
-            s.spawn(move || {
-                for (i, chunk) in band.chunks_mut(row_len).enumerate() {
-                    f(bi * per + i, chunk);
-                }
-            });
+    let job = move |band: usize| {
+        let start = band * per;
+        let end = ((band + 1) * per).min(rows);
+        for r in start..end {
+            // SAFETY: bands cover disjoint row ranges of `out`, and the
+            // pool does not return from `run` until every band finished.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r * row_len), row_len)
+            };
+            f(r, row);
         }
-    });
+    };
+    pool.expect("bands > 1 implies a pool").run(bands, &job);
 }
 
 // ---------------------------------------------------------------------------
@@ -470,13 +584,17 @@ fn par_rows<T: Send>(
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nchw_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
-    stride: usize, padding: usize, out: &mut [f32], os: &[usize], threads: usize,
+    stride: usize, padding: usize, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(threads, out, oh * ow, |row, plane| {
+    let ohw = oh * ow;
+    par_rows(pool, out, ohw, |row, plane| {
         let (ni, ki) = (row / k, row % k);
+        let b = ev.bias.map(|b| b[ki]);
+        let plane_base = row * ohw;
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut acc = 0f32;
@@ -498,7 +616,8 @@ fn conv2d_nchw_f32(
                         }
                     }
                 }
-                plane[oy * ow + ox] = acc;
+                plane[oy * ow + ox] =
+                    epi_apply(acc, b, ev.relu, ev.res, plane_base + oy * ow + ox);
             }
         }
     });
@@ -507,12 +626,13 @@ fn conv2d_nchw_f32(
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nchw_i8(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
-    stride: usize, padding: usize, out: &mut [i32], os: &[usize], threads: usize,
+    stride: usize, padding: usize, out: &mut [i32], os: &[usize],
+    pool: Option<&WorkerPool>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(threads, out, oh * ow, |row, plane| {
+    par_rows(pool, out, oh * ow, |row, plane| {
         let (ni, ki) = (row / k, row % k);
         for oy in 0..oh {
             for ox in 0..ow {
@@ -569,34 +689,33 @@ fn i8_conv_acc(
 }
 
 /// Fused quantized conv: int8 data (already quantized into scratch) ×
-/// int8 weights → i32 accumulator → `acc as f32 * dqscale` (+bias)(+relu),
-/// written once.  The interior i32/f32 boundary tensors never materialize.
+/// int8 weights → i32 accumulator → `acc as f32 * dqscale` through the
+/// epilogue (bias / residual add / relu), written once.  The interior
+/// i32/f32 boundary tensors never materialize.
 #[allow(clippy::too_many_arguments)]
 fn qconv2d_nchw(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
-    stride: usize, padding: usize, dqscale: f32, bias: Option<&[f32]>, relu: bool,
-    out: &mut [f32], os: &[usize], threads: usize,
+    stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(threads, out, oh * ow, |row, plane| {
+    let ohw = oh * ow;
+    par_rows(pool, out, ohw, |row, plane| {
         let (ni, ki) = (row / k, row % k);
-        let b = bias.map(|b| b[ki]);
+        let b = ev.bias.map(|b| b[ki]);
+        let plane_base = row * ohw;
         for oy in 0..oh {
             for ox in 0..ow {
                 let acc = i8_conv_acc(
                     x, w, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
                 );
-                // Exactly dequantize → bias_add → relu, elementwise.
-                let mut v = acc as f32 * dqscale;
-                if let Some(b) = b {
-                    v += b;
-                }
-                if relu {
-                    v = v.max(0.0);
-                }
-                plane[oy * ow + ox] = v;
+                // Exactly dequantize → epilogue, elementwise.
+                plane[oy * ow + ox] = epi_apply(
+                    acc as f32 * dqscale, b, ev.relu, ev.res,
+                    plane_base + oy * ow + ox,
+                );
             }
         }
     });
@@ -605,12 +724,13 @@ fn qconv2d_nchw(
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nhwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
-    stride: usize, padding: usize, out: &mut [f32], os: &[usize], threads: usize,
+    stride: usize, padding: usize, out: &mut [f32], os: &[usize],
+    pool: Option<&WorkerPool>,
 ) {
     let (h, wd, c) = (xs[1], xs[2], xs[3]);
     let (r, s, k) = (ws[0], ws[1], ws[3]);
     let (oh, ow) = (os[1], os[2]);
-    par_rows(threads, out, ow * k, |row, slab| {
+    par_rows(pool, out, ow * k, |row, slab| {
         let (ni, oy) = (row / oh, row % oh);
         for ox in 0..ow {
             for ki in 0..k {
@@ -642,12 +762,13 @@ fn conv2d_nhwc_f32(
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nchwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
-    stride: usize, padding: usize, cb: usize, out: &mut [f32], os: &[usize], threads: usize,
+    stride: usize, padding: usize, cb: usize, out: &mut [f32], os: &[usize],
+    pool: Option<&WorkerPool>,
 ) {
     let (co, h, wd) = (xs[1], xs[2], xs[3]);
     let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(threads, out, oh * ow * kb, |row, plane| {
+    par_rows(pool, out, oh * ow * kb, |row, plane| {
         let (ni, ok) = (row / ko, row % ko);
         for oy in 0..oh {
             for ox in 0..ow {
@@ -684,11 +805,12 @@ fn conv2d_nchwc_f32(
 }
 
 fn dense_f32(
-    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize], out: &mut [f32], threads: usize,
+    x: &[f32], xs: &[usize], w: &[f32], ws: &[usize], ev: EpiVals<'_>,
+    out: &mut [f32], pool: Option<&WorkerPool>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(threads, out, n, |i, row| {
+    par_rows(pool, out, n, |i, row| {
         row.fill(0.0);
         for kk in 0..k {
             let xik = x[i * k + kk];
@@ -696,15 +818,21 @@ fn dense_f32(
                 row[j] += xik * w[kk * n + j];
             }
         }
+        if !ev.is_identity() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = epi_apply(*slot, None, ev.relu, ev.res, i * n + j);
+            }
+        }
     });
 }
 
 fn dense_i8(
-    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize], out: &mut [i32], threads: usize,
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize], out: &mut [i32],
+    pool: Option<&WorkerPool>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(threads, out, n, |i, row| {
+    par_rows(pool, out, n, |i, row| {
         row.fill(0);
         for kk in 0..k {
             let xik = x[i * k + kk] as i32;
@@ -718,107 +846,19 @@ fn dense_i8(
 #[allow(clippy::too_many_arguments)]
 fn qdense(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
-    dqscale: f32, relu: bool, out: &mut [f32], threads: usize,
+    dqscale: f32, ev: EpiVals<'_>, out: &mut [f32], pool: Option<&WorkerPool>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(threads, out, n, |i, row| {
+    par_rows(pool, out, n, |i, row| {
         for (j, slot) in row.iter_mut().enumerate() {
             let mut acc = 0i32;
             for kk in 0..k {
                 acc += x[i * k + kk] as i32 * w[kk * n + j] as i32;
             }
-            let mut v = acc as f32 * dqscale;
-            if relu {
-                v = v.max(0.0);
-            }
-            *slot = v;
+            *slot = epi_apply(acc as f32 * dqscale, None, ev.relu, ev.res, i * n + j);
         }
     });
-}
-
-fn bias_add(
-    x: &[f32], xs: &[usize], b: &[f32], layout: Layout, out: &mut [f32],
-) -> Result<()> {
-    let (_, c, _, _) = dims_of(xs, layout)?;
-    match layout {
-        Layout::Nchw => {
-            let hw = xs[2] * xs[3];
-            for (i, d) in out.iter_mut().enumerate() {
-                *d = x[i] + b[(i / hw) % c];
-            }
-        }
-        Layout::Nhwc => {
-            for (i, d) in out.iter_mut().enumerate() {
-                *d = x[i] + b[i % c];
-            }
-        }
-        Layout::Nchwc(cb) => {
-            let hw = xs[2] * xs[3];
-            let co = xs[1];
-            for (i, d) in out.iter_mut().enumerate() {
-                let ci = i % cb;
-                let oc = (i / (cb * hw)) % co;
-                *d = x[i] + b[oc * cb + ci];
-            }
-        }
-    }
-    Ok(())
-}
-
-#[allow(clippy::too_many_arguments)]
-fn maxpool_f32(
-    x: &[f32], xs: &[usize], window: usize, stride: usize, padding: usize,
-    layout: Layout, out: &mut [f32], os: &[usize],
-) -> Result<()> {
-    let (n, c, h, w) = dims_of(xs, layout)?;
-    let (_, _, oh, ow) = dims_of(os, layout)?;
-    for ni in 0..n {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for ry in 0..window {
-                        let iy = oy * stride + ry;
-                        if iy < padding || iy >= h + padding {
-                            continue;
-                        }
-                        for rx in 0..window {
-                            let ix = ox * stride + rx;
-                            if ix < padding || ix >= w + padding {
-                                continue;
-                            }
-                            m = m.max(
-                                x[layout_offset(
-                                    layout, c, h, w, ni, ci, iy - padding, ix - padding,
-                                )],
-                            );
-                        }
-                    }
-                    out[layout_offset(layout, c, oh, ow, ni, ci, oy, ox)] = m;
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-fn global_avgpool_f32(
-    x: &[f32], xs: &[usize], layout: Layout, out: &mut [f32],
-) -> Result<()> {
-    let (n, c, h, w) = dims_of(xs, layout)?;
-    for ni in 0..n {
-        for ci in 0..c {
-            let mut s = 0f32;
-            for y in 0..h {
-                for xx in 0..w {
-                    s += x[layout_offset(layout, c, h, w, ni, ci, y, xx)];
-                }
-            }
-            out[ni * c + ci] = s / (h * w) as f32;
-        }
-    }
-    Ok(())
 }
 
 /// `q = clip(round(x / s))` — must match `crate::quant::quantize` exactly.
@@ -833,6 +873,7 @@ fn quantize_into(x: &[f32], scale: f32, out: &mut [i8]) {
 fn layout_transform_f32(
     x: &[f32], xs: &[usize], from: Layout, to: Layout, out: &mut [f32],
 ) -> Result<()> {
+    use crate::graph::ir::{dims_of, layout_offset};
     let (n, c, h, w) = dims_of(xs, from)?;
     for ni in 0..n {
         for ci in 0..c {

@@ -15,6 +15,7 @@
 
 mod arena_exec;
 mod graph_exec;
+mod pool;
 mod vm;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,6 +24,7 @@ use anyhow::Result;
 
 pub use arena_exec::ArenaExec;
 pub use graph_exec::GraphExecutor;
+pub use pool::WorkerPool;
 pub use vm::{VmExecutor, VmInstr};
 
 use crate::runtime::TensorData;

@@ -1,0 +1,269 @@
+//! Persistent worker pool for the arena executor's kernel fan-out.
+//!
+//! `std::thread::scope` spawns OS threads (and therefore heap-allocates)
+//! on every kernel call; this pool spawns its workers once at executor
+//! build time and then dispatches each kernel's row bands through a single
+//! shared slot guarded by a mutex and two condvars.  The dispatch path
+//! performs **no heap allocation** — std's mutex/condvar are futex-backed
+//! on Linux and allocation-free to lock/wait/notify — which is what
+//! restores the arena tier's zero-allocations-per-inference property at
+//! `threads > 1` (pinned by `tests/arena_alloc.rs`).
+//!
+//! Protocol: [`WorkerPool::run`] publishes a type-erased `&dyn Fn(usize)`
+//! job (a reference into the caller's stack frame), bumps an epoch, and
+//! wakes every worker.  Worker `w` runs `job(w + 1)` — the caller itself
+//! runs band 0 — then acknowledges; `run` blocks until every worker has
+//! acknowledged the epoch, so the job reference never outlives the call.
+//! That containment is what makes the lifetime transmute sound.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A band-parallel job, lifetime-erased for the shared slot.  Only ever
+/// dereferenced between the epoch bump and the final acknowledgement of
+/// the same epoch, while the underlying closure is still alive.
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct Slot {
+    job: Option<Job>,
+    /// Bands in the current dispatch; workers with `w + 1 >= bands` skip
+    /// the job but still acknowledge the epoch.
+    bands: usize,
+    /// Bumped once per dispatch; each worker runs each epoch exactly once.
+    epoch: u64,
+    /// Workers that have not yet acknowledged the current epoch.
+    outstanding: usize,
+    /// A worker's job panicked during the current epoch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Wakes workers: new epoch or shutdown.
+    work: Condvar,
+    /// Wakes the dispatcher: all workers acknowledged.
+    done: Condvar,
+}
+
+/// A fixed-width pool of `threads - 1` workers plus the dispatching
+/// thread.  Dropping the pool shuts the workers down and joins them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads - 1` workers (the dispatching thread is band 0).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                bands: 0,
+                epoch: 0,
+                outstanding: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|band| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tvmq-arena-{band}"))
+                    .spawn(move || worker_loop(&shared, band))
+                    .expect("spawn arena worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Total parallel width: the workers plus the dispatching thread.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `job(band)` once for every `band < min(bands, threads())`:
+    /// band 0 inline on the caller, the rest on the workers.  `bands`
+    /// beyond the pool width are clamped away (size work to `threads()`,
+    /// as [`par_rows`](super::ArenaExec) does).  Returns after every band
+    /// has finished.  Allocation-free on the happy path.
+    ///
+    /// # Panics
+    /// Panics (on the caller) if a worker's job panicked, after all
+    /// workers have acknowledged — the pool stays usable.
+    pub fn run(&self, bands: usize, job: &(dyn Fn(usize) + Sync)) {
+        if bands == 0 {
+            return;
+        }
+        if bands == 1 || self.workers.is_empty() {
+            for band in 0..bands.min(self.threads()) {
+                job(band);
+            }
+            return;
+        }
+        // SAFETY: purely a lifetime erasure between identically laid-out
+        // fat references.  `run` does not leave this frame — by return OR
+        // by unwind (the `EpochBarrier` drop guard below blocks until
+        // every worker acknowledged the epoch) — while any worker can
+        // still touch the reference, so the 'static never outlives the
+        // borrow it erases.
+        let job_static: Job =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), Job>(job) };
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            // A previous epoch whose band 0 unwound never reached the
+            // panicked check below; start clean so this dispatch cannot
+            // inherit a stale flag.
+            s.panicked = false;
+            s.job = Some(job_static);
+            s.bands = bands.min(self.threads());
+            s.epoch += 1;
+            s.outstanding = self.workers.len();
+            self.shared.work.notify_all();
+        }
+        {
+            // Even if band 0 panics, wait for the workers before this
+            // stack frame unwinds: they hold the lifetime-erased job
+            // reference into it, and the slot state must be clean for
+            // the next dispatch.
+            let _barrier = EpochBarrier(&self.shared);
+            job(0);
+        }
+        let mut s = self.shared.slot.lock().unwrap();
+        if s.panicked {
+            s.panicked = false;
+            drop(s);
+            panic!("arena worker panicked while running a kernel band");
+        }
+    }
+}
+
+/// Drop guard for one dispatch epoch: blocks until every worker has
+/// acknowledged, then retires the job reference — on normal return *and*
+/// on unwind from the dispatcher's own band.
+struct EpochBarrier<'a>(&'a Shared);
+
+impl Drop for EpochBarrier<'_> {
+    fn drop(&mut self) {
+        let mut s = self.0.slot.lock().unwrap();
+        while s.outstanding != 0 {
+            s = self.0.done.wait(s).unwrap();
+        }
+        s.job = None;
+    }
+}
+
+fn worker_loop(shared: &Shared, band: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, bands) = {
+            let mut s = shared.slot.lock().unwrap();
+            while s.epoch == seen && !s.shutdown {
+                s = shared.work.wait(s).unwrap();
+            }
+            if s.shutdown {
+                return;
+            }
+            seen = s.epoch;
+            (s.job, s.bands)
+        };
+        let mut panicked = false;
+        if let Some(job) = job {
+            if band < bands {
+                // Keep the worker alive across kernel panics so the pool
+                // (and the dispatcher waiting on it) never deadlocks; the
+                // dispatcher re-raises after the epoch completes.
+                panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    job(band)
+                }))
+                .is_err();
+            }
+        }
+        let mut s = shared.slot.lock().unwrap();
+        s.panicked |= panicked;
+        s.outstanding -= 1;
+        if s.outstanding == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_band_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let hits = [const { AtomicUsize::new(0) }; 4];
+        for _ in 0..100 {
+            pool.run(4, &|band| {
+                hits[band].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 100);
+        }
+    }
+
+    #[test]
+    fn bands_beyond_width_are_clamped_and_small_dispatches_inline() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2, "bands clamp to pool width");
+        pool.run(1, &|band| {
+            assert_eq!(band, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.run(0, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "no workers: only band 0 runs");
+    }
+
+    #[test]
+    fn results_are_written_from_worker_threads() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 9];
+        let base = out.as_mut_ptr() as usize;
+        pool.run(3, &|band| {
+            for i in 0..3 {
+                // Disjoint windows per band, same shape the kernels use.
+                unsafe { *(base as *mut usize).add(band * 3 + i) = band * 10 + i };
+            }
+        });
+        assert_eq!(out, vec![0, 1, 2, 10, 11, 12, 20, 21, 22]);
+    }
+}

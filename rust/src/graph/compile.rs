@@ -2,25 +2,54 @@
 //! [`crate::executor::ArenaExec`] tier.
 //!
 //! TVM's graph executor wins over the relay VM for two mechanistic reasons
-//! the paper isolates: **fusion** (q/dq boundary operators disappear into
-//! their anchor's epilogue instead of materializing int8/fp32 boundary
-//! tensors) and **static memory planning** (every intermediate gets a
-//! pre-computed offset into one shared arena, so serving an inference does
-//! zero dynamic allocation).  This module reproduces both at the IR level:
+//! the paper isolates: **fusion** (boundary and elementwise operators
+//! disappear into their anchor's epilogue instead of materializing
+//! intermediate tensors) and **static memory planning** (every intermediate
+//! gets a pre-computed offset into one shared arena, so serving an
+//! inference does zero dynamic allocation).  This module reproduces both at
+//! the IR level.
 //!
-//! 1. `Quantize → Conv2d/Dense(i8, i32 accum) → Dequantize [→ BiasAdd]
-//!    [→ Relu]` chains collapse into one fused step whose interior values
-//!    (the i32 accumulator, the dequantized f32, the biased f32) never
-//!    exist in memory;
-//! 2. remaining nodes lower 1:1 to steps, and every step output gets a
-//!    [`crate::memplan::StaticPlan`] first-fit placement computed from
-//!    graph-IR value lifetimes (def step → last consuming step).
+//! # Fusion rules
+//!
+//! A fused step is an *anchor* (`Conv2d` or `Dense`) plus an epilogue tail
+//! applied per output element.  Two chain shapes fuse, both only for NCHW
+//! convs (the dense anchor has no layout):
+//!
+//! 1. **Quantized** (the `fuse` ablation flag controls all fusion):
+//!    `Quantize → Conv2d/Dense(i8 const weight, i32 accum) → Dequantize`
+//!    followed by the shared epilogue tail.  The quantized input lives in a
+//!    per-step scratch slot; the i32 accumulator and every interior f32
+//!    value never exist in memory.
+//! 2. **fp32**: a `Conv2d`/`Dense` whose output is f32, followed by at
+//!    least one epilogue op (an anchor with nothing to absorb stays a plain
+//!    1:1 step).
+//!
+//! The shared epilogue tail is, in order:
+//! `[BiasAdd(f32 const, conv only)] → [Add] → [Relu] → [Add]` — at most one
+//! residual `Add`, either before the relu (the ResNet block tail
+//! `conv→bias→add→relu`) or after it.  A residual `Add` fuses only when its
+//! other operand is already materialized when the fused step runs: a
+//! constant, or a node defined *before* the chain's first member (steps are
+//! emitted in node order, so earlier ids mean earlier steps).  The residual
+//! operand becomes the step's third source and its lifetime is explicitly
+//! extended through the fused step
+//! ([`crate::memplan::ValueLife::extend_through`]), which forces the
+//! planner to keep it space-disjoint from the step's destination — a
+//! compile-time check re-verifies that disjointness on every two-input
+//! step.  Every interior chain link must be single-consumer and not the
+//! graph output.
+//!
+//! NHWC / NCHW{c} convs and integer elementwise tails do not fuse (their
+//! epilogues stay 1:1 steps); extending the epilogue to the packed layouts
+//! is an open roadmap item.
 //!
 //! The semantics contract: executing the stream is **bit-for-bit** equal to
 //! [`super::interp::evaluate`] — fused epilogues apply exactly the same
 //! per-element float operation sequence the unfused ops would (dequantize
-//! multiply, then bias add, then relu max), and integer accumulation is
-//! order-independent.  The differential tests enforce this.
+//! multiply, then bias add, then the adds/relu in graph order, preserving
+//! `Add` operand order, which is observable for NaN), and integer
+//! accumulation is order-independent.  The differential tests and the
+//! `tests/graph_fuzz.rs` randomized harness enforce this.
 
 use std::collections::HashMap;
 
@@ -44,12 +73,35 @@ pub enum Slot {
     Const(usize),
 }
 
-/// Fused elementwise tail applied to an anchor's accumulator.
-#[derive(Debug, Clone, Copy, Default)]
+/// A fused residual `Add`: where it sits in the epilogue and which side of
+/// the addition the chain value is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Residual {
+    /// The add executes before the fused relu (`conv→bias→add→relu`, the
+    /// ResNet block tail) rather than after it (`conv→bias→relu→add`).
+    pub pre_relu: bool,
+    /// The chain value is the `Add`'s left operand (`chain + r`).  Float
+    /// addition is only bit-commutative for non-NaN values, so the
+    /// executor preserves the graph's operand order exactly.
+    pub chain_lhs: bool,
+}
+
+/// Fused elementwise tail applied to an anchor's accumulator.  A step
+/// whose epilogue has `residual` set carries the residual operand as its
+/// third source (`srcs[2]`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Epilogue {
     /// Constant-pool index of a per-channel f32 bias (NCHW channel order).
     pub bias: Option<usize>,
     pub relu: bool,
+    pub residual: Option<Residual>,
+}
+
+impl Epilogue {
+    /// An epilogue that does nothing (the unfused anchor).
+    pub fn is_identity(&self) -> bool {
+        self.bias.is_none() && !self.relu && self.residual.is_none()
+    }
 }
 
 /// One executable step.  Operand shapes/dtypes ride along in
@@ -58,14 +110,19 @@ pub struct Epilogue {
 pub enum StepOp {
     /// Copy the executor's input tensor into the arena.
     LoadInput,
-    Conv2d { stride: usize, padding: usize, layout: Layout },
+    /// fp32 (or standalone int8) conv; `epi` is non-identity only for the
+    /// fused fp32 NCHW chain.
+    Conv2d { stride: usize, padding: usize, layout: Layout, epi: Epilogue },
     /// Fused `quantize → int8 NCHW conv (i32 accum) → dequantize` with
-    /// optional bias/relu epilogue.  `srcs = [f32 data, i8 weight]`; the
-    /// quantized input lives in the step's scratch slot for exactly this
-    /// step — no int8 boundary tensor survives it.
+    /// optional bias/residual/relu epilogue.  `srcs = [f32 data, i8
+    /// weight, residual?]`; the quantized input lives in the step's
+    /// scratch slot for exactly this step — no int8 boundary tensor
+    /// survives it.
     QConv2d { qscale: f32, dqscale: f32, stride: usize, padding: usize, epi: Epilogue },
-    Dense,
-    /// Fused `quantize → int8 dense (i32 accum) → dequantize [→ relu]`.
+    /// fp32 (or standalone int8) dense; `epi` is non-identity only for the
+    /// fused fp32 chain (relu / residual — dense has no bias op).
+    Dense { epi: Epilogue },
+    /// Fused `quantize → int8 dense (i32 accum) → dequantize [→ epilogue]`.
     QDense { qscale: f32, dqscale: f32, epi: Epilogue },
     BiasAdd { layout: Layout },
     Relu,
@@ -75,6 +132,25 @@ pub enum StepOp {
     Quantize { scale: f32 },
     Dequantize { scale: f32 },
     LayoutTransform { from: Layout, to: Layout },
+}
+
+impl StepOp {
+    /// The epilogue of an anchor step (`None` for non-anchor steps).
+    pub fn epilogue(&self) -> Option<Epilogue> {
+        match self {
+            StepOp::Conv2d { epi, .. }
+            | StepOp::QConv2d { epi, .. }
+            | StepOp::Dense { epi }
+            | StepOp::QDense { epi, .. } => Some(*epi),
+            _ => None,
+        }
+    }
+
+    /// True when this step reads a residual operand (`srcs[2]`)
+    /// elementwise while writing its destination.
+    pub fn has_residual(&self) -> bool {
+        self.epilogue().map_or(false, |e| e.residual.is_some())
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -103,7 +179,7 @@ pub struct CompiledGraph {
     pub input_ty: TensorTy,
     pub output_ty: TensorTy,
     pub output_slot: Slot,
-    /// Number of q→anchor→dq chains fused away.
+    /// Number of chains (quantized or fp32) fused away into epilogues.
     pub fused_chains: usize,
 }
 
@@ -124,9 +200,9 @@ struct ProtoStep {
     name: String,
 }
 
-/// Lower `g` into an arena-planned step stream.  `fuse_qdq = false` keeps
+/// Lower `g` into an arena-planned step stream.  `fuse = false` keeps
 /// every node a separate step (the "unfused arena" ablation).
-pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
+pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
     g.validate()?;
     if !g.live_set()[g.input] {
         return Err(anyhow!("compile: graph output does not depend on the input"));
@@ -145,14 +221,10 @@ pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
         }
     }
 
-    // ---- Step construction (with q→anchor→dq chain fusion) ----
+    // ---- Step construction (with chain fusion) ----
     let mut protos: Vec<ProtoStep> = Vec::new();
     let mut absorbed = vec![false; g.len()];
     let mut fused_chains = 0usize;
-
-    // A node may be absorbed into a chain only if its value has exactly one
-    // consumer (the next chain link) and is not the graph output.
-    let absorbable = |id: NodeId| users[id].len() == 1 && id != g.output;
 
     for node in &g.nodes {
         if absorbed[node.id] || matches!(node.op, Op::Constant(_)) {
@@ -169,27 +241,28 @@ pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
             continue;
         }
 
-        // Try the fused chain starting at a Quantize node.
-        if fuse_qdq {
-            if let Op::Quantize { scale: qscale } = node.op {
-                if let Some(proto) = try_fuse_chain(&g, &users, node.id, qscale, &const_index, absorbable)? {
-                    for &m in &proto.members {
-                        absorbed[m] = true;
-                    }
-                    fused_chains += 1;
-                    protos.push(proto.step);
-                    continue;
+        // Try a fused chain rooted here (quantized or fp32).
+        if fuse {
+            if let Some(chain) = try_fuse_chain(&g, &users, &absorbed, node.id, &const_index)? {
+                for &m in &chain.members {
+                    absorbed[m] = true;
                 }
+                fused_chains += 1;
+                protos.push(chain.step);
+                continue;
             }
         }
 
         // 1:1 lowering.
         let op = match &node.op {
             Op::Input => return Err(anyhow!("compile: multiple input nodes")),
-            Op::Conv2d { stride, padding, layout } => {
-                StepOp::Conv2d { stride: *stride, padding: *padding, layout: *layout }
-            }
-            Op::Dense => StepOp::Dense,
+            Op::Conv2d { stride, padding, layout } => StepOp::Conv2d {
+                stride: *stride,
+                padding: *padding,
+                layout: *layout,
+                epi: Epilogue::default(),
+            },
+            Op::Dense => StepOp::Dense { epi: Epilogue::default() },
             Op::BiasAdd { layout } => StepOp::BiasAdd { layout: *layout },
             Op::Relu => StepOp::Relu,
             Op::Add => StepOp::Add,
@@ -217,28 +290,20 @@ pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
     }
 
     // ---- Lifetimes over the step stream ----
-    // A value's def step is its proto's position; its last use is the last
-    // step consuming it (the output survives past the end).
-    let mut last_use: HashMap<NodeId, usize> = HashMap::new();
-    for (i, p) in protos.iter().enumerate() {
-        for &s in &p.src_nodes {
-            if !const_index.contains_key(&s) {
-                let e = last_use.entry(s).or_insert(i);
-                *e = (*e).max(i);
-            }
-        }
-    }
-    // The output value survives past the last step.
-    last_use.insert(g.output, protos.len());
-
+    // A value is live from its defining step through the last step reading
+    // it.  Residual operands of two-input epilogue steps are among the
+    // step's sources, so `extend_through` keeps them live across the fused
+    // step — the planner then cannot alias them with the destination.
     let mut lives: Vec<ValueLife> = Vec::new();
+    let mut life_idx: HashMap<NodeId, usize> = HashMap::new();
     for (i, p) in protos.iter().enumerate() {
         let ty = &g.nodes[p.def_node].ty;
+        life_idx.insert(p.def_node, lives.len());
         lives.push(ValueLife {
             name: format!("n{}", p.def_node),
             bytes: ty.byte_len(),
             def_step: i,
-            last_use_step: *last_use.get(&p.def_node).unwrap_or(&i),
+            last_use_step: i,
         });
         if p.scratch_bytes > 0 {
             lives.push(ValueLife {
@@ -249,6 +314,18 @@ pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
             });
         }
     }
+    for (i, p) in protos.iter().enumerate() {
+        for &s in &p.src_nodes {
+            if let Some(&li) = life_idx.get(&s) {
+                lives[li].extend_through(i);
+            }
+        }
+    }
+    // The output value survives past the last step.
+    let out_life = *life_idx
+        .get(&g.output)
+        .ok_or_else(|| anyhow!("compile: output is not materialized by any step"))?;
+    lives[out_life].extend_through(protos.len());
 
     let plan = StaticPlan::first_fit_aligned(&lives, ARENA_ALIGN);
     plan.verify().map_err(|e| anyhow!("arena plan invalid: {e}"))?;
@@ -295,6 +372,25 @@ pub fn compile_graph(g: &Graph, fuse_qdq: bool) -> Result<CompiledGraph> {
         });
     }
 
+    // Defense in depth: a two-input epilogue step reads its residual
+    // operand elementwise while writing its destination; re-verify the
+    // plan kept the two byte ranges disjoint.
+    for step in &steps {
+        if !step.op.has_residual() {
+            continue;
+        }
+        if let (Slot::Arena { offset: ro, bytes: rb }, Slot::Arena { offset: d, bytes: db }) =
+            (step.srcs[2].0, step.dst)
+        {
+            if ro < d + db && d < ro + rb {
+                return Err(anyhow!(
+                    "step '{}': residual operand [{ro}+{rb}] aliases destination [{d}+{db}]",
+                    step.name
+                ));
+            }
+        }
+    }
+
     let output_slot = arena_slot(g.output)?;
     Ok(CompiledGraph {
         steps,
@@ -314,86 +410,195 @@ struct FusedChain {
     members: Vec<NodeId>,
 }
 
-/// Match `q → conv/dense(i8 const weight) → dq [→ bias] [→ relu]` rooted at
-/// the quantize node `qid`.  Every interior link must be single-consumer
-/// and not the graph output (the closure `absorbable` checks both).
+/// Match a fusable chain rooted at `start`: either `quantize → anchor(i8
+/// const weight) → dequantize [→ tail]` (rooted at the `Quantize`) or an
+/// f32 `anchor [→ tail]` (rooted at the anchor itself; only fused when the
+/// tail absorbs at least one op).  The shared tail grammar is
+/// `[bias] [add] [relu] [add]` with at most one residual add — see the
+/// module docs for the full rules.
 fn try_fuse_chain(
     g: &Graph,
     users: &[Vec<NodeId>],
-    qid: NodeId,
-    qscale: f32,
+    absorbed: &[bool],
+    start: NodeId,
     const_index: &HashMap<NodeId, usize>,
-    absorbable: impl Fn(NodeId) -> bool,
 ) -> Result<Option<FusedChain>> {
-    if !absorbable(qid) {
+    // A node may be absorbed into a chain only if its value has exactly
+    // one consumer (the next link), is not the graph output, and was not
+    // claimed by an earlier chain.
+    let absorbable = |id: NodeId| users[id].len() == 1 && id != g.output && !absorbed[id];
+
+    // Resolve the anchor: `start` itself (fp32 chain) or the single user
+    // of a starting Quantize (quantized chain).
+    let node = &g.nodes[start];
+    let (qscale, anchor_id) = match node.op {
+        Op::Quantize { scale } => {
+            if !absorbable(start) {
+                return Ok(None);
+            }
+            (Some(scale), users[start][0])
+        }
+        Op::Conv2d { .. } | Op::Dense if node.ty.dtype == IrDType::F32 => (None, start),
+        _ => return Ok(None),
+    };
+    if absorbed[anchor_id] {
         return Ok(None);
     }
-    let anchor_id = users[qid][0];
     let anchor = &g.nodes[anchor_id];
-    // The quantized value must be the anchor's *data* operand and the
-    // weight must be a pre-quantized i8 constant.
     let (is_conv, stride, padding) = match anchor.op {
         Op::Conv2d { stride, padding, layout: Layout::Nchw } => (true, stride, padding),
         Op::Dense => (false, 0, 0),
         _ => return Ok(None),
     };
-    if anchor.inputs.len() != 2 || anchor.inputs[0] != qid {
+    if anchor.inputs.len() != 2 {
         return Ok(None);
     }
     let wid = anchor.inputs[1];
-    if g.nodes[wid].ty.dtype != IrDType::S8 || !const_index.contains_key(&wid) {
-        return Ok(None);
-    }
-    if !absorbable(anchor_id) {
-        return Ok(None);
-    }
-    let dq_id = users[anchor_id][0];
-    let dqscale = match g.nodes[dq_id].op {
-        Op::Dequantize { scale } => scale,
-        _ => return Ok(None),
-    };
 
-    // Greedily absorb the elementwise tail.
-    let mut members = vec![qid, anchor_id, dq_id];
-    let mut tail = dq_id;
+    let mut members: Vec<NodeId> = Vec::new();
+    let mut tail;
+    let mut dqscale = 0f32;
+    if qscale.is_some() {
+        // The quantized value must be the anchor's *data* operand and the
+        // weight must be a pre-quantized i8 constant.
+        if anchor.inputs[0] != start {
+            return Ok(None);
+        }
+        if g.nodes[wid].ty.dtype != IrDType::S8 || !const_index.contains_key(&wid) {
+            return Ok(None);
+        }
+        if !absorbable(anchor_id) {
+            return Ok(None);
+        }
+        let dq_id = users[anchor_id][0];
+        match g.nodes[dq_id].op {
+            Op::Dequantize { scale } if !absorbed[dq_id] => dqscale = scale,
+            _ => return Ok(None),
+        }
+        members.extend([start, anchor_id, dq_id]);
+        tail = dq_id;
+    } else {
+        members.push(anchor_id);
+        tail = anchor_id;
+    }
+
+    // ---- Shared epilogue tail: [bias] [add] [relu] [add] ----
     let mut epi = Epilogue::default();
+    let mut residual_src: Option<NodeId> = None;
+
+    // Per-channel f32 constant bias (conv only: BiasAdd needs rank 4).
     if is_conv && absorbable(tail) {
         let cand = users[tail][0];
         if let Op::BiasAdd { layout: Layout::Nchw } = g.nodes[cand].op {
-            if g.nodes[cand].inputs[0] == tail {
-                if let Some(&bci) = const_index.get(&g.nodes[cand].inputs[1]) {
-                    if g.nodes[g.nodes[cand].inputs[1]].ty.dtype == IrDType::F32 {
-                        epi.bias = Some(bci);
-                        members.push(cand);
-                        tail = cand;
-                    }
+            let b = g.nodes[cand].inputs[1];
+            if !absorbed[cand]
+                && g.nodes[cand].inputs[0] == tail
+                && g.nodes[b].ty.dtype == IrDType::F32
+            {
+                if let Some(&bci) = const_index.get(&b) {
+                    epi.bias = Some(bci);
+                    members.push(cand);
+                    tail = cand;
                 }
             }
         }
     }
+    // Residual add before the relu (ResNet block tail).
+    if let Some((cand, r, chain_lhs)) = match_residual(g, users, &absorbable, absorbed, tail, start)
+    {
+        epi.residual = Some(Residual { pre_relu: true, chain_lhs });
+        residual_src = Some(r);
+        members.push(cand);
+        tail = cand;
+    }
+    // Relu.
     if absorbable(tail) {
         let cand = users[tail][0];
-        if matches!(g.nodes[cand].op, Op::Relu) {
+        if matches!(g.nodes[cand].op, Op::Relu) && !absorbed[cand] {
             epi.relu = true;
             members.push(cand);
             tail = cand;
         }
     }
+    // Residual add after the relu (only if the pre-relu slot is empty).
+    if epi.residual.is_none() {
+        if let Some((cand, r, chain_lhs)) =
+            match_residual(g, users, &absorbable, absorbed, tail, start)
+        {
+            epi.residual = Some(Residual { pre_relu: false, chain_lhs });
+            residual_src = Some(r);
+            members.push(cand);
+            tail = cand;
+        }
+    }
 
-    let op = if is_conv {
-        StepOp::QConv2d { qscale, dqscale, stride, padding, epi }
-    } else {
-        StepOp::QDense { qscale, dqscale, epi }
+    let (op, data_id, scratch_bytes) = match qscale {
+        Some(qs) => {
+            let op = if is_conv {
+                StepOp::QConv2d { qscale: qs, dqscale, stride, padding, epi }
+            } else {
+                StepOp::QDense { qscale: qs, dqscale, epi }
+            };
+            // Scratch holds the quantized (i8) input for exactly this step.
+            (op, g.nodes[start].inputs[0], g.nodes[start].ty.byte_len())
+        }
+        None => {
+            // An fp32 anchor with an empty tail is already its own fused
+            // form — leave it to 1:1 lowering.
+            if members.len() == 1 {
+                return Ok(None);
+            }
+            let op = if is_conv {
+                StepOp::Conv2d { stride, padding, layout: Layout::Nchw, epi }
+            } else {
+                StepOp::Dense { epi }
+            };
+            (op, anchor.inputs[0], 0)
+        }
     };
-    let data_id = g.nodes[qid].inputs[0];
+
+    let mut src_nodes = vec![data_id, wid];
+    if let Some(r) = residual_src {
+        src_nodes.push(r);
+    }
     Ok(Some(FusedChain {
         step: ProtoStep {
             op,
-            src_nodes: vec![data_id, wid],
+            src_nodes,
             def_node: tail,
-            scratch_bytes: g.nodes[qid].ty.byte_len(),
+            scratch_bytes,
             name: format!("{}+fused", anchor.name),
         },
         members,
     }))
+}
+
+/// Match a residual `Add` hanging off `tail`.  Returns `(add node, other
+/// operand, chain_lhs)`.  The other operand must already be materialized
+/// when the fused step executes: a constant, or a node with an id below
+/// the chain's `start` (steps are emitted in node-id order of their first
+/// member, so a smaller id guarantees an earlier step — including when the
+/// operand is itself the tail of an earlier fused chain).
+fn match_residual(
+    g: &Graph,
+    users: &[Vec<NodeId>],
+    absorbable: &impl Fn(NodeId) -> bool,
+    absorbed: &[bool],
+    tail: NodeId,
+    start: NodeId,
+) -> Option<(NodeId, NodeId, bool)> {
+    if !absorbable(tail) {
+        return None;
+    }
+    let cand = users[tail][0];
+    let n = &g.nodes[cand];
+    if absorbed[cand] || !matches!(n.op, Op::Add) || n.ty.dtype != IrDType::F32 {
+        return None;
+    }
+    let r = n.other_input(tail)?;
+    if r < start || matches!(g.nodes[r].op, Op::Constant(_)) {
+        Some((cand, r, n.inputs[0] == tail))
+    } else {
+        None
+    }
 }

@@ -349,33 +349,14 @@ fn dense(x: &TensorData, w: &TensorData) -> Result<TensorData> {
     }
 }
 
+/// Thin allocating wrapper over the shared core (`graph::kernels`) — the
+/// arena executor runs the identical loop over its pre-placed windows, so
+/// the two tiers cannot drift.
 fn bias_add(x: &TensorData, b: &TensorData, layout: Layout) -> Result<TensorData> {
-    let xv = x.as_f32()?;
-    let bv = b.as_f32()?;
-    let (_, c, _, _) = dims_of(&x.shape, layout)?;
-    let mut out = xv;
-    match layout {
-        Layout::Nchw => {
-            let hw: usize = x.shape[2] * x.shape[3];
-            for (i, v) in out.iter_mut().enumerate() {
-                *v += bv[(i / hw) % c];
-            }
-        }
-        Layout::Nhwc => {
-            for (i, v) in out.iter_mut().enumerate() {
-                *v += bv[i % c];
-            }
-        }
-        Layout::Nchwc(cb) => {
-            let hw = x.shape[2] * x.shape[3];
-            let co = x.shape[1];
-            for (i, v) in out.iter_mut().enumerate() {
-                let ci = i % cb;
-                let oc = (i / (cb * hw)) % co;
-                *v += bv[oc * cb + ci];
-            }
-        }
-    }
+    let xv = x.as_f32_slice()?;
+    let bv = b.as_f32_slice()?;
+    let mut out = vec![0f32; xv.len()];
+    super::kernels::bias_add_f32(xv, &x.shape, bv, layout, &mut out)?;
     TensorData::from_f32(x.shape.clone(), &out)
 }
 
@@ -423,6 +404,7 @@ fn add(a: &TensorData, b: &TensorData) -> Result<TensorData> {
     }
 }
 
+/// Shared-core wrapper; see [`bias_add`].
 fn maxpool(
     x: &TensorData,
     window: usize,
@@ -431,75 +413,20 @@ fn maxpool(
     layout: Layout,
     out_shape: &[usize],
 ) -> Result<TensorData> {
-    let xv = x.as_f32()?;
-    let (n, c, h, w) = dims_of(&x.shape, layout)?;
-    let (_, _, oh, ow) = dims_of(out_shape, layout)?;
-    let get = |ni: usize, ci: usize, y: usize, xx: usize| -> f32 {
-        match layout {
-            Layout::Nchw => xv[((ni * c + ci) * h + y) * w + xx],
-            Layout::Nhwc => xv[((ni * h + y) * w + xx) * c + ci],
-            Layout::Nchwc(cb) => {
-                let co = ci / cb;
-                let cl = ci % cb;
-                xv[((((ni * (c / cb)) + co) * h + y) * w + xx) * cb + cl]
-            }
-        }
-    };
-    let mut out = vec![f32::NEG_INFINITY; out_shape.iter().product()];
-    for ni in 0..n {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for ry in 0..window {
-                        let iy = oy * stride + ry;
-                        if iy < padding || iy >= h + padding {
-                            continue;
-                        }
-                        for rx in 0..window {
-                            let ix = ox * stride + rx;
-                            if ix < padding || ix >= w + padding {
-                                continue;
-                            }
-                            m = m.max(get(ni, ci, iy - padding, ix - padding));
-                        }
-                    }
-                    let oi = match layout {
-                        Layout::Nchw => ((ni * c + ci) * oh + oy) * ow + ox,
-                        Layout::Nhwc => ((ni * oh + oy) * ow + ox) * c + ci,
-                        Layout::Nchwc(cb) => {
-                            ((((ni * (c / cb)) + ci / cb) * oh + oy) * ow + ox) * cb + ci % cb
-                        }
-                    };
-                    out[oi] = m;
-                }
-            }
-        }
-    }
+    let xv = x.as_f32_slice()?;
+    let mut out = vec![0f32; out_shape.iter().product()];
+    super::kernels::maxpool_f32(
+        xv, &x.shape, window, stride, padding, layout, &mut out, out_shape,
+    )?;
     TensorData::from_f32(out_shape.to_vec(), &out)
 }
 
+/// Shared-core wrapper; see [`bias_add`].
 fn global_avgpool(x: &TensorData, layout: Layout) -> Result<TensorData> {
-    let xv = x.as_f32()?;
-    let (n, c, h, w) = dims_of(&x.shape, layout)?;
+    let xv = x.as_f32_slice()?;
+    let (n, c, _, _) = dims_of(&x.shape, layout)?;
     let mut out = vec![0f32; n * c];
-    for ni in 0..n {
-        for ci in 0..c {
-            let mut s = 0f32;
-            for y in 0..h {
-                for xx in 0..w {
-                    s += match layout {
-                        Layout::Nchw => xv[((ni * c + ci) * h + y) * w + xx],
-                        Layout::Nhwc => xv[((ni * h + y) * w + xx) * c + ci],
-                        Layout::Nchwc(cb) => {
-                            xv[((((ni * (c / cb)) + ci / cb) * h + y) * w + xx) * cb + ci % cb]
-                        }
-                    };
-                }
-            }
-            out[ni * c + ci] = s / (h * w) as f32;
-        }
-    }
+    super::kernels::global_avgpool_f32(xv, &x.shape, layout, &mut out)?;
     TensorData::from_f32(vec![n, c], &out)
 }
 

@@ -145,6 +145,19 @@ pub struct Node {
     pub ty: TensorTy,
 }
 
+impl Node {
+    /// For a binary node, the operand that is not `id`.  `None` when the
+    /// node is not binary, `id` is not an operand, or both operands are
+    /// `id` (so callers never mistake `add(x, x)` for a residual link).
+    pub fn other_input(&self, id: NodeId) -> Option<NodeId> {
+        match self.inputs.as_slice() {
+            &[a, b] if a == id && b != id => Some(b),
+            &[a, b] if b == id && a != id => Some(a),
+            _ => None,
+        }
+    }
+}
+
 /// Append-only dataflow graph; node ids are topologically ordered by
 /// construction (inputs always precede users).
 #[derive(Debug, Clone, Default)]

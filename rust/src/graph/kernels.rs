@@ -1,0 +1,102 @@
+//! Shared slice-level operator cores.
+//!
+//! The reference interpreter ([`super::interp`]) and the arena executor
+//! ([`crate::executor::ArenaExec`]) must agree **bit-for-bit**; for the
+//! elementwise/pooling operators whose loop order is the entire semantic
+//! content, keeping two hand-synchronized twin loops was an invitation to
+//! drift (ROADMAP item).  These cores are that single source of truth:
+//! the interpreter calls them through allocating wrappers, the executor
+//! through pre-placed arena windows.  All index arithmetic goes through
+//! [`super::ir::layout_offset`].
+
+use anyhow::Result;
+
+use super::ir::{dims_of, Layout, layout_offset};
+
+/// Per-channel bias: `out[i] = x[i] + b[channel(i)]` under `layout`.
+pub fn bias_add_f32(
+    x: &[f32], xs: &[usize], b: &[f32], layout: Layout, out: &mut [f32],
+) -> Result<()> {
+    let (_, c, _, _) = dims_of(xs, layout)?;
+    match layout {
+        Layout::Nchw => {
+            let hw = xs[2] * xs[3];
+            for (i, d) in out.iter_mut().enumerate() {
+                *d = x[i] + b[(i / hw) % c];
+            }
+        }
+        Layout::Nhwc => {
+            for (i, d) in out.iter_mut().enumerate() {
+                *d = x[i] + b[i % c];
+            }
+        }
+        Layout::Nchwc(cb) => {
+            let hw = xs[2] * xs[3];
+            let co = xs[1];
+            for (i, d) in out.iter_mut().enumerate() {
+                let ci = i % cb;
+                let oc = (i / (cb * hw)) % co;
+                *d = x[i] + b[oc * cb + ci];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Windowed max pooling; every output element is written.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_f32(
+    x: &[f32], xs: &[usize], window: usize, stride: usize, padding: usize,
+    layout: Layout, out: &mut [f32], os: &[usize],
+) -> Result<()> {
+    let (n, c, h, w) = dims_of(xs, layout)?;
+    let (_, _, oh, ow) = dims_of(os, layout)?;
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ry in 0..window {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        for rx in 0..window {
+                            let ix = ox * stride + rx;
+                            if ix < padding || ix >= w + padding {
+                                continue;
+                            }
+                            m = m.max(
+                                x[layout_offset(
+                                    layout, c, h, w, ni, ci, iy - padding, ix - padding,
+                                )],
+                            );
+                        }
+                    }
+                    out[layout_offset(layout, c, oh, ow, ni, ci, oy, ox)] = m;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Global average pooling to `(N, C)`; accumulation order is h-major,
+/// which is observable in f32 and therefore fixed here for both tiers.
+pub fn global_avgpool_f32(
+    x: &[f32], xs: &[usize], layout: Layout, out: &mut [f32],
+) -> Result<()> {
+    let (n, c, h, w) = dims_of(xs, layout)?;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut s = 0f32;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x[layout_offset(layout, c, h, w, ni, ci, y, xx)];
+                }
+            }
+            out[ni * c + ci] = s / (h * w) as f32;
+        }
+    }
+    Ok(())
+}

@@ -18,6 +18,7 @@ pub mod builder;
 pub mod compile;
 pub mod interp;
 pub mod ir;
+pub mod kernels;
 pub mod passes;
 
 pub use builder::{build_conv_net, build_resnet_ir, calibrate_ir, NetSpec, StageSpec};

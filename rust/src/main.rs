@@ -39,7 +39,20 @@ COMMANDS:
   bench-arena       Arena executor vs interpreter      [--batches 1,8 --image 32
                     --threads 1 --epochs 20 --warmup 3 | --quick]
   compile-demo      In-process graph-IR pass pipeline  [--batch 1 --c-block 16]
+
+The arena commands default --threads to the TVMQ_THREADS env var (else 1);
+threads > 1 uses the executor's persistent worker pool.
 ";
+
+/// Default kernel fan-out for the arena tier: the `TVMQ_THREADS` env var
+/// (what the CI pool-path job sets) falling back to single-threaded.
+fn env_threads() -> usize {
+    std::env::var("TVMQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
 
 fn main() -> Result<()> {
     let args = Args::parse()?;
@@ -167,7 +180,7 @@ fn print_arena_ablation(args: &Args) -> Result<()> {
         &arena_opts,
         &args.usize_list("batches", if quick { &[1, 2] } else { &[1, 8] })?,
         args.usize("image", if quick { 16 } else { 32 })?,
-        args.usize("threads", 1)?,
+        args.usize("threads", env_threads())?,
     )?
     .print();
     Ok(())
@@ -182,7 +195,7 @@ fn run_arena(args: &Args) -> Result<()> {
 
     let batch = args.usize("batch", 1)?;
     let image = args.usize("image", 32)?;
-    let threads = args.usize("threads", 1)?;
+    let threads = args.usize("threads", env_threads())?;
     let precision = args.str("precision", "int8");
     let seed = args.u64("seed", 42)?;
 

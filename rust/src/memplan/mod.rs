@@ -26,6 +26,18 @@ pub struct ValueLife {
     pub last_use_step: usize,
 }
 
+impl ValueLife {
+    /// Extend this value's liveness through `step` (no-op if it already
+    /// reaches that far).  The graph compiler calls this for every step
+    /// source — crucially including the residual operand of a two-input
+    /// epilogue step, which is read elementwise while the step's
+    /// destination is written and therefore must overlap the destination's
+    /// lifetime so the planner keeps the two space-disjoint.
+    pub fn extend_through(&mut self, step: usize) {
+        self.last_use_step = self.last_use_step.max(step);
+    }
+}
+
 /// A placed value: offset into the arena.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
@@ -131,7 +143,12 @@ impl StaticPlan {
             .iter()
             .map(|v| ValueLife { bytes: round_up(v.bytes.max(1), align), ..v.clone() })
             .collect();
-        Self::first_fit(&rounded)
+        let mut plan = Self::first_fit(&rounded);
+        // The no-reuse baseline is what a dynamic allocator would request:
+        // the exact byte sizes, not the alignment-rounded extents (rounding
+        // them too would overstate the reuse factor for small values).
+        plan.unshared_bytes = lives.iter().map(|v| v.bytes).sum();
+        plan
     }
 
     /// Offset+size lookup by value name (the compile step resolves node
@@ -163,6 +180,16 @@ impl StaticPlan {
             }
         }
         Ok(())
+    }
+
+    /// Whether the placements named `a` and `b` occupy disjoint byte
+    /// ranges (ignoring lifetimes).  `None` if either name is absent.
+    /// Used to assert that a two-input epilogue step's residual operand
+    /// cannot alias the step's destination.
+    pub fn space_disjoint(&self, a: &str, b: &str) -> Option<bool> {
+        let pa = self.placements.iter().find(|p| p.name == a)?;
+        let pb = self.placements.iter().find(|p| p.name == b)?;
+        Some(pa.offset + pa.bytes <= pb.offset || pb.offset + pb.bytes <= pa.offset)
     }
 
     /// Reuse ratio achieved by the planner (1.0 = no reuse).

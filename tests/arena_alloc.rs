@@ -2,20 +2,28 @@
 //!
 //! This lives in its own integration-test binary so the counting global
 //! allocator and its counter see no traffic from unrelated tests running
-//! in sibling threads.  With `threads == 1` (scoped-thread fan-out
-//! disabled — spawning itself allocates), `ArenaExec::run_into` must
-//! perform **zero heap allocations after warm-up**: every intermediate
-//! lives at a pre-planned arena offset.
+//! in sibling threads (the tests here serialize against each other via
+//! `SERIAL`).  `ArenaExec::run_into` must perform **zero heap allocations
+//! after warm-up** at every thread count: every intermediate lives at a
+//! pre-planned arena offset, and at `threads > 1` the kernels fan out
+//! over the executor's *persistent* worker pool — workers are spawned at
+//! build time and each dispatch goes through a futex-backed mutex/condvar
+//! slot, which allocates nothing.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use tvmq::executor::ArenaExec;
 use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
-use tvmq::graph::{build_conv_net, calibrate_ir, NetSpec};
+use tvmq::graph::{build_conv_net, calibrate_ir, Graph, NetSpec};
 use tvmq::runtime::TensorData;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// The counting window is process-global, so the tests in this binary
+/// must not overlap; each takes this lock for its whole body.
+static SERIAL: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
@@ -45,16 +53,9 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
-#[test]
-fn run_into_is_allocation_free_after_warmup() {
-    // Quantized graph: exercises the fused q→conv→dq path and scratch use.
-    let g = build_conv_net(&NetSpec::small(1)).unwrap();
-    let calib = calibrate_ir(&g, 1);
-    let scales = calibrate_graph(&g, &calib).unwrap();
-    let qg = QuantizeRealize { scales }.run(&g).unwrap();
-
-    let exec = ArenaExec::with_options(&qg, true, 1).unwrap();
-    let x = calibrate_ir(&qg, 2);
+/// Run `exec` to a steady state, then assert 5 further inferences
+/// allocate nothing and still produce finite output.
+fn assert_zero_alloc_steady_state(exec: &ArenaExec, x: &TensorData, tag: &str) {
     let mut out = TensorData::zeros(
         tvmq::runtime::DType::F32,
         exec.compiled().output_ty.shape.clone(),
@@ -62,21 +63,70 @@ fn run_into_is_allocation_free_after_warmup() {
 
     // Warm-up (first runs may fault in lazily-mapped arena pages; they must
     // not allocate either, but only the steady state is the contract).
-    exec.run_into(&x, &mut out).unwrap();
-    exec.run_into(&x, &mut out).unwrap();
+    exec.run_into(x, &mut out).unwrap();
+    exec.run_into(x, &mut out).unwrap();
 
     let before = ALLOCS.load(Ordering::SeqCst);
     for _ in 0..5 {
-        exec.run_into(&x, &mut out).unwrap();
+        exec.run_into(x, &mut out).unwrap();
     }
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "ArenaExec::run_into allocated {} times across 5 inferences",
+        "{tag}: ArenaExec::run_into allocated {} times across 5 inferences",
         after - before
     );
 
     // The result is still the real one (guards against dead-code tricks).
     assert!(out.as_f32_slice().unwrap().iter().all(|v| v.is_finite()));
+}
+
+fn quantized(g: &Graph) -> Graph {
+    let calib = calibrate_ir(g, 1);
+    let scales = calibrate_graph(g, &calib).unwrap();
+    QuantizeRealize { scales }.run(g).unwrap()
+}
+
+#[test]
+fn run_into_is_allocation_free_after_warmup() {
+    let _serial = SERIAL.lock().unwrap();
+    // Quantized graph: exercises the fused q→conv→dq path and scratch use.
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let qg = quantized(&g);
+
+    let exec = ArenaExec::with_options(&qg, true, 1).unwrap();
+    let x = calibrate_ir(&qg, 2);
+    assert_zero_alloc_steady_state(&exec, &x, "int8 t1");
+}
+
+#[test]
+fn run_into_is_allocation_free_with_worker_pool_and_fused_residual() {
+    let _serial = SERIAL.lock().unwrap();
+    let threads = std::env::var("TVMQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 2)
+        .unwrap_or(4);
+
+    // NetSpec::small has a same-channel stride-1 residual stage, so the
+    // fp32 graph compiles conv+bias+relu chains *and* a two-input
+    // residual-Add epilogue; the quantized twin fuses the same tail onto
+    // its q→conv→dq chains.
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let qg = quantized(&g);
+
+    for (tag, graph) in [("fp32", &g), ("int8", &qg)] {
+        let exec = ArenaExec::with_options(graph, true, threads).unwrap();
+        assert!(
+            exec.compiled().steps.iter().any(|s| s.op.has_residual()),
+            "{tag}: expected a fused residual-Add epilogue step"
+        );
+        assert!(
+            exec.compiled().fused_chains > 0,
+            "{tag}: expected fused chains"
+        );
+        let x = calibrate_ir(graph, 3);
+        assert_zero_alloc_steady_state(&exec, &x, &format!("{tag} t{threads}"));
+    }
 }

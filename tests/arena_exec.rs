@@ -51,9 +51,54 @@ fn prop_arena_matches_interp_fp32_random_nets() {
         let x = calibrate_ir(&g, rng.next_u64());
         for threads in [1usize, 2, 4] {
             let exec = ArenaExec::with_options(&g, true, threads).unwrap();
+            assert!(
+                exec.compiled().fused_chains > 0,
+                "case {case}: fp32 conv+bias+relu chains must fuse"
+            );
             assert_matches_oracle(&g, &x, &exec, &format!("fp32 case {case} t{threads}"));
         }
     }
+}
+
+#[test]
+fn fp32_chains_compile_to_single_fused_steps() {
+    // NetSpec::small: three conv+bias+relu stages (the middle one with a
+    // residual skip) + gap + dense.  With generalized fusion each stage
+    // collapses into ONE epilogue step: load, 3 fused convs, gap, fc.
+    use tvmq::graph::compile::Slot;
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let exec = ArenaExec::compile(&g).unwrap();
+    let cg = exec.compiled();
+    assert_eq!(cg.fused_chains, 3, "three fp32 conv chains should fuse");
+    assert_eq!(
+        cg.steps.len(),
+        6,
+        "expected load + 3 fused convs + gap + fc, got: {:?}",
+        cg.steps.iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+    );
+
+    // The residual stage became a two-input epilogue step whose third
+    // source (the skip value) must stay live through the step — i.e. the
+    // planner may not alias it with the destination (regression for the
+    // two-input lifetime extension).
+    let res_steps: Vec<_> = cg.steps.iter().filter(|s| s.op.has_residual()).collect();
+    assert_eq!(res_steps.len(), 1, "exactly one residual stage in NetSpec::small");
+    let step = res_steps[0];
+    assert_eq!(step.srcs.len(), 3, "residual epilogue carries a third operand");
+    let (Slot::Arena { offset: ro, bytes: rb }, _) = &step.srcs[2] else {
+        panic!("residual operand should live in the arena");
+    };
+    let Slot::Arena { offset: d, bytes: db } = step.dst else {
+        panic!("destination should live in the arena");
+    };
+    assert!(
+        ro + rb <= d || d + db <= *ro,
+        "residual operand [{ro}+{rb}] aliases the fused step's dst [{d}+{db}]"
+    );
+
+    // And the fused program still matches the oracle bit-for-bit.
+    let x = calibrate_ir(&g, 21);
+    assert_matches_oracle(&g, &x, &exec, "fp32 fused-shape");
 }
 
 #[test]

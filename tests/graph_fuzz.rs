@@ -1,0 +1,210 @@
+//! Randomized differential harness: seeded generator of valid mixed
+//! fp32/int8 graphs (conv / dense / bias / relu / residual add / pool
+//! chains), each executed by `ArenaExec::run_into` — fused and unfused —
+//! and compared **bit-for-bit** (`TensorData` equality is raw bytes)
+//! against the `graph::interp::evaluate` oracle across thread counts
+//! 1 / 2 / 4 (plus `TVMQ_THREADS`, which the CI pool-path job sets).
+//!
+//! This is what pins the generalized fusion layer: fp32 epilogues,
+//! two-input residual steps in both positions (pre- and post-relu, both
+//! operand orders), quantized chains, and the persistent worker pool all
+//! get exercised by the same 200-seed corpus on every run.
+
+use tvmq::executor::ArenaExec;
+use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+use tvmq::graph::{calibrate_ir, evaluate, Graph, Layout, NodeId, Op, TensorTy};
+use tvmq::runtime::TensorData;
+use tvmq::util::rng::Rng64;
+
+/// Fixed seed set: seeds `BASE ^ 0 .. BASE ^ 199`, fully deterministic.
+const BASE_SEED: u64 = 0x9d5a_b5e1_7c3f_0211;
+const CASES: u64 = 200;
+
+/// Thread counts under test; `TVMQ_THREADS` adds an extra width so CI can
+/// force the pool path without editing the seed corpus.
+fn thread_counts() -> Vec<usize> {
+    let mut t = vec![1usize, 2, 4];
+    if let Ok(v) = std::env::var("TVMQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 && !t.contains(&n) {
+                t.push(n);
+            }
+        }
+    }
+    t
+}
+
+/// Residual add with randomized operand order (both orders must fuse and
+/// stay bit-exact — float addition is not bit-commutative for NaN, so the
+/// executor preserves the graph's order).
+fn add_residual(g: &mut Graph, rng: &mut Rng64, name: String, t: NodeId, skip: NodeId) -> NodeId {
+    let inputs = if rng.bool() { vec![t, skip] } else { vec![skip, t] };
+    g.add(name, Op::Add, inputs).unwrap()
+}
+
+/// A random NCHW net: stacked conv stages with optional bias / relu /
+/// residual (pre- or post-relu) / maxpool, closed by gap + dense
+/// (+ optional relu).
+fn random_graph(rng: &mut Rng64) -> Graph {
+    let mut g = Graph::new();
+    let batch = rng.range_usize(1, 2);
+    let mut image = rng.range_usize(5, 9);
+    let mut c = rng.range_usize(1, 4);
+    let x = g.add_input("x", TensorTy::f32(vec![batch, c, image, image]));
+    let mut cur = x;
+    for i in 0..rng.range_usize(1, 3) {
+        let kernel = [1usize, 3][rng.range_usize(0, 1)];
+        let pad = kernel / 2;
+        let stride = rng.range_usize(1, 2);
+        // Half the stages keep the channel count so residual links stay
+        // shape-compatible.
+        let cout = if rng.bool() { c } else { [2usize, 4, 8][rng.range_usize(0, 2)] };
+        let w: Vec<f32> = (0..cout * c * kernel * kernel)
+            .map(|_| rng.normal() * 0.3)
+            .collect();
+        let wid = g
+            .add_const_f32(format!("c{i}.w"), vec![cout, c, kernel, kernel], w)
+            .unwrap();
+        let conv = g
+            .add(
+                format!("c{i}"),
+                Op::Conv2d { stride, padding: pad, layout: Layout::Nchw },
+                vec![cur, wid],
+            )
+            .unwrap();
+        let mut t = conv;
+        if rng.bool() {
+            let b: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+            let bid = g.add_const_f32(format!("c{i}.b"), vec![cout], b).unwrap();
+            t = g
+                .add(format!("c{i}.bias"), Op::BiasAdd { layout: Layout::Nchw }, vec![t, bid])
+                .unwrap();
+        }
+        // kernel 1 or 3 with pad = kernel/2 and stride 1 preserves the
+        // spatial dims, so a same-channel stride-1 stage supports a
+        // residual link back to its input.
+        let res_ok = stride == 1 && cout == c;
+        let pre_relu = rng.bool();
+        if res_ok && pre_relu && rng.bool() {
+            t = add_residual(&mut g, rng, format!("c{i}.addpre"), t, cur);
+        }
+        if rng.bool() {
+            t = g.add(format!("c{i}.relu"), Op::Relu, vec![t]).unwrap();
+        }
+        if res_ok && !pre_relu && rng.bool() {
+            t = add_residual(&mut g, rng, format!("c{i}.addpost"), t, cur);
+        }
+        cur = t;
+        c = cout;
+        image = g.node(conv).ty.shape[2];
+        if rng.bool() && image >= 2 {
+            cur = g
+                .add(
+                    format!("c{i}.pool"),
+                    Op::MaxPool { window: 2, stride: 2, padding: 0, layout: Layout::Nchw },
+                    vec![cur],
+                )
+                .unwrap();
+            image = g.node(cur).ty.shape[2];
+        }
+    }
+    let gap = g
+        .add("gap", Op::GlobalAvgPool { layout: Layout::Nchw }, vec![cur])
+        .unwrap();
+    let classes = rng.range_usize(2, 6);
+    let fw: Vec<f32> = (0..c * classes).map(|_| rng.normal() * 0.3).collect();
+    let fwid = g.add_const_f32("fc.w", vec![c, classes], fw).unwrap();
+    let mut out = g.add("fc", Op::Dense, vec![gap, fwid]).unwrap();
+    if rng.bool() {
+        out = g.add("fc.relu", Op::Relu, vec![out]).unwrap();
+    }
+    g.output = out;
+    g.validate().unwrap();
+    g
+}
+
+/// Half the corpus is quantize-realized — and only a *random subset* of
+/// the anchors, so the executor sees genuinely mixed fp32/int8 graphs
+/// (quantized chains feeding fp32 chains and vice versa).
+fn maybe_quantize(g: &Graph, rng: &mut Rng64) -> Graph {
+    if !rng.bool() {
+        return g.clone();
+    }
+    let calib = calibrate_ir(g, rng.next_u64());
+    let mut scales = calibrate_graph(g, &calib).unwrap();
+    // HashMap iteration order is unseeded; decide per sorted key so the
+    // chosen subset is a pure function of the case seed.
+    let mut keys: Vec<NodeId> = scales.keys().copied().collect();
+    keys.sort_unstable();
+    for k in keys {
+        if !rng.bool() {
+            scales.remove(&k);
+        }
+    }
+    QuantizeRealize { scales }.run(g).unwrap()
+}
+
+#[test]
+fn fuzz_arena_matches_oracle_across_threads() {
+    let threads = thread_counts();
+    let mut fused_chains = 0usize;
+    let mut residual_steps = 0usize;
+    for case in 0..CASES {
+        let mut rng = Rng64::seed_from_u64(BASE_SEED ^ case);
+        let g = random_graph(&mut rng);
+        let g = maybe_quantize(&g, &mut rng);
+        let x = calibrate_ir(&g, rng.next_u64());
+        let want = evaluate(&g, &x)
+            .unwrap_or_else(|e| panic!("case {case}: oracle failed: {e}"));
+        for &t in &threads {
+            // The unfused ablation is thread-independent; one width
+            // suffices for it.
+            for fuse in [true, false] {
+                if !fuse && t != 1 {
+                    continue;
+                }
+                let exec = ArenaExec::with_options(&g, fuse, t)
+                    .unwrap_or_else(|e| panic!("case {case} t{t} fuse={fuse}: compile failed: {e}"));
+                if fuse && t == 1 {
+                    let cg = exec.compiled();
+                    fused_chains += cg.fused_chains;
+                    residual_steps +=
+                        cg.steps.iter().filter(|s| s.op.has_residual()).count();
+                }
+                let mut out = TensorData::zeros(want.dtype, want.shape.clone());
+                exec.run_into(&x, &mut out)
+                    .unwrap_or_else(|e| panic!("case {case} t{t} fuse={fuse}: run failed: {e}"));
+                assert_eq!(
+                    want, out,
+                    "case {case} t{t} fuse={fuse}: arena diverged from the oracle"
+                );
+            }
+        }
+    }
+    // The corpus must actually exercise the generalized fusion layer —
+    // plenty of fused chains, including two-input residual epilogues.
+    assert!(
+        fused_chains >= CASES as usize,
+        "corpus fused only {fused_chains} chains across {CASES} cases"
+    );
+    assert!(
+        residual_steps >= 10,
+        "corpus fused only {residual_steps} residual epilogues"
+    );
+}
+
+#[test]
+fn fuzz_generator_is_deterministic() {
+    // The CI seed set must mean the same graphs everywhere.
+    for case in [0u64, 63, 199] {
+        let mut a = Rng64::seed_from_u64(BASE_SEED ^ case);
+        let mut b = Rng64::seed_from_u64(BASE_SEED ^ case);
+        let ga = maybe_quantize(&random_graph(&mut a), &mut a);
+        let gb = maybe_quantize(&random_graph(&mut b), &mut b);
+        assert_eq!(ga.len(), gb.len());
+        let xa = calibrate_ir(&ga, a.next_u64());
+        let xb = calibrate_ir(&gb, b.next_u64());
+        assert_eq!(xa, xb);
+        assert_eq!(evaluate(&ga, &xa).unwrap(), evaluate(&gb, &xb).unwrap());
+    }
+}

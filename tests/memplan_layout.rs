@@ -59,6 +59,34 @@ fn overlapping_lifetimes_get_distinct_space() {
 }
 
 #[test]
+fn residual_lifetime_extension_forces_disjoint_slots() {
+    // The two-input epilogue scenario: a fused step at step 2 writes `dst`
+    // while reading residual `r` elementwise.  If `r`'s life ends at its
+    // last *graph* use (step 1, where the pre-fusion Add consumed it), the
+    // planner is free to alias the two — exactly the hazard:
+    let r_short = ValueLife { name: "r".into(), bytes: 128, def_step: 0, last_use_step: 1 };
+    let dst = ValueLife { name: "dst".into(), bytes: 128, def_step: 2, last_use_step: 3 };
+    let hazard = StaticPlan::first_fit(&[r_short.clone(), dst.clone()]);
+    assert_eq!(
+        hazard.space_disjoint("r", "dst"),
+        Some(false),
+        "without the extension the planner reuses r's slot for dst"
+    );
+
+    // The compiler extends every step source through its consuming step —
+    // including the residual — which makes aliasing impossible.
+    let mut r = r_short;
+    r.extend_through(2);
+    assert_eq!(r.last_use_step, 2);
+    r.extend_through(1); // never shrinks
+    assert_eq!(r.last_use_step, 2);
+    let plan = StaticPlan::first_fit(&[r, dst]);
+    plan.verify().unwrap();
+    assert_eq!(plan.space_disjoint("r", "dst"), Some(true));
+    assert_eq!(plan.space_disjoint("r", "nope"), None);
+}
+
+#[test]
 fn verify_catches_bad_plan() {
     let mut plan = StaticPlan::first_fit(&[
         ValueLife { name: "a".into(), bytes: 10, def_step: 0, last_use_step: 2 },
