@@ -3,6 +3,7 @@
 //! the footprint model (intermediates fp32 in both precisions, §3.2.2).
 
 use tvmq::bench::{table3, BenchCtx, BenchOpts};
+use tvmq::executor::{EngineKind, EngineSpec};
 
 fn main() -> anyhow::Result<()> {
     let opts = BenchOpts {
@@ -10,7 +11,7 @@ fn main() -> anyhow::Result<()> {
         warmup: 10,
     };
     let ctx = BenchCtx::new(&tvmq::default_artifacts_dir(), opts)?;
-    let batches = ctx.manifest.batch_buckets("NCHW", "spatial_pack", "int8", "graph");
+    let batches = ctx.manifest.batch_buckets(EngineSpec::new(EngineKind::Graph));
     let (table, rows) = table3(&ctx, &batches)?;
     table.print();
     // Shape: int8 improvement grows (or at least does not shrink much) with

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use tvmq::coordinator::{InferenceServer, ServeConfig};
-use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
+use tvmq::executor::{EngineKind, EngineSpec, Executor, GraphExecutor, VmExecutor};
 use tvmq::manifest::Manifest;
 use tvmq::runtime::{synthetic_images, Runtime, TensorData};
 
@@ -28,11 +28,12 @@ fn main() -> Result<()> {
     let rt = std::rc::Rc::new(Runtime::new()?);
     let x = synthetic_images(1, &[m.in_channels, m.image_size, m.image_size], 42);
 
+    // The paper's best variant (NCHW/spatial_pack/int8) under each engine.
     let graph = GraphExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph")?,
+        rt.clone(), &m, m.find(EngineSpec::new(EngineKind::Graph), 1)?,
     )?;
     let vm = VmExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "vm")?,
+        rt.clone(), &m, m.find(EngineSpec::new(EngineKind::Vm), 1)?,
     )?;
     let t0 = Instant::now();
     let lg = graph.run(&x)?;
@@ -51,9 +52,9 @@ fn main() -> Result<()> {
     let server = Arc::new(InferenceServer::start(
         artifacts.clone(),
         ServeConfig {
+            spec: EngineSpec::new(EngineKind::Graph),
             max_batch: 64,
             batch_timeout: Duration::from_millis(2),
-            ..Default::default()
         },
     )?);
     println!("serving with batch buckets {:?}", server.buckets);

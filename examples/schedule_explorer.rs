@@ -6,7 +6,9 @@
 //! Run: `cargo run --release --example schedule_explorer -- [--epochs 40]`
 
 use anyhow::Result;
-use tvmq::executor::{Executor, GraphExecutor};
+use tvmq::executor::{
+    EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision, Schedule,
+};
 use tvmq::manifest::Manifest;
 use tvmq::metrics::{fmt_ms, measure, Table};
 use tvmq::perfmodel::{int8_alu_factor, schedule_table, MachineModel};
@@ -27,26 +29,32 @@ fn main() -> Result<()> {
         &["Layout", "Schedule", "Precision", "Measured (ms)", "A72-proj (ms)",
           "Ideal", "Roofline note"],
     );
-    for (i, (layout, schedule, precision)) in [
-        ("NCHW", "spatial_pack", "fp32"),
-        ("NCHW", "spatial_pack", "int8"),
-        ("NCHW", "simd", "int8"),
-        ("NHWC", "spatial_pack", "fp32"),
-        ("NHWC", "interleaved", "int8"),
+    for (i, spec) in [
+        (LayoutTag::Nchw, Schedule::SpatialPack, Precision::Fp32),
+        (LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8),
+        (LayoutTag::Nchw, Schedule::Simd, Precision::Int8),
+        (LayoutTag::Nhwc, Schedule::SpatialPack, Precision::Fp32),
+        (LayoutTag::Nhwc, Schedule::Interleaved, Precision::Int8),
     ]
-    .iter()
+    .into_iter()
+    .map(|(layout, schedule, precision)| {
+        EngineSpec::new(EngineKind::Graph)
+            .layout(layout)
+            .schedule(schedule)
+            .precision(precision)
+    })
     .enumerate()
     {
-        let bundle = m.find(layout, schedule, precision, 1, "graph")?;
+        let bundle = m.find(spec, 1)?;
         let exec = GraphExecutor::new(rt.clone(), &m, bundle)?;
-        let rest = if *layout == "NCHW" {
+        let rest = if spec.layout == LayoutTag::Nchw {
             vec![m.in_channels, m.image_size, m.image_size]
         } else {
             vec![m.image_size, m.image_size, m.in_channels]
         };
         let x = synthetic_images(1, &rest, 42);
         let stats = measure(epochs, epochs / 5, || exec.run(&x).map(|_| ()))?;
-        let proj = if *precision == "int8" {
+        let proj = if spec.precision == Precision::Int8 {
             stats.mean_ms / int8_alu_factor(&machine)
         } else {
             stats.mean_ms
@@ -57,7 +65,7 @@ fn main() -> Result<()> {
             "H-parallel only, no reduction vectorization"
         };
         t.row(vec![
-            layout.to_string(), schedule.to_string(), precision.to_string(),
+            spec.layout.to_string(), spec.schedule.to_string(), spec.precision.to_string(),
             fmt_ms(stats.mean_ms), fmt_ms(proj),
             format!("{}x", ideals[i].ideal_speedup), note.into(),
         ]);

@@ -6,7 +6,10 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use crate::executor::{Executor, GraphExecutor, VmExecutor};
+use crate::executor::{
+    EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision, Schedule,
+    VmExecutor,
+};
 use crate::manifest::Manifest;
 use crate::metrics::{fmt_mib, fmt_ms, fmt_pct, improvement_pct, measure, EpochStats, Table};
 use crate::perfmodel::{int8_alu_factor, schedule_table, MachineModel};
@@ -47,9 +50,9 @@ impl BenchCtx {
         })
     }
 
-    fn image(&self, batch: usize, layout: &str) -> TensorData {
+    fn image(&self, batch: usize, layout: LayoutTag) -> TensorData {
         let m = &self.manifest;
-        let rest = if layout == "NCHW" {
+        let rest = if layout == LayoutTag::Nchw {
             vec![m.in_channels, m.image_size, m.image_size]
         } else {
             vec![m.image_size, m.image_size, m.in_channels]
@@ -57,35 +60,38 @@ impl BenchCtx {
         synthetic_images(batch, &rest, 42)
     }
 
-    fn bench_exec(&self, exec: &dyn Executor, layout: &str) -> Result<EpochStats> {
+    fn bench_exec(&self, exec: &dyn Executor, layout: LayoutTag) -> Result<EpochStats> {
         let x = self.image(exec.batch(), layout);
         measure(self.opts.epochs, self.opts.warmup, || {
             exec.run(&x).map(|_| ())
         })
     }
 
-    fn graph_exec(
-        &self,
-        layout: &str,
-        schedule: &str,
-        precision: &str,
-        batch: usize,
-    ) -> Result<GraphExecutor> {
-        let b = self.manifest.find(layout, schedule, precision, batch, "graph")?;
+    fn graph_exec(&self, spec: EngineSpec, batch: usize) -> Result<GraphExecutor> {
+        let b = self.manifest.find(spec, batch)?;
         GraphExecutor::new(self.rt.clone(), &self.manifest, b)
     }
 
     fn vm_exec(
         &self,
-        layout: &str,
-        schedule: &str,
-        precision: &str,
+        spec: EngineSpec,
         batch: usize,
         device_chaining: bool,
     ) -> Result<VmExecutor> {
-        let b = self.manifest.find(layout, schedule, precision, batch, "vm")?;
+        let b = self.manifest.find(spec, batch)?;
         VmExecutor::with_options(self.rt.clone(), &self.manifest, b, device_chaining)
     }
+}
+
+/// Shorthand for the bench combos: a typed spec from the three variant
+/// axes plus the engine tier.
+fn spec(
+    layout: LayoutTag,
+    schedule: Schedule,
+    precision: Precision,
+    engine: EngineKind,
+) -> EngineSpec {
+    EngineSpec { layout, schedule, precision, engine }
 }
 
 /// Row of a timing table.
@@ -103,8 +109,8 @@ pub struct TimedRow {
     pub projected_improvement_pct: f64,
 }
 
-fn project(mean_ms: f64, precision: &str) -> f64 {
-    if precision == "int8" {
+fn project(mean_ms: f64, precision: Precision) -> f64 {
+    if precision == Precision::Int8 {
         mean_ms / int8_alu_factor(&MachineModel::default())
     } else {
         mean_ms
@@ -120,21 +126,25 @@ pub fn table1(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
     // TVM-Quant-Graph (graph int8).  The eager row runs the reference
     // schedule through the VM (per-op dispatch, no fusion) — the role
     // PyTorch plays in the paper's table.
-    let eager = self_timed(ctx, "Eager (reference)", || {
-        Ok(Box::new(ctx.vm_exec("NCHW", "reference", "fp32", 1, false)?) as Box<dyn Executor>)
-    }, "NCHW", "reference", "fp32")?;
-    let tvm_fp32 = self_timed(ctx, "tvmq (graph)", || {
-        Ok(Box::new(ctx.graph_exec("NCHW", "spatial_pack", "fp32", 1)?) as Box<dyn Executor>)
-    }, "NCHW", "spatial_pack", "fp32")?;
+    let eager = self_timed(ctx, || {
+        let s = spec(LayoutTag::Nchw, Schedule::Reference, Precision::Fp32, EngineKind::Vm);
+        Ok(Box::new(ctx.vm_exec(s, 1, false)?) as Box<dyn Executor>)
+    }, LayoutTag::Nchw)?;
+    let tvm_fp32 = self_timed(ctx, || {
+        let s = spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Fp32, EngineKind::Graph);
+        Ok(Box::new(ctx.graph_exec(s, 1)?) as Box<dyn Executor>)
+    }, LayoutTag::Nchw)?;
     // The bug row: the VM partition loses AlterOpLayout (a graph-level
     // pass), so the quantized model runs the unpacked simd schedule per-op
     // under the VM's dispatch + dynamic allocation.
-    let quant_vm = self_timed(ctx, "tvmq-Quant (VM bug)", || {
-        Ok(Box::new(ctx.vm_exec("NCHW", "simd", "int8", 1, false)?) as Box<dyn Executor>)
-    }, "NCHW", "simd", "int8")?;
-    let quant_graph = self_timed(ctx, "tvmq-Quant-Graph (fix)", || {
-        Ok(Box::new(ctx.graph_exec("NCHW", "spatial_pack", "int8", 1)?) as Box<dyn Executor>)
-    }, "NCHW", "spatial_pack", "int8")?;
+    let quant_vm = self_timed(ctx, || {
+        let s = spec(LayoutTag::Nchw, Schedule::Simd, Precision::Int8, EngineKind::Vm);
+        Ok(Box::new(ctx.vm_exec(s, 1, false)?) as Box<dyn Executor>)
+    }, LayoutTag::Nchw)?;
+    let quant_graph = self_timed(ctx, || {
+        let s = spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8, EngineKind::Graph);
+        Ok(Box::new(ctx.graph_exec(s, 1)?) as Box<dyn Executor>)
+    }, LayoutTag::Nchw)?;
 
     let base = tvm_fp32.1.mean_ms;
     let mut rows = Vec::new();
@@ -143,25 +153,25 @@ pub fn table1(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
         &["Framework", "Layout", "Schedule", "Precision", "Executor",
           "Time (ms)", "Improvement", "A72-proj (ms)", "Proj. improvement"],
     );
-    for (label, stats, layout, schedule, precision, executor) in [
-        ("Eager (PyTorch row)", &eager.1, "NCHW", "reference", "fp32", "vm/per-op"),
-        ("tvmq", &tvm_fp32.1, "NCHW", "spatial_pack", "fp32", "graph"),
-        ("tvmq-Quant", &quant_vm.1, "NCHW", "simd (no alter-layout)", "int8", "vm"),
-        ("tvmq-Quant-Graph", &quant_graph.1, "NCHW", "spatial_pack", "int8", "graph"),
+    for (label, stats, schedule_note, precision, executor) in [
+        ("Eager (PyTorch row)", &eager.1, "reference", Precision::Fp32, "vm/per-op"),
+        ("tvmq", &tvm_fp32.1, "spatial_pack", Precision::Fp32, "graph"),
+        ("tvmq-Quant", &quant_vm.1, "simd (no alter-layout)", Precision::Int8, "vm"),
+        ("tvmq-Quant-Graph", &quant_graph.1, "spatial_pack", Precision::Int8, "graph"),
     ] {
         let imp = improvement_pct(base, stats.mean_ms);
         let proj = project(stats.mean_ms, precision);
         let pimp = improvement_pct(base, proj);
         t.row(vec![
-            label.into(), layout.into(), schedule.into(), precision.into(),
+            label.into(), "NCHW".into(), schedule_note.into(), precision.to_string(),
             executor.into(), fmt_ms(stats.mean_ms),
             if label == "Eager (PyTorch row)" { "-".into() } else { fmt_pct(imp) },
             fmt_ms(proj),
             if label == "Eager (PyTorch row)" { "-".into() } else { fmt_pct(pimp) },
         ]);
         rows.push(TimedRow {
-            label: label.into(), layout: layout.into(), schedule: schedule.into(),
-            precision: precision.into(), mean_ms: stats.mean_ms, improvement_pct: imp,
+            label: label.into(), layout: "NCHW".into(), schedule: schedule_note.into(),
+            precision: precision.to_string(), mean_ms: stats.mean_ms, improvement_pct: imp,
             projected_ms: proj, projected_improvement_pct: pimp,
         });
     }
@@ -182,7 +192,7 @@ pub fn table1(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
         let x = calibrate_ir(&qg, 42);
         let stats = measure(ctx.opts.epochs, ctx.opts.warmup, || exec.run(&x).map(|_| ()))?;
         let imp = improvement_pct(base, stats.mean_ms);
-        let proj = project(stats.mean_ms, "int8");
+        let proj = project(stats.mean_ms, Precision::Int8);
         let pimp = improvement_pct(base, proj);
         t.row(vec![
             "tvmq-Arena (IR engine)".into(), "NCHW".into(), "arena/fused".into(),
@@ -201,11 +211,8 @@ pub fn table1(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
 
 fn self_timed(
     ctx: &BenchCtx,
-    _label: &str,
     build: impl FnOnce() -> Result<Box<dyn Executor>>,
-    layout: &str,
-    _schedule: &str,
-    _precision: &str,
+    layout: LayoutTag,
 ) -> Result<(Box<dyn Executor>, EpochStats)> {
     let exec = build()?;
     let stats = ctx.bench_exec(exec.as_ref(), layout)?;
@@ -220,11 +227,11 @@ pub fn table2(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
     let machine = MachineModel::default();
     let ideals = schedule_table(&machine);
     let combos = [
-        ("NCHW", "spatial_pack", "fp32"),
-        ("NCHW", "spatial_pack", "int8"),
-        ("NCHW", "simd", "int8"),
-        ("NHWC", "spatial_pack", "fp32"),
-        ("NHWC", "interleaved", "int8"),
+        spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Fp32, EngineKind::Graph),
+        spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8, EngineKind::Graph),
+        spec(LayoutTag::Nchw, Schedule::Simd, Precision::Int8, EngineKind::Graph),
+        spec(LayoutTag::Nhwc, Schedule::SpatialPack, Precision::Fp32, EngineKind::Graph),
+        spec(LayoutTag::Nhwc, Schedule::Interleaved, Precision::Int8, EngineKind::Graph),
     ];
     let mut rows = Vec::new();
     let mut t = Table::new(
@@ -233,22 +240,22 @@ pub fn table2(ctx: &BenchCtx) -> Result<(Table, Vec<TimedRow>)> {
           "A72-proj (ms)", "Proj. improvement", "Ideal Speedup"],
     );
     let mut base = None;
-    for (i, (layout, schedule, precision)) in combos.iter().enumerate() {
-        let exec = ctx.graph_exec(layout, schedule, precision, 1)?;
-        let stats = ctx.bench_exec(&exec, layout)?;
+    for (i, &s) in combos.iter().enumerate() {
+        let exec = ctx.graph_exec(s, 1)?;
+        let stats = ctx.bench_exec(&exec, s.layout)?;
         let b = *base.get_or_insert(stats.mean_ms);
         let imp = improvement_pct(b, stats.mean_ms);
-        let proj = project(stats.mean_ms, precision);
+        let proj = project(stats.mean_ms, s.precision);
         let pimp = improvement_pct(b, proj);
         t.row(vec![
-            layout.to_string(), schedule.to_string(), precision.to_string(),
+            s.layout.to_string(), s.schedule.to_string(), s.precision.to_string(),
             fmt_ms(stats.mean_ms), fmt_pct(imp), fmt_ms(proj), fmt_pct(pimp),
             format!("{}x", ideals[i].ideal_speedup),
         ]);
         rows.push(TimedRow {
-            label: format!("{layout}/{schedule}/{precision}"),
-            layout: layout.to_string(), schedule: schedule.to_string(),
-            precision: precision.to_string(), mean_ms: stats.mean_ms,
+            label: format!("{}/{}/{}", s.layout, s.schedule, s.precision),
+            layout: s.layout.to_string(), schedule: s.schedule.to_string(),
+            precision: s.precision.to_string(), mean_ms: stats.mean_ms,
             improvement_pct: imp, projected_ms: proj,
             projected_improvement_pct: pimp,
         });
@@ -269,11 +276,12 @@ pub fn table3(ctx: &BenchCtx, batches: &[usize]) -> Result<(Table, Vec<TimedRow>
     );
     for &batch in batches {
         let mut base = None;
-        for precision in ["fp32", "int8"] {
-            let bundle = ctx.manifest.find("NCHW", "spatial_pack", precision, batch, "graph")?;
+        for precision in [Precision::Fp32, Precision::Int8] {
+            let s = spec(LayoutTag::Nchw, Schedule::SpatialPack, precision, EngineKind::Graph);
+            let bundle = ctx.manifest.find(s, batch)?;
             let fp = crate::quant::footprint(&ctx.manifest, bundle);
             let exec = GraphExecutor::new(ctx.rt.clone(), &ctx.manifest, bundle)?;
-            let stats = ctx.bench_exec(&exec, "NCHW")?;
+            let stats = ctx.bench_exec(&exec, s.layout)?;
             let per_img = stats.mean_ms / batch as f64;
             let b = *base.get_or_insert(per_img);
             let imp = improvement_pct(b, per_img);
@@ -282,7 +290,7 @@ pub fn table3(ctx: &BenchCtx, batches: &[usize]) -> Result<(Table, Vec<TimedRow>
             t.row(vec![
                 batch.to_string(),
                 fmt_mib(fp.total()),
-                precision.into(),
+                precision.to_string(),
                 fmt_ms(per_img),
                 fmt_pct(imp),
                 fmt_ms(proj),
@@ -291,7 +299,7 @@ pub fn table3(ctx: &BenchCtx, batches: &[usize]) -> Result<(Table, Vec<TimedRow>
             rows.push(TimedRow {
                 label: format!("b{batch}/{precision}"),
                 layout: "NCHW".into(), schedule: "spatial_pack".into(),
-                precision: precision.into(), mean_ms: per_img, improvement_pct: imp,
+                precision: precision.to_string(), mean_ms: per_img, improvement_pct: imp,
                 projected_ms: proj, projected_improvement_pct: pimp,
             });
         }
@@ -377,9 +385,13 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
         &["Config", "Time (ms)", "Dispatches/inf", "Dyn allocs/inf", "Boundary KiB/inf"],
     );
 
+    let best_graph =
+        spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8, EngineKind::Graph);
+    let best_vm = spec(LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8, EngineKind::Vm);
+
     // (a) graph executor (fused, static plan)
-    let g = ctx.graph_exec("NCHW", "spatial_pack", "int8", 1)?;
-    let gs = ctx.bench_exec(&g, "NCHW")?;
+    let g = ctx.graph_exec(best_graph, 1)?;
+    let gs = ctx.bench_exec(&g, LayoutTag::Nchw)?;
     let gc = g.counters();
     let per = |v: u64| v as f64 / gc.invocations.max(1) as f64;
     t.row(vec![
@@ -389,8 +401,8 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
     ]);
 
     // (b) VM, host boundaries (the faithful bug)
-    let v = ctx.vm_exec("NCHW", "spatial_pack", "int8", 1, false)?;
-    let vs = ctx.bench_exec(&v, "NCHW")?;
+    let v = ctx.vm_exec(best_vm, 1, false)?;
+    let vs = ctx.bench_exec(&v, LayoutTag::Nchw)?;
     let vc = v.counters();
     let perv = |x: u64| x as f64 / vc.invocations.max(1) as f64;
     t.row(vec![
@@ -400,8 +412,8 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
     ]);
 
     // (c) VM with device chaining (staging removed, dispatch kept)
-    let vd = ctx.vm_exec("NCHW", "spatial_pack", "int8", 1, true)?;
-    let vds = ctx.bench_exec(&vd, "NCHW")?;
+    let vd = ctx.vm_exec(best_vm, 1, true)?;
+    let vds = ctx.bench_exec(&vd, LayoutTag::Nchw)?;
     let vdc = vd.counters();
     let perd = |x: u64| x as f64 / vdc.invocations.max(1) as f64;
     t.row(vec![
@@ -411,8 +423,8 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
     ]);
 
     // (d) VM on fp32 (the executor penalty exists without quantization)
-    let vf = ctx.vm_exec("NCHW", "spatial_pack", "fp32", 1, false)?;
-    let vfs = ctx.bench_exec(&vf, "NCHW")?;
+    let vf = ctx.vm_exec(best_vm.precision(Precision::Fp32), 1, false)?;
+    let vfs = ctx.bench_exec(&vf, LayoutTag::Nchw)?;
     t.row(vec![
         "vm fp32 (no quant)".into(), fmt_ms(vfs.mean_ms), "-".into(), "-".into(), "-".into(),
     ]);
@@ -492,6 +504,127 @@ pub fn arena_ablation(
     Ok(t)
 }
 
+/// `bench-serve` — arena-bucket serving vs per-request execution, all on
+/// the native engine (no artifacts): the Table-3 batching story measured
+/// through the coordinator instead of a bare executor loop.
+///
+/// Three rows: the batching server over [`crate::executor::NativeArenaFactory`]
+/// buckets (concurrent clients), a sequential per-request `run_into` loop
+/// on the batch-1 engine (no batching, still allocation-free), and a
+/// sequential per-request `run` loop (allocating a fresh output per
+/// inference — the naive client-library pattern).
+pub fn serve_bench(
+    buckets: &[usize],
+    image: usize,
+    threads: usize,
+    requests: usize,
+    clients: usize,
+    batch_timeout: std::time::Duration,
+) -> Result<Table> {
+    use crate::coordinator::{InferenceServer, ServeConfig};
+    use crate::executor::{ArenaExec, EngineFactory, NativeArenaFactory};
+    use std::time::Instant;
+
+    let spec = EngineSpec::new(EngineKind::Arena);
+    let factory = NativeArenaFactory::new(spec, buckets, image, threads)?;
+    let buckets = factory.buckets();
+    let g1 = factory.graph(1)?;
+
+    let clients = clients.max(1);
+    let per_client = (requests / clients).max(1);
+    let total = per_client * clients;
+
+    let mut t = Table::new(
+        format!(
+            "bench-serve — arena bucket serving vs per-request run \
+             (image {image}, {total} requests, {clients} clients, \
+             buckets {buckets:?}, {threads} thread(s))"
+        ),
+        &["Config", "Req/s", "p50 (ms)", "p95 (ms)", "p99 (ms)",
+          "Mean batch", "Padded", "Errors"],
+    );
+
+    // (a) the batching server over arena bucket engines.
+    let cfg = ServeConfig {
+        spec,
+        max_batch: *buckets.last().expect("non-empty buckets"),
+        batch_timeout,
+    };
+    let server = std::sync::Arc::new(InferenceServer::start_with(factory, cfg)?);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let rest = [3, image, image];
+            let mut errors = 0usize;
+            for i in 0..per_client {
+                let img = synthetic_images(1, &rest, (c * 7919 + i) as u64);
+                if server.submit_blocking(img).is_err() {
+                    errors += 1;
+                }
+            }
+            errors
+        }));
+    }
+    let mut errors = 0usize;
+    for h in handles {
+        errors += h.join().unwrap_or(per_client);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let lat = stats.latency_stats();
+    t.row(vec![
+        "serve (arena buckets)".into(),
+        format!("{:.1}", total as f64 / wall),
+        fmt_ms(lat.p50_ms), fmt_ms(lat.p95_ms), fmt_ms(lat.p99_ms),
+        format!("{:.2}", stats.mean_batch()),
+        stats.padded_slots.to_string(),
+        errors.to_string(),
+    ]);
+
+    // (b)/(c) per-request baselines on the batch-1 engine, sequential.
+    // Images are pre-generated so only executor time is on the clock.
+    let exec = ArenaExec::with_options(&g1, true, threads)?;
+    let images: Vec<TensorData> = (0..total.min(64))
+        .map(|i| synthetic_images(1, &[3, image, image], i as u64))
+        .collect();
+    let (out_shape, out_dt) = Executor::output_desc(&exec);
+    let mut out = TensorData::zeros(out_dt, out_shape);
+
+    fn direct_row(
+        t: &mut Table,
+        total: usize,
+        images: &[TensorData],
+        label: &str,
+        mut f: impl FnMut(&TensorData) -> Result<()>,
+    ) -> Result<()> {
+        let mut samples = Vec::with_capacity(total);
+        for i in 0..total {
+            let x = &images[i % images.len()];
+            let t0 = Instant::now();
+            f(x)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let st = EpochStats::from_samples(&samples, 0);
+        let wall_ms: f64 = samples.iter().sum();
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", total as f64 / (wall_ms / 1e3)),
+            fmt_ms(st.p50_ms), fmt_ms(st.p95_ms), fmt_ms(st.p99_ms),
+            "1.00".into(), "0".into(), "0".into(),
+        ]);
+        Ok(())
+    }
+    direct_row(&mut t, total, &images, "direct run_into (b1, no batching)", |x| {
+        exec.run_into(x, &mut out)
+    })?;
+    direct_row(&mut t, total, &images, "direct run (b1, alloc per request)", |x| {
+        exec.run(x).map(|_| ())
+    })?;
+    Ok(t)
+}
+
 /// Memory-plan ablation: arena reuse vs unshared allocation across the
 /// model chain (pure analysis, no execution).
 pub fn memplan_ablation(ctx: &BenchCtx) -> Result<Table> {
@@ -500,7 +633,7 @@ pub fn memplan_ablation(ctx: &BenchCtx) -> Result<Table> {
         &["Bundle", "Boundary tensors", "Arena (KiB)", "Unshared (KiB)", "Reuse factor"],
     );
     for b in &ctx.manifest.bundles {
-        if b.executor != "vm" {
+        if b.executor != EngineKind::Vm {
             continue;
         }
         let plan = crate::memplan::StaticPlan::for_chain(&b.modules);

@@ -1,33 +1,45 @@
-//! Inference coordinator: request queue → dynamic batcher → executor worker.
+//! Inference coordinator: request queue → dynamic batcher → bucket engines.
 //!
 //! The serving layer that hosts the paper's memory-bound experiments
 //! (Table 3) as a real system: clients submit single images; the batcher
 //! gathers them under a max-batch/timeout policy and routes each batch to
-//! the executor compiled for the smallest fitting **bucket** (XLA modules
-//! are static-shaped, so the AOT path emits one per batch size — vLLM-style
-//! bucket batching).
+//! the engine compiled for the smallest fitting **bucket** (both XLA
+//! modules and arena plans are static-shaped, so there is one compiled
+//! engine per batch size — vLLM-style bucket batching).
 //!
-//! PJRT handles are `!Send`, so the runtime and executors live on one
-//! dedicated worker thread; clients talk to it over channels and get their
-//! replies via oneshot.
+//! Engines come from an [`EngineFactory`], not from the coordinator
+//! itself: [`InferenceServer::start_with`] accepts any factory, so the
+//! same batcher serves AOT PJRT bundles ([`ArtifactFactory`] via
+//! [`InferenceServer::start`]) or natively compiled
+//! [`crate::executor::ArenaExec`] engines
+//! ([`crate::executor::NativeArenaFactory`]) — the latter needs no
+//! artifacts at all, which is what makes `tvmq serve --executor arena`
+//! work on the offline build.
+//!
+//! The worker pre-allocates one stacked input and one output tensor per
+//! bucket at startup and serves every batch through
+//! [`crate::executor::Executor::run_into`]; with arena engines the
+//! request path therefore performs **zero heap allocations inside the
+//! executor** (`tests/arena_alloc.rs` counts them).  PJRT handles are
+//! `!Send`, so engines live on one dedicated worker thread; clients talk
+//! to it over channels and get their replies via oneshot.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::executor::{Executor, GraphExecutor, VmExecutor};
+use crate::executor::{ArtifactFactory, EngineFactory, EngineSpec, Executor};
 use crate::manifest::Manifest;
 use crate::metrics::EpochStats;
-use crate::runtime::{Runtime, TensorData};
+use crate::runtime::TensorData;
+use crate::util::rng::Rng64;
 
 /// Which model variant the server runs, plus batching policy.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    pub layout: String,
-    pub schedule: String,
-    pub precision: String,
-    pub executor: String,
+    /// The typed variant selector (layout/schedule/precision/engine).
+    pub spec: EngineSpec,
     /// Upper bound on gathered batch size (clamped to largest bucket).
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch.
@@ -37,10 +49,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
-            layout: "NCHW".into(),
-            schedule: "spatial_pack".into(),
-            precision: "int8".into(),
-            executor: "graph".into(),
+            spec: EngineSpec::default(),
             max_batch: 64,
             batch_timeout: Duration::from_millis(2),
         }
@@ -86,19 +95,91 @@ enum Msg {
     Shutdown,
 }
 
+/// Pick the smallest bucket that fits a gathered batch of `n`.
+///
+/// `buckets` must be sorted ascending (the server normalizes at startup).
+/// Errors instead of silently over- or under-padding when nothing fits —
+/// the gather loop clamps to the largest bucket, so hitting the error
+/// from the serve path means the clamp itself regressed.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Result<usize> {
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| anyhow!("no bucket fits a batch of {n} (buckets: {buckets:?})"))
+}
+
+/// Bounded latency sample: exact up to [`LATENCY_RESERVOIR_CAP`] samples,
+/// a uniform reservoir (Vitter's Algorithm R, deterministic seed) beyond
+/// it — so a long-running server's stats stay O(cap) instead of growing
+/// one `f64` per request forever.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    samples: Vec<f64>,
+    /// Total observations ever pushed (`samples` holds min(seen, cap)).
+    seen: u64,
+    rng: Rng64,
+}
+
+/// Reservoir size: percentiles are exact for runs up to this many
+/// requests, and an unbiased uniform sample afterwards.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Rng64::seed_from_u64(0x7a11_5eed),
+        }
+    }
+}
+
+impl LatencyReservoir {
+    pub fn push(&mut self, ms: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(ms);
+            return;
+        }
+        // Algorithm R: the i-th observation replaces a resident sample
+        // with probability cap/i, keeping the reservoir uniform.
+        let j = self.rng.next_u64() % self.seen;
+        if (j as usize) < LATENCY_RESERVOIR_CAP {
+            self.samples[j as usize] = ms;
+        }
+    }
+
+    /// Observations ever recorded (not the resident sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn stats(&self) -> EpochStats {
+        EpochStats::from_samples(&self.samples, 0)
+    }
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
+    /// Requests answered successfully.
     pub requests: u64,
+    /// Requests answered with an error (batch failures).
+    pub errors: u64,
     pub batches: u64,
     pub batch_histogram: std::collections::BTreeMap<usize, u64>,
-    pub latencies_ms: Vec<f64>,
+    pub latencies: LatencyReservoir,
     pub padded_slots: u64,
 }
 
 impl ServerStats {
     pub fn latency_stats(&self) -> EpochStats {
-        EpochStats::from_samples(&self.latencies_ms, 0)
+        self.latencies.stats()
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -122,17 +203,27 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the worker thread: loads the manifest, compiles the bucket
-    /// executors, then serves until shutdown.
+    /// Artifact-backed start: load the manifest and serve `cfg.spec`
+    /// through an [`ArtifactFactory`] (requires `make artifacts` + the
+    /// real PJRT bridge).
     pub fn start(artifacts: std::path::PathBuf, cfg: ServeConfig) -> Result<Self> {
         let manifest = Manifest::load(&artifacts)?;
-        let buckets =
-            manifest.batch_buckets(&cfg.layout, &cfg.schedule, &cfg.precision, &cfg.executor);
+        let factory = ArtifactFactory::new(manifest, cfg.spec)?;
+        Self::start_with(factory, cfg)
+    }
+
+    /// Start the worker thread over any engine factory: compiles one
+    /// engine + one pre-allocated input/output tensor pair per bucket,
+    /// then serves until shutdown.
+    pub fn start_with<F>(factory: F, cfg: ServeConfig) -> Result<Self>
+    where
+        F: EngineFactory + Send + 'static,
+    {
+        let mut buckets = factory.buckets();
+        buckets.sort_unstable();
+        buckets.dedup();
         if buckets.is_empty() {
-            return Err(anyhow!(
-                "no bundles for {}/{}/{} {}",
-                cfg.layout, cfg.schedule, cfg.precision, cfg.executor
-            ));
+            return Err(anyhow!("no engine buckets from {}", factory.describe()));
         }
         let stats = Arc::new(Mutex::new(ServerStats::default()));
         let (tx, rx) = std::sync::mpsc::channel::<Msg>();
@@ -142,10 +233,10 @@ impl InferenceServer {
         let handle = std::thread::Builder::new()
             .name("tvmq-worker".into())
             .spawn(move || {
-                worker_loop(manifest, cfg, worker_buckets, rx, worker_stats, ready_tx)
+                worker_loop(factory, cfg, worker_buckets, rx, worker_stats, ready_tx)
             })
             .map_err(|e| anyhow!("spawning worker: {e}"))?;
-        // Wait for executor compilation so `submit` never races startup.
+        // Wait for engine compilation so `submit` never races startup.
         ready_rx
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))??;
@@ -188,48 +279,66 @@ impl Drop for InferenceServer {
     }
 }
 
-fn build_executor(
-    rt: std::rc::Rc<Runtime>,
-    manifest: &Manifest,
-    cfg: &ServeConfig,
+/// One serving bucket: the compiled engine plus its pre-allocated batched
+/// input and output tensors (allocated once at startup; every batch is
+/// copied into/out of them so the request path never allocates inside the
+/// executor).
+struct BucketEngine {
     batch: usize,
-) -> Result<Box<dyn Executor>> {
-    let bundle = manifest.find(
-        &cfg.layout, &cfg.schedule, &cfg.precision, batch, &cfg.executor,
-    )?;
-    Ok(match cfg.executor.as_str() {
-        "graph" => Box::new(GraphExecutor::new(rt, manifest, bundle)?),
-        "vm" => Box::new(VmExecutor::new(rt, manifest, bundle)?),
-        other => return Err(anyhow!("unknown executor {other:?}")),
-    })
+    exec: Box<dyn Executor>,
+    input: TensorData,
+    out: TensorData,
 }
 
-fn worker_loop(
-    manifest: Manifest,
+fn build_engines<F: EngineFactory>(
+    factory: &F,
+    buckets: &[usize],
+) -> Result<Vec<BucketEngine>> {
+    let mut engines = Vec::with_capacity(buckets.len());
+    for &b in buckets {
+        if b == 0 {
+            return Err(anyhow!("bucket batch sizes must be non-zero"));
+        }
+        let exec = factory.build(b)?;
+        if exec.batch() != b {
+            return Err(anyhow!(
+                "factory built a batch-{} engine for bucket {b}",
+                exec.batch()
+            ));
+        }
+        let (in_shape, in_dt) = exec.input_desc();
+        let (out_shape, out_dt) = exec.output_desc();
+        if in_shape.first() != Some(&b) || out_shape.first() != Some(&b) {
+            return Err(anyhow!(
+                "bucket {b} engine I/O is not batch-major: {in_shape:?} -> {out_shape:?}"
+            ));
+        }
+        engines.push(BucketEngine {
+            batch: b,
+            input: TensorData::zeros(in_dt, in_shape),
+            out: TensorData::zeros(out_dt, out_shape),
+            exec,
+        });
+    }
+    Ok(engines)
+}
+
+fn worker_loop<F: EngineFactory>(
+    factory: F,
     cfg: ServeConfig,
     buckets: Vec<usize>,
     rx: std::sync::mpsc::Receiver<Msg>,
     stats: Arc<Mutex<ServerStats>>,
     ready: std::sync::mpsc::Sender<Result<()>>,
 ) -> Result<()> {
-    // Compile every bucket executor up front (startup, not request path).
-    let rt = match Runtime::new() {
-        Ok(rt) => std::rc::Rc::new(rt),
+    // Compile every bucket engine up front (startup, not request path).
+    let mut engines = match build_engines(&factory, &buckets) {
+        Ok(e) => e,
         Err(e) => {
             let _ = ready.send(Err(anyhow!("{e}")));
             return Err(e);
         }
     };
-    let mut executors: Vec<(usize, Box<dyn Executor>)> = Vec::new();
-    for &b in &buckets {
-        match build_executor(rt.clone(), &manifest, &cfg, b) {
-            Ok(e) => executors.push((b, e)),
-            Err(e) => {
-                let _ = ready.send(Err(anyhow!("{e}")));
-                return Err(e);
-            }
-        }
-    }
     let _ = ready.send(Ok(()));
 
     let max_bucket = *buckets.last().expect("non-empty buckets");
@@ -252,23 +361,56 @@ fn worker_loop(
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Job(j)) => jobs.push(j),
                 Ok(Msg::Shutdown) => {
-                    process_batch(&executors, &buckets, jobs, &stats);
+                    process_batch(&mut engines, &buckets, jobs, &stats);
                     break 'serve;
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    process_batch(&executors, &buckets, jobs, &stats);
+                    process_batch(&mut engines, &buckets, jobs, &stats);
                     break 'serve;
                 }
             }
         }
-        process_batch(&executors, &buckets, jobs, &stats);
+        process_batch(&mut engines, &buckets, jobs, &stats);
     }
     Ok(())
 }
 
+/// Copy the gathered job images into the engine's pre-allocated stacked
+/// input (zeroing the padding rows) and run in place.  Nothing in here
+/// allocates except what the engine's own `run_into` does — zero for
+/// arena engines.
+fn serve_batch(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
+    let row_bytes = eng.input.byte_len() / eng.batch;
+    for (i, job) in jobs.iter().enumerate() {
+        let img = &job.image;
+        if img.dtype != eng.input.dtype
+            || img.shape.first() != Some(&1)
+            || img.shape.get(1..) != eng.input.shape.get(1..)
+        {
+            return Err(anyhow!(
+                "request image {:?}/{:?} does not fit engine input {:?}/{:?}",
+                img.shape, img.dtype, eng.input.shape, eng.input.dtype
+            ));
+        }
+        eng.input.data[i * row_bytes..(i + 1) * row_bytes].copy_from_slice(&img.data);
+    }
+    eng.input.data[jobs.len() * row_bytes..].fill(0);
+    let BucketEngine { exec, input, out, .. } = eng;
+    exec.run_into(input, out)
+}
+
+/// Fail every job in the batch with the same message and count them.
+fn fail_batch(jobs: Vec<Job>, stats: &Arc<Mutex<ServerStats>>, e: anyhow::Error) {
+    let msg = format!("{e}");
+    stats.lock().expect("stats lock").errors += jobs.len() as u64;
+    for job in jobs {
+        let _ = job.reply.send(Err(anyhow!("batch failed: {msg}")));
+    }
+}
+
 fn process_batch(
-    executors: &[(usize, Box<dyn Executor>)],
+    engines: &mut [BucketEngine],
     buckets: &[usize],
     jobs: Vec<Job>,
     stats: &Arc<Mutex<ServerStats>>,
@@ -277,52 +419,100 @@ fn process_batch(
     if n == 0 {
         return;
     }
-    // Smallest bucket that fits; if none (shouldn't happen: max_batch is
-    // clamped), fall back to the largest.
-    let bucket = buckets
-        .iter()
-        .copied()
-        .find(|&b| b >= n)
-        .unwrap_or_else(|| *buckets.last().expect("buckets"));
-    let exec = &executors
-        .iter()
-        .find(|(b, _)| *b == bucket)
-        .expect("bucket executor")
-        .1;
+    let bucket = match pick_bucket(buckets, n) {
+        Ok(b) => b,
+        Err(e) => return fail_batch(jobs, stats, e),
+    };
+    let eng = match engines.iter_mut().find(|e| e.batch == bucket) {
+        Some(e) => e,
+        None => return fail_batch(jobs, stats, anyhow!("no engine for bucket {bucket}")),
+    };
+    if let Err(e) = serve_batch(eng, &jobs) {
+        return fail_batch(jobs, stats, e);
+    }
 
-    let run = (|| -> Result<Vec<TensorData>> {
-        let imgs: Vec<&TensorData> = jobs.iter().map(|j| &j.image).collect();
-        let stacked = TensorData::stack(&imgs)?;
-        let padded = stacked.pad_rows(bucket)?;
-        let out = exec.run(&padded)?;
-        let logits = out.truncate_rows(n)?;
-        logits.split_rows(1)
-    })();
+    let out_row = eng.out.byte_len() / eng.batch;
+    let mut row_shape = eng.out.shape.clone();
+    row_shape[0] = 1;
 
-    match run {
-        Ok(per_job) => {
-            let mut s = stats.lock().expect("stats lock");
-            s.requests += n as u64;
-            s.batches += 1;
-            *s.batch_histogram.entry(bucket).or_insert(0) += 1;
-            s.padded_slots += (bucket - n) as u64;
-            for (job, logits) in jobs.into_iter().zip(per_job) {
-                let latency = job.enqueued.elapsed();
-                s.latencies_ms.push(latency.as_secs_f64() * 1e3);
-                let class = logits.argmax_last().map(|v| v[0]).unwrap_or(0);
-                let _ = job.reply.send(Ok(InferenceReply {
-                    logits,
-                    class,
-                    batch: bucket,
-                    latency,
-                }));
-            }
+    let mut s = stats.lock().expect("stats lock");
+    s.requests += n as u64;
+    s.batches += 1;
+    *s.batch_histogram.entry(bucket).or_insert(0) += 1;
+    s.padded_slots += (bucket - n) as u64;
+    for (i, job) in jobs.into_iter().enumerate() {
+        let latency = job.enqueued.elapsed();
+        s.latencies.push(latency.as_secs_f64() * 1e3);
+        let logits = TensorData::new(
+            eng.out.dtype,
+            row_shape.clone(),
+            eng.out.data[i * out_row..(i + 1) * out_row].to_vec(),
+        )
+        .expect("row tensor");
+        let class = logits.argmax_last().map(|v| v[0]).unwrap_or(0);
+        let _ = job.reply.send(Ok(InferenceReply {
+            logits,
+            class,
+            batch: bucket,
+            latency,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_exact_fit() {
+        assert_eq!(pick_bucket(&[1, 4, 8], 4).unwrap(), 4);
+        assert_eq!(pick_bucket(&[1, 4, 8], 1).unwrap(), 1);
+        assert_eq!(pick_bucket(&[1, 4, 8], 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn pick_bucket_next_up_fit() {
+        assert_eq!(pick_bucket(&[1, 4, 8], 2).unwrap(), 4);
+        assert_eq!(pick_bucket(&[1, 4, 8], 5).unwrap(), 8);
+        assert_eq!(pick_bucket(&[2, 16], 1).unwrap(), 2);
+    }
+
+    #[test]
+    fn pick_bucket_overflow_errors() {
+        let err = pick_bucket(&[1, 4, 8], 9).unwrap_err().to_string();
+        assert!(err.contains("no bucket fits"), "got: {err}");
+        assert!(pick_bucket(&[], 1).is_err());
+    }
+
+    #[test]
+    fn latency_reservoir_is_exact_below_the_cap() {
+        let mut r = LatencyReservoir::default();
+        for i in 0..100 {
+            r.push(i as f64);
         }
-        Err(e) => {
-            let msg = format!("{e}");
-            for job in jobs {
-                let _ = job.reply.send(Err(anyhow!("batch failed: {msg}")));
-            }
+        assert_eq!(r.seen(), 100);
+        assert_eq!(r.samples().len(), 100);
+        // Exact: every observation still present, so percentiles are true.
+        let stats = r.stats();
+        assert_eq!(stats.p50_ms, 50.0);
+        assert!((stats.mean_ms - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_above_the_cap() {
+        let mut r = LatencyReservoir::default();
+        for i in 0..(LATENCY_RESERVOIR_CAP * 3) {
+            r.push(i as f64);
         }
+        assert_eq!(r.seen(), (LATENCY_RESERVOIR_CAP * 3) as u64);
+        assert_eq!(r.samples().len(), LATENCY_RESERVOIR_CAP);
+        // The reservoir must contain late observations too (replacement
+        // actually happens), not just the first `cap`.
+        let late = r
+            .samples()
+            .iter()
+            .filter(|&&v| v >= LATENCY_RESERVOIR_CAP as f64)
+            .count();
+        assert!(late > 0, "reservoir never replaced a sample");
     }
 }

@@ -390,12 +390,26 @@ impl Executor for ArenaExec {
         Ok(out)
     }
 
+    /// The trait's serving entry point is exactly the inherent
+    /// zero-allocation path.
+    fn run_into(&self, input: &TensorData, out: &mut TensorData) -> Result<()> {
+        ArenaExec::run_into(self, input, out)
+    }
+
     fn name(&self) -> &str {
         &self.name
     }
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        (self.cg.input_ty.shape.clone(), to_dtype(self.cg.input_ty.dtype))
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        (self.cg.output_ty.shape.clone(), to_dtype(self.cg.output_ty.dtype))
     }
 
     fn counters(&self) -> ExecSnapshot {

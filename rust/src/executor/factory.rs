@@ -1,0 +1,294 @@
+//! Pluggable engine factories: how the coordinator obtains one executor
+//! per batch bucket without knowing where engines come from.
+//!
+//! XLA modules and arena plans are both static-shaped, so vLLM-style
+//! bucket batching needs one compiled engine per batch size.  A factory
+//! answers exactly the two questions the batcher has: *which bucket sizes
+//! exist* ([`EngineFactory::buckets`]) and *build me the engine for one of
+//! them* ([`EngineFactory::build`]).
+//!
+//! Two implementations:
+//!
+//! - [`ArtifactFactory`] — the AOT path: looks bundles up in the artifact
+//!   [`Manifest`] by [`EngineSpec`] and constructs [`GraphExecutor`] /
+//!   [`VmExecutor`] over PJRT.  Requires `make artifacts` + the real xla
+//!   bridge.
+//! - [`NativeArenaFactory`] — the offline path: builds the ResNet-style
+//!   graph IR *per bucket batch size*, runs the quantize pipeline with
+//!   **shared calibration scales**, and compiles [`ArenaExec`] engines.
+//!   No artifacts, no PJRT — this is what makes `tvmq serve` fully
+//!   functional on the stub build.
+//!
+//! Factories are moved onto the coordinator's worker thread and `build`
+//! runs there (PJRT handles are `!Send`, so engines must be born on the
+//! thread that drives them).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::{
+    ArenaExec, EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision,
+    VmExecutor,
+};
+use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+use crate::graph::{build_resnet_ir, calibrate_ir, Graph, NodeId};
+use crate::manifest::Manifest;
+use crate::runtime::Runtime;
+
+/// Builds one executor per serving bucket.  `build` is always called on
+/// the thread that will run the engine (the coordinator worker).
+pub trait EngineFactory {
+    /// The batch sizes this factory can compile engines for (need not be
+    /// sorted or deduplicated; the coordinator normalizes).
+    fn buckets(&self) -> Vec<usize>;
+
+    /// Compile the engine for one bucket.  The returned executor's
+    /// `batch()` must equal `batch`.
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>>;
+
+    /// Human-readable description of what this factory serves, for
+    /// startup errors and logs.
+    fn describe(&self) -> String {
+        "engine factory".into()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed factory
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// One PJRT runtime per engine-building thread: `Rc<Runtime>` is
+    /// `!Send`, so a factory that cached it could not be moved onto the
+    /// worker thread — the cache lives with the thread instead, and every
+    /// bucket built there shares the client and its executable cache.
+    static THREAD_RUNTIME: std::cell::RefCell<Option<Rc<Runtime>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn thread_runtime() -> Result<Rc<Runtime>> {
+    THREAD_RUNTIME.with(|cell| {
+        let mut cell = cell.borrow_mut();
+        if let Some(rt) = cell.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(Runtime::new()?);
+        *cell = Some(rt.clone());
+        Ok(rt)
+    })
+}
+
+/// The AOT path: engines are built from manifest bundles over PJRT.
+pub struct ArtifactFactory {
+    manifest: Manifest,
+    spec: EngineSpec,
+}
+
+impl ArtifactFactory {
+    pub fn new(manifest: Manifest, spec: EngineSpec) -> Result<Self> {
+        if !spec.engine.needs_artifacts() {
+            return Err(anyhow!(
+                "{spec}: the {} engine is compiled natively — use NativeArenaFactory",
+                spec.engine
+            ));
+        }
+        Ok(Self { manifest, spec })
+    }
+
+    pub fn spec(&self) -> EngineSpec {
+        self.spec
+    }
+}
+
+impl EngineFactory for ArtifactFactory {
+    fn buckets(&self) -> Vec<usize> {
+        self.manifest.batch_buckets(self.spec)
+    }
+
+    fn describe(&self) -> String {
+        format!("{} (artifact bundles)", self.spec)
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        let bundle = self.manifest.find(self.spec, batch)?;
+        let rt = thread_runtime()?;
+        Ok(match self.spec.engine {
+            EngineKind::Graph => Box::new(GraphExecutor::new(rt, &self.manifest, bundle)?),
+            EngineKind::Vm => Box::new(VmExecutor::new(rt, &self.manifest, bundle)?),
+            EngineKind::Arena => unreachable!("rejected in ArtifactFactory::new"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native arena factory
+// ---------------------------------------------------------------------------
+
+/// Model seed shared with `tvmq run --executor arena`, so served logits
+/// match the CLI's single-shot path.
+pub const ARENA_MODEL_SEED: u64 = 7;
+
+/// The offline path: one [`ArenaExec`] per bucket, compiled from the
+/// in-process ResNet-style IR.
+///
+/// For int8, calibration runs **once** on the batch-1 graph and the
+/// resulting scales are reused for every bucket.  The builder lays nodes
+/// out in a batch-independent order, so the node-id-keyed scale map
+/// transfers across batch sizes — and because every kernel is
+/// per-sample-independent, a request's logits are bit-identical no matter
+/// which bucket served it (the serving differential test pins this).
+pub struct NativeArenaFactory {
+    buckets: Vec<usize>,
+    image: usize,
+    precision: Precision,
+    threads: usize,
+    fuse: bool,
+    /// Shared calibration scales (int8 only).
+    scales: Option<HashMap<NodeId, f32>>,
+}
+
+impl NativeArenaFactory {
+    /// `spec` must name the arena engine in NCHW (the native int8 kernels
+    /// are NCHW-only today — see ROADMAP).  `image` is the square input
+    /// size; `threads` the per-engine worker-pool width.
+    pub fn new(
+        spec: EngineSpec,
+        buckets: &[usize],
+        image: usize,
+        threads: usize,
+    ) -> Result<Self> {
+        if spec.engine != EngineKind::Arena {
+            return Err(anyhow!("{spec}: NativeArenaFactory builds arena engines only"));
+        }
+        if spec.layout != LayoutTag::Nchw {
+            return Err(anyhow!(
+                "{spec}: the native arena engine builds NCHW models only"
+            ));
+        }
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() || buckets[0] == 0 {
+            return Err(anyhow!("arena factory needs a non-empty set of non-zero buckets"));
+        }
+        let scales = match spec.precision {
+            Precision::Fp32 => None,
+            Precision::Int8 => {
+                let g1 = build_resnet_ir(1, image, ARENA_MODEL_SEED)?;
+                let calib = calibrate_ir(&g1, 1);
+                Some(calibrate_graph(&g1, &calib)?)
+            }
+        };
+        Ok(Self {
+            buckets,
+            image,
+            precision: spec.precision,
+            threads: threads.max(1),
+            fuse: true,
+            scales,
+        })
+    }
+
+    /// Disable epilogue fusion (the ablation configuration).
+    pub fn unfused(mut self) -> Self {
+        self.fuse = false;
+        self
+    }
+
+    /// The exact graph the bucket engine for `batch` compiles — exposed so
+    /// differential tests can evaluate the same model through the
+    /// interpreter oracle.
+    pub fn graph(&self, batch: usize) -> Result<Graph> {
+        let g = build_resnet_ir(batch, self.image, ARENA_MODEL_SEED)?;
+        match &self.scales {
+            None => Ok(g),
+            Some(scales) => QuantizeRealize { scales: scales.clone() }.run(&g),
+        }
+    }
+
+    pub fn image(&self) -> usize {
+        self.image
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+}
+
+impl EngineFactory for NativeArenaFactory {
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native arena engines ({}, image {}, {} thread(s))",
+            self.precision, self.image, self.threads
+        )
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        let g = self.graph(batch)?;
+        Ok(Box::new(ArenaExec::with_options(&g, self.fuse, self.threads)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_factory_rejects_non_arena_specs() {
+        let spec = EngineSpec::new(EngineKind::Graph);
+        assert!(NativeArenaFactory::new(spec, &[1], 16, 1).is_err());
+        let nhwc = EngineSpec::new(EngineKind::Arena).layout(LayoutTag::Nhwc);
+        assert!(NativeArenaFactory::new(nhwc, &[1], 16, 1).is_err());
+        assert!(
+            NativeArenaFactory::new(EngineSpec::new(EngineKind::Arena), &[], 16, 1).is_err()
+        );
+    }
+
+    #[test]
+    fn artifact_factory_rejects_arena_spec() {
+        // An empty manifest is enough to exercise the constructor check.
+        let spec = EngineSpec::new(EngineKind::Arena);
+        let manifest = Manifest {
+            version: 1,
+            arch: "resnet10".into(),
+            image_size: 32,
+            in_channels: 3,
+            num_classes: 10,
+            param_count: 0,
+            scales: Default::default(),
+            batches: vec![],
+            bundles: vec![],
+            root: std::path::PathBuf::new(),
+        };
+        assert!(ArtifactFactory::new(manifest, spec).is_err());
+    }
+
+    #[test]
+    fn arena_factory_normalizes_buckets_and_builds_matching_engines() {
+        let spec = EngineSpec::new(EngineKind::Arena).precision(Precision::Fp32);
+        let f = NativeArenaFactory::new(spec, &[4, 1, 4, 2], 16, 1).unwrap();
+        assert_eq!(f.buckets(), vec![1, 2, 4]);
+        for b in f.buckets() {
+            let e = f.build(b).unwrap();
+            assert_eq!(e.batch(), b);
+            let (shape, _) = e.input_desc();
+            assert_eq!(shape[0], b);
+        }
+    }
+
+    #[test]
+    fn int8_scales_are_shared_across_buckets() {
+        let spec = EngineSpec::new(EngineKind::Arena);
+        let f = NativeArenaFactory::new(spec, &[1, 4], 16, 1).unwrap();
+        // Same node count (builder order is batch-independent) and the
+        // factory quantizes both buckets from one scale map.
+        assert_eq!(f.graph(1).unwrap().len(), f.graph(4).unwrap().len());
+        assert!(f.scales.is_some());
+    }
+}

@@ -16,10 +16,10 @@ use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
-use super::{ExecCounters, ExecSnapshot, Executor};
+use super::{EngineKind, ExecCounters, ExecSnapshot, Executor};
 use crate::manifest::{Bundle, Manifest};
 use crate::memplan::StaticPlan;
-use crate::runtime::{LoadedModule, Runtime, TensorData};
+use crate::runtime::{DType, LoadedModule, Runtime, TensorData};
 
 pub struct GraphExecutor {
     rt: Rc<Runtime>,
@@ -34,9 +34,9 @@ pub struct GraphExecutor {
 
 impl GraphExecutor {
     pub fn new(rt: Rc<Runtime>, manifest: &Manifest, bundle: &Bundle) -> Result<Self> {
-        if bundle.executor != "graph" {
+        if bundle.executor != EngineKind::Graph {
             return Err(anyhow!(
-                "bundle {:?} is a {:?} bundle, not graph",
+                "bundle {:?} is a {} bundle, not graph",
                 bundle.id, bundle.executor
             ));
         }
@@ -72,6 +72,16 @@ impl Executor for GraphExecutor {
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        let spec = &self.module.inputs[0];
+        (spec.shape.clone(), DType::parse(&spec.dtype))
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        let spec = &self.module.output;
+        (spec.shape.clone(), DType::parse(&spec.dtype))
     }
 
     fn counters(&self) -> ExecSnapshot {

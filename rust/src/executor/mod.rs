@@ -12,22 +12,42 @@
 //! statically planned arena with fused q/dq boundaries — the mechanism the
 //! graph executor's win is made of, implemented natively (no PJRT
 //! artifacts needed) and checked bit-for-bit against the interpreter.
+//!
+//! Two abstractions make the tiers interchangeable to the serving layer:
+//!
+//! - [`EngineSpec`] ([`spec`]) — the typed (layout, schedule, precision,
+//!   engine) quadruple every lookup is keyed by.  No free-form strings
+//!   cross the executor/coordinator boundary.
+//! - [`EngineFactory`] ([`factory`]) — "give me the bucket sizes, then
+//!   build me one engine per bucket".  [`ArtifactFactory`] wraps the AOT
+//!   manifest + PJRT path; [`NativeArenaFactory`] compiles [`ArenaExec`]
+//!   engines straight from the graph IR, so the coordinator serves real
+//!   traffic on the offline build with no artifacts at all.
+//!
+//! Serving goes through [`Executor::run_into`]: the caller owns the
+//! batched input/output tensors (the coordinator pre-allocates one pair
+//! per bucket at startup), and `ArenaExec` overrides the default with its
+//! zero-heap-allocation path.
 
 mod arena_exec;
+pub mod factory;
 mod graph_exec;
 mod pool;
+pub mod spec;
 mod vm;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 pub use arena_exec::ArenaExec;
+pub use factory::{ArtifactFactory, EngineFactory, NativeArenaFactory};
 pub use graph_exec::GraphExecutor;
 pub use pool::WorkerPool;
+pub use spec::{EngineKind, EngineSpec, LayoutTag, Precision, Schedule};
 pub use vm::{VmExecutor, VmInstr};
 
-use crate::runtime::TensorData;
+use crate::runtime::{DType, TensorData};
 
 /// Counters that expose *why* the two executors differ.
 #[derive(Debug, Default)]
@@ -68,8 +88,31 @@ impl ExecCounters {
 /// A model executor: fp32 images in, logits out.
 pub trait Executor {
     fn run(&self, input: &TensorData) -> Result<TensorData>;
+
+    /// Execute into a caller-provided output tensor — the batched serving
+    /// entry point.  The default allocates via [`Executor::run`] and
+    /// copies; engines with a true in-place path (ArenaExec) override it,
+    /// which is what makes arena-bucket serving allocation-free in the
+    /// executor.
+    fn run_into(&self, input: &TensorData, out: &mut TensorData) -> Result<()> {
+        let r = self.run(input)?;
+        if r.shape != out.shape || r.dtype != out.dtype {
+            return Err(anyhow!(
+                "{}: output buffer {:?}/{:?} != produced {:?}/{:?}",
+                self.name(), out.shape, out.dtype, r.shape, r.dtype
+            ));
+        }
+        out.data.copy_from_slice(&r.data);
+        Ok(())
+    }
+
     fn name(&self) -> &str;
     /// The static batch size this executor was compiled for.
     fn batch(&self) -> usize;
+    /// Shape/dtype of the (batched) input tensor this engine accepts —
+    /// what the coordinator pre-allocates its stacked input from.
+    fn input_desc(&self) -> (Vec<usize>, DType);
+    /// Shape/dtype of the output tensor this engine produces.
+    fn output_desc(&self) -> (Vec<usize>, DType);
     fn counters(&self) -> ExecSnapshot;
 }

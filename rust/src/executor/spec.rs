@@ -1,0 +1,287 @@
+//! Typed engine specification: the (layout, schedule, precision, engine)
+//! quadruple every lookup and every serving configuration is keyed by.
+//!
+//! The quadruple used to travel as four free-form `String`s (manifest
+//! lookups, `ServeConfig`, bench combos, CLI flags), which meant a typo'd
+//! `"spatial-pack"` surfaced as a "no bundle" error at serving time.
+//! [`EngineSpec`] closes the set: each axis is an enum with `Display`/
+//! `FromStr` that round-trip the exact strings the artifact manifest and
+//! the CLI use, so parsing fails loudly at the boundary and everything
+//! past it is type-checked.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Error};
+
+/// Activation memory layout of the model variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayoutTag {
+    Nchw,
+    Nhwc,
+}
+
+impl LayoutTag {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayoutTag::Nchw => "NCHW",
+            LayoutTag::Nhwc => "NHWC",
+        }
+    }
+}
+
+/// Conv schedule family (the paper's Table-2 axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// Naive loops — the eager/PyTorch stand-in.
+    Reference,
+    /// TVM's NCHW spatial-pack default (best int8 schedule).
+    SpatialPack,
+    /// vmlal-class vector schedule (no alter-layout).
+    Simd,
+    /// MMLA-class interleaved NHWC schedule.
+    Interleaved,
+    /// The native arena engine plans its own schedule (fusion + static
+    /// arena); the axis is recorded for display but selects nothing.
+    Native,
+}
+
+impl Schedule {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Schedule::Reference => "reference",
+            Schedule::SpatialPack => "spatial_pack",
+            Schedule::Simd => "simd",
+            Schedule::Interleaved => "interleaved",
+            Schedule::Native => "native",
+        }
+    }
+}
+
+/// Numeric precision of the lowered model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Int8,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Which executor tier serves the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// One fused AOT HLO module over PJRT (artifact-backed).
+    Graph,
+    /// Relay-VM-style bytecode over per-primitive AOT modules
+    /// (artifact-backed; the paper's bug).
+    Vm,
+    /// The native in-process IR engine (`ArenaExec`) — no artifacts.
+    Arena,
+}
+
+impl EngineKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Graph => "graph",
+            EngineKind::Vm => "vm",
+            EngineKind::Arena => "arena",
+        }
+    }
+
+    /// Whether engines of this kind are built from AOT artifacts (vs
+    /// compiled natively from the in-process graph IR).
+    pub fn needs_artifacts(self) -> bool {
+        !matches!(self, EngineKind::Arena)
+    }
+}
+
+macro_rules! display_fromstr {
+    ($ty:ident, $($tok:literal => $variant:expr),+ $(,)?) => {
+        impl fmt::Display for $ty {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str(self.as_str())
+            }
+        }
+
+        impl FromStr for $ty {
+            type Err = Error;
+
+            fn from_str(s: &str) -> Result<Self, Error> {
+                match s {
+                    $($tok => Ok($variant),)+
+                    other => Err(anyhow!(
+                        "unknown {} {:?} (expected one of: {})",
+                        stringify!($ty),
+                        other,
+                        [$($tok),+].join(" ")
+                    )),
+                }
+            }
+        }
+    };
+}
+
+display_fromstr!(LayoutTag, "NCHW" => LayoutTag::Nchw, "NHWC" => LayoutTag::Nhwc);
+display_fromstr!(
+    Schedule,
+    "reference" => Schedule::Reference,
+    "spatial_pack" => Schedule::SpatialPack,
+    "simd" => Schedule::Simd,
+    "interleaved" => Schedule::Interleaved,
+    "native" => Schedule::Native,
+);
+display_fromstr!(Precision, "fp32" => Precision::Fp32, "int8" => Precision::Int8);
+display_fromstr!(
+    EngineKind,
+    "graph" => EngineKind::Graph,
+    "vm" => EngineKind::Vm,
+    "arena" => EngineKind::Arena,
+);
+
+/// The typed model-variant selector: which layout/schedule/precision
+/// variant runs under which executor tier.
+///
+/// Construct with the builder (`EngineSpec::new(kind).precision(...)`) or
+/// parse the canonical `"NCHW/spatial_pack/int8/graph"` form produced by
+/// `Display` — the two round-trip exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EngineSpec {
+    pub layout: LayoutTag,
+    pub schedule: Schedule,
+    pub precision: Precision,
+    pub engine: EngineKind,
+}
+
+impl EngineSpec {
+    /// Start from the defaults the paper's best configuration uses
+    /// (NCHW / spatial_pack / int8) under the given engine.  The arena
+    /// engine gets the `native` schedule tag — it plans its own.
+    pub fn new(engine: EngineKind) -> Self {
+        EngineSpec {
+            layout: LayoutTag::Nchw,
+            schedule: if engine == EngineKind::Arena {
+                Schedule::Native
+            } else {
+                Schedule::SpatialPack
+            },
+            precision: Precision::Int8,
+            engine,
+        }
+    }
+
+    pub fn layout(mut self, layout: LayoutTag) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::new(EngineKind::Graph)
+    }
+}
+
+impl fmt::Display for EngineSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{}/{}/{}",
+            self.layout, self.schedule, self.precision, self.engine
+        )
+    }
+}
+
+impl FromStr for EngineSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        let parts: Vec<&str> = s.split('/').collect();
+        let [layout, schedule, precision, engine] = parts.as_slice() else {
+            return Err(anyhow!(
+                "engine spec {s:?} is not LAYOUT/SCHEDULE/PRECISION/ENGINE \
+                 (e.g. NCHW/spatial_pack/int8/graph)"
+            ));
+        };
+        Ok(EngineSpec {
+            layout: layout.parse()?,
+            schedule: schedule.parse()?,
+            precision: precision.parse()?,
+            engine: engine.parse()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_display_fromstr_round_trips() {
+        for layout in [LayoutTag::Nchw, LayoutTag::Nhwc] {
+            for schedule in [
+                Schedule::Reference,
+                Schedule::SpatialPack,
+                Schedule::Simd,
+                Schedule::Interleaved,
+                Schedule::Native,
+            ] {
+                for precision in [Precision::Fp32, Precision::Int8] {
+                    for engine in [EngineKind::Graph, EngineKind::Vm, EngineKind::Arena] {
+                        let spec = EngineSpec { layout, schedule, precision, engine };
+                        let back: EngineSpec = spec.to_string().parse().unwrap();
+                        assert_eq!(spec, back);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axis_tokens_match_manifest_vocabulary() {
+        // These exact strings are what the python compile path writes into
+        // manifest.json; the enum parse must accept them verbatim.
+        assert_eq!("NCHW".parse::<LayoutTag>().unwrap(), LayoutTag::Nchw);
+        assert_eq!("spatial_pack".parse::<Schedule>().unwrap(), Schedule::SpatialPack);
+        assert_eq!("interleaved".parse::<Schedule>().unwrap(), Schedule::Interleaved);
+        assert_eq!("int8".parse::<Precision>().unwrap(), Precision::Int8);
+        assert_eq!("vm".parse::<EngineKind>().unwrap(), EngineKind::Vm);
+    }
+
+    #[test]
+    fn unknown_tokens_are_rejected_with_the_valid_set() {
+        let err = "spatial-pack".parse::<Schedule>().unwrap_err().to_string();
+        assert!(err.contains("spatial_pack"), "error should list valid tokens: {err}");
+        assert!("NCHW/int8/graph".parse::<EngineSpec>().is_err(), "arity check");
+        assert!("NCHW/spatial_pack/int8/jit".parse::<EngineSpec>().is_err());
+    }
+
+    #[test]
+    fn builder_defaults_track_the_engine_kind() {
+        let g = EngineSpec::new(EngineKind::Graph);
+        assert_eq!(g.schedule, Schedule::SpatialPack);
+        let a = EngineSpec::new(EngineKind::Arena);
+        assert_eq!(a.schedule, Schedule::Native);
+        let custom = EngineSpec::new(EngineKind::Graph)
+            .layout(LayoutTag::Nhwc)
+            .schedule(Schedule::Interleaved)
+            .precision(Precision::Fp32);
+        assert_eq!(custom.to_string(), "NHWC/interleaved/fp32/graph");
+    }
+}

@@ -28,10 +28,10 @@ use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
-use super::{ExecCounters, ExecSnapshot, Executor};
+use super::{EngineKind, ExecCounters, ExecSnapshot, Executor};
 use crate::manifest::{Bundle, Manifest, TensorSpec};
 use crate::memplan::DynamicAllocator;
-use crate::runtime::{LoadedModule, Runtime, TensorData};
+use crate::runtime::{DType, LoadedModule, Runtime, TensorData};
 
 /// Register index in the VM register file.  Register 0 holds the input;
 /// register i+1 holds module i's output.
@@ -80,9 +80,9 @@ impl VmExecutor {
         bundle: &Bundle,
         device_chaining: bool,
     ) -> Result<Self> {
-        if bundle.executor != "vm" {
+        if bundle.executor != EngineKind::Vm {
             return Err(anyhow!(
-                "bundle {:?} is a {:?} bundle, not vm",
+                "bundle {:?} is a {} bundle, not vm",
                 bundle.id, bundle.executor
             ));
         }
@@ -223,6 +223,16 @@ impl Executor for VmExecutor {
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        let spec = &self.modules[0].inputs[0];
+        (spec.shape.clone(), DType::parse(&spec.dtype))
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        let spec = &self.modules[self.modules.len() - 1].output;
+        (spec.shape.clone(), DType::parse(&spec.dtype))
     }
 
     fn counters(&self) -> ExecSnapshot {

@@ -18,11 +18,14 @@
 //! - [`graph`]    — Relay-like graph IR + optimization passes
 //! - [`executor`] — GraphExecutor vs VmExecutor (the paper's contrast),
 //!   plus ArenaExec: the native fused, statically-planned engine over the
-//!   graph IR (zero allocation per inference; see `graph::compile`)
+//!   graph IR (zero allocation per inference; see `graph::compile`); the
+//!   typed `EngineSpec` variant selector and the `EngineFactory`
+//!   bucket-engine builders the serving tier plugs into
 //! - [`memplan`]  — static memory planner vs dynamic allocation
 //! - [`layout`]   — NCHW{c} packing machinery (Figure 1)
 //! - [`quant`]    — host-side quantization + memory footprint accounting
-//! - [`coordinator`] — batching inference server
+//! - [`coordinator`] — batching inference server (artifact-backed or
+//!   native arena engines, via any `EngineFactory`)
 //! - [`perfmodel`] — analytic roofline / ideal-speedup model (Table 2)
 //! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
 //! - [`bench`]    — harnesses that regenerate every paper table & figure

@@ -7,10 +7,11 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use tvmq::bench::{
-    ablations, arena_ablation, figure1, memplan_ablation, table1, table2, table3, BenchCtx,
-    BenchOpts,
+    ablations, arena_ablation, figure1, memplan_ablation, serve_bench, table1, table2,
+    table3, BenchCtx, BenchOpts,
 };
 use tvmq::coordinator::{InferenceServer, ServeConfig};
+use tvmq::executor::{EngineKind, EngineSpec, LayoutTag, NativeArenaFactory, Precision};
 use tvmq::graph::passes::{
     calibrate_graph, AlterConvLayout, CancelLayoutTransforms, ConstantFold, FusionPass, Pass,
     PassManager, QuantizeRealize,
@@ -23,14 +24,22 @@ tvmq — quantized-inference runtime reproducing 'Analyzing Quantization in TVM'
 
 USAGE: tvmq <COMMAND> [--artifacts DIR] [flags]
 
+Model variants are typed engine specs (--layout NCHW|NHWC
+--schedule reference|spatial_pack|simd|interleaved|native
+--precision fp32|int8 --executor graph|vm|arena); unknown tokens are
+rejected at parse time.
+
 COMMANDS:
   inspect           List bundles in the artifact manifest
   run               One inference: --layout NCHW --schedule spatial_pack
                     --precision int8 --executor graph|vm|arena --batch 1 --seed 42
                     (--executor arena runs the in-process IR engine: no
                     artifacts needed; --image 32 --threads 1 also apply)
-  serve             Batched serving demo: --precision int8 --executor graph
+  serve             Batched serving: --executor graph|vm|arena --precision int8
                     --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
+                    (--executor arena serves natively compiled bucket engines —
+                    no artifacts; --buckets 1,4,8,16 --image 32 --threads N;
+                    exits non-zero unless every request succeeds)
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
@@ -38,6 +47,9 @@ COMMANDS:
   bench-ablations   Executor-mechanism ablations (incl. the arena tier)
   bench-arena       Arena executor vs interpreter      [--batches 1,8 --image 32
                     --threads 1 --epochs 20 --warmup 3 | --quick]
+  bench-serve       Arena bucket serving vs per-request run (no artifacts)
+                    [--requests 256 --clients 16 --buckets 1,4,8 --image 32
+                    --threads 1 --batch-timeout-ms 2]
   compile-demo      In-process graph-IR pass pipeline  [--batch 1 --c-block 16]
 
 The arena commands default --threads to the TVMQ_THREADS env var (else 1);
@@ -52,6 +64,18 @@ fn env_threads() -> usize {
         .and_then(|v| v.parse().ok())
         .filter(|&t| t >= 1)
         .unwrap_or(1)
+}
+
+/// Assemble the typed engine spec from the four CLI axis flags.  Each
+/// token parses through the [`EngineSpec`] vocabulary, so a typo fails
+/// here with the valid set instead of as a lookup miss later.
+fn parse_spec(args: &Args) -> Result<EngineSpec> {
+    let engine: EngineKind = args.str("executor", "graph").parse()?;
+    let mut spec = EngineSpec::new(engine);
+    spec.layout = args.str("layout", spec.layout.as_str()).parse()?;
+    spec.schedule = args.str("schedule", spec.schedule.as_str()).parse()?;
+    spec.precision = args.str("precision", spec.precision.as_str()).parse()?;
+    Ok(spec)
 }
 
 fn main() -> Result<()> {
@@ -100,6 +124,17 @@ fn main() -> Result<()> {
         Some("bench-arena") => {
             print_arena_ablation(&args)?;
         }
+        Some("bench-serve") => {
+            serve_bench(
+                &args.usize_list("buckets", &[1, 4, 8])?,
+                args.usize("image", 32)?,
+                args.usize("threads", env_threads())?,
+                args.usize("requests", 256)?,
+                args.usize("clients", 16)?,
+                Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
+            )?
+            .print();
+        }
         Some("compile-demo") => {
             compile_demo(args.usize("batch", 1)?, args.usize("c-block", 16)?)?;
         }
@@ -122,7 +157,7 @@ fn inspect(artifacts: &PathBuf) -> Result<()> {
         println!(
             "{:62} {:6} {:6} {:8}{}",
             b.id,
-            b.executor,
+            b.executor.as_str(),
             b.batch,
             b.modules.len(),
             b.quant
@@ -136,24 +171,21 @@ fn inspect(artifacts: &PathBuf) -> Result<()> {
 
 fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
     use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
-    let layout = args.str("layout", "NCHW");
-    let schedule = args.str("schedule", "spatial_pack");
-    let precision = args.str("precision", "int8");
-    let executor = args.str("executor", "graph");
-    if executor == "arena" {
-        return run_arena(args);
+    let spec = parse_spec(args)?;
+    if spec.engine == EngineKind::Arena {
+        return run_arena(args, spec);
     }
     let batch = args.usize("batch", 1)?;
     let seed = args.u64("seed", 42)?;
 
     let m = tvmq::Manifest::load(artifacts)?;
     let rt = std::rc::Rc::new(tvmq::Runtime::new()?);
-    let bundle = m.find(&layout, &schedule, &precision, batch, &executor)?;
-    let exec: Box<dyn Executor> = match executor.as_str() {
-        "graph" => Box::new(GraphExecutor::new(rt, &m, bundle)?),
+    let bundle = m.find(spec, batch)?;
+    let exec: Box<dyn Executor> = match spec.engine {
+        EngineKind::Graph => Box::new(GraphExecutor::new(rt, &m, bundle)?),
         _ => Box::new(VmExecutor::new(rt, &m, bundle)?),
     };
-    let rest = if layout == "NCHW" {
+    let rest = if spec.layout == LayoutTag::Nchw {
         vec![m.in_channels, m.image_size, m.image_size]
     } else {
         vec![m.image_size, m.image_size, m.in_channels]
@@ -188,26 +220,29 @@ fn print_arena_ablation(args: &Args) -> Result<()> {
 
 /// `run --executor arena`: the artifact-free tier — build the ResNet-style
 /// IR, optionally quantize-realize it, compile to the arena engine, run.
-fn run_arena(args: &Args) -> Result<()> {
-    use tvmq::executor::{ArenaExec, Executor};
+fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
+    use tvmq::executor::{factory::ARENA_MODEL_SEED, ArenaExec, Executor};
     use tvmq::graph::passes::QuantizeRealize;
     use tvmq::graph::{build_resnet_ir, calibrate_ir};
 
+    // Same constraint the serving factory enforces: the native engine
+    // builds NCHW models only.
+    if spec.layout != LayoutTag::Nchw {
+        bail!("{spec}: the arena engine builds NCHW models only");
+    }
     let batch = args.usize("batch", 1)?;
     let image = args.usize("image", 32)?;
     let threads = args.usize("threads", env_threads())?;
-    let precision = args.str("precision", "int8");
     let seed = args.u64("seed", 42)?;
 
-    let g = build_resnet_ir(batch, image, 7)?;
-    let g = match precision.as_str() {
-        "fp32" => g,
-        "int8" => {
+    let g = build_resnet_ir(batch, image, ARENA_MODEL_SEED)?;
+    let g = match spec.precision {
+        Precision::Fp32 => g,
+        Precision::Int8 => {
             let calib = calibrate_ir(&g, 1);
             let scales = calibrate_graph(&g, &calib)?;
             QuantizeRealize { scales }.run(&g)?
         }
-        other => bail!("--precision {other:?} (arena supports fp32 | int8)"),
     };
     let exec = ArenaExec::with_options(&g, true, threads)?;
     let cg = exec.compiled();
@@ -224,8 +259,9 @@ fn run_arena(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let logits = exec.run(&x)?;
     println!(
-        "ran {} ({precision}, {threads} thread(s)) in {:.2} ms",
+        "ran {} ({}, {threads} thread(s)) in {:.2} ms",
         exec.name(),
+        spec.precision,
         t0.elapsed().as_secs_f64() * 1e3
     );
     println!("classes: {:?}", logits.argmax_last()?);
@@ -233,58 +269,94 @@ fn run_arena(args: &Args) -> Result<()> {
 }
 
 fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let spec = parse_spec(args)?;
     let cfg = ServeConfig {
-        precision: args.str("precision", "int8"),
-        executor: args.str("executor", "graph"),
+        spec,
         max_batch: args.usize("max-batch", 64)?,
         batch_timeout: Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
-        ..Default::default()
     };
     let requests = args.usize("requests", 512)?;
     let clients = args.usize("clients", 32)?.max(1);
 
-    let server = std::sync::Arc::new(InferenceServer::start(artifacts.clone(), cfg)?);
-    println!("buckets: {:?}", server.buckets);
-    let m = tvmq::Manifest::load(artifacts)?;
-    let rest = vec![m.in_channels, m.image_size, m.image_size];
+    // The arena engine serves natively compiled bucket engines (no
+    // artifacts); the graph/vm engines serve AOT bundles from the
+    // manifest.  Either way the image geometry must match the model.
+    let (server, rest) = if spec.engine == EngineKind::Arena {
+        let buckets = args.usize_list("buckets", &[1, 4, 8, 16])?;
+        let image = args.usize("image", 32)?;
+        let threads = args.usize("threads", env_threads())?;
+        let factory = NativeArenaFactory::new(spec, &buckets, image, threads)?;
+        let server = InferenceServer::start_with(factory, cfg)?;
+        (server, vec![3, image, image])
+    } else {
+        let m = tvmq::Manifest::load(artifacts)?;
+        let rest = if spec.layout == LayoutTag::Nchw {
+            vec![m.in_channels, m.image_size, m.image_size]
+        } else {
+            vec![m.image_size, m.image_size, m.in_channels]
+        };
+        (InferenceServer::start(artifacts.clone(), cfg)?, rest)
+    };
+    let server = std::sync::Arc::new(server);
+    println!("serving {spec} with buckets {:?}", server.buckets);
 
     let t0 = std::time::Instant::now();
     let per_client = (requests / clients).max(1);
+    let expected = (per_client * clients) as u64;
     let mut handles = Vec::new();
     for c in 0..clients {
         let server = server.clone();
         let rest = rest.clone();
         handles.push(std::thread::spawn(move || {
+            let mut errors = 0u64;
             for i in 0..per_client {
                 let img = synthetic_images(1, &rest, (c * 1000 + i) as u64);
-                let _ = server.submit_blocking(img);
+                if server.submit_blocking(img).is_err() {
+                    errors += 1;
+                }
             }
+            errors
         }));
     }
+    let mut client_errors = 0u64;
     for h in handles {
-        let _ = h.join();
+        client_errors += h.join().unwrap_or(per_client as u64);
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     let lat = stats.latency_stats();
     println!(
-        "served {} requests in {:.2}s  ({:.1} req/s)",
+        "served {} requests in {:.2}s  ({:.1} req/s)  errors={}",
         stats.requests,
         wall,
-        stats.requests as f64 / wall
+        stats.requests as f64 / wall,
+        // Server-side count; every such failure also surfaces as a client
+        // Err, so adding client_errors here would double-count.
+        stats.errors
     );
     println!(
         "latency ms: p50={:.2} p95={:.2} p99={:.2}  mean batch={:.1}  batches={} padded={}",
         lat.p50_ms, lat.p95_ms, lat.p99_ms, stats.mean_batch(), stats.batches, stats.padded_slots
     );
+    println!("bucket histogram: {:?}", stats.batch_histogram);
+    // Smoke contract (CI relies on this): every request answered, none
+    // with an error.
+    if stats.requests != expected || stats.errors != 0 || client_errors != 0 {
+        bail!(
+            "serve smoke failed: {}/{expected} requests ok, {} server errors, \
+             {client_errors} client errors",
+            stats.requests, stats.errors
+        );
+    }
     Ok(())
 }
 
 /// The graph-IR compile pipeline end to end: build → calibrate → quantize →
 /// layout-alter → fold → fuse, printing per-pass statistics.
 fn compile_demo(batch: usize, c_block: usize) -> Result<()> {
+    use tvmq::executor::factory::ARENA_MODEL_SEED;
     use tvmq::graph::{build_resnet_ir, calibrate_ir, evaluate};
-    let g = build_resnet_ir(batch, 32, 7)?;
+    let g = build_resnet_ir(batch, 32, ARENA_MODEL_SEED)?;
     println!("built resnet10 IR: {} nodes, {} const bytes", g.len(), g.const_bytes());
 
     let calib = calibrate_ir(&g, 42);

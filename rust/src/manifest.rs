@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::executor::{EngineKind, EngineSpec, LayoutTag, Precision, Schedule};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -34,13 +35,26 @@ pub struct Manifest {
 pub struct Bundle {
     pub id: String,
     pub config: ModelConfig,
-    /// "graph" (one fused module) or "vm" (per-segment modules).
-    pub executor: String,
+    /// `Graph` (one fused module) or `Vm` (per-segment modules); parsed at
+    /// decode time, so an unknown executor tag never reaches a lookup.
+    pub executor: EngineKind,
     pub batch: usize,
     pub modules: Vec<ModuleSpec>,
     pub quant: Option<QuantReport>,
     /// Parameter bytes at this bundle's precision.
     pub weight_bytes: u64,
+}
+
+impl Bundle {
+    /// The typed variant selector this bundle satisfies.
+    pub fn spec(&self) -> EngineSpec {
+        EngineSpec {
+            layout: self.config.layout,
+            schedule: self.config.schedule,
+            precision: self.config.precision,
+            engine: self.executor,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -49,9 +63,9 @@ pub struct ModelConfig {
     pub image_size: usize,
     pub in_channels: usize,
     pub num_classes: usize,
-    pub layout: String,
-    pub schedule: String,
-    pub precision: String,
+    pub layout: LayoutTag,
+    pub schedule: Schedule,
+    pub precision: Precision,
     pub c_block: usize,
     pub k_block: usize,
     pub h_tile: usize,
@@ -157,10 +171,14 @@ impl Manifest {
             if !seen.insert(&b.id) {
                 bail!("duplicate bundle id {:?}", b.id);
             }
-            if b.executor != "graph" && b.executor != "vm" {
-                bail!("bundle {:?}: unknown executor {:?}", b.id, b.executor);
+            if b.executor == EngineKind::Arena {
+                bail!(
+                    "bundle {:?}: arena engines are compiled natively from the \
+                     graph IR, never from artifacts",
+                    b.id
+                );
             }
-            if b.executor == "graph" && b.modules.len() != 1 {
+            if b.executor == EngineKind::Graph && b.modules.len() != 1 {
                 bail!("graph bundle {:?} must have exactly 1 module", b.id);
             }
             if b.modules.is_empty() {
@@ -220,46 +238,20 @@ impl Manifest {
         })
     }
 
-    /// Find a bundle by (layout, schedule, precision, batch, executor).
-    pub fn find(
-        &self,
-        layout: &str,
-        schedule: &str,
-        precision: &str,
-        batch: usize,
-        executor: &str,
-    ) -> Result<&Bundle> {
+    /// Find the bundle satisfying a typed variant spec at a batch size.
+    pub fn find(&self, spec: EngineSpec, batch: usize) -> Result<&Bundle> {
         self.bundles
             .iter()
-            .find(|b| {
-                b.config.layout == layout
-                    && b.config.schedule == schedule
-                    && b.config.precision == precision
-                    && b.batch == batch
-                    && b.executor == executor
-            })
-            .ok_or_else(|| {
-                anyhow!("no bundle for {layout}/{schedule}/{precision} b{batch} {executor}")
-            })
+            .find(|b| b.spec() == spec && b.batch == batch)
+            .ok_or_else(|| anyhow!("no bundle for {spec} b{batch}"))
     }
 
     /// Batch sizes available for a given variant — the serving bucket set.
-    pub fn batch_buckets(
-        &self,
-        layout: &str,
-        schedule: &str,
-        precision: &str,
-        executor: &str,
-    ) -> Vec<usize> {
+    pub fn batch_buckets(&self, spec: EngineSpec) -> Vec<usize> {
         let mut v: Vec<usize> = self
             .bundles
             .iter()
-            .filter(|b| {
-                b.config.layout == layout
-                    && b.config.schedule == schedule
-                    && b.config.precision == precision
-                    && b.executor == executor
-            })
+            .filter(|b| b.spec() == spec)
             .map(|b| b.batch)
             .collect();
         v.sort_unstable();
@@ -273,7 +265,7 @@ impl Bundle {
         Ok(Bundle {
             id: j.get("id")?.as_str()?.to_string(),
             config: ModelConfig::from_json(j.get("config")?)?,
-            executor: j.get("executor")?.as_str()?.to_string(),
+            executor: j.get("executor")?.as_str()?.parse()?,
             batch: j.get("batch")?.as_usize()?,
             modules: j
                 .get("modules")?
@@ -302,9 +294,9 @@ impl ModelConfig {
             image_size: j.get("image_size")?.as_usize()?,
             in_channels: j.get("in_channels")?.as_usize()?,
             num_classes: j.get("num_classes")?.as_usize()?,
-            layout: j.get("layout")?.as_str()?.to_string(),
-            schedule: j.get("schedule")?.as_str()?.to_string(),
-            precision: j.get("precision")?.as_str()?.to_string(),
+            layout: j.get("layout")?.as_str()?.parse()?,
+            schedule: j.get("schedule")?.as_str()?.parse()?,
+            precision: j.get("precision")?.as_str()?.parse()?,
             c_block: j.get("c_block")?.as_usize()?,
             k_block: j.get("k_block")?.as_usize()?,
             h_tile: j.get("h_tile")?.as_usize()?,

@@ -12,9 +12,9 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use tvmq::executor::ArenaExec;
+use tvmq::executor::{ArenaExec, EngineFactory, Executor, NativeArenaFactory};
 use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
 use tvmq::graph::{build_conv_net, calibrate_ir, Graph, NetSpec};
 use tvmq::runtime::TensorData;
@@ -129,4 +129,124 @@ fn run_into_is_allocation_free_with_worker_pool_and_fused_residual() {
         let x = calibrate_ir(graph, 3);
         assert_zero_alloc_steady_state(&exec, &x, &format!("{tag} t{threads}"));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Serve loop: the executor path stays allocation-free end-to-end
+// ---------------------------------------------------------------------------
+
+/// Wraps an engine and records the allocation-counter delta across every
+/// `run_into` call.  While the coordinator worker is inside `run_into`
+/// the (single) client below is parked in `recv`, so the delta isolates
+/// the executor path of the serve loop.
+struct CountingExec {
+    inner: Box<dyn Executor>,
+    deltas: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Executor for CountingExec {
+    fn run(&self, input: &TensorData) -> anyhow::Result<TensorData> {
+        self.inner.run(input)
+    }
+
+    fn run_into(&self, input: &TensorData, out: &mut TensorData) -> anyhow::Result<()> {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        let r = self.inner.run_into(input, out);
+        let after = ALLOCS.load(Ordering::SeqCst);
+        // The Vec was pre-reserved: within capacity, push allocates
+        // nothing, and it runs after the measurement window anyway.
+        self.deltas.lock().unwrap().push(after - before);
+        r
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, tvmq::runtime::DType) {
+        self.inner.input_desc()
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, tvmq::runtime::DType) {
+        self.inner.output_desc()
+    }
+
+    fn counters(&self) -> tvmq::executor::ExecSnapshot {
+        self.inner.counters()
+    }
+}
+
+struct CountingFactory {
+    inner: NativeArenaFactory,
+    deltas: Arc<Mutex<Vec<u64>>>,
+}
+
+impl EngineFactory for CountingFactory {
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+
+    fn build(&self, batch: usize) -> anyhow::Result<Box<dyn Executor>> {
+        Ok(Box::new(CountingExec {
+            inner: self.inner.build(batch)?,
+            deltas: self.deltas.clone(),
+        }))
+    }
+}
+
+#[test]
+fn serve_loop_executor_path_is_allocation_free_in_steady_state() {
+    use std::time::Duration;
+    use tvmq::coordinator::{InferenceServer, ServeConfig};
+    use tvmq::executor::{EngineKind, EngineSpec};
+    use tvmq::util::rng::Rng64;
+
+    let _serial = SERIAL.lock().unwrap();
+
+    let spec = EngineSpec::new(EngineKind::Arena);
+    let deltas = Arc::new(Mutex::new(Vec::with_capacity(64)));
+    let factory = CountingFactory {
+        inner: NativeArenaFactory::new(spec, &[1, 2], 12, 1).unwrap(),
+        deltas: deltas.clone(),
+    };
+    let server = InferenceServer::start_with(
+        factory,
+        ServeConfig {
+            spec,
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+
+    let image = {
+        let mut rng = Rng64::seed_from_u64(11);
+        let vals: Vec<f32> = (0..3 * 12 * 12).map(|_| rng.normal() * 0.5).collect();
+        TensorData::from_f32(vec![1, 3, 12, 12], &vals).unwrap()
+    };
+
+    // Warm-up: lazily mapped arena pages, channel internals, stats.
+    for _ in 0..3 {
+        server.submit_blocking(image.clone()).unwrap();
+    }
+    let warm = deltas.lock().unwrap().len();
+
+    for _ in 0..5 {
+        let reply = server.submit_blocking(image.clone()).unwrap();
+        assert!(reply.logits.as_f32_slice().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    let deltas = deltas.lock().unwrap();
+    assert_eq!(deltas.len(), warm + 5);
+    assert_eq!(
+        &deltas[warm..],
+        &[0, 0, 0, 0, 0],
+        "steady-state serving allocated inside the executor path"
+    );
+    drop(deltas);
+    server.shutdown().unwrap();
 }

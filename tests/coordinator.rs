@@ -1,0 +1,222 @@
+//! Batcher behavior, pinned with a mock engine factory — no artifacts, no
+//! PJRT, no real model.  The mock executor records every batch it serves
+//! and computes logits from the input rows, so the tests can verify
+//! gather/timeout/padding/truncate behavior *and* that each reply carries
+//! the right row (class), bucket, and shape.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use tvmq::coordinator::{InferenceServer, PendingReply, ServeConfig};
+use tvmq::executor::{
+    EngineFactory, EngineKind, EngineSpec, ExecSnapshot, Executor,
+};
+use tvmq::runtime::{DType, TensorData};
+
+const DIM: usize = 4;
+const CLASSES: usize = 8;
+
+/// Deterministic stand-in engine: input `[batch, DIM]`, output
+/// `[batch, CLASSES]`, where row `i`'s logits peak at index
+/// `round(input[i][0])` — so the expected class is encoded in the image
+/// and a reply routed to the wrong request is caught immediately.
+struct MockExec {
+    batch: usize,
+    /// Bucket sizes actually served, in order (shared with the factory).
+    calls: Arc<Mutex<Vec<usize>>>,
+    fail: bool,
+}
+
+impl Executor for MockExec {
+    fn run(&self, input: &TensorData) -> Result<TensorData> {
+        if self.fail {
+            return Err(anyhow!("mock engine failure"));
+        }
+        if input.shape != vec![self.batch, DIM] {
+            return Err(anyhow!("mock: bad input shape {:?}", input.shape));
+        }
+        self.calls.lock().unwrap().push(self.batch);
+        let x = input.as_f32_slice()?;
+        let mut out = vec![0f32; self.batch * CLASSES];
+        for i in 0..self.batch {
+            let v = x[i * DIM];
+            for j in 0..CLASSES {
+                out[i * CLASSES + j] = -((j as f32) - v).abs();
+            }
+        }
+        TensorData::from_f32(vec![self.batch, CLASSES], &out)
+    }
+
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        (vec![self.batch, DIM], DType::F32)
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        (vec![self.batch, CLASSES], DType::F32)
+    }
+
+    fn counters(&self) -> ExecSnapshot {
+        ExecSnapshot {
+            invocations: 0,
+            dispatches: 0,
+            dynamic_allocs: 0,
+            boundary_bytes: 0,
+            instructions: 0,
+        }
+    }
+}
+
+struct MockFactory {
+    buckets: Vec<usize>,
+    calls: Arc<Mutex<Vec<usize>>>,
+    fail: bool,
+}
+
+impl MockFactory {
+    fn new(buckets: &[usize]) -> Self {
+        MockFactory {
+            buckets: buckets.to_vec(),
+            calls: Arc::new(Mutex::new(Vec::new())),
+            fail: false,
+        }
+    }
+}
+
+impl EngineFactory for MockFactory {
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(MockExec { batch, calls: self.calls.clone(), fail: self.fail }))
+    }
+}
+
+/// An image whose expected class is `class`.
+fn image(class: usize) -> TensorData {
+    TensorData::from_f32(vec![1, DIM], &[class as f32; DIM]).unwrap()
+}
+
+fn cfg(max_batch: usize, timeout_ms: u64) -> ServeConfig {
+    ServeConfig {
+        spec: EngineSpec::new(EngineKind::Arena),
+        max_batch,
+        batch_timeout: Duration::from_millis(timeout_ms),
+    }
+}
+
+#[test]
+fn partial_batch_pads_to_the_next_bucket_and_truncates_replies() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let calls = factory.calls.clone();
+    // Generous timeout: the three requests below must land in ONE batch.
+    let server = InferenceServer::start_with(factory, cfg(4, 200)).unwrap();
+
+    let pending: Vec<PendingReply> =
+        (0..3).map(|c| server.submit(image(c)).unwrap()).collect();
+    for (c, p) in pending.into_iter().enumerate() {
+        let reply = p.wait().unwrap();
+        // Gathered 3 → smallest fitting bucket is 4 (padded by one slot).
+        assert_eq!(reply.batch, 4);
+        // Row `c`'s logits, not a padding row and not a neighbor's.
+        assert_eq!(reply.logits.shape, vec![1, CLASSES]);
+        assert_eq!(reply.class, c);
+        let want: Vec<f32> =
+            (0..CLASSES).map(|j| -((j as f32) - c as f32).abs()).collect();
+        assert_eq!(reply.logits.as_f32().unwrap(), want);
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.padded_slots, 1);
+    assert_eq!(stats.batch_histogram.get(&4), Some(&1));
+    assert_eq!(*calls.lock().unwrap(), vec![4]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn sequential_requests_serve_in_the_smallest_bucket() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let calls = factory.calls.clone();
+    let server = InferenceServer::start_with(factory, cfg(4, 1)).unwrap();
+
+    for c in 0..3 {
+        let reply = server.submit_blocking(image(c)).unwrap();
+        assert_eq!(reply.batch, 1, "a lone request must not be over-padded");
+        assert_eq!(reply.class, c);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.batches, 3);
+    assert_eq!(stats.padded_slots, 0);
+    assert_eq!(stats.batch_histogram.get(&1), Some(&3));
+    assert_eq!(*calls.lock().unwrap(), vec![1, 1, 1]);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn gather_is_capped_by_max_batch() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let calls = factory.calls.clone();
+    // max_batch 2 < largest bucket: batches must flush at 2 even though a
+    // 4-engine exists.
+    let server = InferenceServer::start_with(factory, cfg(2, 500)).unwrap();
+
+    let pending: Vec<PendingReply> =
+        (0..4).map(|c| server.submit(image(c)).unwrap()).collect();
+    for p in pending {
+        let reply = p.wait().unwrap();
+        assert!(reply.batch <= 2, "batch {} exceeds max_batch", reply.batch);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 4);
+    assert!(calls.lock().unwrap().iter().all(|&b| b <= 2));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn engine_failure_fails_every_job_in_the_batch_and_counts() {
+    let mut factory = MockFactory::new(&[1, 2]);
+    factory.fail = true;
+    let server = InferenceServer::start_with(factory, cfg(2, 100)).unwrap();
+
+    let pending: Vec<PendingReply> =
+        (0..2).map(|c| server.submit(image(c)).unwrap()).collect();
+    for p in pending {
+        let err = p.wait().unwrap_err().to_string();
+        assert!(err.contains("mock engine failure"), "got: {err}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.errors, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mismatched_image_is_rejected_not_served() {
+    let factory = MockFactory::new(&[1]);
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+    let bad = TensorData::from_f32(vec![1, DIM + 1], &[0.0; DIM + 1]).unwrap();
+    assert!(server.submit_blocking(bad).is_err());
+    let stats = server.stats();
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.errors, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn empty_factory_fails_startup() {
+    let factory = MockFactory::new(&[]);
+    assert!(InferenceServer::start_with(factory, cfg(4, 1)).is_err());
+}

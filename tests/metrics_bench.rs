@@ -1,5 +1,6 @@
 //! Measurement protocol, table rendering, and bench-harness plumbing.
 
+use tvmq::executor::{EngineKind, EngineSpec, Precision};
 use tvmq::metrics::{improvement_pct, measure, EpochStats, Table};
 
 #[test]
@@ -90,15 +91,17 @@ fn quant_footprint_reflects_precision() {
         return; // unit-test environments without artifacts
     }
     let m = tvmq::manifest::Manifest::load(&dir).unwrap();
-    let f = m.find("NCHW", "spatial_pack", "fp32", 1, "graph").unwrap();
-    let q = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
+    let f = m
+        .find(EngineSpec::new(EngineKind::Graph).precision(Precision::Fp32), 1)
+        .unwrap();
+    let q = m.find(EngineSpec::new(EngineKind::Graph), 1).unwrap();
     assert_eq!(f.weight_bytes, 4 * q.weight_bytes);
     let ff = tvmq::quant::footprint(&m, f);
     let qf = tvmq::quant::footprint(&m, q);
     assert!(qf.weight_bytes < ff.weight_bytes);
     // §3.2.2: the paper's int8 rows use slightly MORE total memory at equal
     // batch; our model reflects the q/dq staging overhead.
-    assert!(qf.qdq_overhead_bytes > 0 || q.executor == "graph");
+    assert!(qf.qdq_overhead_bytes > 0 || q.executor == EngineKind::Graph);
 }
 
 #[test]
@@ -108,8 +111,8 @@ fn bandwidth_model_scales_with_batch() {
         return;
     }
     let m = tvmq::manifest::Manifest::load(&dir).unwrap();
-    let b1 = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
-    let b64 = m.find("NCHW", "spatial_pack", "int8", 64, "graph").unwrap();
+    let b1 = m.find(EngineSpec::new(EngineKind::Graph), 1).unwrap();
+    let b64 = m.find(EngineSpec::new(EngineKind::Graph), 64).unwrap();
     let w1 = tvmq::quant::bandwidth(b1);
     let w64 = tvmq::quant::bandwidth(b64);
     assert_eq!(w1.weight_bytes, w64.weight_bytes, "weights amortize");

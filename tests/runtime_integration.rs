@@ -12,7 +12,10 @@ use std::rc::Rc;
 use std::time::Duration;
 
 use tvmq::coordinator::{InferenceServer, ServeConfig};
-use tvmq::executor::{Executor, GraphExecutor, VmExecutor};
+use tvmq::executor::{
+    EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision, Schedule,
+    VmExecutor,
+};
 use tvmq::manifest::Manifest;
 use tvmq::runtime::{synthetic_images, Runtime, TensorData};
 
@@ -25,8 +28,30 @@ fn artifacts() -> std::path::PathBuf {
     dir
 }
 
-fn image(m: &Manifest, batch: usize, layout: &str, seed: u64) -> TensorData {
-    let rest = if layout == "NCHW" {
+/// NCHW/spatial_pack/int8 (the paper's best variant) under an engine.
+fn best(engine: EngineKind) -> EngineSpec {
+    EngineSpec::new(engine)
+}
+
+/// The five Table-2 graph-engine combos.
+fn table2_specs() -> [EngineSpec; 5] {
+    [
+        (LayoutTag::Nchw, Schedule::SpatialPack, Precision::Fp32),
+        (LayoutTag::Nchw, Schedule::SpatialPack, Precision::Int8),
+        (LayoutTag::Nchw, Schedule::Simd, Precision::Int8),
+        (LayoutTag::Nhwc, Schedule::SpatialPack, Precision::Fp32),
+        (LayoutTag::Nhwc, Schedule::Interleaved, Precision::Int8),
+    ]
+    .map(|(layout, schedule, precision)| {
+        EngineSpec::new(EngineKind::Graph)
+            .layout(layout)
+            .schedule(schedule)
+            .precision(precision)
+    })
+}
+
+fn image(m: &Manifest, batch: usize, layout: LayoutTag, seed: u64) -> TensorData {
+    let rest = if layout == LayoutTag::Nchw {
         vec![m.in_channels, m.image_size, m.image_size]
     } else {
         vec![m.image_size, m.image_size, m.in_channels]
@@ -46,14 +71,8 @@ fn manifest_loads_and_validates() {
     assert!(m.param_count > 100_000);
     assert!(!m.scales.is_empty());
     // Every Table-2 combo exists as a graph bundle at batch 1.
-    for (l, s, p) in [
-        ("NCHW", "spatial_pack", "fp32"),
-        ("NCHW", "spatial_pack", "int8"),
-        ("NCHW", "simd", "int8"),
-        ("NHWC", "spatial_pack", "fp32"),
-        ("NHWC", "interleaved", "int8"),
-    ] {
-        m.find(l, s, p, 1, "graph").unwrap();
+    for spec in table2_specs() {
+        m.find(spec, 1).unwrap();
     }
 }
 
@@ -62,10 +81,10 @@ fn manifest_loads_and_validates() {
 fn graph_and_vm_executors_agree() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
-    let x = image(&m, 1, "NCHW", 7);
+    let x = image(&m, 1, LayoutTag::Nchw, 7);
 
-    let gb = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
-    let vb = m.find("NCHW", "spatial_pack", "int8", 1, "vm").unwrap();
+    let gb = m.find(best(EngineKind::Graph), 1).unwrap();
+    let vb = m.find(best(EngineKind::Vm), 1).unwrap();
     let ge = GraphExecutor::new(rt.clone(), &m, gb).unwrap();
     let ve = VmExecutor::new(rt.clone(), &m, vb).unwrap();
 
@@ -89,8 +108,8 @@ fn graph_and_vm_executors_agree() {
 fn vm_device_chaining_agrees_with_host_path() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
-    let x = image(&m, 1, "NCHW", 9);
-    let vb = m.find("NCHW", "spatial_pack", "int8", 1, "vm").unwrap();
+    let x = image(&m, 1, LayoutTag::Nchw, 9);
+    let vb = m.find(best(EngineKind::Vm), 1).unwrap();
     let host = VmExecutor::with_options(rt.clone(), &m, vb, false).unwrap();
     let dev = VmExecutor::with_options(rt.clone(), &m, vb, true).unwrap();
     let a = host.run(&x).unwrap().as_f32().unwrap();
@@ -104,13 +123,14 @@ fn vm_device_chaining_agrees_with_host_path() {
 fn int8_tracks_fp32_model() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
-    let x = image(&m, 1, "NCHW", 21);
+    let x = image(&m, 1, LayoutTag::Nchw, 21);
     let f = GraphExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "fp32", 1, "graph").unwrap(),
+        rt.clone(), &m,
+        m.find(best(EngineKind::Graph).precision(Precision::Fp32), 1).unwrap(),
     )
     .unwrap();
     let q = GraphExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+        rt.clone(), &m, m.find(best(EngineKind::Graph), 1).unwrap(),
     )
     .unwrap();
     let lf = f.run(&x).unwrap();
@@ -127,15 +147,9 @@ fn all_table2_variants_execute_and_agree_on_class() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
     let mut classes = Vec::new();
-    for (l, s, p) in [
-        ("NCHW", "spatial_pack", "fp32"),
-        ("NCHW", "spatial_pack", "int8"),
-        ("NCHW", "simd", "int8"),
-        ("NHWC", "spatial_pack", "fp32"),
-        ("NHWC", "interleaved", "int8"),
-    ] {
-        let e = GraphExecutor::new(rt.clone(), &m, m.find(l, s, p, 1, "graph").unwrap()).unwrap();
-        let logits = e.run(&image(&m, 1, l, 33)).unwrap();
+    for spec in table2_specs() {
+        let e = GraphExecutor::new(rt.clone(), &m, m.find(spec, 1).unwrap()).unwrap();
+        let logits = e.run(&image(&m, 1, spec.layout, 33)).unwrap();
         classes.push(logits.argmax_last().unwrap()[0]);
     }
     assert!(
@@ -149,18 +163,18 @@ fn all_table2_variants_execute_and_agree_on_class() {
 fn batch_variants_consistent_with_batch1() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
-    let buckets = m.batch_buckets("NCHW", "spatial_pack", "int8", "graph");
+    let buckets = m.batch_buckets(best(EngineKind::Graph));
     assert!(buckets.len() >= 3, "need several buckets, have {buckets:?}");
     let b1 = GraphExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+        rt.clone(), &m, m.find(best(EngineKind::Graph), 1).unwrap(),
     )
     .unwrap();
-    let x1 = image(&m, 1, "NCHW", 5);
+    let x1 = image(&m, 1, LayoutTag::Nchw, 5);
     let want = b1.run(&x1).unwrap().as_f32().unwrap();
 
     let bb = buckets[1];
     let eb = GraphExecutor::new(
-        rt.clone(), &m, m.find("NCHW", "spatial_pack", "int8", bb, "graph").unwrap(),
+        rt.clone(), &m, m.find(best(EngineKind::Graph), bb).unwrap(),
     )
     .unwrap();
     let xb = x1.pad_rows(bb).unwrap();
@@ -178,7 +192,7 @@ fn executor_rejects_wrong_shape() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
     let e = GraphExecutor::new(
-        rt, &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+        rt, &m, m.find(best(EngineKind::Graph), 1).unwrap(),
     )
     .unwrap();
     let bad = synthetic_images(1, &[1, 4, 4], 0);
@@ -190,7 +204,7 @@ fn executor_rejects_wrong_shape() {
 fn executable_cache_hits_on_reload() {
     let m = Manifest::load(artifacts()).unwrap();
     let rt = Rc::new(Runtime::new().unwrap());
-    let b = m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap();
+    let b = m.find(best(EngineKind::Graph), 1).unwrap();
     let _e1 = GraphExecutor::new(rt.clone(), &m, b).unwrap();
     let compiles_before = rt.cached_modules();
     let _e2 = GraphExecutor::new(rt.clone(), &m, b).unwrap();
@@ -287,12 +301,12 @@ fn server_single_request_matches_direct_execution() {
         },
     )
     .unwrap();
-    let x = image(&m, 1, "NCHW", 77);
+    let x = image(&m, 1, LayoutTag::Nchw, 77);
     let reply = server.submit_blocking(x.clone()).unwrap();
 
     let rt = Rc::new(Runtime::new().unwrap());
     let e = GraphExecutor::new(
-        rt, &m, m.find("NCHW", "spatial_pack", "int8", 1, "graph").unwrap(),
+        rt, &m, m.find(best(EngineKind::Graph), 1).unwrap(),
     )
     .unwrap();
     let direct = e.run(&x).unwrap();
@@ -300,8 +314,21 @@ fn server_single_request_matches_direct_execution() {
 }
 
 #[test]
+fn unknown_variant_tokens_fail_at_parse_time() {
+    // Free-form strings no longer reach the server: a typo'd schedule is
+    // a parse error, not a late "no bundle" miss.
+    assert!("nonexistent".parse::<Schedule>().is_err());
+    assert!("NCHW/nonexistent/int8/graph".parse::<EngineSpec>().is_err());
+}
+
+#[test]
 #[ignore = "requires AOT artifacts (make artifacts) and a real PJRT backend; the offline build ships the xla stub"]
-fn server_rejects_unknown_variant() {
-    let cfg = ServeConfig { schedule: "nonexistent".into(), ..Default::default() };
+fn server_rejects_variant_without_bundles() {
+    // Parses fine, but no artifact bundle exists for the reference
+    // schedule under the graph engine: startup must fail.
+    let cfg = ServeConfig {
+        spec: best(EngineKind::Graph).schedule(Schedule::Reference).precision(Precision::Int8),
+        ..Default::default()
+    };
     assert!(InferenceServer::start(artifacts(), cfg).is_err());
 }

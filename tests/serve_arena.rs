@@ -1,0 +1,155 @@
+//! Arena serving end-to-end: the coordinator over `NativeArenaFactory`
+//! must return **bit-identical** logits to the interpreter oracle for the
+//! same image, whichever bucket the request is served in.
+//!
+//! Why this holds: every arena kernel (and every interpreter kernel) is
+//! per-sample independent — conv/dense/pool/quantize never mix batch
+//! rows — and the factory calibrates int8 scales once on the batch-1
+//! graph and reuses them for every bucket.  So padding rows and batch
+//! neighbors cannot perturb a request's logits, and the serving tier can
+//! be checked against `graph::interp::evaluate` exactly, with no
+//! tolerance.
+
+use std::time::Duration;
+
+use tvmq::coordinator::{InferenceServer, PendingReply, ServeConfig};
+use tvmq::executor::{
+    EngineKind, EngineSpec, NativeArenaFactory, Precision,
+};
+use tvmq::graph::evaluate;
+use tvmq::runtime::TensorData;
+use tvmq::util::rng::Rng64;
+
+const IMAGE: usize = 16;
+const BUCKETS: [usize; 3] = [1, 4, 8];
+
+/// A seeded [1, 3, IMAGE, IMAGE] image (same normal-ish distribution the
+/// IR calibration inputs use).
+fn seeded_image(seed: u64) -> TensorData {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let vals: Vec<f32> = (0..3 * IMAGE * IMAGE).map(|_| rng.normal() * 0.5).collect();
+    TensorData::from_f32(vec![1, 3, IMAGE, IMAGE], &vals).unwrap()
+}
+
+fn serve_and_check(precision: Precision) {
+    let spec = EngineSpec::new(EngineKind::Arena).precision(precision);
+    let factory = NativeArenaFactory::new(spec, &BUCKETS, IMAGE, 1).unwrap();
+    // The oracle: the interpreter over the exact batch-1 graph the factory
+    // compiles (same weights, same shared quantization scales).
+    let oracle_graph = factory.graph(1).unwrap();
+
+    let server = InferenceServer::start_with(
+        factory,
+        ServeConfig {
+            spec,
+            max_batch: 8,
+            // Generous: each group below must gather into one batch.
+            batch_timeout: Duration::from_millis(150),
+        },
+    )
+    .unwrap();
+    assert_eq!(server.buckets, BUCKETS.to_vec());
+
+    // One group per bucket size: n concurrent requests gather into a
+    // batch of n and serve in bucket n.
+    let mut seed = 0u64;
+    for group in BUCKETS {
+        let images: Vec<TensorData> = (0..group)
+            .map(|_| {
+                seed += 1;
+                seeded_image(seed)
+            })
+            .collect();
+        let pending: Vec<PendingReply> = images
+            .iter()
+            .map(|img| server.submit(img.clone()).unwrap())
+            .collect();
+        for (img, p) in images.iter().zip(pending) {
+            let reply = p.wait().unwrap();
+            assert_eq!(
+                reply.batch, group,
+                "{precision}: group of {group} should serve in bucket {group}"
+            );
+            let want = evaluate(&oracle_graph, img).unwrap();
+            let (got, want) = (reply.logits.as_f32().unwrap(), want.as_f32().unwrap());
+            // Bit-identical, not approximately equal.
+            let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                got_bits, want_bits,
+                "{precision}: served logits diverged from the interpreter oracle \
+                 in bucket {group}"
+            );
+            let want_class = want
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            assert_eq!(reply.class, want_class);
+        }
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, (1 + 4 + 8) as u64);
+    assert_eq!(stats.errors, 0);
+    // Every bucket actually exercised.
+    for b in BUCKETS {
+        assert_eq!(
+            stats.batch_histogram.get(&b),
+            Some(&1),
+            "bucket {b} histogram: {:?}",
+            stats.batch_histogram
+        );
+    }
+    assert_eq!(stats.padded_slots, 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn arena_serving_matches_interp_oracle_across_buckets_fp32() {
+    serve_and_check(Precision::Fp32);
+}
+
+#[test]
+fn arena_serving_matches_interp_oracle_across_buckets_int8() {
+    serve_and_check(Precision::Int8);
+}
+
+/// The bucket-invariance claim itself: the same image served alone
+/// (bucket 1) and served in the largest bucket yields the same bits.
+#[test]
+fn same_image_is_bucket_invariant() {
+    let spec = EngineSpec::new(EngineKind::Arena);
+    let factory = NativeArenaFactory::new(spec, &BUCKETS, IMAGE, 1).unwrap();
+    let server = InferenceServer::start_with(
+        factory,
+        ServeConfig {
+            spec,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(150),
+        },
+    )
+    .unwrap();
+
+    let img = seeded_image(424242);
+    let solo = server.submit_blocking(img.clone()).unwrap();
+    assert_eq!(solo.batch, 1);
+
+    // Ride along with 7 sibling requests → bucket 8.
+    let pending: Vec<PendingReply> = (0..8)
+        .map(|i| {
+            let x = if i == 0 { img.clone() } else { seeded_image(900 + i) };
+            server.submit(x).unwrap()
+        })
+        .collect();
+    let mut replies: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    let grouped = replies.remove(0);
+    assert_eq!(grouped.batch, 8);
+    assert_eq!(
+        solo.logits.as_f32().unwrap(),
+        grouped.logits.as_f32().unwrap(),
+        "logits changed with the serving bucket"
+    );
+    server.shutdown().unwrap();
+}
