@@ -47,10 +47,10 @@ fn main() -> Result<()> {
     {
         let bundle = m.find(spec, 1)?;
         let exec = GraphExecutor::new(rt.clone(), &m, bundle)?;
-        let rest = if spec.layout == LayoutTag::Nchw {
-            vec![m.in_channels, m.image_size, m.image_size]
-        } else {
+        let rest = if spec.layout == LayoutTag::Nhwc {
             vec![m.image_size, m.image_size, m.in_channels]
+        } else {
+            vec![m.in_channels, m.image_size, m.image_size]
         };
         let x = synthetic_images(1, &rest, 42);
         let stats = measure(epochs, epochs / 5, || exec.run(&x).map(|_| ()))?;

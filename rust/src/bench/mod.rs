@@ -52,10 +52,12 @@ impl BenchCtx {
 
     fn image(&self, batch: usize, layout: LayoutTag) -> TensorData {
         let m = &self.manifest;
-        let rest = if layout == LayoutTag::Nchw {
-            vec![m.in_channels, m.image_size, m.image_size]
-        } else {
+        // NHWC variants take channels-last images; NCHW and packed NCHWc
+        // variants both take plain NCHW (the packed stem is unblocked).
+        let rest = if layout == LayoutTag::Nhwc {
             vec![m.image_size, m.image_size, m.in_channels]
+        } else {
+            vec![m.in_channels, m.image_size, m.image_size]
         };
         synthetic_images(batch, &rest, 42)
     }
@@ -432,76 +434,136 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
     Ok(t)
 }
 
-/// Arena-executor ablation: the fused static-plan engine vs the naive
-/// per-node-allocating interpreter, on the ResNet-style IR chain.  Runs
-/// entirely in-process (no AOT artifacts, no PJRT) — this is the
-/// paper's graph-vs-VM mechanism reproduced natively: the interpreter
-/// rows pay per-node allocation and materialized q/dq boundaries; the
-/// arena rows pay neither.
+/// One measured arena-ablation variant — the machine-readable perf record
+/// behind `bench-arena --json` (ns/iter so trajectory diffs keep sub-ms
+/// moves).  `config` is the human row label; interpreter rows carry
+/// `steps == 0`.
+#[derive(Debug, Clone)]
+pub struct ArenaRow {
+    pub batch: usize,
+    pub layout: String,
+    pub precision: String,
+    pub config: String,
+    pub fused: bool,
+    pub threads: usize,
+    pub mean_ms: f64,
+    pub ns_per_iter: f64,
+    pub steps: usize,
+    pub fused_chains: usize,
+    pub arena_bytes: usize,
+}
+
+fn layout_label(layout: crate::graph::Layout) -> String {
+    use crate::graph::Layout;
+    match layout {
+        Layout::Nchw => "NCHW".into(),
+        Layout::Nhwc => "NHWC".into(),
+        Layout::Nchwc(cb) => format!("NCHW{cb}c"),
+    }
+}
+
+/// Arena-executor ablation: the full **layout × precision matrix**
+/// (NCHW / NHWC / NCHW{c}, fp32 / int8, fused / unfused) of the native
+/// static-plan engine, against the naive per-node-allocating interpreter
+/// baseline.  Runs entirely in-process (no AOT artifacts, no PJRT) — the
+/// paper's best-row contrast (packed-layout int8 vs plain fp32)
+/// reproduced natively: the same seeded model function in every layout,
+/// so row differences are storage and fusion, not weights.
 pub fn arena_ablation(
     opts: &BenchOpts,
     batches: &[usize],
     image: usize,
     threads: usize,
-) -> Result<Table> {
+) -> Result<(Table, Vec<ArenaRow>)> {
+    use crate::executor::factory::ARENA_PACK_BLOCK;
     use crate::executor::ArenaExec;
     use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
-    use crate::graph::{build_resnet_ir, calibrate_ir, evaluate};
+    use crate::graph::{build_resnet_ir_in, calibrate_ir, evaluate, Layout};
     use crate::metrics::fmt_speedup;
 
+    let layouts = [Layout::Nchw, Layout::Nhwc, Layout::Nchwc(ARENA_PACK_BLOCK)];
+    let mut rows: Vec<ArenaRow> = Vec::new();
     let mut t = Table::new(
         format!(
-            "Arena ablation — fused static-plan executor vs interpreter \
+            "Arena ablation — layout × precision matrix, arena vs interpreter \
              (resnet10 IR, image {image}, {} epochs, {} thread{})",
             opts.epochs,
             threads,
             if threads == 1 { "" } else { "s" }
         ),
-        &["Batch", "Config", "Time (ms)", "Speedup", "Steps", "Arena KiB",
-          "Unshared KiB", "Fused"],
+        &["Batch", "Layout", "Config", "Time (ms)", "Speedup", "Steps",
+          "Arena KiB", "Fused"],
     );
+    let kib = |b: usize| format!("{:.1}", b as f64 / 1024.0);
     for &batch in batches {
-        let g = build_resnet_ir(batch, image, 7)?;
-        let x = calibrate_ir(&g, 42);
-        let scales = calibrate_graph(&g, &x)?;
-        let qg = QuantizeRealize { scales }.run(&g)?;
+        // The NCHW fp32 interpreter is the cross-layout baseline; the
+        // interp int8 row keeps the paper's unfused-q/dq contrast visible.
+        let mut base_ms = f64::NAN;
+        for layout in layouts {
+            let lname = layout_label(layout);
+            let g = build_resnet_ir_in(batch, image, 7, layout)?;
+            let x = calibrate_ir(&g, 42);
+            let scales = calibrate_graph(&g, &x)?;
+            let qg = QuantizeRealize { scales }.run(&g)?;
 
-        let base = measure(opts.epochs, opts.warmup, || evaluate(&g, &x).map(|_| ()))?;
-        let kib = |b: usize| format!("{:.1}", b as f64 / 1024.0);
-        t.row(vec![
-            batch.to_string(), "interp fp32 (oracle)".into(), fmt_ms(base.mean_ms),
-            fmt_speedup(1.0), "-".into(), "-".into(), "-".into(), "-".into(),
-        ]);
+            if layout == Layout::Nchw {
+                let base = measure(opts.epochs, opts.warmup, || evaluate(&g, &x).map(|_| ()))?;
+                base_ms = base.mean_ms;
+                t.row(vec![
+                    batch.to_string(), lname.clone(), "interp fp32 (oracle)".into(),
+                    fmt_ms(base.mean_ms), fmt_speedup(1.0), "-".into(), "-".into(),
+                    "-".into(),
+                ]);
+                rows.push(ArenaRow {
+                    batch, layout: lname.clone(), precision: "fp32".into(),
+                    config: "interp fp32 (oracle)".into(), fused: false, threads: 1,
+                    mean_ms: base.mean_ms, ns_per_iter: base.mean_ms * 1e6, steps: 0,
+                    fused_chains: 0, arena_bytes: 0,
+                });
 
-        let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
-        t.row(vec![
-            batch.to_string(), "interp int8 (unfused q/dq)".into(), fmt_ms(qi.mean_ms),
-            fmt_speedup(base.mean_ms / qi.mean_ms), "-".into(), "-".into(), "-".into(),
-            "0".into(),
-        ]);
+                let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
+                t.row(vec![
+                    batch.to_string(), lname.clone(), "interp int8 (unfused q/dq)".into(),
+                    fmt_ms(qi.mean_ms), fmt_speedup(base.mean_ms / qi.mean_ms),
+                    "-".into(), "-".into(), "0".into(),
+                ]);
+                rows.push(ArenaRow {
+                    batch, layout: lname.clone(), precision: "int8".into(),
+                    config: "interp int8 (unfused q/dq)".into(), fused: false, threads: 1,
+                    mean_ms: qi.mean_ms, ns_per_iter: qi.mean_ms * 1e6, steps: 0,
+                    fused_chains: 0, arena_bytes: 0,
+                });
+            }
 
-        // fp32 fuses conv+bias+relu (and residual Add) epilogues since the
-        // fusion layer was generalized, so it gets its own ablation pair.
-        for (label, graph, fuse) in [
-            ("arena fp32 (unfused)", &g, false),
-            ("arena fp32 (fused)", &g, true),
-            ("arena int8 (unfused)", &qg, false),
-            ("arena int8 (fused)", &qg, true),
-        ] {
-            let exec = ArenaExec::with_options(graph, fuse, threads)?;
-            let stats = measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
-            let cg = exec.compiled();
-            t.row(vec![
-                batch.to_string(), label.into(), fmt_ms(stats.mean_ms),
-                fmt_speedup(base.mean_ms / stats.mean_ms),
-                cg.steps.len().to_string(),
-                kib(cg.arena_bytes),
-                kib(cg.unshared_bytes()),
-                cg.fused_chains.to_string(),
-            ]);
+            for (precision, graph) in [("fp32", &g), ("int8", &qg)] {
+                for fuse in [false, true] {
+                    let label = format!(
+                        "arena {precision} ({})",
+                        if fuse { "fused" } else { "unfused" }
+                    );
+                    let exec = ArenaExec::with_options(graph, fuse, threads)?;
+                    let stats =
+                        measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
+                    let cg = exec.compiled();
+                    t.row(vec![
+                        batch.to_string(), lname.clone(), label.clone(),
+                        fmt_ms(stats.mean_ms), fmt_speedup(base_ms / stats.mean_ms),
+                        cg.steps.len().to_string(),
+                        kib(cg.arena_bytes),
+                        cg.fused_chains.to_string(),
+                    ]);
+                    rows.push(ArenaRow {
+                        batch, layout: lname.clone(), precision: precision.into(),
+                        config: label, fused: fuse, threads,
+                        mean_ms: stats.mean_ms, ns_per_iter: stats.mean_ms * 1e6,
+                        steps: cg.steps.len(), fused_chains: cg.fused_chains,
+                        arena_bytes: cg.arena_bytes,
+                    });
+                }
+            }
         }
     }
-    Ok(t)
+    Ok((t, rows))
 }
 
 /// `bench-serve` — arena-bucket serving vs per-request execution, all on

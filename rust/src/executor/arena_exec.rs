@@ -22,16 +22,27 @@
 //! so serving an inference allocates nothing at *any* thread count (the
 //! allocation-counting test locks this down for `threads == 1` and
 //! `threads == 4`).  With `threads == 1` no pool exists and everything
-//! runs inline.
+//! runs inline.  Bands are contiguous row ranges where rows cost the same
+//! (NCHW/NCHW{c}: one row = one output plane) and interleaved residue
+//! classes where they don't ([`Banding::Interleaved`], NHWC: one row =
+//! one spatial line, ragged at padded borders).
+//!
+//! Layouts: every conv kernel exists for NCHW, NHWC, and NCHW{c}, in
+//! fp32, standalone int8 (i32 out), and fused-quantized (q→conv→dq
+//! collapsed) forms, each with the full `[bias] [add] [relu] [add]`
+//! epilogue; the packed fused kernel accumulates i32 over the channel
+//! block in a stack-resident lane array (never the heap).
 
 use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 
 use anyhow::{anyhow, Result};
 
-use super::pool::WorkerPool;
+use super::pool::{Banding, WorkerPool};
 use super::{ExecCounters, ExecSnapshot, Executor};
-use crate::graph::compile::{compile_graph, CompiledGraph, Epilogue, Residual, Slot, Step, StepOp};
+use crate::graph::compile::{
+    compile_graph, CompiledGraph, Epilogue, Residual, Slot, Step, StepOp, MAX_FUSED_QCONV_CB,
+};
 use crate::graph::ir::{ConstValue, Graph, IrDType, Layout};
 use crate::graph::kernels as gk;
 use crate::quant::QMAX;
@@ -203,24 +214,44 @@ impl ArenaExec {
                             *stride, *padding, ev, f32s_mut(dst_b)?, os, pool,
                         );
                     }
-                    (IrDType::F32, Layout::Nhwc) if epi.is_identity() => conv2d_nhwc_f32(
-                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        *stride, *padding, f32s_mut(dst_b)?, os, pool,
-                    ),
-                    (IrDType::F32, Layout::Nchwc(cb)) if epi.is_identity() => conv2d_nchwc_f32(
-                        f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                        *stride, *padding, *cb, f32s_mut(dst_b)?, os, pool,
-                    ),
+                    (IrDType::F32, Layout::Nhwc) => {
+                        let ev = self.epi_vals(step, epi, base)?;
+                        conv2d_nhwc_f32(
+                            f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                            *stride, *padding, ev, f32s_mut(dst_b)?, os, pool,
+                        );
+                    }
+                    (IrDType::F32, Layout::Nchwc(cb)) => {
+                        let ev = self.epi_vals(step, epi, base)?;
+                        conv2d_nchwc_f32(
+                            f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
+                            *stride, *padding, *cb, ev, f32s_mut(dst_b)?, os, pool,
+                        );
+                    }
+                    // Standalone int8 convs (the unfused ablation, or bare
+                    // int8 graphs): i32 out, never an epilogue — fused
+                    // chains always end in f32.
                     (IrDType::S8, Layout::Nchw) if epi.is_identity() => conv2d_nchw_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
                         *stride, *padding, i32s_mut(dst_b)?, os, pool,
                     ),
+                    (IrDType::S8, Layout::Nhwc) if epi.is_identity() => conv2d_nhwc_i8(
+                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                        *stride, *padding, i32s_mut(dst_b)?, os, pool,
+                    ),
+                    (IrDType::S8, Layout::Nchwc(cb)) if epi.is_identity() => conv2d_nchwc_i8(
+                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                        *stride, *padding, *cb, i32s_mut(dst_b)?, os, pool,
+                    ),
                     other => {
-                        return Err(anyhow!("arena conv: unsupported {:?} (epilogue fusion is NCHW f32 only)", other));
+                        return Err(anyhow!(
+                            "arena conv: unsupported operands {:?} (int8 epilogues never fuse)",
+                            other
+                        ));
                     }
                 }
             }
-            StepOp::QConv2d { qscale, dqscale, stride, padding, epi } => {
+            StepOp::QConv2d { qscale, dqscale, stride, padding, layout, epi } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
                 let (wb, wt) = (self.src_bytes(&step.srcs[1].0, base), &step.srcs[1].1);
                 let scratch = step
@@ -231,10 +262,28 @@ impl ArenaExec {
                 let xq = i8s_mut(qb);
                 quantize_into(f32s(xb)?, *qscale, xq);
                 let ev = self.epi_vals(step, epi, base)?;
-                qconv2d_nchw(
-                    xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                    *dqscale, ev, f32s_mut(dst_b)?, os, pool,
-                );
+                match layout {
+                    Layout::Nchw => qconv2d_nchw(
+                        xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                        *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                    ),
+                    Layout::Nhwc => qconv2d_nhwc(
+                        xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                        *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                    ),
+                    Layout::Nchwc(cb) => {
+                        if *cb > MAX_FUSED_QCONV_CB || wt.shape[4] != *cb || wt.shape[5] != *cb {
+                            return Err(anyhow!(
+                                "fused packed conv block {cb} unsupported (weight {:?}, max {})",
+                                wt.shape, MAX_FUSED_QCONV_CB
+                            ));
+                        }
+                        qconv2d_nchwc(
+                            xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                            *cb, *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                        );
+                    }
+                }
             }
             StepOp::Dense { epi } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
@@ -546,12 +595,15 @@ unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Call `f(row_index, row)` for every `row_len`-element row of `out`,
-/// fanning contiguous row bands out over the persistent pool.  With no
-/// pool (or a single band) everything runs inline; either way the
-/// dispatch allocates nothing, and bands are disjoint windows, so
-/// per-output-element results are identical regardless of fan-out.
+/// fanning row bands out over the persistent pool — contiguous ranges or
+/// interleaved residue classes per [`Banding`].  With no pool (or a
+/// single band) everything runs inline; either way the dispatch allocates
+/// nothing, and every row is written by exactly one band, so
+/// per-output-element results are identical regardless of fan-out or
+/// banding mode.
 fn par_rows<T: Send>(
     pool: Option<&WorkerPool>,
+    banding: Banding,
     out: &mut [T],
     row_len: usize,
     f: impl Fn(usize, &mut [T]) + Sync,
@@ -575,15 +627,30 @@ fn par_rows<T: Send>(
     let base = SendPtr(out.as_mut_ptr());
     let f = &f;
     let job = move |band: usize| {
-        let start = band * per;
-        let end = ((band + 1) * per).min(rows);
-        for r in start..end {
-            // SAFETY: bands cover disjoint row ranges of `out`, and the
-            // pool does not return from `run` until every band finished.
+        // SAFETY: each row index belongs to exactly one band (disjoint
+        // contiguous ranges, or disjoint residue classes mod `bands`), and
+        // the pool does not return from `run` until every band finished.
+        let run_row = |r: usize| {
             let row = unsafe {
                 std::slice::from_raw_parts_mut(base.0.add(r * row_len), row_len)
             };
             f(r, row);
+        };
+        match banding {
+            Banding::Contiguous => {
+                let start = band * per;
+                let end = ((band + 1) * per).min(rows);
+                for r in start..end {
+                    run_row(r);
+                }
+            }
+            Banding::Interleaved => {
+                let mut r = band;
+                while r < rows {
+                    run_row(r);
+                    r += bands;
+                }
+            }
         }
     };
     pool.expect("bands > 1 implies a pool").run(bands, &job);
@@ -605,7 +672,7 @@ fn conv2d_nchw_f32(
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
     let ohw = oh * ow;
-    par_rows(pool, out, ohw, |row, plane| {
+    par_rows(pool, Banding::Contiguous, out, ohw, |row, plane| {
         let (ni, ki) = (row / k, row % k);
         let b = ev.bias.map(|b| b[ki]);
         let plane_base = row * ohw;
@@ -646,13 +713,84 @@ fn conv2d_nchw_i8(
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(pool, out, oh * ow, |row, plane| {
+    par_rows(pool, Banding::Contiguous, out, oh * ow, |row, plane| {
         let (ni, ki) = (row / k, row % k);
         for oy in 0..oh {
             for ox in 0..ow {
                 plane[oy * ow + ox] = i8_conv_acc(
                     x, w, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
                 );
+            }
+        }
+    });
+}
+
+/// Standalone int8 NHWC conv (HWIO weight): i32 out, no epilogue.  Rows
+/// are spatial lines, so the banding is interleaved (border lines clipped
+/// by padding are shallower than interior ones).
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nhwc_i8(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [i32], os: &[usize],
+    pool: Option<&WorkerPool>,
+) {
+    let (h, wd, c) = (xs[1], xs[2], xs[3]);
+    let (r, s, k) = (ws[0], ws[1], ws[3]);
+    let (oh, ow) = (os[1], os[2]);
+    par_rows(pool, Banding::Interleaved, out, ow * k, |row, slab| {
+        let (ni, oy) = (row / oh, row % oh);
+        for ox in 0..ow {
+            for ki in 0..k {
+                slab[ox * k + ki] = i8_conv_acc_nhwc(
+                    x, w, c, h, wd, r, s, k, stride, padding, ni, ki, oy, ox,
+                );
+            }
+        }
+    });
+}
+
+/// Standalone int8 packed conv (NCHW{cb} data, OIHW{i}{o} weight): i32
+/// out, channel-blocked accumulation straight into the destination plane.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchwc_i8(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, cb: usize, out: &mut [i32], os: &[usize],
+    pool: Option<&WorkerPool>,
+) {
+    let (co, h, wd) = (xs[1], xs[2], xs[3]);
+    let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(pool, Banding::Contiguous, out, oh * ow * kb, |row, plane| {
+        let (ni, ok) = (row / ko, row % ko);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = (oy * ow + ox) * kb;
+                plane[obase..obase + kb].fill(0);
+                for oc in 0..co {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                            let wbase = ((((ok * co + oc) * r + ry) * s + sx) * cb) * kb;
+                            for ci in 0..cb {
+                                let xi = x[xbase + ci] as i32;
+                                let wrow = wbase + ci * kb;
+                                for ki in 0..kb {
+                                    plane[obase + ki] += xi * w[wrow + ki] as i32;
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
     });
@@ -702,6 +840,37 @@ fn i8_conv_acc(
     acc
 }
 
+/// One int8 NHWC output element: i32 accumulation, unit-stride over the
+/// data operand's innermost channel dimension.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_conv_acc_nhwc(
+    x: &[i8], w: &[i8], c: usize, h: usize, wd: usize, r: usize, s: usize, k: usize,
+    stride: usize, padding: usize, ni: usize, ki: usize, oy: usize, ox: usize,
+) -> i32 {
+    let mut acc = 0i32;
+    for ry in 0..r {
+        let iy = oy * stride + ry;
+        if iy < padding || iy >= h + padding {
+            continue;
+        }
+        let iy = iy - padding;
+        for sx in 0..s {
+            let ix = ox * stride + sx;
+            if ix < padding || ix >= wd + padding {
+                continue;
+            }
+            let ix = ix - padding;
+            let xbase = ((ni * h + iy) * wd + ix) * c;
+            let wbase = (ry * s + sx) * c * k + ki;
+            for ci in 0..c {
+                acc += x[xbase + ci] as i32 * w[wbase + ci * k] as i32;
+            }
+        }
+    }
+    acc
+}
+
 /// Fused quantized conv: int8 data (already quantized into scratch) ×
 /// int8 weights → i32 accumulator → `acc as f32 * dqscale` through the
 /// epilogue (bias / residual add / relu), written once.  The interior
@@ -716,7 +885,7 @@ fn qconv2d_nchw(
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
     let ohw = oh * ow;
-    par_rows(pool, out, ohw, |row, plane| {
+    par_rows(pool, Banding::Contiguous, out, ohw, |row, plane| {
         let (ni, ki) = (row / k, row % k);
         let b = ev.bias.map(|b| b[ki]);
         let plane_base = row * ohw;
@@ -735,17 +904,111 @@ fn qconv2d_nchw(
     });
 }
 
+/// Fused quantized NHWC conv: like [`qconv2d_nchw`], with the channel as
+/// the innermost output dimension and interleaved spatial-line banding.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nhwc(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+) {
+    let (h, wd, c) = (xs[1], xs[2], xs[3]);
+    let (r, s, k) = (ws[0], ws[1], ws[3]);
+    let (oh, ow) = (os[1], os[2]);
+    let row_len = ow * k;
+    par_rows(pool, Banding::Interleaved, out, row_len, |row, slab| {
+        let (ni, oy) = (row / oh, row % oh);
+        let row_base = row * row_len;
+        for ox in 0..ow {
+            for ki in 0..k {
+                let acc = i8_conv_acc_nhwc(
+                    x, w, c, h, wd, r, s, k, stride, padding, ni, ki, oy, ox,
+                );
+                slab[ox * k + ki] = epi_apply(
+                    acc as f32 * dqscale, ev.bias.map(|b| b[ki]), ev.relu, ev.res,
+                    row_base + ox * k + ki,
+                );
+            }
+        }
+    });
+}
+
+/// Fused quantized packed conv: channel-blocked i32 accumulation over the
+/// `cb` input lanes into a **stack-resident** `kb`-lane accumulator (the
+/// compiler refuses to fuse blocks wider than [`MAX_FUSED_QCONV_CB`], so
+/// the executor path stays allocation-free), then dequantize → epilogue
+/// per lane.  The epilogue bias is the logical-channel vector: lane `ki`
+/// of block `ok` is channel `ok·kb + ki`.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nchwc(
+    x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
+    stride: usize, padding: usize, cb: usize, dqscale: f32, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+) {
+    let (co, h, wd) = (xs[1], xs[2], xs[3]);
+    let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
+    let (oh, ow) = (os[2], os[3]);
+    let row_len = oh * ow * kb;
+    par_rows(pool, Banding::Contiguous, out, row_len, |row, plane| {
+        let (ni, ok) = (row / ko, row % ko);
+        let plane_base = row * row_len;
+        let mut acc = [0i32; MAX_FUSED_QCONV_CB];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                acc[..kb].fill(0);
+                for oc in 0..co {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                            let wbase = ((((ok * co + oc) * r + ry) * s + sx) * cb) * kb;
+                            for ci in 0..cb {
+                                let xi = x[xbase + ci] as i32;
+                                let wrow = wbase + ci * kb;
+                                for ki in 0..kb {
+                                    acc[ki] += xi * w[wrow + ki] as i32;
+                                }
+                            }
+                        }
+                    }
+                }
+                let obase = (oy * ow + ox) * kb;
+                for ki in 0..kb {
+                    plane[obase + ki] = epi_apply(
+                        acc[ki] as f32 * dqscale,
+                        ev.bias.map(|b| b[ok * kb + ki]),
+                        ev.relu,
+                        ev.res,
+                        plane_base + obase + ki,
+                    );
+                }
+            }
+        }
+    });
+}
+
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nhwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
-    stride: usize, padding: usize, out: &mut [f32], os: &[usize],
+    stride: usize, padding: usize, ev: EpiVals<'_>, out: &mut [f32], os: &[usize],
     pool: Option<&WorkerPool>,
 ) {
     let (h, wd, c) = (xs[1], xs[2], xs[3]);
     let (r, s, k) = (ws[0], ws[1], ws[3]);
     let (oh, ow) = (os[1], os[2]);
-    par_rows(pool, out, ow * k, |row, slab| {
+    let row_len = ow * k;
+    par_rows(pool, Banding::Interleaved, out, row_len, |row, slab| {
         let (ni, oy) = (row / oh, row % oh);
+        let row_base = row * row_len;
         for ox in 0..ow {
             for ki in 0..k {
                 let mut acc = 0f32;
@@ -767,7 +1030,10 @@ fn conv2d_nhwc_f32(
                         }
                     }
                 }
-                slab[ox * k + ki] = acc;
+                slab[ox * k + ki] = epi_apply(
+                    acc, ev.bias.map(|b| b[ki]), ev.relu, ev.res,
+                    row_base + ox * k + ki,
+                );
             }
         }
     });
@@ -776,14 +1042,16 @@ fn conv2d_nhwc_f32(
 #[allow(clippy::too_many_arguments)]
 fn conv2d_nchwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
-    stride: usize, padding: usize, cb: usize, out: &mut [f32], os: &[usize],
-    pool: Option<&WorkerPool>,
+    stride: usize, padding: usize, cb: usize, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
 ) {
     let (co, h, wd) = (xs[1], xs[2], xs[3]);
     let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(pool, out, oh * ow * kb, |row, plane| {
+    let row_len = oh * ow * kb;
+    par_rows(pool, Banding::Contiguous, out, row_len, |row, plane| {
         let (ni, ok) = (row / ko, row % ko);
+        let plane_base = row * row_len;
         for oy in 0..oh {
             for ox in 0..ow {
                 let obase = (oy * ow + ox) * kb;
@@ -813,6 +1081,18 @@ fn conv2d_nchwc_f32(
                         }
                     }
                 }
+                if !ev.is_identity() {
+                    // Lane `ki` of block `ok` is logical channel `ok·kb + ki`.
+                    for ki in 0..kb {
+                        plane[obase + ki] = epi_apply(
+                            plane[obase + ki],
+                            ev.bias.map(|b| b[ok * kb + ki]),
+                            ev.relu,
+                            ev.res,
+                            plane_base + obase + ki,
+                        );
+                    }
+                }
             }
         }
     });
@@ -824,7 +1104,7 @@ fn dense_f32(
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, out, n, |i, row| {
+    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
         row.fill(0.0);
         for kk in 0..k {
             let xik = x[i * k + kk];
@@ -846,7 +1126,7 @@ fn dense_i8(
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, out, n, |i, row| {
+    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
         row.fill(0);
         for kk in 0..k {
             let xik = x[i * k + kk] as i32;
@@ -864,7 +1144,7 @@ fn qdense(
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, out, n, |i, row| {
+    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
         for (j, slot) in row.iter_mut().enumerate() {
             let mut acc = 0i32;
             for kk in 0..k {

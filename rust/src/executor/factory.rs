@@ -13,17 +13,17 @@
 //!   [`Manifest`] by [`EngineSpec`] and constructs [`GraphExecutor`] /
 //!   [`VmExecutor`] over PJRT.  Requires `make artifacts` + the real xla
 //!   bridge.
-//! - [`NativeArenaFactory`] — the offline path: builds the ResNet-style
-//!   graph IR *per bucket batch size*, runs the quantize pipeline with
-//!   **shared calibration scales**, and compiles [`ArenaExec`] engines.
-//!   No artifacts, no PJRT — this is what makes `tvmq serve` fully
-//!   functional on the stub build.
+//! - [`NativeArenaFactory`] — the offline path: builds ONE ResNet-style
+//!   template graph in the spec's layout (NCHW, NHWC, or packed NCHW{c}),
+//!   runs the quantize pipeline on it once, and compiles an [`ArenaExec`]
+//!   engine per bucket by re-batching the template — every bucket shares
+//!   the same `Arc`'d weight constants.  No artifacts, no PJRT — this is
+//!   what makes `tvmq serve` fully functional on the stub build.
 //!
 //! Factories are moved onto the coordinator's worker thread and `build`
 //! runs there (PJRT handles are `!Send`, so engines must be born on the
 //! thread that drives them).
 
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
@@ -33,7 +33,7 @@ use super::{
     VmExecutor,
 };
 use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
-use crate::graph::{build_resnet_ir, calibrate_ir, Graph, NodeId};
+use crate::graph::{build_resnet_ir_in, calibrate_ir, rebatch_graph, Graph, Layout};
 use crate::manifest::Manifest;
 use crate::runtime::Runtime;
 
@@ -130,29 +130,51 @@ impl EngineFactory for ArtifactFactory {
 /// match the CLI's single-shot path.
 pub const ARENA_MODEL_SEED: u64 = 7;
 
+/// Channel/filter block of the packed models the native factory builds
+/// for [`LayoutTag::Nchwc`]: divides every residual-stage width of the
+/// resnet builder (16/32/64/128) and sits well inside the fused packed
+/// kernel's stack-resident accumulator bound
+/// ([`crate::graph::compile::MAX_FUSED_QCONV_CB`]).
+pub const ARENA_PACK_BLOCK: usize = 8;
+
+/// The graph-IR layout a typed layout tag selects for natively built
+/// models ([`LayoutTag::Nchwc`] carries no block width — the engine picks
+/// [`ARENA_PACK_BLOCK`]).
+pub fn ir_layout(tag: LayoutTag) -> Layout {
+    match tag {
+        LayoutTag::Nchw => Layout::Nchw,
+        LayoutTag::Nhwc => Layout::Nhwc,
+        LayoutTag::Nchwc => Layout::Nchwc(ARENA_PACK_BLOCK),
+    }
+}
+
 /// The offline path: one [`ArenaExec`] per bucket, compiled from the
-/// in-process ResNet-style IR.
+/// in-process ResNet-style IR in the spec's layout (all three layouts,
+/// fp32 and int8).
 ///
-/// For int8, calibration runs **once** on the batch-1 graph and the
-/// resulting scales are reused for every bucket.  The builder lays nodes
-/// out in a batch-independent order, so the node-id-keyed scale map
-/// transfers across batch sizes — and because every kernel is
-/// per-sample-independent, a request's logits are bit-identical no matter
-/// which bucket served it (the serving differential test pins this).
+/// The model is built — and for int8, calibrated and quantize-realized —
+/// **once**, at batch 1; every bucket engine is then
+/// [`rebatch_graph`]-derived from that single template, so all buckets
+/// share one `Arc`'d weight set (no per-bucket weight rebuild or
+/// re-quantization; wide `--buckets` lists cost one model's worth of
+/// constants).  Because every kernel is per-sample-independent, a
+/// request's logits are bit-identical no matter which bucket served it
+/// (the serving differential test pins this).
 pub struct NativeArenaFactory {
     buckets: Vec<usize>,
     image: usize,
     precision: Precision,
+    layout: LayoutTag,
     threads: usize,
     fuse: bool,
-    /// Shared calibration scales (int8 only).
-    scales: Option<HashMap<NodeId, f32>>,
+    /// Batch-1 template (quantize-realized for int8); buckets re-batch it.
+    template: Graph,
 }
 
 impl NativeArenaFactory {
-    /// `spec` must name the arena engine in NCHW (the native int8 kernels
-    /// are NCHW-only today — see ROADMAP).  `image` is the square input
-    /// size; `threads` the per-engine worker-pool width.
+    /// `spec` must name the arena engine; every layout tag builds natively
+    /// (`NCHWc` packs with [`ARENA_PACK_BLOCK`]).  `image` is the square
+    /// input size; `threads` the per-engine worker-pool width.
     pub fn new(
         spec: EngineSpec,
         buckets: &[usize],
@@ -162,32 +184,29 @@ impl NativeArenaFactory {
         if spec.engine != EngineKind::Arena {
             return Err(anyhow!("{spec}: NativeArenaFactory builds arena engines only"));
         }
-        if spec.layout != LayoutTag::Nchw {
-            return Err(anyhow!(
-                "{spec}: the native arena engine builds NCHW models only"
-            ));
-        }
         let mut buckets = buckets.to_vec();
         buckets.sort_unstable();
         buckets.dedup();
         if buckets.is_empty() || buckets[0] == 0 {
             return Err(anyhow!("arena factory needs a non-empty set of non-zero buckets"));
         }
-        let scales = match spec.precision {
-            Precision::Fp32 => None,
+        let g1 = build_resnet_ir_in(1, image, ARENA_MODEL_SEED, ir_layout(spec.layout))?;
+        let template = match spec.precision {
+            Precision::Fp32 => g1,
             Precision::Int8 => {
-                let g1 = build_resnet_ir(1, image, ARENA_MODEL_SEED)?;
                 let calib = calibrate_ir(&g1, 1);
-                Some(calibrate_graph(&g1, &calib)?)
+                let scales = calibrate_graph(&g1, &calib)?;
+                QuantizeRealize { scales }.run(&g1)?
             }
         };
         Ok(Self {
             buckets,
             image,
             precision: spec.precision,
+            layout: spec.layout,
             threads: threads.max(1),
             fuse: true,
-            scales,
+            template,
         })
     }
 
@@ -199,13 +218,10 @@ impl NativeArenaFactory {
 
     /// The exact graph the bucket engine for `batch` compiles — exposed so
     /// differential tests can evaluate the same model through the
-    /// interpreter oracle.
+    /// interpreter oracle.  Constants are shared with the template (and
+    /// therefore with every other bucket) by `Arc`.
     pub fn graph(&self, batch: usize) -> Result<Graph> {
-        let g = build_resnet_ir(batch, self.image, ARENA_MODEL_SEED)?;
-        match &self.scales {
-            None => Ok(g),
-            Some(scales) => QuantizeRealize { scales: scales.clone() }.run(&g),
-        }
+        rebatch_graph(&self.template, batch)
     }
 
     pub fn image(&self) -> usize {
@@ -214,6 +230,10 @@ impl NativeArenaFactory {
 
     pub fn precision(&self) -> Precision {
         self.precision
+    }
+
+    pub fn layout(&self) -> LayoutTag {
+        self.layout
     }
 }
 
@@ -224,8 +244,8 @@ impl EngineFactory for NativeArenaFactory {
 
     fn describe(&self) -> String {
         format!(
-            "native arena engines ({}, image {}, {} thread(s))",
-            self.precision, self.image, self.threads
+            "native arena engines ({}, {}, image {}, {} thread(s))",
+            self.layout, self.precision, self.image, self.threads
         )
     }
 
@@ -243,11 +263,24 @@ mod tests {
     fn arena_factory_rejects_non_arena_specs() {
         let spec = EngineSpec::new(EngineKind::Graph);
         assert!(NativeArenaFactory::new(spec, &[1], 16, 1).is_err());
-        let nhwc = EngineSpec::new(EngineKind::Arena).layout(LayoutTag::Nhwc);
-        assert!(NativeArenaFactory::new(nhwc, &[1], 16, 1).is_err());
         assert!(
             NativeArenaFactory::new(EngineSpec::new(EngineKind::Arena), &[], 16, 1).is_err()
         );
+    }
+
+    #[test]
+    fn arena_factory_builds_every_layout() {
+        // The layout guard is gone: NHWC and packed NCHW{c} specs build
+        // native int8 bucket engines end-to-end.
+        for tag in [LayoutTag::Nchw, LayoutTag::Nhwc, LayoutTag::Nchwc] {
+            let spec = EngineSpec::new(EngineKind::Arena).layout(tag);
+            let f = NativeArenaFactory::new(spec, &[1, 2], 16, 1)
+                .unwrap_or_else(|e| panic!("{tag}: factory failed: {e}"));
+            for b in f.buckets() {
+                let e = f.build(b).unwrap_or_else(|e| panic!("{tag} b{b}: {e}"));
+                assert_eq!(e.batch(), b);
+            }
+        }
     }
 
     #[test]
@@ -283,12 +316,29 @@ mod tests {
     }
 
     #[test]
-    fn int8_scales_are_shared_across_buckets() {
+    fn buckets_share_one_arc_backed_weight_set() {
+        use crate::graph::ir::{ConstValue, Op};
+
         let spec = EngineSpec::new(EngineKind::Arena);
         let f = NativeArenaFactory::new(spec, &[1, 4], 16, 1).unwrap();
-        // Same node count (builder order is batch-independent) and the
-        // factory quantizes both buckets from one scale map.
-        assert_eq!(f.graph(1).unwrap().len(), f.graph(4).unwrap().len());
-        assert!(f.scales.is_some());
+        let (g1, g4) = (f.graph(1).unwrap(), f.graph(4).unwrap());
+        // Re-batching preserves node ids (scale maps and diagnostics
+        // transfer) …
+        assert_eq!(g1.len(), g4.len());
+        // … and every constant payload is the SAME allocation in both
+        // bucket graphs — weights are Arc-shared, not rebuilt per bucket.
+        let payload_ptrs = |g: &crate::graph::Graph| -> Vec<usize> {
+            g.nodes
+                .iter()
+                .filter_map(|n| match &n.op {
+                    Op::Constant(ConstValue::F32(v)) => Some(v.as_ptr() as usize),
+                    Op::Constant(ConstValue::I8(v)) => Some(v.as_ptr() as usize),
+                    _ => None,
+                })
+                .collect()
+        };
+        let (p1, p4) = (payload_ptrs(&g1), payload_ptrs(&g4));
+        assert!(!p1.is_empty(), "quantized resnet must carry constants");
+        assert_eq!(p1, p4, "bucket graphs must share one Arc'd constant pool");
     }
 }

@@ -43,7 +43,7 @@ use anyhow::{anyhow, Result};
 pub use arena_exec::ArenaExec;
 pub use factory::{ArtifactFactory, EngineFactory, NativeArenaFactory};
 pub use graph_exec::GraphExecutor;
-pub use pool::WorkerPool;
+pub use pool::{Banding, WorkerPool};
 pub use spec::{EngineKind, EngineSpec, LayoutTag, Precision, Schedule};
 pub use vm::{VmExecutor, VmInstr};
 

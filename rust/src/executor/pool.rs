@@ -24,6 +24,24 @@ use std::thread::JoinHandle;
 /// the same epoch, while the underlying closure is still alive.
 type Job = &'static (dyn Fn(usize) + Sync);
 
+/// How a kernel splits its output rows across bands.
+///
+/// Either mode assigns every row to exactly one band, so results are
+/// identical; only the load balance differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Banding {
+    /// Band `b` takes the contiguous range `[b·⌈rows/bands⌉, …)` — best
+    /// cache behaviour when rows cost the same (NCHW/NCHW{c} convs: every
+    /// row is a full output plane).
+    Contiguous,
+    /// Band `b` takes the strided residue class `b, b+bands, b+2·bands, …`
+    /// — for ragged row costs that correlate with the row index (NHWC
+    /// convs: a row is one spatial line, and padding-clipped border lines
+    /// are shallower than interior ones), so contiguous banding would hand
+    /// whole cheap regions to one band and deep regions to another.
+    Interleaved,
+}
+
 struct Slot {
     job: Option<Job>,
     /// Bands in the current dispatch; workers with `w + 1 >= bands` skip

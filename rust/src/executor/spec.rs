@@ -15,10 +15,18 @@ use std::str::FromStr;
 use anyhow::{anyhow, Error};
 
 /// Activation memory layout of the model variant.
+///
+/// `Nchwc` is the channel-blocked packed layout (TVM's `NCHW{c}c`,
+/// oneDNN's `nChwXc`); the tag doesn't carry the block width — that is an
+/// engine detail (the native arena factory packs with
+/// [`crate::executor::factory::ARENA_PACK_BLOCK`]).  Packed models keep
+/// their *input* in plain NCHW (the 3-channel stem is never blocked), so
+/// clients feed NCHW images to both `NCHW` and `NCHWc` variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayoutTag {
     Nchw,
     Nhwc,
+    Nchwc,
 }
 
 impl LayoutTag {
@@ -26,6 +34,7 @@ impl LayoutTag {
         match self {
             LayoutTag::Nchw => "NCHW",
             LayoutTag::Nhwc => "NHWC",
+            LayoutTag::Nchwc => "NCHWc",
         }
     }
 }
@@ -128,7 +137,12 @@ macro_rules! display_fromstr {
     };
 }
 
-display_fromstr!(LayoutTag, "NCHW" => LayoutTag::Nchw, "NHWC" => LayoutTag::Nhwc);
+display_fromstr!(
+    LayoutTag,
+    "NCHW" => LayoutTag::Nchw,
+    "NHWC" => LayoutTag::Nhwc,
+    "NCHWc" => LayoutTag::Nchwc,
+);
 display_fromstr!(
     Schedule,
     "reference" => Schedule::Reference,
@@ -234,7 +248,7 @@ mod tests {
 
     #[test]
     fn spec_display_fromstr_round_trips() {
-        for layout in [LayoutTag::Nchw, LayoutTag::Nhwc] {
+        for layout in [LayoutTag::Nchw, LayoutTag::Nhwc, LayoutTag::Nchwc] {
             for schedule in [
                 Schedule::Reference,
                 Schedule::SpatialPack,
@@ -258,6 +272,7 @@ mod tests {
         // These exact strings are what the python compile path writes into
         // manifest.json; the enum parse must accept them verbatim.
         assert_eq!("NCHW".parse::<LayoutTag>().unwrap(), LayoutTag::Nchw);
+        assert_eq!("NCHWc".parse::<LayoutTag>().unwrap(), LayoutTag::Nchwc);
         assert_eq!("spatial_pack".parse::<Schedule>().unwrap(), Schedule::SpatialPack);
         assert_eq!("interleaved".parse::<Schedule>().unwrap(), Schedule::Interleaved);
         assert_eq!("int8".parse::<Precision>().unwrap(), Precision::Int8);

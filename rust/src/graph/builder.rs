@@ -5,7 +5,7 @@
 //! artifacts, which bake their own weights.  The IR layer is the in-process
 //! compile pipeline; the artifacts are the AOT one.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::util::rng::Rng64;
 
@@ -55,6 +55,47 @@ fn he_weights(rng: &mut Rng64, k: usize, c: usize, r: usize) -> Vec<f32> {
     (0..k * c * r * r)
         .map(|_| (rng.f32() * 2.0 - 1.0) * 1.73 * std)
         .collect()
+}
+
+/// Add a conv weight constant for `layout`: the same seeded OIHW draw in
+/// every layout, permuted (NHWC: HWIO) or packed (NCHW{c}: OIHW{i}{o})
+/// into the layout's weight format — so a model built in any layout is
+/// the *same function*, only stored differently.
+fn add_conv_weight(
+    g: &mut Graph,
+    rng: &mut Rng64,
+    name: &str,
+    cout: usize,
+    cin: usize,
+    k: usize,
+    layout: Layout,
+) -> Result<NodeId> {
+    let oihw = he_weights(rng, cout, cin, k);
+    match layout {
+        Layout::Nchw => g.add_const_f32(format!("{name}.w"), vec![cout, cin, k, k], oihw),
+        Layout::Nhwc => {
+            let mut hwio = vec![0f32; oihw.len()];
+            for ko in 0..cout {
+                for ci in 0..cin {
+                    for ry in 0..k {
+                        for sx in 0..k {
+                            hwio[((ry * k + sx) * cin + ci) * cout + ko] =
+                                oihw[((ko * cin + ci) * k + ry) * k + sx];
+                        }
+                    }
+                }
+            }
+            g.add_const_f32(format!("{name}.w"), vec![k, k, cin, cout], hwio)
+        }
+        Layout::Nchwc(cb) => {
+            let packed = crate::layout::pack_oihw(&oihw, cout, cin, k, k, cb, cb)?;
+            g.add_const_f32(
+                format!("{name}.w"),
+                vec![cout / cb, cin / cb, k, k, cb, cb],
+                packed,
+            )
+        }
+    }
 }
 
 /// Build a conv net per spec (NCHW, fp32).
@@ -119,12 +160,51 @@ pub fn build_conv_net(spec: &NetSpec) -> Result<Graph> {
     Ok(g)
 }
 
-/// The ResNet-10-shaped IR (mirrors the python `resnet10` arch) — used by
-/// the compile-pipeline demo so pass statistics refer to the real model.
+/// The ResNet-10-shaped IR (mirrors the python `resnet10` arch) in NCHW —
+/// used by the compile-pipeline demo so pass statistics refer to the real
+/// model.
 pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
+    build_resnet_ir_in(batch, image, seed, Layout::Nchw)
+}
+
+/// [`build_resnet_ir`] with the activations natively in `layout`:
+///
+/// - `Nchw` — the original model, byte-identical weights per seed.
+/// - `Nhwc` — input `(N,H,W,C)`, every conv/bias/pool NHWC with HWIO
+///   weights (the same seeded draw, permuted).
+/// - `Nchwc(cb)` — the stem consumes the 3 input channels no block
+///   divides, so it runs NCHW and a single pack transform moves its
+///   activation into the blocked layout; every residual block then runs
+///   natively packed (conv + bias + relu + skip add on `(N,C/cb,H,W,cb)`
+///   tensors with pre-packed OIHW{i}{o} weights), exactly the shape real
+///   NCHWc deployments take.  Block widths must divide the stage widths
+///   (16/32/64/128), i.e. `cb ∈ {2,4,8,16}`.
+///
+/// Same seed → the same function in every layout (weights are one draw,
+/// restored per layout), so cross-layout benches compare storage, not
+/// models.
+pub fn build_resnet_ir_in(
+    batch: usize,
+    image: usize,
+    seed: u64,
+    layout: Layout,
+) -> Result<Graph> {
+    if let Layout::Nchwc(cb) = layout {
+        if cb == 0 || 16 % cb != 0 {
+            return Err(anyhow!("resnet block widths need cb | 16, got {cb}"));
+        }
+    }
     let mut g = Graph::new();
     let mut rng = Rng64::seed_from_u64(seed);
-    let x = g.add_input("data", TensorTy::f32(vec![batch, 3, image, image]));
+    let stem_layout = match layout {
+        Layout::Nhwc => Layout::Nhwc,
+        _ => Layout::Nchw,
+    };
+    let input_ty = match stem_layout {
+        Layout::Nhwc => TensorTy::f32(vec![batch, image, image, 3]),
+        _ => TensorTy::f32(vec![batch, 3, image, image]),
+    };
+    let x = g.add_input("data", input_ty);
 
     let mut add_conv = |g: &mut Graph,
                         rng: &mut Rng64,
@@ -135,13 +215,10 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
                         kernel: usize,
                         stride: usize,
                         pad: usize,
-                        relu: bool|
+                        relu: bool,
+                        lay: Layout|
      -> Result<NodeId> {
-        let w = g.add_const_f32(
-            format!("{name}.w"),
-            vec![cout, cin, kernel, kernel],
-            he_weights(rng, cout, cin, kernel),
-        )?;
+        let w = add_conv_weight(g, rng, name, cout, cin, kernel, lay)?;
         let b = g.add_const_f32(
             format!("{name}.b"),
             vec![cout],
@@ -149,12 +226,12 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
         )?;
         let conv = g.add(
             name.to_string(),
-            Op::Conv2d { stride, padding: pad, layout: Layout::Nchw },
+            Op::Conv2d { stride, padding: pad, layout: lay },
             vec![input, w],
         )?;
         let biased = g.add(
             format!("{name}.bias"),
-            Op::BiasAdd { layout: Layout::Nchw },
+            Op::BiasAdd { layout: lay },
             vec![conv, b],
         )?;
         if relu {
@@ -164,7 +241,14 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
         }
     };
 
-    let mut cur = add_conv(&mut g, &mut rng, "stem", x, 3, 16, 3, 1, 1, true)?;
+    let mut cur = add_conv(&mut g, &mut rng, "stem", x, 3, 16, 3, 1, 1, true, stem_layout)?;
+    if layout != stem_layout {
+        cur = g.add(
+            "stem.pack",
+            Op::LayoutTransform { from: stem_layout, to: layout },
+            vec![cur],
+        )?;
+    }
     let mut cin = 16;
     for (bi, (cout, stride)) in [(16usize, 1usize), (32, 2), (64, 2), (128, 2)]
         .into_iter()
@@ -173,13 +257,16 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
         let name = format!("block{bi}");
         let m1 = add_conv(
             &mut g, &mut rng, &format!("{name}.conv1"), cur, cin, cout, 3, stride, 1, true,
+            layout,
         )?;
         let m2 = add_conv(
             &mut g, &mut rng, &format!("{name}.conv2"), m1, cout, cout, 3, 1, 1, false,
+            layout,
         )?;
         let skip = if stride != 1 || cin != cout {
             add_conv(
                 &mut g, &mut rng, &format!("{name}.down"), cur, cin, cout, 1, stride, 0, false,
+                layout,
             )?
         } else {
             cur
@@ -188,7 +275,7 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
         cur = g.add(format!("{name}.relu"), Op::Relu, vec![sum])?;
         cin = cout;
     }
-    let pooled = g.add("gap", Op::GlobalAvgPool { layout: Layout::Nchw }, vec![cur])?;
+    let pooled = g.add("gap", Op::GlobalAvgPool { layout }, vec![cur])?;
     let wd = g.add_const_f32(
         "fc.w",
         vec![cin, 10],
@@ -199,6 +286,41 @@ pub fn build_resnet_ir(batch: usize, image: usize, seed: u64) -> Result<Graph> {
     g.output = g.add("fc", Op::Dense, vec![pooled, wd])?;
     g.validate()?;
     Ok(g)
+}
+
+/// Re-instantiate `g` at a different leading batch dimension **without
+/// rebuilding its weights**: constants are cloned by `Arc` (one shared
+/// payload across every re-batched copy), the input's batch dim is
+/// rewritten, and every other node's type is re-inferred at the new size.
+/// Node ids map 1:1, so node-id-keyed metadata (calibration scales)
+/// transfers unchanged.  This is how the serving factory compiles one
+/// engine per batch bucket from a single template model.
+pub fn rebatch_graph(g: &Graph, batch: usize) -> Result<Graph> {
+    let mut out = Graph::new();
+    for node in &g.nodes {
+        match &node.op {
+            Op::Input => {
+                let mut ty = node.ty.clone();
+                let Some(dim) = ty.shape.first_mut() else {
+                    return Err(anyhow!("rebatch: input {} has no batch dim", node.name));
+                };
+                *dim = batch;
+                out.add_input(node.name.clone(), ty);
+            }
+            // `add_clone` keeps the constant's explicit type and clones the
+            // payload Arc — no weight bytes are copied.
+            Op::Constant(_) => {
+                out.add_clone(node, vec![])?;
+            }
+            _ => {
+                out.add(node.name.clone(), node.op.clone(), node.inputs.clone())?;
+            }
+        }
+    }
+    out.input = g.input;
+    out.output = g.output;
+    out.validate()?;
+    Ok(out)
 }
 
 /// Seeded input batch for IR evaluation.

@@ -11,9 +11,9 @@
 //!
 //! # Fusion rules
 //!
-//! A fused step is an *anchor* (`Conv2d` or `Dense`) plus an epilogue tail
-//! applied per output element.  Two chain shapes fuse, both only for NCHW
-//! convs (the dense anchor has no layout):
+//! A fused step is an *anchor* (`Conv2d` in any layout — NCHW, NHWC, or
+//! NCHW{c} — or `Dense`; the dense anchor has no layout) plus an epilogue
+//! tail applied per output element.  Two chain shapes fuse:
 //!
 //! 1. **Quantized** (the `fuse` ablation flag controls all fusion):
 //!    `Quantize → Conv2d/Dense(i8 const weight, i32 accum) → Dequantize`
@@ -25,7 +25,8 @@
 //!    1:1 step).
 //!
 //! The shared epilogue tail is, in order:
-//! `[BiasAdd(f32 const, conv only)] → [Add] → [Relu] → [Add]` — at most one
+//! `[BiasAdd(f32 const, conv only, same layout as the anchor)] → [Add] →
+//! [Relu] → [Add]` — at most one
 //! residual `Add`, either before the relu (the ResNet block tail
 //! `conv→bias→add→relu`) or after it.  A residual `Add` fuses only when its
 //! other operand is already materialized when the fused step runs: a
@@ -39,9 +40,12 @@
 //! step.  Every interior chain link must be single-consumer and not the
 //! graph output.
 //!
-//! NHWC / NCHW{c} convs and integer elementwise tails do not fuse (their
-//! epilogues stay 1:1 steps); extending the epilogue to the packed layouts
-//! is an open roadmap item.
+//! Integer elementwise tails do not fuse (fused chains always end in f32:
+//! a dequantized quantized chain or an f32 anchor).  One width limit: a
+//! *quantized* NCHW{c} chain fuses only while its channel block fits the
+//! executor's stack-resident lane accumulator
+//! ([`MAX_FUSED_QCONV_CB`]); wider blocks keep their q/dq chain as 1:1
+//! steps, which stay bit-identical, just slower.
 //!
 //! The semantics contract: executing the stream is **bit-for-bit** equal to
 //! [`super::interp::evaluate`] — fused epilogues apply exactly the same
@@ -62,6 +66,12 @@ use crate::memplan::{StaticPlan, ValueLife};
 /// Arena placement alignment: cache-line sized, so typed reinterpretation
 /// is always element-aligned and parallel writers don't share lines.
 pub const ARENA_ALIGN: usize = 64;
+
+/// Widest channel block a *fused* quantized NCHW{c} conv supports: the
+/// executor keeps the per-pixel i32 lane accumulator on the stack (serving
+/// allocates nothing), so the block width is bounded here at compile time.
+/// Chains with a wider block simply stay unfused 1:1 steps.
+pub const MAX_FUSED_QCONV_CB: usize = 64;
 
 /// Where a step operand or result lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +101,8 @@ pub struct Residual {
 /// third source (`srcs[2]`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Epilogue {
-    /// Constant-pool index of a per-channel f32 bias (NCHW channel order).
+    /// Constant-pool index of a per-channel f32 bias (logical channel
+    /// order, the same `[C]` vector every layout's `BiasAdd` reads).
     pub bias: Option<usize>,
     pub relu: bool,
     pub residual: Option<Residual>,
@@ -110,15 +121,22 @@ impl Epilogue {
 pub enum StepOp {
     /// Copy the executor's input tensor into the arena.
     LoadInput,
-    /// fp32 (or standalone int8) conv; `epi` is non-identity only for the
-    /// fused fp32 NCHW chain.
+    /// fp32 (or standalone int8) conv in any layout; `epi` is non-identity
+    /// only for a fused fp32 chain.
     Conv2d { stride: usize, padding: usize, layout: Layout, epi: Epilogue },
-    /// Fused `quantize → int8 NCHW conv (i32 accum) → dequantize` with
-    /// optional bias/residual/relu epilogue.  `srcs = [f32 data, i8
-    /// weight, residual?]`; the quantized input lives in the step's
-    /// scratch slot for exactly this step — no int8 boundary tensor
-    /// survives it.
-    QConv2d { qscale: f32, dqscale: f32, stride: usize, padding: usize, epi: Epilogue },
+    /// Fused `quantize → int8 conv (i32 accum) → dequantize` in the
+    /// anchor's layout, with optional bias/residual/relu epilogue.
+    /// `srcs = [f32 data, i8 weight, residual?]`; the quantized input
+    /// lives in the step's scratch slot for exactly this step — no int8
+    /// boundary tensor survives it.
+    QConv2d {
+        qscale: f32,
+        dqscale: f32,
+        stride: usize,
+        padding: usize,
+        layout: Layout,
+        epi: Epilogue,
+    },
     /// fp32 (or standalone int8) dense; `epi` is non-identity only for the
     /// fused fp32 chain (relu / residual — dense has no bias op).
     Dense { epi: Epilogue },
@@ -150,6 +168,15 @@ impl StepOp {
     /// elementwise while writing its destination.
     pub fn has_residual(&self) -> bool {
         self.epilogue().map_or(false, |e| e.residual.is_some())
+    }
+
+    /// The data layout of a conv anchor step (`None` for everything else);
+    /// how tests assert which layouts the fused corpus actually covers.
+    pub fn conv_layout(&self) -> Option<Layout> {
+        match self {
+            StepOp::Conv2d { layout, .. } | StepOp::QConv2d { layout, .. } => Some(*layout),
+            _ => None,
+        }
     }
 }
 
@@ -445,9 +472,9 @@ fn try_fuse_chain(
         return Ok(None);
     }
     let anchor = &g.nodes[anchor_id];
-    let (is_conv, stride, padding) = match anchor.op {
-        Op::Conv2d { stride, padding, layout: Layout::Nchw } => (true, stride, padding),
-        Op::Dense => (false, 0, 0),
+    let (is_conv, stride, padding, conv_layout) = match anchor.op {
+        Op::Conv2d { stride, padding, layout } => (true, stride, padding, Some(layout)),
+        Op::Dense => (false, 0, 0, None),
         _ => return Ok(None),
     };
     if anchor.inputs.len() != 2 {
@@ -486,10 +513,12 @@ fn try_fuse_chain(
     let mut epi = Epilogue::default();
     let mut residual_src: Option<NodeId> = None;
 
-    // Per-channel f32 constant bias (conv only: BiasAdd needs rank 4).
+    // Per-channel f32 constant bias (conv only: BiasAdd needs an image
+    // rank), and only in the anchor's own layout — a mismatched BiasAdd
+    // layout would misindex the channel and is left as a 1:1 step.
     if is_conv && absorbable(tail) {
         let cand = users[tail][0];
-        if let Op::BiasAdd { layout: Layout::Nchw } = g.nodes[cand].op {
+        if matches!(g.nodes[cand].op, Op::BiasAdd { layout } if Some(layout) == conv_layout) {
             let b = g.nodes[cand].inputs[1];
             if !absorbed[cand]
                 && g.nodes[cand].inputs[0] == tail
@@ -535,7 +564,13 @@ fn try_fuse_chain(
     let (op, data_id, scratch_bytes) = match qscale {
         Some(qs) => {
             let op = if is_conv {
-                StepOp::QConv2d { qscale: qs, dqscale, stride, padding, epi }
+                let layout = conv_layout.expect("conv anchor carries a layout");
+                if matches!(layout, Layout::Nchwc(cb) if cb > MAX_FUSED_QCONV_CB) {
+                    // The fused packed kernel's lane accumulator is
+                    // stack-bounded; leave wider blocks as 1:1 steps.
+                    return Ok(None);
+                }
+                StepOp::QConv2d { qscale: qs, dqscale, stride, padding, layout, epi }
             } else {
                 StepOp::QDense { qscale: qs, dqscale, epi }
             };
@@ -549,7 +584,8 @@ fn try_fuse_chain(
                 return Ok(None);
             }
             let op = if is_conv {
-                StepOp::Conv2d { stride, padding, layout: Layout::Nchw, epi }
+                let layout = conv_layout.expect("conv anchor carries a layout");
+                StepOp::Conv2d { stride, padding, layout, epi }
             } else {
                 StepOp::Dense { epi }
             };

@@ -5,7 +5,9 @@
 //! over speed) except the NCHW{c} conv, whose *relative* speed vs the
 //! unpacked conv is itself a measurement (Figure 1 bench): packing makes
 //! the inner loop unit-stride, and that locality is visible even in
-//! straightforward rust.
+//! straightforward rust.  Conv runs in every layout at both precisions —
+//! fp32 and int8 (i32 accumulation) in NCHW, NHWC, and NCHW{c} — so the
+//! oracle covers the executor's whole layout × precision matrix.
 
 use anyhow::{anyhow, Result};
 
@@ -119,7 +121,8 @@ fn conv2d(
         },
         (DType::S8, DType::S8) => match layout {
             Layout::Nchw => conv2d_nchw_i8(x, w, stride, padding, out_shape),
-            _ => Err(anyhow!("int8 conv implemented for NCHW only in the interpreter")),
+            Layout::Nhwc => conv2d_nhwc_i8(x, w, stride, padding, out_shape),
+            Layout::Nchwc(cb) => conv2d_nchwc_i8(x, w, stride, padding, cb, out_shape),
         },
         other => Err(anyhow!("conv dtype combination {:?}", other)),
     }
@@ -313,6 +316,118 @@ pub fn conv2d_nchwc_f32(
         }
     }
     TensorData::from_f32(out_shape.to_vec(), &out)
+}
+
+/// int8 NHWC conv (HWIO weight), i32 accumulation.  The inner `ci` loop is
+/// unit-stride on the data operand — NHWC's channel-innermost payoff.
+fn conv2d_nhwc_i8(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_i8()?;
+    let wv = w.as_i8()?; // HWIO
+    let (n, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (r, s, _, k) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (out_shape[1], out_shape[2]);
+    let mut out = vec![0i32; n * oh * ow * k];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ki in 0..k {
+                    let mut acc = 0i32;
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            for ci in 0..c {
+                                acc += xv[((ni * h + iy) * wd + ix) * c + ci] as i32
+                                    * wv[((ry * s + sx) * c + ci) * k + ki] as i32;
+                            }
+                        }
+                    }
+                    out[((ni * oh + oy) * ow + ox) * k + ki] = acc;
+                }
+            }
+        }
+    }
+    TensorData::from_i32(out_shape.to_vec(), &out)
+}
+
+/// int8 packed conv: data NCHW{cb}, weight OIHW{i}{o}, i32 accumulation
+/// over the `cb` input lanes into `kb` output lanes — the channel-blocked
+/// inner loop that stands in for the paper's int8 tensorization: both
+/// operand walks are unit-stride inside the block.
+fn conv2d_nchwc_i8(
+    x: &TensorData,
+    w: &TensorData,
+    stride: usize,
+    padding: usize,
+    cb: usize,
+    out_shape: &[usize],
+) -> Result<TensorData> {
+    let xv = x.as_i8()?;
+    let wv = w.as_i8()?;
+    let (n, co, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (ko, _, r, s, wcb, kb) = (
+        w.shape[0], w.shape[1], w.shape[2], w.shape[3], w.shape[4], w.shape[5],
+    );
+    if wcb != cb || kb != cb {
+        // The IR types a packed conv's output with the *input* block size,
+        // so asymmetric blocks would mistype every downstream op.
+        return Err(anyhow!("packed conv blocks i={wcb}/o={kb} != layout block {cb}"));
+    }
+    let (oh, ow) = (out_shape[2], out_shape[3]);
+    let mut out = vec![0i32; n * ko * oh * ow * kb];
+    let mut acc = vec![0i32; kb];
+    for ni in 0..n {
+        for ok in 0..ko {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    acc.fill(0);
+                    for oc in 0..co {
+                        for ry in 0..r {
+                            let iy = oy * stride + ry;
+                            if iy < padding || iy >= h + padding {
+                                continue;
+                            }
+                            let iy = iy - padding;
+                            for sx in 0..s {
+                                let ix = ox * stride + sx;
+                                if ix < padding || ix >= wd + padding {
+                                    continue;
+                                }
+                                let ix = ix - padding;
+                                let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                                let wbase =
+                                    ((((ok * co + oc) * r + ry) * s + sx) * cb) * kb;
+                                for ci in 0..cb {
+                                    let xi = xv[xbase + ci] as i32;
+                                    let wrow = wbase + ci * kb;
+                                    for ki in 0..kb {
+                                        acc[ki] += xi * wv[wrow + ki] as i32;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let obase = (((ni * ko + ok) * oh + oy) * ow + ox) * kb;
+                    out[obase..obase + kb].copy_from_slice(&acc);
+                }
+            }
+        }
+    }
+    TensorData::from_i32(out_shape.to_vec(), &out)
 }
 
 fn dense(x: &TensorData, w: &TensorData) -> Result<TensorData> {

@@ -393,8 +393,10 @@ fn conv2d_type(
             (w.shape[3], w.shape[2], w.shape[0], w.shape[1])
         }
         Layout::Nchwc(cb) => {
-            // OIHW{i}{o}: (K/kb, C/cb, R, S, cb, kb)
-            if w.shape.len() != 6 || w.shape[4] != cb {
+            // OIHW{i}{o}: (K/kb, C/cb, R, S, cb, kb).  The output tensor is
+            // typed with the *input* block size, so the filter block must
+            // equal it (kb == cb) or every downstream op would misindex.
+            if w.shape.len() != 6 || w.shape[4] != cb || w.shape[5] != cb {
                 return Err(anyhow!("OIHWio weight shape {:?} (cb={})", w.shape, cb));
             }
             (

@@ -8,6 +8,19 @@
 //! the interpreter calls them through allocating wrappers, the executor
 //! through pre-placed arena windows.  All index arithmetic goes through
 //! [`super::ir::layout_offset`].
+//!
+//! # Layout semantics
+//!
+//! Every core takes the tensor's [`Layout`] and a *logical* channel
+//! vocabulary: channel `c` of an `NCHW{cb}c` tensor lives at block
+//! `c / cb`, lane `c % cb`, and per-channel operands (the bias vector)
+//! are always indexed by the logical channel — one `[C]` constant serves
+//! all three layouts.  Spatial walks use [`layout_offset`], so a kernel
+//! body is layout-blind; only the stride pattern (and therefore speed)
+//! changes.  Conv kernels live with their tiers (the interpreter's naive
+//! loops, the executor's banded ones), but both index identically:
+//! NCHW/NCHW{c} weights are OIHW / OIHW{i}{o}, NHWC weights are HWIO,
+//! and int8 convs accumulate in i32 in every layout.
 
 use anyhow::Result;
 

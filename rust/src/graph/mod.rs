@@ -21,7 +21,10 @@ pub mod ir;
 pub mod kernels;
 pub mod passes;
 
-pub use builder::{build_conv_net, build_resnet_ir, calibrate_ir, NetSpec, StageSpec};
+pub use builder::{
+    build_conv_net, build_resnet_ir, build_resnet_ir_in, calibrate_ir, rebatch_graph, NetSpec,
+    StageSpec,
+};
 pub use compile::{compile_graph, CompiledGraph};
 pub use interp::evaluate;
 pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

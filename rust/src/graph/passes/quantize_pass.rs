@@ -14,7 +14,7 @@ use anyhow::{anyhow, Result};
 
 use super::Pass;
 use crate::graph::interp::evaluate;
-use crate::graph::ir::{ConstValue, Graph, Layout, NodeId, Op};
+use crate::graph::ir::{ConstValue, Graph, NodeId, Op};
 use crate::quant::{abs_max_scale, quantize};
 use crate::runtime::TensorData;
 
@@ -44,8 +44,10 @@ pub fn calibrate_graph(g: &Graph, calib: &TensorData) -> Result<HashMap<NodeId, 
     Ok(scales)
 }
 
-/// The realize rewrite.  Only NCHW convs and dense are quantized (matching
-/// the schedule library); everything else stays fp32.
+/// The realize rewrite.  Conv anchors in **every** layout (NCHW, NHWC,
+/// NCHW{c}) and dense are quantized; weight quantization is elementwise,
+/// so packed/permuted weight constants keep their layout's shape.
+/// Everything else stays fp32.
 pub struct QuantizeRealize {
     pub scales: HashMap<NodeId, f32>,
 }
@@ -61,7 +63,7 @@ impl Pass for QuantizeRealize {
         for node in &g.nodes {
             let inputs: Vec<NodeId> = node.inputs.iter().map(|&i| remap[i]).collect();
             let quantizable = match &node.op {
-                Op::Conv2d { layout: Layout::Nchw, .. } | Op::Dense => {
+                Op::Conv2d { .. } | Op::Dense => {
                     self.scales.contains_key(&node.id)
                         && matches!(
                             g.nodes[node.inputs[1]].op,

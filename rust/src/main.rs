@@ -24,10 +24,11 @@ tvmq — quantized-inference runtime reproducing 'Analyzing Quantization in TVM'
 
 USAGE: tvmq <COMMAND> [--artifacts DIR] [flags]
 
-Model variants are typed engine specs (--layout NCHW|NHWC
+Model variants are typed engine specs (--layout NCHW|NHWC|NCHWc
 --schedule reference|spatial_pack|simd|interleaved|native
 --precision fp32|int8 --executor graph|vm|arena); unknown tokens are
-rejected at parse time.
+rejected at parse time.  The arena engine builds all three layouts
+natively (NCHWc packs channels in blocks of 8; its input stays NCHW).
 
 COMMANDS:
   inspect           List bundles in the artifact manifest
@@ -45,8 +46,10 @@ COMMANDS:
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
   bench-fig1        Figure 1 (layout packing)          [--reps 5]
   bench-ablations   Executor-mechanism ablations (incl. the arena tier)
-  bench-arena       Arena executor vs interpreter      [--batches 1,8 --image 32
-                    --threads 1 --epochs 20 --warmup 3 | --quick]
+  bench-arena       Arena layout × precision matrix vs interpreter
+                    [--batches 1,8 --image 32 --threads 1 --epochs 20
+                    --warmup 3 | --quick] [--json PATH  machine-readable
+                    per-variant ns/iter records]
   bench-serve       Arena bucket serving vs per-request run (no artifacts)
                     [--requests 256 --clients 16 --buckets 1,4,8 --image 32
                     --threads 1 --batch-timeout-ms 2]
@@ -185,10 +188,10 @@ fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
         EngineKind::Graph => Box::new(GraphExecutor::new(rt, &m, bundle)?),
         _ => Box::new(VmExecutor::new(rt, &m, bundle)?),
     };
-    let rest = if spec.layout == LayoutTag::Nchw {
-        vec![m.in_channels, m.image_size, m.image_size]
-    } else {
+    let rest = if spec.layout == LayoutTag::Nhwc {
         vec![m.image_size, m.image_size, m.in_channels]
+    } else {
+        vec![m.in_channels, m.image_size, m.image_size]
     };
     let x = synthetic_images(batch, &rest, seed);
     let t0 = std::time::Instant::now();
@@ -199,43 +202,87 @@ fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The arena-vs-interpreter table, shared by `bench-arena` and the
+/// The arena layout × precision matrix, shared by `bench-arena` and the
 /// artifact-free half of `bench-ablations`.  `--quick` shrinks epochs,
 /// batches, and image for CI smoke runs; explicit flags still win.
+/// `--json <path>` additionally writes the machine-readable per-variant
+/// perf records (ns/iter), the cross-PR perf trajectory.
 fn print_arena_ablation(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let arena_opts = BenchOpts {
         epochs: args.usize("epochs", if quick { 5 } else { 20 })?,
         warmup: args.usize("warmup", if quick { 1 } else { 3 })?,
     };
-    arena_ablation(
+    let threads = args.usize("threads", env_threads())?;
+    let image = args.usize("image", if quick { 16 } else { 32 })?;
+    let (table, rows) = arena_ablation(
         &arena_opts,
         &args.usize_list("batches", if quick { &[1, 2] } else { &[1, 8] })?,
-        args.usize("image", if quick { 16 } else { 32 })?,
-        args.usize("threads", env_threads())?,
-    )?
-    .print();
+        image,
+        threads,
+    )?;
+    table.print();
+    if let Some(path) = args.opt_str("json") {
+        write_arena_json(&path, &rows, &arena_opts, image)?;
+        println!("wrote {} perf records to {path}", rows.len());
+    }
     Ok(())
 }
 
-/// `run --executor arena`: the artifact-free tier — build the ResNet-style
-/// IR, optionally quantize-realize it, compile to the arena engine, run.
-fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
-    use tvmq::executor::{factory::ARENA_MODEL_SEED, ArenaExec, Executor};
-    use tvmq::graph::passes::QuantizeRealize;
-    use tvmq::graph::{build_resnet_ir, calibrate_ir};
+/// Serialize the arena perf rows with the run protocol (epochs, warmup,
+/// image size), so a stored BENCH_*.json is self-describing when diffed
+/// across PRs — records from different workloads can't be confused.
+fn write_arena_json(
+    path: &str,
+    rows: &[tvmq::bench::ArenaRow],
+    opts: &BenchOpts,
+    image: usize,
+) -> Result<()> {
+    use tvmq::util::json::Json;
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("batch", Json::num(r.batch as f64)),
+                ("layout", Json::str(r.layout.clone())),
+                ("precision", Json::str(r.precision.clone())),
+                ("config", Json::str(r.config.clone())),
+                ("fused", Json::Bool(r.fused)),
+                ("threads", Json::num(r.threads as f64)),
+                ("mean_ms", Json::num(r.mean_ms)),
+                ("ns_per_iter", Json::num(r.ns_per_iter)),
+                ("steps", Json::num(r.steps as f64)),
+                ("fused_chains", Json::num(r.fused_chains as f64)),
+                ("arena_bytes", Json::num(r.arena_bytes as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("arena")),
+        ("epochs", Json::num(opts.epochs as f64)),
+        ("warmup", Json::num(opts.warmup as f64)),
+        ("image", Json::num(image as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    std::fs::write(path, doc.to_string_pretty() + "\n")
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+}
 
-    // Same constraint the serving factory enforces: the native engine
-    // builds NCHW models only.
-    if spec.layout != LayoutTag::Nchw {
-        bail!("{spec}: the arena engine builds NCHW models only");
-    }
+/// `run --executor arena`: the artifact-free tier — build the ResNet-style
+/// IR in the spec's layout (NCHW, NHWC, or packed NCHWc), optionally
+/// quantize-realize it, compile to the arena engine, run.
+fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
+    use tvmq::executor::factory::{ir_layout, ARENA_MODEL_SEED};
+    use tvmq::executor::{ArenaExec, Executor};
+    use tvmq::graph::passes::QuantizeRealize;
+    use tvmq::graph::{build_resnet_ir_in, calibrate_ir};
+
     let batch = args.usize("batch", 1)?;
     let image = args.usize("image", 32)?;
     let threads = args.usize("threads", env_threads())?;
     let seed = args.u64("seed", 42)?;
 
-    let g = build_resnet_ir(batch, image, ARENA_MODEL_SEED)?;
+    let g = build_resnet_ir_in(batch, image, ARENA_MODEL_SEED, ir_layout(spec.layout))?;
     let g = match spec.precision {
         Precision::Fp32 => g,
         Precision::Int8 => {
@@ -287,13 +334,20 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         let threads = args.usize("threads", env_threads())?;
         let factory = NativeArenaFactory::new(spec, &buckets, image, threads)?;
         let server = InferenceServer::start_with(factory, cfg)?;
-        (server, vec![3, image, image])
+        // NHWC models take channels-last images; NCHW and packed NCHWc
+        // models both take plain NCHW (the packed stem is unblocked).
+        let rest = if spec.layout == LayoutTag::Nhwc {
+            vec![image, image, 3]
+        } else {
+            vec![3, image, image]
+        };
+        (server, rest)
     } else {
         let m = tvmq::Manifest::load(artifacts)?;
-        let rest = if spec.layout == LayoutTag::Nchw {
-            vec![m.in_channels, m.image_size, m.image_size]
-        } else {
+        let rest = if spec.layout == LayoutTag::Nhwc {
             vec![m.image_size, m.image_size, m.in_channels]
+        } else {
+            vec![m.in_channels, m.image_size, m.image_size]
         };
         (InferenceServer::start(artifacts.clone(), cfg)?, rest)
     };

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use tvmq::executor::{ArenaExec, EngineFactory, Executor, NativeArenaFactory};
 use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
-use tvmq::graph::{build_conv_net, calibrate_ir, Graph, NetSpec};
+use tvmq::graph::{build_conv_net, build_resnet_ir_in, calibrate_ir, Graph, Layout, NetSpec};
 use tvmq::runtime::TensorData;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
@@ -128,6 +128,35 @@ fn run_into_is_allocation_free_with_worker_pool_and_fused_residual() {
         );
         let x = calibrate_ir(graph, 3);
         assert_zero_alloc_steady_state(&exec, &x, &format!("{tag} t{threads}"));
+    }
+}
+
+#[test]
+fn run_into_is_allocation_free_for_fused_packed_int8() {
+    let _serial = SERIAL.lock().unwrap();
+    let threads = std::env::var("TVMQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 2)
+        .unwrap_or(4);
+
+    // A natively packed NCHW{8}c resnet, quantize-realized: the fused
+    // packed q-conv kernel accumulates its i32 lanes in a stack array, so
+    // the packed int8 tier must keep the zero-allocation contract at both
+    // fan-outs (ISSUE 4 acceptance: threads 1 and 4).
+    let g = build_resnet_ir_in(1, 12, 7, Layout::Nchwc(8)).unwrap();
+    let qg = quantized(&g);
+    for t in [1usize, threads] {
+        let exec = ArenaExec::with_options(&qg, true, t).unwrap();
+        assert!(
+            exec.compiled().steps.iter().any(|s| {
+                matches!(s.op.conv_layout(), Some(Layout::Nchwc(_)))
+                    && s.op.epilogue().map_or(false, |e| !e.is_identity())
+            }),
+            "expected fused packed int8 epilogue steps"
+        );
+        let x = calibrate_ir(&qg, 2);
+        assert_zero_alloc_steady_state(&exec, &x, &format!("int8 nchwc t{t}"));
     }
 }
 

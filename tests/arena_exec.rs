@@ -10,8 +10,8 @@ use tvmq::graph::passes::{
     PassManager, QuantizeRealize,
 };
 use tvmq::graph::{
-    build_conv_net, build_resnet_ir, calibrate_ir, evaluate, Graph, Layout, NetSpec, Op,
-    TensorTy,
+    build_conv_net, build_resnet_ir, build_resnet_ir_in, calibrate_ir, evaluate, Graph,
+    Layout, NetSpec, Op, TensorTy,
 };
 use tvmq::runtime::TensorData;
 use tvmq::util::rng::Rng64;
@@ -221,6 +221,60 @@ fn arena_matches_interp_on_packed_io_graph() {
     let xin = calibrate_ir(&g, 13);
     let exec = ArenaExec::compile(&g).unwrap();
     assert_matches_oracle(&g, &xin, &exec, "nchwc-native");
+}
+
+#[test]
+fn arena_matches_interp_int8_all_layouts() {
+    // The tentpole differential: natively built NHWC and NCHW{c} models,
+    // quantize-realized, must pin the fused packed int8 chains
+    // (q → packed conv → dq → bias → relu, residual adds included)
+    // bit-for-bit to the oracle at several fan-outs — and the unfused
+    // ablation (standalone int8 packed convs, materialized q/dq
+    // boundaries) must agree too.
+    for layout in [Layout::Nchw, Layout::Nhwc, Layout::Nchwc(4)] {
+        let g = build_resnet_ir_in(1, 12, 11, layout).unwrap();
+        let calib = calibrate_ir(&g, 5);
+        let scales = calibrate_graph(&g, &calib).unwrap();
+        let qg = QuantizeRealize { scales }.run(&g).unwrap();
+        let x = calibrate_ir(&qg, 6);
+        for (fuse, threads) in [(true, 1), (true, 4), (false, 1)] {
+            let exec = ArenaExec::with_options(&qg, fuse, threads).unwrap();
+            if fuse {
+                assert!(
+                    exec.compiled().steps.iter().any(|s| {
+                        s.op.conv_layout() == Some(layout)
+                            && s.op.epilogue().map_or(false, |e| !e.is_identity())
+                    }),
+                    "{layout:?}: expected fused int8 epilogue steps in the model's layout"
+                );
+            }
+            assert_matches_oracle(
+                &qg, &x, &exec,
+                &format!("int8 {layout:?} fuse={fuse} t{threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_matches_interp_fp32_packed_epilogues() {
+    // fp32 epilogue fusion on the packed layouts (bias+relu+residual
+    // folded into NHWC / NCHW{c} conv steps) — previously these lowered
+    // their tails 1:1.
+    for layout in [Layout::Nhwc, Layout::Nchwc(8)] {
+        let g = build_resnet_ir_in(1, 12, 13, layout).unwrap();
+        let x = calibrate_ir(&g, 3);
+        for threads in [1usize, 3] {
+            let exec = ArenaExec::with_options(&g, true, threads).unwrap();
+            assert!(
+                exec.compiled().steps.iter().any(|s| {
+                    s.op.conv_layout() == Some(layout) && s.op.has_residual()
+                }),
+                "{layout:?}: expected a fused packed residual epilogue"
+            );
+            assert_matches_oracle(&g, &x, &exec, &format!("fp32 {layout:?} t{threads}"));
+        }
+    }
 }
 
 #[test]

@@ -1,16 +1,22 @@
 //! Randomized differential harness: seeded generator of valid mixed
 //! fp32/int8 graphs (conv / dense / bias / relu / residual add / pool
-//! chains), each executed by `ArenaExec::run_into` — fused and unfused —
-//! and compared **bit-for-bit** (`TensorData` equality is raw bytes)
-//! against the `graph::interp::evaluate` oracle across thread counts
-//! 1 / 2 / 4 (plus `TVMQ_THREADS`, which the CI pool-path job sets).
+//! chains) across **all three layouts** — each stage picks NCHW, NHWC, or
+//! channel-blocked NCHW{c}, with explicit layout-cast nodes wherever
+//! consecutive stages disagree — each executed by `ArenaExec::run_into`,
+//! fused and unfused, and compared **bit-for-bit** (`TensorData` equality
+//! is raw bytes) against the `graph::interp::evaluate` oracle across
+//! thread counts 1 / 2 / 4 (plus `TVMQ_THREADS`, which the CI pool-path
+//! job sets).
 //!
-//! This is what pins the generalized fusion layer: fp32 epilogues,
+//! This is what pins the layout-complete fusion layer: fp32 epilogues,
 //! two-input residual steps in both positions (pre- and post-relu, both
-//! operand orders), quantized chains, and the persistent worker pool all
-//! get exercised by the same 200-seed corpus on every run.
+//! operand orders), quantized chains in every layout (including the
+//! packed int8 kernels' stack-lane accumulation), mixed-layout graphs,
+//! and the persistent worker pool all get exercised by the same 200-seed
+//! corpus on every run.
 
 use tvmq::executor::ArenaExec;
+use tvmq::graph::ir::{dims_of, shape_of};
 use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
 use tvmq::graph::{calibrate_ir, evaluate, Graph, Layout, NodeId, Op, TensorTy};
 use tvmq::runtime::TensorData;
@@ -42,33 +48,75 @@ fn add_residual(g: &mut Graph, rng: &mut Rng64, name: String, t: NodeId, skip: N
     g.add(name, Op::Add, inputs).unwrap()
 }
 
-/// A random NCHW net: stacked conv stages with optional bias / relu /
-/// residual (pre- or post-relu) / maxpool, closed by gap + dense
-/// (+ optional relu).
+/// Uniform draw over the three layout families.  Channel counts in the
+/// generator are multiples of 4, so every block width here divides every
+/// channel count and any stage can host any layout.
+fn rand_layout(rng: &mut Rng64) -> Layout {
+    match rng.range_usize(0, 2) {
+        0 => Layout::Nchw,
+        1 => Layout::Nhwc,
+        _ => Layout::Nchwc([2usize, 4][rng.range_usize(0, 1)]),
+    }
+}
+
+/// A random conv weight constant in `layout`'s weight format (OIHW /
+/// HWIO / OIHW{i}{o}); the values are a fresh draw, the *shape* is what's
+/// under test.
+fn add_weight(
+    g: &mut Graph,
+    rng: &mut Rng64,
+    name: String,
+    cout: usize,
+    cin: usize,
+    k: usize,
+    layout: Layout,
+) -> NodeId {
+    let vals: Vec<f32> = (0..cout * cin * k * k).map(|_| rng.normal() * 0.3).collect();
+    let shape = match layout {
+        Layout::Nchw => vec![cout, cin, k, k],
+        Layout::Nhwc => vec![k, k, cin, cout],
+        Layout::Nchwc(cb) => vec![cout / cb, cin / cb, k, k, cb, cb],
+    };
+    g.add_const_f32(name, shape, vals).unwrap()
+}
+
+/// A random mixed-layout net: stacked conv stages — each in its own
+/// layout, bridged by explicit `LayoutTransform` casts — with optional
+/// bias / relu / residual (pre- or post-relu) / maxpool, closed by
+/// gap + dense (+ optional relu).
 fn random_graph(rng: &mut Rng64) -> Graph {
     let mut g = Graph::new();
     let batch = rng.range_usize(1, 2);
     let mut image = rng.range_usize(5, 9);
-    let mut c = rng.range_usize(1, 4);
-    let x = g.add_input("x", TensorTy::f32(vec![batch, c, image, image]));
+    let mut c = [4usize, 8][rng.range_usize(0, 1)];
+    let mut layout = rand_layout(rng);
+    let x = g.add_input("x", TensorTy::f32(shape_of(batch, c, image, image, layout)));
     let mut cur = x;
     for i in 0..rng.range_usize(1, 3) {
+        // Mixed-layout coverage: hop to a fresh layout through a cast node
+        // whenever the draw disagrees with the running tensor's layout.
+        let next = rand_layout(rng);
+        if next != layout {
+            cur = g
+                .add(
+                    format!("c{i}.cast"),
+                    Op::LayoutTransform { from: layout, to: next },
+                    vec![cur],
+                )
+                .unwrap();
+            layout = next;
+        }
         let kernel = [1usize, 3][rng.range_usize(0, 1)];
         let pad = kernel / 2;
         let stride = rng.range_usize(1, 2);
         // Half the stages keep the channel count so residual links stay
         // shape-compatible.
-        let cout = if rng.bool() { c } else { [2usize, 4, 8][rng.range_usize(0, 2)] };
-        let w: Vec<f32> = (0..cout * c * kernel * kernel)
-            .map(|_| rng.normal() * 0.3)
-            .collect();
-        let wid = g
-            .add_const_f32(format!("c{i}.w"), vec![cout, c, kernel, kernel], w)
-            .unwrap();
+        let cout = if rng.bool() { c } else { [4usize, 8][rng.range_usize(0, 1)] };
+        let wid = add_weight(&mut g, rng, format!("c{i}.w"), cout, c, kernel, layout);
         let conv = g
             .add(
                 format!("c{i}"),
-                Op::Conv2d { stride, padding: pad, layout: Layout::Nchw },
+                Op::Conv2d { stride, padding: pad, layout },
                 vec![cur, wid],
             )
             .unwrap();
@@ -77,7 +125,7 @@ fn random_graph(rng: &mut Rng64) -> Graph {
             let b: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
             let bid = g.add_const_f32(format!("c{i}.b"), vec![cout], b).unwrap();
             t = g
-                .add(format!("c{i}.bias"), Op::BiasAdd { layout: Layout::Nchw }, vec![t, bid])
+                .add(format!("c{i}.bias"), Op::BiasAdd { layout }, vec![t, bid])
                 .unwrap();
         }
         // kernel 1 or 3 with pad = kernel/2 and stride 1 preserves the
@@ -96,20 +144,20 @@ fn random_graph(rng: &mut Rng64) -> Graph {
         }
         cur = t;
         c = cout;
-        image = g.node(conv).ty.shape[2];
+        image = dims_of(&g.node(conv).ty.shape, layout).unwrap().2;
         if rng.bool() && image >= 2 {
             cur = g
                 .add(
                     format!("c{i}.pool"),
-                    Op::MaxPool { window: 2, stride: 2, padding: 0, layout: Layout::Nchw },
+                    Op::MaxPool { window: 2, stride: 2, padding: 0, layout },
                     vec![cur],
                 )
                 .unwrap();
-            image = g.node(cur).ty.shape[2];
+            image = dims_of(&g.node(cur).ty.shape, layout).unwrap().2;
         }
     }
     let gap = g
-        .add("gap", Op::GlobalAvgPool { layout: Layout::Nchw }, vec![cur])
+        .add("gap", Op::GlobalAvgPool { layout }, vec![cur])
         .unwrap();
     let classes = rng.range_usize(2, 6);
     let fw: Vec<f32> = (0..c * classes).map(|_| rng.normal() * 0.3).collect();
@@ -149,10 +197,18 @@ fn fuzz_arena_matches_oracle_across_threads() {
     let threads = thread_counts();
     let mut fused_chains = 0usize;
     let mut residual_steps = 0usize;
+    let mut packed_fused_steps = 0usize;
+    let mut packed_qconv_steps = 0usize;
+    let mut cast_nodes = 0usize;
     for case in 0..CASES {
         let mut rng = Rng64::seed_from_u64(BASE_SEED ^ case);
         let g = random_graph(&mut rng);
         let g = maybe_quantize(&g, &mut rng);
+        cast_nodes += g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::LayoutTransform { .. }))
+            .count();
         let x = calibrate_ir(&g, rng.next_u64());
         let want = evaluate(&g, &x)
             .unwrap_or_else(|e| panic!("case {case}: oracle failed: {e}"));
@@ -170,6 +226,23 @@ fn fuzz_arena_matches_oracle_across_threads() {
                     fused_chains += cg.fused_chains;
                     residual_steps +=
                         cg.steps.iter().filter(|s| s.op.has_residual()).count();
+                    for s in &cg.steps {
+                        let packed =
+                            s.op.conv_layout().map_or(false, |l| l != Layout::Nchw);
+                        let fused_epi =
+                            s.op.epilogue().map_or(false, |e| !e.is_identity());
+                        if packed && fused_epi {
+                            packed_fused_steps += 1;
+                        }
+                        if packed
+                            && matches!(
+                                s.op,
+                                tvmq::graph::compile::StepOp::QConv2d { .. }
+                            )
+                        {
+                            packed_qconv_steps += 1;
+                        }
+                    }
                 }
                 let mut out = TensorData::zeros(want.dtype, want.shape.clone());
                 exec.run_into(&x, &mut out)
@@ -181,8 +254,10 @@ fn fuzz_arena_matches_oracle_across_threads() {
             }
         }
     }
-    // The corpus must actually exercise the generalized fusion layer —
-    // plenty of fused chains, including two-input residual epilogues.
+    // The corpus must actually exercise the layout-complete fusion layer —
+    // plenty of fused chains, two-input residual epilogues, fused
+    // epilogues on NON-NCHW anchors, collapsed q→conv→dq chains in the
+    // packed layouts, and mixed-layout graphs with explicit cast nodes.
     assert!(
         fused_chains >= CASES as usize,
         "corpus fused only {fused_chains} chains across {CASES} cases"
@@ -190,6 +265,18 @@ fn fuzz_arena_matches_oracle_across_threads() {
     assert!(
         residual_steps >= 10,
         "corpus fused only {residual_steps} residual epilogues"
+    );
+    assert!(
+        packed_fused_steps >= 20,
+        "corpus fused only {packed_fused_steps} packed-layout epilogues"
+    );
+    assert!(
+        packed_qconv_steps >= 10,
+        "corpus collapsed only {packed_qconv_steps} packed quantized chains"
+    );
+    assert!(
+        cast_nodes >= 20,
+        "corpus carried only {cast_nodes} layout-cast nodes"
     );
 }
 

@@ -51,10 +51,12 @@ fn table2_specs() -> [EngineSpec; 5] {
 }
 
 fn image(m: &Manifest, batch: usize, layout: LayoutTag, seed: u64) -> TensorData {
-    let rest = if layout == LayoutTag::Nchw {
-        vec![m.in_channels, m.image_size, m.image_size]
-    } else {
+    // Only NHWC is channels-last; NCHW and packed NCHWc both take plain
+    // NCHW images (the packed stem is unblocked).
+    let rest = if layout == LayoutTag::Nhwc {
         vec![m.image_size, m.image_size, m.in_channels]
+    } else {
+        vec![m.in_channels, m.image_size, m.image_size]
     };
     synthetic_images(batch, &rest, seed)
 }
