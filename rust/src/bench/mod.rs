@@ -437,7 +437,9 @@ pub fn ablations(ctx: &BenchCtx) -> Result<Table> {
 /// One measured arena-ablation variant — the machine-readable perf record
 /// behind `bench-arena --json` (ns/iter so trajectory diffs keep sub-ms
 /// moves).  `config` is the human row label; interpreter rows carry
-/// `steps == 0`.
+/// `steps == 0`.  `schedule` is `"default"` or `"tuned"`, and for tuned
+/// rows `knobs` names the chosen knob values, so the perf trajectory can
+/// attribute wins to specific knobs.
 #[derive(Debug, Clone)]
 pub struct ArenaRow {
     pub batch: usize,
@@ -446,11 +448,22 @@ pub struct ArenaRow {
     pub config: String,
     pub fused: bool,
     pub threads: usize,
+    pub schedule: String,
+    pub knobs: String,
     pub mean_ms: f64,
     pub ns_per_iter: f64,
     pub steps: usize,
     pub fused_chains: usize,
     pub arena_bytes: usize,
+}
+
+/// Where `bench-arena --tuned` gets each cell's tuned schedule from: a
+/// persisted records file (applied to every cell; classes the file
+/// doesn't know fall back to the default schedule) or an inline
+/// micro-tune per cell (small budget, deterministic per-cell seed).
+pub enum TunedSource<'a> {
+    Records(&'a crate::tune::TuneRecords),
+    Inline { budget: usize, seed: u64 },
 }
 
 fn layout_label(layout: crate::graph::Layout) -> String {
@@ -474,6 +487,7 @@ pub fn arena_ablation(
     batches: &[usize],
     image: usize,
     threads: usize,
+    tuned: Option<&TunedSource<'_>>,
 ) -> Result<(Table, Vec<ArenaRow>)> {
     use crate::executor::factory::ARENA_PACK_BLOCK;
     use crate::executor::ArenaExec;
@@ -499,7 +513,7 @@ pub fn arena_ablation(
         // The NCHW fp32 interpreter is the cross-layout baseline; the
         // interp int8 row keeps the paper's unfused-q/dq contrast visible.
         let mut base_ms = f64::NAN;
-        for layout in layouts {
+        for (li, layout) in layouts.into_iter().enumerate() {
             let lname = layout_label(layout);
             let g = build_resnet_ir_in(batch, image, 7, layout)?;
             let x = calibrate_ir(&g, 42);
@@ -517,6 +531,7 @@ pub fn arena_ablation(
                 rows.push(ArenaRow {
                     batch, layout: lname.clone(), precision: "fp32".into(),
                     config: "interp fp32 (oracle)".into(), fused: false, threads: 1,
+                    schedule: "default".into(), knobs: "-".into(),
                     mean_ms: base.mean_ms, ns_per_iter: base.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
                 });
@@ -530,6 +545,7 @@ pub fn arena_ablation(
                 rows.push(ArenaRow {
                     batch, layout: lname.clone(), precision: "int8".into(),
                     config: "interp int8 (unfused q/dq)".into(), fused: false, threads: 1,
+                    schedule: "default".into(), knobs: "-".into(),
                     mean_ms: qi.mean_ms, ns_per_iter: qi.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
                 });
@@ -555,6 +571,63 @@ pub fn arena_ablation(
                     rows.push(ArenaRow {
                         batch, layout: lname.clone(), precision: precision.into(),
                         config: label, fused: fuse, threads,
+                        schedule: "default".into(), knobs: "-".into(),
+                        mean_ms: stats.mean_ms, ns_per_iter: stats.mean_ms * 1e6,
+                        steps: cg.steps.len(), fused_chains: cg.fused_chains,
+                        arena_bytes: cg.arena_bytes,
+                    });
+                }
+
+                // The tuned row for this layout × precision cell: same
+                // model, schedule chosen by records or an inline
+                // micro-tune; oracle-exactness is guaranteed by the
+                // tuner's measurer (records) or re-checked at build time
+                // (inline, via the measurer again).
+                if let Some(src) = tuned {
+                    let (fuse, ovr, knobs) = match src {
+                        TunedSource::Records(r) => {
+                            (r.fuse, r.overrides(threads), r.knob_summary())
+                        }
+                        TunedSource::Inline { budget, seed } => {
+                            // A distinct deterministic seed per cell so
+                            // the cells don't all walk the same sample
+                            // sequence.
+                            let cell_seed = *seed
+                                ^ (batch as u64).wrapping_mul(0x9E37_79B9)
+                                ^ ((li as u64) << 17)
+                                ^ (((precision == "int8") as u64) << 40);
+                            let outcome = crate::tune::tune_graph(
+                                graph,
+                                x.clone(),
+                                &crate::tune::TuneOptions {
+                                    budget: (*budget).max(2),
+                                    seed: cell_seed,
+                                    threads,
+                                    warmup: 1,
+                                    iters: 3,
+                                    use_prior: true,
+                                },
+                            )?;
+                            let plan = outcome.best.plan;
+                            (plan.fuse, plan.overrides(threads), plan.describe())
+                        }
+                    };
+                    let exec = ArenaExec::with_schedule(graph, fuse, threads, &ovr)?;
+                    let stats =
+                        measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
+                    let cg = exec.compiled();
+                    let label = format!("arena {precision} (tuned)");
+                    t.row(vec![
+                        batch.to_string(), lname.clone(), label.clone(),
+                        fmt_ms(stats.mean_ms), fmt_speedup(base_ms / stats.mean_ms),
+                        cg.steps.len().to_string(),
+                        kib(cg.arena_bytes),
+                        cg.fused_chains.to_string(),
+                    ]);
+                    rows.push(ArenaRow {
+                        batch, layout: lname.clone(), precision: precision.into(),
+                        config: label, fused: fuse, threads,
+                        schedule: "tuned".into(), knobs,
                         mean_ms: stats.mean_ms, ns_per_iter: stats.mean_ms * 1e6,
                         steps: cg.steps.len(), fused_chains: cg.fused_chains,
                         arena_bytes: cg.arena_bytes,

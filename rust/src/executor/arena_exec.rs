@@ -22,26 +22,37 @@
 //! so serving an inference allocates nothing at *any* thread count (the
 //! allocation-counting test locks this down for `threads == 1` and
 //! `threads == 4`).  With `threads == 1` no pool exists and everything
-//! runs inline.  Bands are contiguous row ranges where rows cost the same
-//! (NCHW/NCHW{c}: one row = one output plane) and interleaved residue
-//! classes where they don't ([`Banding::Interleaved`], NHWC: one row =
-//! one spatial line, ragged at padded borders).
+//! runs inline.  Bands default to contiguous row ranges where rows cost
+//! the same (NCHW/NCHW{c}: one row = one output plane) and interleaved
+//! residue classes where they don't ([`Banding::Interleaved`], NHWC: one
+//! row = one spatial line, ragged at padded borders) — but the banding
+//! mode, the dynamic-dequeue chunk, and the band cap are **schedule
+//! knobs**: each step carries a resolved
+//! [`StepSched`](crate::graph::compile::StepSched) (from
+//! [`ArenaExec::with_schedule`]'s overrides, typically found by the
+//! `crate::tune` autotuner), and [`Banding::Dynamic`] turns the fan-out
+//! into a chunked work-stealing dequeue for pathological row costs.
+//! Every mode assigns each row to exactly one band, so the schedule can
+//! never change a result bit.
 //!
 //! Layouts: every conv kernel exists for NCHW, NHWC, and NCHW{c}, in
 //! fp32, standalone int8 (i32 out), and fused-quantized (q→conv→dq
 //! collapsed) forms, each with the full `[bias] [add] [relu] [add]`
 //! epilogue; the packed fused kernel accumulates i32 over the channel
-//! block in a stack-resident lane array (never the heap).
+//! block in a stack-resident lane array while the block fits
+//! [`MAX_FUSED_QCONV_CB`], and in per-band spill windows planned into the
+//! step's scratch slot beyond that — zero heap allocations either way.
 
 use std::cell::RefCell;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{anyhow, Result};
 
 use super::pool::{Banding, WorkerPool};
 use super::{ExecCounters, ExecSnapshot, Executor};
 use crate::graph::compile::{
-    compile_graph, CompiledGraph, Epilogue, Residual, Slot, Step, StepOp, MAX_FUSED_QCONV_CB,
+    compile_graph_with, CompiledGraph, Epilogue, Residual, ScheduleOverrides, Slot, Step,
+    StepOp, StepSched, MAX_FUSED_QCONV_CB,
 };
 use crate::graph::ir::{ConstValue, Graph, IrDType, Layout};
 use crate::graph::kernels as gk;
@@ -80,14 +91,31 @@ impl ArenaExec {
     /// `fuse = false` is the unfused ablation; `threads` sets the width of
     /// the persistent worker pool the conv/dense kernels fan out over.
     pub fn with_options(g: &Graph, fuse: bool, threads: usize) -> Result<Self> {
-        let cg = compile_graph(g, fuse)?;
+        Self::with_schedule(g, fuse, threads, &ScheduleOverrides::default())
+    }
+
+    /// [`ArenaExec::with_options`] under explicit schedule overrides (the
+    /// tuned path): per-class banding / band-cap knobs and the packed
+    /// lane-accumulator bound.  `overrides.threads` is always overwritten
+    /// with `threads`, so spill windows are sized for exactly this
+    /// executor's pool width.
+    pub fn with_schedule(
+        g: &Graph,
+        fuse: bool,
+        threads: usize,
+        overrides: &ScheduleOverrides,
+    ) -> Result<Self> {
+        let threads = threads.max(1);
+        let mut ovr = overrides.clone();
+        ovr.threads = threads;
+        let cg = compile_graph_with(g, fuse, &ovr)?;
         let words = cg.arena_bytes / 8 + 1;
         let batch = cg.input_ty.shape.first().copied().unwrap_or(1);
-        let threads = threads.max(1);
         let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
         let name = format!(
-            "arena(b{batch}{})",
-            if fuse { ",fused" } else { ",unfused" }
+            "arena(b{batch}{}{})",
+            if fuse { ",fused" } else { ",unfused" },
+            if ovr.is_default_schedule() { "" } else { ",tuned" }
         );
         Ok(Self {
             cg,
@@ -195,10 +223,51 @@ impl ArenaExec {
         Ok(EpiVals { bias, relu: epi.relu, res })
     }
 
+    /// Resolve a fused packed q-conv step's lane-accumulator strategy:
+    /// `None` means the `cb`-lane accumulator fits the kernel's stack
+    /// array; `Some((base, stride))` points at the per-band i32 spill
+    /// windows the compiler planned into the scratch slot (`stride` in
+    /// i32 elements per band).
+    fn spill_windows(
+        &self,
+        step: &Step,
+        scratch: &Slot,
+        base: *mut u8,
+        cb: usize,
+    ) -> Result<Option<(SendPtr<i32>, usize)>> {
+        let Some(sp) = step.spill else {
+            if cb > MAX_FUSED_QCONV_CB {
+                return Err(anyhow!(
+                    "fused packed conv block {cb} exceeds the stack accumulator \
+                     ({MAX_FUSED_QCONV_CB}) and has no spill plan"
+                ));
+            }
+            return Ok(None);
+        };
+        let Slot::Arena { offset, bytes } = scratch else {
+            return Err(anyhow!("scratch in the constant pool"));
+        };
+        if sp.offset + sp.bands * sp.band_bytes > *bytes || sp.band_bytes < cb * 4 {
+            return Err(anyhow!("spill windows exceed the scratch slot"));
+        }
+        // The kernel indexes windows by band id; bands are clamped to the
+        // pool width, so the plan must cover at least that many.
+        if self.threads > sp.bands {
+            return Err(anyhow!(
+                "spill plan sized for {} bands, pool width is {}",
+                sp.bands, self.threads
+            ));
+        }
+        // 64-aligned slot offset + 64-aligned window offsets keep every
+        // window i32-aligned.
+        let ptr = unsafe { base.add(offset + sp.offset) } as *mut i32;
+        Ok(Some((SendPtr(ptr), sp.band_bytes / 4)))
+    }
+
     fn exec_step(&self, step: &Step, base: *mut u8, input: &TensorData) -> Result<()> {
         let dst_b = arena_bytes_mut(base, &step.dst)?;
         let os = &step.dst_ty.shape;
-        let pool = self.pool.as_ref();
+        let rc = RowCfg { pool: self.pool.as_ref(), sched: step.sched };
         match &step.op {
             StepOp::LoadInput => {
                 dst_b.copy_from_slice(&input.data);
@@ -211,21 +280,21 @@ impl ArenaExec {
                         let ev = self.epi_vals(step, epi, base)?;
                         conv2d_nchw_f32(
                             f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                            *stride, *padding, ev, f32s_mut(dst_b)?, os, pool,
+                            *stride, *padding, ev, f32s_mut(dst_b)?, os, rc,
                         );
                     }
                     (IrDType::F32, Layout::Nhwc) => {
                         let ev = self.epi_vals(step, epi, base)?;
                         conv2d_nhwc_f32(
                             f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                            *stride, *padding, ev, f32s_mut(dst_b)?, os, pool,
+                            *stride, *padding, ev, f32s_mut(dst_b)?, os, rc,
                         );
                     }
                     (IrDType::F32, Layout::Nchwc(cb)) => {
                         let ev = self.epi_vals(step, epi, base)?;
                         conv2d_nchwc_f32(
                             f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                            *stride, *padding, *cb, ev, f32s_mut(dst_b)?, os, pool,
+                            *stride, *padding, *cb, ev, f32s_mut(dst_b)?, os, rc,
                         );
                     }
                     // Standalone int8 convs (the unfused ablation, or bare
@@ -233,15 +302,15 @@ impl ArenaExec {
                     // chains always end in f32.
                     (IrDType::S8, Layout::Nchw) if epi.is_identity() => conv2d_nchw_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, i32s_mut(dst_b)?, os, pool,
+                        *stride, *padding, i32s_mut(dst_b)?, os, rc,
                     ),
                     (IrDType::S8, Layout::Nhwc) if epi.is_identity() => conv2d_nhwc_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, i32s_mut(dst_b)?, os, pool,
+                        *stride, *padding, i32s_mut(dst_b)?, os, rc,
                     ),
                     (IrDType::S8, Layout::Nchwc(cb)) if epi.is_identity() => conv2d_nchwc_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, *cb, i32s_mut(dst_b)?, os, pool,
+                        *stride, *padding, *cb, i32s_mut(dst_b)?, os, rc,
                     ),
                     other => {
                         return Err(anyhow!(
@@ -258,29 +327,37 @@ impl ArenaExec {
                     .scratch
                     .as_ref()
                     .ok_or_else(|| anyhow!("fused conv without scratch slot"))?;
+                // The quantized input occupies the first `qlen` scratch
+                // bytes; anything beyond (the packed spill windows) must
+                // not be aliased by the i8 view.
+                let qlen = step.srcs[0].1.element_count();
                 let qb = arena_bytes_mut(base, scratch)?;
-                let xq = i8s_mut(qb);
+                if qb.len() < qlen {
+                    return Err(anyhow!("scratch slot smaller than quantized input"));
+                }
+                let xq = i8s_mut(&mut qb[..qlen]);
                 quantize_into(f32s(xb)?, *qscale, xq);
                 let ev = self.epi_vals(step, epi, base)?;
                 match layout {
                     Layout::Nchw => qconv2d_nchw(
                         xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                        *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                        *dqscale, ev, f32s_mut(dst_b)?, os, rc,
                     ),
                     Layout::Nhwc => qconv2d_nhwc(
                         xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                        *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                        *dqscale, ev, f32s_mut(dst_b)?, os, rc,
                     ),
                     Layout::Nchwc(cb) => {
-                        if *cb > MAX_FUSED_QCONV_CB || wt.shape[4] != *cb || wt.shape[5] != *cb {
+                        if wt.shape[4] != *cb || wt.shape[5] != *cb {
                             return Err(anyhow!(
-                                "fused packed conv block {cb} unsupported (weight {:?}, max {})",
-                                wt.shape, MAX_FUSED_QCONV_CB
+                                "fused packed conv block {cb} does not match weight {:?}",
+                                wt.shape
                             ));
                         }
+                        let spill = self.spill_windows(step, scratch, base, *cb)?;
                         qconv2d_nchwc(
                             xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                            *cb, *dqscale, ev, f32s_mut(dst_b)?, os, pool,
+                            *cb, *dqscale, ev, spill, f32s_mut(dst_b)?, os, rc,
                         );
                     }
                 }
@@ -299,12 +376,12 @@ impl ArenaExec {
                         let ev = self.epi_vals(step, epi, base)?;
                         dense_f32(
                             f32s(xb)?, &xt.shape, f32s(wb)?, &wt.shape,
-                            ev, f32s_mut(dst_b)?, pool,
+                            ev, f32s_mut(dst_b)?, rc,
                         );
                     }
                     IrDType::S8 if epi.is_identity() => dense_i8(
                         i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        i32s_mut(dst_b)?, pool,
+                        i32s_mut(dst_b)?, rc,
                     ),
                     other => return Err(anyhow!("arena dense: unsupported {:?} operands", other)),
                 }
@@ -322,7 +399,7 @@ impl ArenaExec {
                 let ev = self.epi_vals(step, epi, base)?;
                 qdense(
                     xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, ev,
-                    f32s_mut(dst_b)?, pool,
+                    f32s_mut(dst_b)?, rc,
                 );
             }
             StepOp::BiasAdd { layout } => {
@@ -594,19 +671,30 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Call `f(row_index, row)` for every `row_len`-element row of `out`,
-/// fanning row bands out over the persistent pool — contiguous ranges or
-/// interleaved residue classes per [`Banding`].  With no pool (or a
-/// single band) everything runs inline; either way the dispatch allocates
-/// nothing, and every row is written by exactly one band, so
-/// per-output-element results are identical regardless of fan-out or
-/// banding mode.
+/// A kernel dispatch's row-parallel configuration: the executor's pool
+/// plus the step's resolved schedule knobs ([`StepSched`]) — the tuner's
+/// banding-mode / band-granularity / band-count axes, read here instead
+/// of being hard-coded per kernel.
+#[derive(Clone, Copy)]
+struct RowCfg<'a> {
+    pool: Option<&'a WorkerPool>,
+    sched: StepSched,
+}
+
+/// Call `f(band, row_index, row)` for every `row_len`-element row of
+/// `out`, fanning row bands out over the persistent pool.  The banding
+/// mode is the step's override when set, else `default_banding` (the
+/// kernel's historical choice); `sched.max_bands` caps the fan-out.  With
+/// no pool (or a single band) everything runs inline; either way the
+/// dispatch allocates nothing, and every row is written by exactly one
+/// band ([`Banding::for_band_rows`]), so per-output-element results are
+/// identical regardless of fan-out, banding mode, or chunk size.
 fn par_rows<T: Send>(
-    pool: Option<&WorkerPool>,
-    banding: Banding,
+    rc: RowCfg<'_>,
+    default_banding: Banding,
     out: &mut [T],
     row_len: usize,
-    f: impl Fn(usize, &mut [T]) + Sync,
+    f: impl Fn(usize, usize, &mut [T]) + Sync,
 ) {
     if row_len == 0 || out.is_empty() {
         return;
@@ -616,44 +704,33 @@ fn par_rows<T: Send>(
     // by the bands).
     debug_assert_eq!(out.len() % row_len, 0, "par_rows: ragged row length");
     let rows = out.len() / row_len;
-    let bands = pool.map_or(1, |p| p.threads()).min(rows).max(1);
+    let mut bands = rc.pool.map_or(1, |p| p.threads()).min(rows).max(1);
+    if rc.sched.max_bands > 0 {
+        bands = bands.min(rc.sched.max_bands);
+    }
     if bands == 1 {
         for (r, chunk) in out.chunks_mut(row_len).enumerate() {
-            f(r, chunk);
+            f(0, r, chunk);
         }
         return;
     }
-    let per = (rows + bands - 1) / bands;
+    let banding = rc.sched.banding.unwrap_or(default_banding);
+    let cursor = AtomicUsize::new(0);
     let base = SendPtr(out.as_mut_ptr());
     let f = &f;
     let job = move |band: usize| {
-        // SAFETY: each row index belongs to exactly one band (disjoint
-        // contiguous ranges, or disjoint residue classes mod `bands`), and
-        // the pool does not return from `run` until every band finished.
-        let run_row = |r: usize| {
+        // SAFETY: each row index belongs to exactly one band
+        // (`Banding::for_band_rows`: disjoint contiguous ranges, disjoint
+        // residue classes, or disjoint atomic-cursor grabs), and the pool
+        // does not return from `run` until every band finished.
+        banding.for_band_rows(band, bands, rows, &cursor, |r| {
             let row = unsafe {
                 std::slice::from_raw_parts_mut(base.0.add(r * row_len), row_len)
             };
-            f(r, row);
-        };
-        match banding {
-            Banding::Contiguous => {
-                let start = band * per;
-                let end = ((band + 1) * per).min(rows);
-                for r in start..end {
-                    run_row(r);
-                }
-            }
-            Banding::Interleaved => {
-                let mut r = band;
-                while r < rows {
-                    run_row(r);
-                    r += bands;
-                }
-            }
-        }
+            f(band, r, row);
+        });
     };
-    pool.expect("bands > 1 implies a pool").run(bands, &job);
+    rc.pool.expect("bands > 1 implies a pool").run(bands, &job);
 }
 
 // ---------------------------------------------------------------------------
@@ -666,13 +743,13 @@ fn par_rows<T: Send>(
 fn conv2d_nchw_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
     stride: usize, padding: usize, ev: EpiVals<'_>,
-    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
     let ohw = oh * ow;
-    par_rows(pool, Banding::Contiguous, out, ohw, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, ohw, |_, row, plane| {
         let (ni, ki) = (row / k, row % k);
         let b = ev.bias.map(|b| b[ki]);
         let plane_base = row * ohw;
@@ -708,12 +785,12 @@ fn conv2d_nchw_f32(
 fn conv2d_nchw_i8(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, out: &mut [i32], os: &[usize],
-    pool: Option<&WorkerPool>,
+    rc: RowCfg<'_>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(pool, Banding::Contiguous, out, oh * ow, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, oh * ow, |_, row, plane| {
         let (ni, ki) = (row / k, row % k);
         for oy in 0..oh {
             for ox in 0..ow {
@@ -732,12 +809,12 @@ fn conv2d_nchw_i8(
 fn conv2d_nhwc_i8(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, out: &mut [i32], os: &[usize],
-    pool: Option<&WorkerPool>,
+    rc: RowCfg<'_>,
 ) {
     let (h, wd, c) = (xs[1], xs[2], xs[3]);
     let (r, s, k) = (ws[0], ws[1], ws[3]);
     let (oh, ow) = (os[1], os[2]);
-    par_rows(pool, Banding::Interleaved, out, ow * k, |row, slab| {
+    par_rows(rc, Banding::Interleaved, out, ow * k, |_, row, slab| {
         let (ni, oy) = (row / oh, row % oh);
         for ox in 0..ow {
             for ki in 0..k {
@@ -755,12 +832,12 @@ fn conv2d_nhwc_i8(
 fn conv2d_nchwc_i8(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, cb: usize, out: &mut [i32], os: &[usize],
-    pool: Option<&WorkerPool>,
+    rc: RowCfg<'_>,
 ) {
     let (co, h, wd) = (xs[1], xs[2], xs[3]);
     let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
     let (oh, ow) = (os[2], os[3]);
-    par_rows(pool, Banding::Contiguous, out, oh * ow * kb, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, oh * ow * kb, |_, row, plane| {
         let (ni, ok) = (row / ko, row % ko);
         for oy in 0..oh {
             for ox in 0..ow {
@@ -879,13 +956,13 @@ fn i8_conv_acc_nhwc(
 fn qconv2d_nchw(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
-    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>,
 ) {
     let (c, h, wd) = (xs[1], xs[2], xs[3]);
     let (k, r, s) = (ws[0], ws[2], ws[3]);
     let (oh, ow) = (os[2], os[3]);
     let ohw = oh * ow;
-    par_rows(pool, Banding::Contiguous, out, ohw, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, ohw, |_, row, plane| {
         let (ni, ki) = (row / k, row % k);
         let b = ev.bias.map(|b| b[ki]);
         let plane_base = row * ohw;
@@ -910,13 +987,13 @@ fn qconv2d_nchw(
 fn qconv2d_nhwc(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
-    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>,
 ) {
     let (h, wd, c) = (xs[1], xs[2], xs[3]);
     let (r, s, k) = (ws[0], ws[1], ws[3]);
     let (oh, ow) = (os[1], os[2]);
     let row_len = ow * k;
-    par_rows(pool, Banding::Interleaved, out, row_len, |row, slab| {
+    par_rows(rc, Banding::Interleaved, out, row_len, |_, row, slab| {
         let (ni, oy) = (row / oh, row % oh);
         let row_base = row * row_len;
         for ox in 0..ow {
@@ -934,25 +1011,40 @@ fn qconv2d_nhwc(
 }
 
 /// Fused quantized packed conv: channel-blocked i32 accumulation over the
-/// `cb` input lanes into a **stack-resident** `kb`-lane accumulator (the
-/// compiler refuses to fuse blocks wider than [`MAX_FUSED_QCONV_CB`], so
-/// the executor path stays allocation-free), then dequantize → epilogue
-/// per lane.  The epilogue bias is the logical-channel vector: lane `ki`
-/// of block `ok` is channel `ok·kb + ki`.
+/// `cb` input lanes into a `kb`-lane accumulator, then dequantize →
+/// epilogue per lane.  The accumulator is **stack-resident** while the
+/// block fits [`MAX_FUSED_QCONV_CB`] (and the tuner's stack-lanes knob);
+/// wider blocks use the per-band spill windows the compiler planned into
+/// the step's scratch slot — still zero heap allocations at serving time.
+/// The epilogue bias is the logical-channel vector: lane `ki` of block
+/// `ok` is channel `ok·kb + ki`.
 #[allow(clippy::too_many_arguments)]
 fn qconv2d_nchwc(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
     stride: usize, padding: usize, cb: usize, dqscale: f32, ev: EpiVals<'_>,
-    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+    spill: Option<(SendPtr<i32>, usize)>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>,
 ) {
     let (co, h, wd) = (xs[1], xs[2], xs[3]);
     let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
     let (oh, ow) = (os[2], os[3]);
     let row_len = oh * ow * kb;
-    par_rows(pool, Banding::Contiguous, out, row_len, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, row_len, |band, row, plane| {
         let (ni, ok) = (row / ko, row % ko);
         let plane_base = row * row_len;
-        let mut acc = [0i32; MAX_FUSED_QCONV_CB];
+        let mut stack = [0i32; MAX_FUSED_QCONV_CB];
+        // SAFETY (spill arm): band ids never reach the plan's window
+        // count (`spill_windows` checked pool width ≤ bands), windows are
+        // disjoint per band and disjoint from every other byte range this
+        // step touches (they live past the quantized input inside the
+        // step's own scratch slot), and one band's rows run sequentially,
+        // so the window is never shared.
+        let acc: &mut [i32] = match spill {
+            Some((sbase, stride_i32)) => unsafe {
+                std::slice::from_raw_parts_mut(sbase.0.add(band * stride_i32), kb)
+            },
+            None => &mut stack[..kb],
+        };
         for oy in 0..oh {
             for ox in 0..ow {
                 acc[..kb].fill(0);
@@ -1000,13 +1092,13 @@ fn qconv2d_nchwc(
 fn conv2d_nhwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
     stride: usize, padding: usize, ev: EpiVals<'_>, out: &mut [f32], os: &[usize],
-    pool: Option<&WorkerPool>,
+    rc: RowCfg<'_>,
 ) {
     let (h, wd, c) = (xs[1], xs[2], xs[3]);
     let (r, s, k) = (ws[0], ws[1], ws[3]);
     let (oh, ow) = (os[1], os[2]);
     let row_len = ow * k;
-    par_rows(pool, Banding::Interleaved, out, row_len, |row, slab| {
+    par_rows(rc, Banding::Interleaved, out, row_len, |_, row, slab| {
         let (ni, oy) = (row / oh, row % oh);
         let row_base = row * row_len;
         for ox in 0..ow {
@@ -1043,13 +1135,13 @@ fn conv2d_nhwc_f32(
 fn conv2d_nchwc_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize],
     stride: usize, padding: usize, cb: usize, ev: EpiVals<'_>,
-    out: &mut [f32], os: &[usize], pool: Option<&WorkerPool>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>,
 ) {
     let (co, h, wd) = (xs[1], xs[2], xs[3]);
     let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
     let (oh, ow) = (os[2], os[3]);
     let row_len = oh * ow * kb;
-    par_rows(pool, Banding::Contiguous, out, row_len, |row, plane| {
+    par_rows(rc, Banding::Contiguous, out, row_len, |_, row, plane| {
         let (ni, ok) = (row / ko, row % ko);
         let plane_base = row * row_len;
         for oy in 0..oh {
@@ -1100,11 +1192,11 @@ fn conv2d_nchwc_f32(
 
 fn dense_f32(
     x: &[f32], xs: &[usize], w: &[f32], ws: &[usize], ev: EpiVals<'_>,
-    out: &mut [f32], pool: Option<&WorkerPool>,
+    out: &mut [f32], rc: RowCfg<'_>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
+    par_rows(rc, Banding::Contiguous, out, n, |_, i, row| {
         row.fill(0.0);
         for kk in 0..k {
             let xik = x[i * k + kk];
@@ -1122,11 +1214,11 @@ fn dense_f32(
 
 fn dense_i8(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize], out: &mut [i32],
-    pool: Option<&WorkerPool>,
+    rc: RowCfg<'_>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
+    par_rows(rc, Banding::Contiguous, out, n, |_, i, row| {
         row.fill(0);
         for kk in 0..k {
             let xik = x[i * k + kk] as i32;
@@ -1140,11 +1232,11 @@ fn dense_i8(
 #[allow(clippy::too_many_arguments)]
 fn qdense(
     x: &[i8], xs: &[usize], w: &[i8], ws: &[usize],
-    dqscale: f32, ev: EpiVals<'_>, out: &mut [f32], pool: Option<&WorkerPool>,
+    dqscale: f32, ev: EpiVals<'_>, out: &mut [f32], rc: RowCfg<'_>,
 ) {
     let k = xs[1];
     let n = ws[1];
-    par_rows(pool, Banding::Contiguous, out, n, |i, row| {
+    par_rows(rc, Banding::Contiguous, out, n, |_, i, row| {
         for (j, slot) in row.iter_mut().enumerate() {
             let mut acc = 0i32;
             for kk in 0..k {

@@ -32,6 +32,7 @@ use super::{
     ArenaExec, EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision,
     VmExecutor,
 };
+use crate::graph::compile::ScheduleOverrides;
 use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
 use crate::graph::{build_resnet_ir_in, calibrate_ir, rebatch_graph, Graph, Layout};
 use crate::manifest::Manifest;
@@ -167,6 +168,9 @@ pub struct NativeArenaFactory {
     layout: LayoutTag,
     threads: usize,
     fuse: bool,
+    /// Tuned schedule overrides (`Schedule::Tuned` path) applied to every
+    /// bucket engine; `None` = the default hard-coded schedule.
+    overrides: Option<ScheduleOverrides>,
     /// Batch-1 template (quantize-realized for int8); buckets re-batch it.
     template: Graph,
 }
@@ -206,6 +210,7 @@ impl NativeArenaFactory {
             layout: spec.layout,
             threads: threads.max(1),
             fuse: true,
+            overrides: None,
             template,
         })
     }
@@ -213,6 +218,16 @@ impl NativeArenaFactory {
     /// Disable epilogue fusion (the ablation configuration).
     pub fn unfused(mut self) -> Self {
         self.fuse = false;
+        self
+    }
+
+    /// Serve every bucket under tuned schedule overrides — the
+    /// [`crate::executor::Schedule::Tuned`] path.  Callers typically
+    /// derive both arguments from a persisted records file:
+    /// `factory.with_schedule(records.overrides(threads), records.fuse)`.
+    pub fn with_schedule(mut self, overrides: ScheduleOverrides, fuse: bool) -> Self {
+        self.overrides = Some(overrides);
+        self.fuse = fuse;
         self
     }
 
@@ -244,14 +259,21 @@ impl EngineFactory for NativeArenaFactory {
 
     fn describe(&self) -> String {
         format!(
-            "native arena engines ({}, {}, image {}, {} thread(s))",
-            self.layout, self.precision, self.image, self.threads
+            "native arena engines ({}, {}, image {}, {} thread(s){})",
+            self.layout,
+            self.precision,
+            self.image,
+            self.threads,
+            if self.overrides.is_some() { ", tuned schedule" } else { "" }
         )
     }
 
     fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
         let g = self.graph(batch)?;
-        Ok(Box::new(ArenaExec::with_options(&g, self.fuse, self.threads)?))
+        Ok(Box::new(match &self.overrides {
+            Some(ovr) => ArenaExec::with_schedule(&g, self.fuse, self.threads, ovr)?,
+            None => ArenaExec::with_options(&g, self.fuse, self.threads)?,
+        }))
     }
 }
 

@@ -16,6 +16,7 @@
 //! acknowledged the epoch, so the job reference never outlives the call.
 //! That containment is what makes the lifetime transmute sound.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -26,9 +27,11 @@ type Job = &'static (dyn Fn(usize) + Sync);
 
 /// How a kernel splits its output rows across bands.
 ///
-/// Either mode assigns every row to exactly one band, so results are
-/// identical; only the load balance differs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Every mode assigns every row to exactly one band, so results are
+/// identical; only the load balance differs.  The arena tuner
+/// (`crate::tune`) treats the mode — and `Dynamic`'s chunk size — as a
+/// schedule knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Banding {
     /// Band `b` takes the contiguous range `[b·⌈rows/bands⌉, …)` — best
     /// cache behaviour when rows cost the same (NCHW/NCHW{c} convs: every
@@ -40,6 +43,68 @@ pub enum Banding {
     /// are shallower than interior ones), so contiguous banding would hand
     /// whole cheap regions to one band and deep regions to another.
     Interleaved,
+    /// Dynamic dequeue (work stealing, distilled): every band repeatedly
+    /// claims the next `chunk` rows from a shared atomic cursor until the
+    /// rows run out.  Static banding cannot balance *pathological* row
+    /// distributions — costs that correlate with neither position nor
+    /// residue class — because the assignment is fixed before any row
+    /// runs; here a band that lands on cheap rows simply comes back for
+    /// more.  Smaller chunks balance better, larger chunks keep more
+    /// locality per grab.  Allocation-free: the cursor lives on the
+    /// dispatching caller's stack.
+    Dynamic { chunk: usize },
+}
+
+impl Banding {
+    /// Visit every row assigned to `band` (of `bands` total over `rows`
+    /// rows), in that band's visiting order.  `cursor` is the dispatch's
+    /// shared row cursor: one `AtomicUsize` starting at 0 shared by all
+    /// bands of one dispatch (only [`Banding::Dynamic`] reads it).
+    ///
+    /// Across the `bands` bands of one dispatch, every row in `0..rows`
+    /// is visited exactly once, in every mode — the property the arena
+    /// kernels' disjoint-write safety rests on (and the unit tests below
+    /// pin).
+    pub fn for_band_rows(
+        self,
+        band: usize,
+        bands: usize,
+        rows: usize,
+        cursor: &AtomicUsize,
+        mut f: impl FnMut(usize),
+    ) {
+        debug_assert!(band < bands);
+        match self {
+            Banding::Contiguous => {
+                let per = (rows + bands - 1) / bands;
+                for r in (band * per)..((band + 1) * per).min(rows) {
+                    f(r);
+                }
+            }
+            Banding::Interleaved => {
+                let mut r = band;
+                while r < rows {
+                    f(r);
+                    r += bands;
+                }
+            }
+            Banding::Dynamic { chunk } => {
+                let chunk = chunk.max(1);
+                loop {
+                    // Relaxed suffices: the cursor only partitions row
+                    // indices; completion ordering comes from the pool's
+                    // dispatch barrier.
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= rows {
+                        break;
+                    }
+                    for r in start..(start + chunk).min(rows) {
+                        f(r);
+                    }
+                }
+            }
+        }
+    }
 }
 
 struct Slot {
@@ -269,6 +334,56 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1, "no workers: only band 0 runs");
+    }
+
+    /// Every banding mode must assign each row to exactly one band —
+    /// contiguous/interleaved by arithmetic, dynamic via the shared
+    /// cursor — including ragged row counts that don't divide evenly.
+    #[test]
+    fn every_banding_mode_covers_each_row_exactly_once() {
+        for rows in [1usize, 2, 5, 7, 16, 33] {
+            for bands in [1usize, 2, 3, 4] {
+                for banding in [
+                    Banding::Contiguous,
+                    Banding::Interleaved,
+                    Banding::Dynamic { chunk: 1 },
+                    Banding::Dynamic { chunk: 2 },
+                    Banding::Dynamic { chunk: 5 },
+                    // chunk 0 must behave as chunk 1, not spin forever
+                    Banding::Dynamic { chunk: 0 },
+                ] {
+                    let cursor = AtomicUsize::new(0);
+                    let mut hits = vec![0usize; rows];
+                    for band in 0..bands {
+                        banding.for_band_rows(band, bands, rows, &cursor, |r| {
+                            hits[r] += 1;
+                        });
+                    }
+                    assert!(
+                        hits.iter().all(|&h| h == 1),
+                        "{banding:?} rows={rows} bands={bands}: hits {hits:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Dynamic dequeue through real pool workers: concurrent bands pull
+    /// from one cursor and still cover every row exactly once.
+    #[test]
+    fn dynamic_banding_covers_rows_across_pool_workers() {
+        let pool = WorkerPool::new(4);
+        let rows = 103usize;
+        let hits: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(0)).collect();
+        let cursor = AtomicUsize::new(0);
+        pool.run(4, &|band| {
+            Banding::Dynamic { chunk: 3 }.for_band_rows(band, 4, rows, &cursor, |r| {
+                hits[r].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for (r, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "row {r} visited wrong count");
+        }
     }
 
     #[test]

@@ -53,6 +53,10 @@ pub enum Schedule {
     /// The native arena engine plans its own schedule (fusion + static
     /// arena); the axis is recorded for display but selects nothing.
     Native,
+    /// The native arena engine under **autotuned** schedule overrides
+    /// (`crate::tune`): banding / band-cap / lane-strategy knobs loaded
+    /// from a persisted records file (`--tuned records.json`).
+    Tuned,
 }
 
 impl Schedule {
@@ -63,6 +67,7 @@ impl Schedule {
             Schedule::Simd => "simd",
             Schedule::Interleaved => "interleaved",
             Schedule::Native => "native",
+            Schedule::Tuned => "tuned",
         }
     }
 }
@@ -150,6 +155,7 @@ display_fromstr!(
     "simd" => Schedule::Simd,
     "interleaved" => Schedule::Interleaved,
     "native" => Schedule::Native,
+    "tuned" => Schedule::Tuned,
 );
 display_fromstr!(Precision, "fp32" => Precision::Fp32, "int8" => Precision::Int8);
 display_fromstr!(
@@ -255,6 +261,7 @@ mod tests {
                 Schedule::Simd,
                 Schedule::Interleaved,
                 Schedule::Native,
+                Schedule::Tuned,
             ] {
                 for precision in [Precision::Fp32, Precision::Int8] {
                     for engine in [EngineKind::Graph, EngineKind::Vm, EngineKind::Arena] {

@@ -41,11 +41,25 @@
 //! graph output.
 //!
 //! Integer elementwise tails do not fuse (fused chains always end in f32:
-//! a dequantized quantized chain or an f32 anchor).  One width limit: a
-//! *quantized* NCHW{c} chain fuses only while its channel block fits the
-//! executor's stack-resident lane accumulator
-//! ([`MAX_FUSED_QCONV_CB`]); wider blocks keep their q/dq chain as 1:1
-//! steps, which stay bit-identical, just slower.
+//! a dequantized quantized chain or an f32 anchor).  A *quantized*
+//! NCHW{c} chain whose channel block fits the executor's stack-resident
+//! lane accumulator (the [`ScheduleOverrides::max_stack_lanes`] knob,
+//! capped at [`MAX_FUSED_QCONV_CB`]) accumulates on the stack; wider
+//! blocks still fuse, spilling the accumulator to per-band windows planned
+//! into the step's scratch slot ([`Step::spill`]) — so serving stays
+//! allocation-free at every block width.
+//!
+//! # Schedule overrides
+//!
+//! Every step carries a [`StepSched`] — banding mode and band cap for the
+//! executor's row fan-out — resolved from a [`ScheduleOverrides`] table
+//! keyed by the anchor's [`ClassKey`] (op family × layout).  The default
+//! overrides reproduce the historical hard-coded schedule; the autotuner
+//! (`crate::tune`) searches this space and feeds the winner back in.
+//! Overrides never change *what* a step computes, only how its
+//! independent output rows are distributed, so every candidate schedule
+//! is bit-for-bit equal to the oracle by construction (and the tuner's
+//! measurer re-checks anyway).
 //!
 //! The semantics contract: executing the stream is **bit-for-bit** equal to
 //! [`super::interp::evaluate`] — fused epilogues apply exactly the same
@@ -61,17 +75,145 @@ use anyhow::{anyhow, Result};
 
 use super::ir::{ConstValue, Graph, IrDType, Layout, NodeId, Op, TensorTy};
 use super::passes::{DeadCodeElim, Pass};
-use crate::memplan::{StaticPlan, ValueLife};
+use crate::executor::Banding;
+use crate::memplan::{round_up, StaticPlan, ValueLife};
 
 /// Arena placement alignment: cache-line sized, so typed reinterpretation
 /// is always element-aligned and parallel writers don't share lines.
 pub const ARENA_ALIGN: usize = 64;
 
-/// Widest channel block a *fused* quantized NCHW{c} conv supports: the
-/// executor keeps the per-pixel i32 lane accumulator on the stack (serving
-/// allocates nothing), so the block width is bounded here at compile time.
-/// Chains with a wider block simply stay unfused 1:1 steps.
+/// Widest channel block the fused quantized NCHW{c} kernel accumulates in
+/// its **stack** lane array.  Wider blocks still fuse: the compiler plans
+/// per-band i32 spill windows into the step's scratch slot
+/// ([`SpillSpec`]), so serving stays allocation-free.  The effective
+/// stack bound is `min(self, ScheduleOverrides::max_stack_lanes)` — the
+/// tuner can lower it (forcing the spill strategy), never raise it past
+/// the executor's fixed stack array.
 pub const MAX_FUSED_QCONV_CB: usize = 64;
+
+/// Anchor-step family a schedule override is keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AnchorOp {
+    Conv2d,
+    QConv2d,
+    Dense,
+    QDense,
+}
+
+impl AnchorOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AnchorOp::Conv2d => "conv2d",
+            AnchorOp::QConv2d => "qconv2d",
+            AnchorOp::Dense => "dense",
+            AnchorOp::QDense => "qdense",
+        }
+    }
+}
+
+impl std::str::FromStr for AnchorOp {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv2d" => AnchorOp::Conv2d,
+            "qconv2d" => AnchorOp::QConv2d,
+            "dense" => AnchorOp::Dense,
+            "qdense" => AnchorOp::QDense,
+            other => return Err(anyhow!("unknown anchor op {other:?}")),
+        })
+    }
+}
+
+/// The tuner's task identity at the compile level: which anchor family in
+/// which layout a [`StepSched`] override applies to.  Dense anchors carry
+/// no layout.  (The records file additionally keys on shape, precision,
+/// and thread count — see `crate::tune::records` — but the compiler only
+/// needs the class to resolve a step's schedule.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassKey {
+    pub op: AnchorOp,
+    pub layout: Option<Layout>,
+}
+
+/// Per-step schedule knobs the executor reads instead of constants: how
+/// the kernel's independent output rows fan out over the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StepSched {
+    /// Row-banding mode; `None` keeps the kernel's built-in default
+    /// (contiguous for plane rows, interleaved for NHWC spatial lines).
+    pub banding: Option<Banding>,
+    /// Cap on the bands one kernel dispatch uses (the tuner's
+    /// thread-count knob); `0` means the full pool width.
+    pub max_bands: usize,
+}
+
+impl Default for StepSched {
+    fn default() -> Self {
+        StepSched { banding: None, max_bands: 0 }
+    }
+}
+
+/// Compile-time schedule table: the knobs `graph::compile` resolves into
+/// each emitted [`Step`].  Built by hand, from a [`crate::tune`]
+/// `SchedulePlan`, or from a persisted records file.
+#[derive(Debug, Clone)]
+pub struct ScheduleOverrides {
+    /// Widest fused packed-q-conv block accumulated on the stack; wider
+    /// blocks get arena spill windows.  Clamped to [`MAX_FUSED_QCONV_CB`].
+    pub max_stack_lanes: usize,
+    /// Worker-pool width the spill windows are sized for.  `ArenaExec`
+    /// always overwrites this with its own thread count before compiling.
+    pub threads: usize,
+    /// Schedule for anchor classes without an explicit entry.
+    pub default_sched: StepSched,
+    pub per_class: HashMap<ClassKey, StepSched>,
+}
+
+impl Default for ScheduleOverrides {
+    fn default() -> Self {
+        ScheduleOverrides {
+            max_stack_lanes: MAX_FUSED_QCONV_CB,
+            threads: 1,
+            default_sched: StepSched::default(),
+            per_class: HashMap::new(),
+        }
+    }
+}
+
+impl ScheduleOverrides {
+    /// The schedule an anchor step of class `key` runs under (non-anchor
+    /// steps pass `None` and get the default, which is inert for them).
+    pub fn sched_for(&self, key: Option<ClassKey>) -> StepSched {
+        key.and_then(|k| self.per_class.get(&k).copied())
+            .unwrap_or(self.default_sched)
+    }
+
+    /// Whether this table changes anything an executor would do relative
+    /// to the hard-coded defaults (thread count excluded — it only sizes
+    /// spill windows).
+    pub fn is_default_schedule(&self) -> bool {
+        self.max_stack_lanes >= MAX_FUSED_QCONV_CB
+            && self.default_sched == StepSched::default()
+            && self.per_class.values().all(|s| *s == StepSched::default())
+    }
+}
+
+/// Per-band i32 lane-accumulator windows planned into a fused packed
+/// q-conv step's scratch slot, for blocks wider than the stack bound.
+/// Window `b` (for band `b < bands`) is the `band_bytes`-sized range at
+/// `scratch + offset + b·band_bytes`; windows are `ARENA_ALIGN`-aligned
+/// and disjoint from the quantized-input bytes at the slot's start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillSpec {
+    /// Byte offset of window 0 inside the scratch slot.
+    pub offset: usize,
+    /// Bytes per band window (`cb · 4` rounded up to a cache line, so
+    /// bands never share a line).
+    pub band_bytes: usize,
+    /// Number of windows — the pool width the plan was sized for.
+    pub bands: usize,
+}
 
 /// Where a step operand or result lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -178,6 +320,22 @@ impl StepOp {
             _ => None,
         }
     }
+
+    /// The schedule-override class of an anchor step (`None` for steps
+    /// with no tunable row fan-out).
+    pub fn class_key(&self) -> Option<ClassKey> {
+        match self {
+            StepOp::Conv2d { layout, .. } => {
+                Some(ClassKey { op: AnchorOp::Conv2d, layout: Some(*layout) })
+            }
+            StepOp::QConv2d { layout, .. } => {
+                Some(ClassKey { op: AnchorOp::QConv2d, layout: Some(*layout) })
+            }
+            StepOp::Dense { .. } => Some(ClassKey { op: AnchorOp::Dense, layout: None }),
+            StepOp::QDense { .. } => Some(ClassKey { op: AnchorOp::QDense, layout: None }),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -188,8 +346,14 @@ pub struct Step {
     /// Always an arena slot.
     pub dst: Slot,
     pub dst_ty: TensorTy,
-    /// Per-step scratch arena slot (fused steps' quantized input).
+    /// Per-step scratch arena slot (fused steps' quantized input, plus
+    /// spill windows when [`Step::spill`] is set).
     pub scratch: Option<Slot>,
+    /// Resolved schedule knobs for this step's row fan-out.
+    pub sched: StepSched,
+    /// Lane-accumulator spill windows for a fused packed q-conv whose
+    /// block exceeds the stack bound.
+    pub spill: Option<SpillSpec>,
     /// Defining IR node's name (diagnostics).
     pub name: String,
 }
@@ -224,12 +388,26 @@ struct ProtoStep {
     src_nodes: Vec<NodeId>,
     def_node: NodeId,
     scratch_bytes: usize,
+    spill: Option<SpillSpec>,
     name: String,
 }
 
-/// Lower `g` into an arena-planned step stream.  `fuse = false` keeps
-/// every node a separate step (the "unfused arena" ablation).
+/// Lower `g` into an arena-planned step stream under the default schedule.
+/// `fuse = false` keeps every node a separate step (the "unfused arena"
+/// ablation).
 pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
+    compile_graph_with(g, fuse, &ScheduleOverrides::default())
+}
+
+/// [`compile_graph`] with explicit schedule overrides: per-class banding
+/// and band-cap knobs resolved into every step, and the packed-q-conv
+/// lane-accumulator strategy (stack vs per-band arena spill windows sized
+/// for `ovr.threads` bands).
+pub fn compile_graph_with(
+    g: &Graph,
+    fuse: bool,
+    ovr: &ScheduleOverrides,
+) -> Result<CompiledGraph> {
     g.validate()?;
     if !g.live_set()[g.input] {
         return Err(anyhow!("compile: graph output does not depend on the input"));
@@ -263,6 +441,7 @@ pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
                 src_nodes: vec![],
                 def_node: node.id,
                 scratch_bytes: 0,
+                spill: None,
                 name: node.name.clone(),
             });
             continue;
@@ -270,7 +449,9 @@ pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
 
         // Try a fused chain rooted here (quantized or fp32).
         if fuse {
-            if let Some(chain) = try_fuse_chain(&g, &users, &absorbed, node.id, &const_index)? {
+            if let Some(chain) =
+                try_fuse_chain(&g, &users, &absorbed, node.id, &const_index, ovr)?
+            {
                 for &m in &chain.members {
                     absorbed[m] = true;
                 }
@@ -312,6 +493,7 @@ pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
             src_nodes: node.inputs.clone(),
             def_node: node.id,
             scratch_bytes: 0,
+            spill: None,
             name: node.name.clone(),
         });
     }
@@ -389,12 +571,15 @@ pub fn compile_graph(g: &Graph, fuse: bool) -> Result<CompiledGraph> {
         } else {
             None
         };
+        let sched = ovr.sched_for(p.op.class_key());
         steps.push(Step {
             op: p.op,
             srcs,
             dst: arena_slot(p.def_node)?,
             dst_ty: g.nodes[p.def_node].ty.clone(),
             scratch,
+            sched,
+            spill: p.spill,
             name: p.name,
         });
     }
@@ -449,6 +634,7 @@ fn try_fuse_chain(
     absorbed: &[bool],
     start: NodeId,
     const_index: &HashMap<NodeId, usize>,
+    ovr: &ScheduleOverrides,
 ) -> Result<Option<FusedChain>> {
     // A node may be absorbed into a chain only if its value has exactly
     // one consumer (the next link), is not the graph output, and was not
@@ -561,21 +747,34 @@ fn try_fuse_chain(
         }
     }
 
-    let (op, data_id, scratch_bytes) = match qscale {
+    let (op, data_id, scratch_bytes, spill) = match qscale {
         Some(qs) => {
             let op = if is_conv {
                 let layout = conv_layout.expect("conv anchor carries a layout");
-                if matches!(layout, Layout::Nchwc(cb) if cb > MAX_FUSED_QCONV_CB) {
-                    // The fused packed kernel's lane accumulator is
-                    // stack-bounded; leave wider blocks as 1:1 steps.
-                    return Ok(None);
-                }
                 StepOp::QConv2d { qscale: qs, dqscale, stride, padding, layout, epi }
             } else {
                 StepOp::QDense { qscale: qs, dqscale, epi }
             };
-            // Scratch holds the quantized (i8) input for exactly this step.
-            (op, g.nodes[start].inputs[0], g.nodes[start].ty.byte_len())
+            // Scratch holds the quantized (i8) input for exactly this
+            // step — plus, for a packed conv whose block exceeds the
+            // stack bound, one aligned i32 lane-accumulator window per
+            // worker band (the heap-backed fallback lives in the arena,
+            // so serving still allocates nothing).
+            let qbytes = g.nodes[start].ty.byte_len();
+            let stack_bound = ovr.max_stack_lanes.min(MAX_FUSED_QCONV_CB).max(1);
+            let spill = match op {
+                StepOp::QConv2d { layout: Layout::Nchwc(cb), .. } if cb > stack_bound => {
+                    let offset = round_up(qbytes, ARENA_ALIGN);
+                    let band_bytes = round_up(cb * 4, ARENA_ALIGN);
+                    Some(SpillSpec { offset, band_bytes, bands: ovr.threads.max(1) })
+                }
+                _ => None,
+            };
+            let scratch_bytes = match spill {
+                Some(sp) => sp.offset + sp.bands * sp.band_bytes,
+                None => qbytes,
+            };
+            (op, g.nodes[start].inputs[0], scratch_bytes, spill)
         }
         None => {
             // An fp32 anchor with an empty tail is already its own fused
@@ -589,7 +788,7 @@ fn try_fuse_chain(
             } else {
                 StepOp::Dense { epi }
             };
-            (op, anchor.inputs[0], 0)
+            (op, anchor.inputs[0], 0, None)
         }
     };
 
@@ -603,6 +802,7 @@ fn try_fuse_chain(
             src_nodes,
             def_node: tail,
             scratch_bytes,
+            spill,
             name: format!("{}+fused", anchor.name),
         },
         members,

@@ -7,7 +7,9 @@ use anyhow::{anyhow, Result};
 
 pub type NodeId = usize;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+// `Ord` gives schedule-override keys (`graph::compile::ClassKey`) a
+// deterministic sort for the tuner's seeded samplers and records files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Layout {
     Nchw,
     Nhwc,

@@ -25,6 +25,9 @@ pub use builder::{
     build_conv_net, build_resnet_ir, build_resnet_ir_in, calibrate_ir, rebatch_graph, NetSpec,
     StageSpec,
 };
-pub use compile::{compile_graph, CompiledGraph};
+pub use compile::{
+    compile_graph, compile_graph_with, AnchorOp, ClassKey, CompiledGraph, ScheduleOverrides,
+    StepSched,
+};
 pub use interp::evaluate;
 pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

@@ -27,6 +27,11 @@
 //! - [`coordinator`] — batching inference server (artifact-backed or
 //!   native arena engines, via any `EngineFactory`)
 //! - [`perfmodel`] — analytic roofline / ideal-speedup model (Table 2)
+//! - [`tune`]     — AutoTVM-style schedule autotuner for the arena tier:
+//!   typed knob space (banding / band caps / fuse / lane strategy),
+//!   oracle-gated in-process measurer, seeded random + hill-climb search,
+//!   persisted `TuneRecords` (`tvmq tune`, `bench-arena --tuned`,
+//!   `run/serve --tuned records.json`)
 //! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
 //! - [`bench`]    — harnesses that regenerate every paper table & figure
 
@@ -48,6 +53,7 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
+pub mod tune;
 pub mod util;
 
 pub use manifest::Manifest;

@@ -35,11 +35,20 @@ COMMANDS:
   run               One inference: --layout NCHW --schedule spatial_pack
                     --precision int8 --executor graph|vm|arena --batch 1 --seed 42
                     (--executor arena runs the in-process IR engine: no
-                    artifacts needed; --image 32 --threads 1 also apply)
+                    artifacts needed; --image 32 --threads 1 also apply;
+                    --tuned records.json loads an autotuned schedule)
+  tune              Autotune the arena engine's schedule knobs (banding,
+                    band caps, fuse-vs-split, packed lane strategy):
+                    --layout NCHW|NHWC|NCHWc --precision int8|fp32
+                    --batch 1 --image 32 --threads 1 --budget 32 --seed 1
+                    --warmup 2 --iters 10 [--json records.json] [--quick]
+                    Every accepted candidate is verified bit-for-bit
+                    against the interpreter oracle before it is timed.
   serve             Batched serving: --executor graph|vm|arena --precision int8
                     --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
                     (--executor arena serves natively compiled bucket engines —
                     no artifacts; --buckets 1,4,8,16 --image 32 --threads N;
+                    --tuned records.json serves under the autotuned schedule;
                     exits non-zero unless every request succeeds)
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
@@ -49,7 +58,9 @@ COMMANDS:
   bench-arena       Arena layout × precision matrix vs interpreter
                     [--batches 1,8 --image 32 --threads 1 --epochs 20
                     --warmup 3 | --quick] [--json PATH  machine-readable
-                    per-variant ns/iter records]
+                    per-variant ns/iter records] [--tuned [records.json]
+                    adds a tuned row per cell: from the records file, or
+                    an inline micro-tune (--tune-budget 6) when bare]
   bench-serve       Arena bucket serving vs per-request run (no artifacts)
                     [--requests 256 --clients 16 --buckets 1,4,8 --image 32
                     --threads 1 --batch-timeout-ms 2]
@@ -96,6 +107,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("inspect") => inspect(&artifacts)?,
         Some("run") => run_one(&artifacts, &args)?,
+        Some("tune") => tune_cmd(&args)?,
         Some("serve") => serve_demo(&artifacts, &args)?,
         Some("bench-table1") => {
             table1(&BenchCtx::new(&artifacts, opts)?)?.0.print();
@@ -206,8 +218,14 @@ fn run_one(artifacts: &PathBuf, args: &Args) -> Result<()> {
 /// artifact-free half of `bench-ablations`.  `--quick` shrinks epochs,
 /// batches, and image for CI smoke runs; explicit flags still win.
 /// `--json <path>` additionally writes the machine-readable per-variant
-/// perf records (ns/iter), the cross-PR perf trajectory.
+/// perf records (ns/iter), the cross-PR perf trajectory.  `--tuned
+/// [records.json]` adds a tuned row to every layout × precision cell —
+/// loaded from the records file, or found by an inline micro-tune
+/// (`--tune-budget`, deterministic per-cell seeds) when the flag is bare.
 fn print_arena_ablation(args: &Args) -> Result<()> {
+    use tvmq::bench::TunedSource;
+    use tvmq::tune::TuneRecords;
+
     let quick = args.flag("quick");
     let arena_opts = BenchOpts {
         epochs: args.usize("epochs", if quick { 5 } else { 20 })?,
@@ -215,11 +233,24 @@ fn print_arena_ablation(args: &Args) -> Result<()> {
     };
     let threads = args.usize("threads", env_threads())?;
     let image = args.usize("image", if quick { 16 } else { 32 })?;
+    let loaded: Option<TuneRecords> = match args.opt_str("tuned") {
+        Some(path) => Some(TuneRecords::load(&path)?),
+        None => None,
+    };
+    let tuned = match &loaded {
+        Some(r) => Some(TunedSource::Records(r)),
+        None if args.flag("tuned") => Some(TunedSource::Inline {
+            budget: args.usize("tune-budget", 6)?,
+            seed: args.u64("seed", 1)?,
+        }),
+        None => None,
+    };
     let (table, rows) = arena_ablation(
         &arena_opts,
         &args.usize_list("batches", if quick { &[1, 2] } else { &[1, 8] })?,
         image,
         threads,
+        tuned.as_ref(),
     )?;
     table.print();
     if let Some(path) = args.opt_str("json") {
@@ -248,6 +279,8 @@ fn write_arena_json(
                 ("precision", Json::str(r.precision.clone())),
                 ("config", Json::str(r.config.clone())),
                 ("fused", Json::Bool(r.fused)),
+                ("schedule", Json::str(r.schedule.clone())),
+                ("knobs", Json::str(r.knobs.clone())),
                 ("threads", Json::num(r.threads as f64)),
                 ("mean_ms", Json::num(r.mean_ms)),
                 ("ns_per_iter", Json::num(r.ns_per_iter)),
@@ -268,30 +301,47 @@ fn write_arena_json(
         .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
 }
 
-/// `run --executor arena`: the artifact-free tier — build the ResNet-style
-/// IR in the spec's layout (NCHW, NHWC, or packed NCHWc), optionally
-/// quantize-realize it, compile to the arena engine, run.
-fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
+/// Build the seeded ResNet-style IR the arena commands share, in the
+/// spec's layout, quantize-realized for int8.
+fn build_arena_model(spec: EngineSpec, batch: usize, image: usize) -> Result<tvmq::graph::Graph> {
     use tvmq::executor::factory::{ir_layout, ARENA_MODEL_SEED};
-    use tvmq::executor::{ArenaExec, Executor};
     use tvmq::graph::passes::QuantizeRealize;
     use tvmq::graph::{build_resnet_ir_in, calibrate_ir};
 
-    let batch = args.usize("batch", 1)?;
-    let image = args.usize("image", 32)?;
-    let threads = args.usize("threads", env_threads())?;
-    let seed = args.u64("seed", 42)?;
-
     let g = build_resnet_ir_in(batch, image, ARENA_MODEL_SEED, ir_layout(spec.layout))?;
-    let g = match spec.precision {
+    Ok(match spec.precision {
         Precision::Fp32 => g,
         Precision::Int8 => {
             let calib = calibrate_ir(&g, 1);
             let scales = calibrate_graph(&g, &calib)?;
             QuantizeRealize { scales }.run(&g)?
         }
+    })
+}
+
+/// `run --executor arena`: the artifact-free tier — build the ResNet-style
+/// IR in the spec's layout (NCHW, NHWC, or packed NCHWc), optionally
+/// quantize-realize it, compile to the arena engine (under a tuned
+/// schedule if `--tuned records.json` is given), run.
+fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
+    use tvmq::executor::{ArenaExec, Executor};
+    use tvmq::graph::calibrate_ir;
+    use tvmq::tune::TuneRecords;
+
+    let batch = args.usize("batch", 1)?;
+    let image = args.usize("image", 32)?;
+    let threads = args.usize("threads", env_threads())?;
+    let seed = args.u64("seed", 42)?;
+
+    let g = build_arena_model(spec, batch, image)?;
+    let exec = match args.opt_str("tuned") {
+        Some(path) => {
+            let records = TuneRecords::load(&path)?;
+            println!("loaded tuned schedule from {path}: {}", records.knob_summary());
+            ArenaExec::with_schedule(&g, records.fuse, threads, &records.overrides(threads))?
+        }
+        None => ArenaExec::with_options(&g, true, threads)?,
     };
-    let exec = ArenaExec::with_options(&g, true, threads)?;
     let cg = exec.compiled();
     println!(
         "compiled {}: {} steps ({} fused chains), arena {:.1} KiB (unshared {:.1} KiB, {:.2}x reuse)",
@@ -315,6 +365,94 @@ fn run_arena(args: &Args, spec: EngineSpec) -> Result<()> {
     Ok(())
 }
 
+/// `tvmq tune` — budgeted schedule search over the arena engine's knob
+/// space on the seeded model.  Prints the trial log and the winner;
+/// `--json PATH` persists the records file the other commands load.
+/// Every accepted candidate was verified bit-for-bit against
+/// `graph::interp::evaluate` before it was timed, so a records file is
+/// oracle-exact by construction.
+fn tune_cmd(args: &Args) -> Result<()> {
+    use tvmq::graph::calibrate_ir;
+    use tvmq::metrics::Table;
+    use tvmq::tune::{tune_graph, RunMeta, TuneOptions, TuneRecords};
+
+    let quick = args.flag("quick");
+    let spec = {
+        let mut spec = EngineSpec::new(EngineKind::Arena);
+        spec.layout = args.str("layout", spec.layout.as_str()).parse()?;
+        spec.precision = args.str("precision", spec.precision.as_str()).parse()?;
+        spec
+    };
+    let batch = args.usize("batch", 1)?;
+    let image = args.usize("image", if quick { 12 } else { 32 })?;
+    let threads = args.usize("threads", env_threads())?;
+    let opts = TuneOptions {
+        budget: args.usize("budget", if quick { 8 } else { 32 })?,
+        seed: args.u64("seed", 1)?,
+        threads,
+        warmup: args.usize("warmup", if quick { 1 } else { 2 })?,
+        iters: args.usize("iters", if quick { 3 } else { 10 })?,
+        use_prior: !args.flag("no-prior"),
+    };
+
+    let g = build_arena_model(spec, batch, image)?;
+    let x = calibrate_ir(&g, 42);
+    println!(
+        "tuning {} {} (batch {batch}, image {image}, {threads} thread(s)): \
+         budget {} trials, seed {}",
+        spec.layout, spec.precision, opts.budget, opts.seed
+    );
+    let outcome = tune_graph(&g, x, &opts)?;
+
+    let mut t = Table::new(
+        "tune — measured candidates (oracle-verified; best first)",
+        &["#", "ns/iter", "vs default", "Knobs"],
+    );
+    let mut order: Vec<usize> = (0..outcome.trials.len()).collect();
+    order.sort_by(|&a, &b| {
+        outcome.trials[a].ns_per_iter.total_cmp(&outcome.trials[b].ns_per_iter)
+    });
+    for (rank, &i) in order.iter().take(8).enumerate() {
+        let tr = &outcome.trials[i];
+        t.row(vec![
+            format!("{}", rank + 1),
+            format!("{:.0}", tr.ns_per_iter),
+            format!("{:.2}%", 100.0 * outcome.default_ns / tr.ns_per_iter),
+            tr.plan.describe(),
+        ]);
+    }
+    t.print();
+    println!(
+        "best [{}]: {:.0} ns/iter vs default {:.0} ({:.2}% improvement), \
+         {} trials measured, {} rejected",
+        outcome.best.plan.describe(),
+        outcome.best.ns_per_iter,
+        outcome.default_ns,
+        outcome.improvement_pct(),
+        outcome.trials.len(),
+        outcome.rejected,
+    );
+
+    if let Some(path) = args.opt_str("json") {
+        let records = TuneRecords::from_outcome(
+            &outcome,
+            &RunMeta {
+                model: "resnet10".into(),
+                layout: spec.layout.as_str().into(),
+                precision: spec.precision.as_str().into(),
+                image,
+                batch,
+            },
+        );
+        records.save(&path)?;
+        println!(
+            "wrote {} task records to {path} (load with --tuned {path})",
+            records.records.len()
+        );
+    }
+    Ok(())
+}
+
 fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let spec = parse_spec(args)?;
     let cfg = ServeConfig {
@@ -332,7 +470,12 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         let buckets = args.usize_list("buckets", &[1, 4, 8, 16])?;
         let image = args.usize("image", 32)?;
         let threads = args.usize("threads", env_threads())?;
-        let factory = NativeArenaFactory::new(spec, &buckets, image, threads)?;
+        let mut factory = NativeArenaFactory::new(spec, &buckets, image, threads)?;
+        if let Some(path) = args.opt_str("tuned") {
+            let records = tvmq::tune::TuneRecords::load(&path)?;
+            println!("serving tuned schedule from {path}: {}", records.knob_summary());
+            factory = factory.with_schedule(records.overrides(threads), records.fuse);
+        }
         let server = InferenceServer::start_with(factory, cfg)?;
         // NHWC models take channels-last images; NCHW and packed NCHWc
         // models both take plain NCHW (the packed stem is unblocked).

@@ -108,6 +108,32 @@ pub fn int8_alu_factor(m: &MachineModel) -> f64 {
     (m.int8_lanes * m.int8_dot_width) as f64 / m.fp32_lanes as f64
 }
 
+/// Cost prior for the arena schedule autotuner (`crate::tune`): the
+/// two-term roofline with the two schedule axes the analytic model can
+/// see.  Unfused plans materialize every epilogue intermediate, roughly
+/// doubling activation traffic; band caps divide the compute term (a
+/// capped fan-out idles cores) but not the single-stream bandwidth term.
+/// This is an *ordering heuristic* for which candidates to measure first
+/// under a small budget — measurements, not the prior, pick the winner.
+pub fn tune_prior_ms(
+    m: &MachineModel,
+    flops: f64,
+    act_bytes: f64,
+    int8: bool,
+    fused: bool,
+    bands: usize,
+) -> f64 {
+    let traffic = if fused { act_bytes } else { act_bytes * 2.0 };
+    let compute_rate = if int8 {
+        m.peak_fp32_gflops * m.int8_dot_width as f64
+    } else {
+        m.peak_fp32_gflops
+    } * 1e9;
+    let compute_s = flops / compute_rate / bands.max(1) as f64;
+    let mem_s = traffic / (m.mem_bw_gbs * 1e9);
+    compute_s.max(mem_s) * 1e3
+}
+
 /// Two-term roofline: time = max(compute, traffic).
 pub fn roofline_ms(m: &MachineModel, flops: f64, bytes: f64, int8: bool) -> f64 {
     // int8 compute advantage: dot_width × (lanes ratio) over fp32.

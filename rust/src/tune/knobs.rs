@@ -1,0 +1,346 @@
+//! The typed knob space: which schedule axes exist for a given model, and
+//! the deterministic seeded samplers / neighbourhood moves the search
+//! driver walks them with.
+//!
+//! A candidate is a [`SchedulePlan`]: two global knobs (fuse-vs-split
+//! epilogues, the packed lane-accumulator stack bound) plus one
+//! [`StepSched`] per anchor **class** present in the compiled model
+//! (conv / q-conv / dense / q-dense × layout — [`ClassKey`]).  Per-class
+//! knobs are the banding mode (contiguous / interleaved / dynamic with a
+//! chunk granularity) and a band cap (the thread-count axis).  Every knob
+//! changes only how work is distributed or where an accumulator lives,
+//! never what is computed, so any sampled plan is semantically valid —
+//! the measurer's oracle check is defense in depth, not the selection
+//! mechanism.
+
+use anyhow::Result;
+
+use crate::executor::Banding;
+use crate::graph::compile::{
+    AnchorOp, ClassKey, ScheduleOverrides, StepSched, MAX_FUSED_QCONV_CB,
+};
+use crate::graph::{compile_graph, Graph, Layout};
+use crate::util::rng::Rng64;
+
+/// One candidate schedule for a whole model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulePlan {
+    /// Fuse epilogue chains (the default) or split every op 1:1.
+    pub fuse: bool,
+    /// Stack bound for the packed q-conv lane accumulator; blocks wider
+    /// than this spill to per-band arena windows.
+    pub max_stack_lanes: usize,
+    /// Per-class step schedules, sorted by key (deterministic identity).
+    pub per_class: Vec<(ClassKey, StepSched)>,
+}
+
+impl SchedulePlan {
+    /// The historical hard-coded schedule: fused, stack accumulator,
+    /// default banding everywhere.
+    pub fn default_for(classes: &[ClassKey]) -> Self {
+        SchedulePlan {
+            fuse: true,
+            max_stack_lanes: MAX_FUSED_QCONV_CB,
+            per_class: classes.iter().map(|&c| (c, StepSched::default())).collect(),
+        }
+    }
+
+    /// Lower the plan into the compiler's override table.
+    pub fn overrides(&self, threads: usize) -> ScheduleOverrides {
+        ScheduleOverrides {
+            max_stack_lanes: self.max_stack_lanes,
+            threads: threads.max(1),
+            default_sched: StepSched::default(),
+            per_class: self.per_class.iter().copied().collect(),
+        }
+    }
+
+    /// Compact human/JSON-stable description — also the plan's identity
+    /// for dedup during search (two plans with equal strings compile to
+    /// identical programs).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "fuse={} lanes={}",
+            if self.fuse { "on" } else { "off" },
+            self.max_stack_lanes
+        );
+        for (key, sched) in &self.per_class {
+            s.push_str(&format!(
+                " {}[{}]={},b{}",
+                key.op.as_str(),
+                layout_str(key.layout),
+                banding_str(sched.banding),
+                sched.max_bands
+            ));
+        }
+        s
+    }
+}
+
+/// Canonical layout token used in plan descriptions and records files
+/// (`"-"` for layout-less dense anchors).
+pub fn layout_str(layout: Option<Layout>) -> String {
+    match layout {
+        None => "-".into(),
+        Some(Layout::Nchw) => "NCHW".into(),
+        Some(Layout::Nhwc) => "NHWC".into(),
+        Some(Layout::Nchwc(cb)) => format!("NCHW{cb}c"),
+    }
+}
+
+/// Inverse of [`layout_str`].
+pub fn parse_layout_str(s: &str) -> Result<Option<Layout>> {
+    Ok(match s {
+        "-" => None,
+        "NCHW" => Some(Layout::Nchw),
+        "NHWC" => Some(Layout::Nhwc),
+        other => {
+            let inner = other
+                .strip_prefix("NCHW")
+                .and_then(|r| r.strip_suffix('c'))
+                .ok_or_else(|| anyhow::anyhow!("bad layout token {other:?}"))?;
+            Some(Layout::Nchwc(inner.parse()?))
+        }
+    })
+}
+
+/// Canonical banding token (`"default"` = the kernel's built-in choice).
+pub fn banding_str(b: Option<Banding>) -> String {
+    match b {
+        None => "default".into(),
+        Some(Banding::Contiguous) => "contiguous".into(),
+        Some(Banding::Interleaved) => "interleaved".into(),
+        Some(Banding::Dynamic { chunk }) => format!("dynamic:{chunk}"),
+    }
+}
+
+/// Inverse of [`banding_str`].
+pub fn parse_banding_str(s: &str) -> Result<Option<Banding>> {
+    Ok(match s {
+        "default" => None,
+        "contiguous" => Some(Banding::Contiguous),
+        "interleaved" => Some(Banding::Interleaved),
+        other => {
+            let chunk = other
+                .strip_prefix("dynamic:")
+                .ok_or_else(|| anyhow::anyhow!("bad banding token {other:?}"))?;
+            Some(Banding::Dynamic { chunk: chunk.parse()? })
+        }
+    })
+}
+
+/// The banding choices a class can take (chunk sizes are the band
+/// granularity axis).
+const BANDING_CHOICES: [Option<Banding>; 6] = [
+    None,
+    Some(Banding::Contiguous),
+    Some(Banding::Interleaved),
+    Some(Banding::Dynamic { chunk: 1 }),
+    Some(Banding::Dynamic { chunk: 2 }),
+    Some(Banding::Dynamic { chunk: 4 }),
+];
+
+/// Stack-lane bounds the lane-accumulator knob can take (only sampled
+/// when a packed quantized class exists; `MAX_FUSED_QCONV_CB` = all
+/// stack, smaller values force the arena-spill strategy earlier).
+const LANE_CHOICES: [usize; 4] = [MAX_FUSED_QCONV_CB, 32, 8, 2];
+
+/// The knob space of one model at one pool width: the anchor classes its
+/// fused compile emits (with a representative output shape per class, for
+/// the records file) plus rough model-level cost terms for the
+/// `perfmodel` prior.
+#[derive(Debug, Clone)]
+pub struct KnobSpace {
+    pub classes: Vec<ClassKey>,
+    /// Representative destination shape per class (parallel to
+    /// `classes`): the first matching step's output.
+    pub shapes: Vec<Vec<usize>>,
+    pub threads: usize,
+    /// Approximate anchor FLOPs of one inference (prior input).
+    pub flops: f64,
+    /// Approximate activation bytes moved per inference (prior input).
+    pub act_bytes: f64,
+    /// Whether the model runs quantized anchors.
+    pub int8: bool,
+}
+
+impl KnobSpace {
+    /// Enumerate the knob space of `g` by compiling it once under the
+    /// default schedule.
+    pub fn for_graph(g: &Graph, threads: usize) -> Result<KnobSpace> {
+        let cg = compile_graph(g, true)?;
+        let mut seen: Vec<(ClassKey, Vec<usize>)> = Vec::new();
+        for step in &cg.steps {
+            if let Some(key) = step.op.class_key() {
+                if !seen.iter().any(|(k, _)| *k == key) {
+                    seen.push((key, step.dst_ty.shape.clone()));
+                }
+            }
+        }
+        seen.sort_by_key(|(k, _)| *k);
+        let int8 = seen
+            .iter()
+            .any(|(k, _)| matches!(k.op, AnchorOp::QConv2d | AnchorOp::QDense));
+        let (flops, act_bytes) = graph_cost(g);
+        let (classes, shapes) = seen.into_iter().unzip();
+        Ok(KnobSpace { classes, shapes, threads: threads.max(1), flops, act_bytes, int8 })
+    }
+
+    /// Whether the lane-accumulator knob is live (a packed quantized
+    /// anchor exists).
+    pub fn has_packed_qconv(&self) -> bool {
+        self.classes.iter().any(|k| {
+            k.op == AnchorOp::QConv2d && matches!(k.layout, Some(Layout::Nchwc(_)))
+        })
+    }
+
+    /// Band-cap choices at this pool width (0 = full width).
+    fn band_choices(&self) -> Vec<usize> {
+        let mut v = vec![0usize, 1];
+        if self.threads > 2 {
+            v.push(self.threads / 2);
+        }
+        v.dedup();
+        v
+    }
+
+    /// Draw one candidate, uniformly per axis — a pure function of the
+    /// rng state, so a seeded search is reproducible.
+    pub fn sample(&self, rng: &mut Rng64) -> SchedulePlan {
+        let bands = self.band_choices();
+        SchedulePlan {
+            fuse: rng.range_usize(0, 9) > 0, // split-everything is rarely right: 1-in-10
+            max_stack_lanes: if self.has_packed_qconv() {
+                LANE_CHOICES[rng.range_usize(0, LANE_CHOICES.len() - 1)]
+            } else {
+                MAX_FUSED_QCONV_CB
+            },
+            per_class: self
+                .classes
+                .iter()
+                .map(|&key| {
+                    let sched = StepSched {
+                        banding: BANDING_CHOICES[rng.range_usize(0, BANDING_CHOICES.len() - 1)],
+                        max_bands: bands[rng.range_usize(0, bands.len() - 1)],
+                    };
+                    (key, sched)
+                })
+                .collect(),
+        }
+    }
+
+    /// Single-knob mutations of `plan`, in a deterministic order — the
+    /// hill-climber's neighbourhood.
+    pub fn neighbors(&self, plan: &SchedulePlan) -> Vec<SchedulePlan> {
+        let mut out = Vec::new();
+        {
+            let mut p = plan.clone();
+            p.fuse = !p.fuse;
+            out.push(p);
+        }
+        if self.has_packed_qconv() {
+            for lanes in LANE_CHOICES {
+                if lanes != plan.max_stack_lanes {
+                    let mut p = plan.clone();
+                    p.max_stack_lanes = lanes;
+                    out.push(p);
+                }
+            }
+        }
+        for (i, (_, cur)) in plan.per_class.iter().enumerate() {
+            for banding in BANDING_CHOICES {
+                if banding != cur.banding {
+                    let mut p = plan.clone();
+                    p.per_class[i].1.banding = banding;
+                    out.push(p);
+                }
+            }
+            for bands in self.band_choices() {
+                if bands != cur.max_bands {
+                    let mut p = plan.clone();
+                    p.per_class[i].1.max_bands = bands;
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Rough anchor-FLOPs + activation-traffic estimate of one inference —
+/// inputs to the `perfmodel` cost prior, not a measurement.
+fn graph_cost(g: &Graph) -> (f64, f64) {
+    use crate::graph::ir::{dims_of, Op};
+    let mut flops = 0f64;
+    let mut bytes = 0f64;
+    for node in &g.nodes {
+        match &node.op {
+            Op::Conv2d { layout, .. } => {
+                let Ok((n, k, oh, ow)) = dims_of(&node.ty.shape, *layout) else {
+                    continue;
+                };
+                let ws = &g.nodes[node.inputs[1]].ty.shape;
+                let (c, r, s) = match layout {
+                    Layout::Nchw => (ws[1], ws[2], ws[3]),
+                    Layout::Nhwc => (ws[2], ws[0], ws[1]),
+                    Layout::Nchwc(_) => (ws[1] * ws[4], ws[2], ws[3]),
+                };
+                flops += crate::perfmodel::conv_flops(n, c, k, oh, ow, r, s);
+            }
+            Op::Dense => {
+                let xs = &g.nodes[node.inputs[0]].ty.shape;
+                let ws = &g.nodes[node.inputs[1]].ty.shape;
+                if xs.len() == 2 && ws.len() == 2 {
+                    flops += 2.0 * (xs[0] * xs[1] * ws[1]) as f64;
+                }
+            }
+            Op::Constant(_) => continue,
+            _ => {}
+        }
+        // Every non-constant value is written once and read at least
+        // once downstream.
+        bytes += 2.0 * node.ty.byte_len() as f64;
+    }
+    (flops, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banding_and_layout_tokens_round_trip() {
+        for b in BANDING_CHOICES {
+            assert_eq!(parse_banding_str(&banding_str(b)).unwrap(), b);
+        }
+        for l in [None, Some(Layout::Nchw), Some(Layout::Nhwc), Some(Layout::Nchwc(8))] {
+            assert_eq!(parse_layout_str(&layout_str(l)).unwrap(), l);
+        }
+        assert!(parse_banding_str("stolen").is_err());
+        assert!(parse_layout_str("NCHWxc").is_err());
+    }
+
+    #[test]
+    fn sampler_is_seed_deterministic() {
+        let g = crate::graph::build_resnet_ir(1, 8, 7).unwrap();
+        let space = KnobSpace::for_graph(&g, 4).unwrap();
+        assert!(!space.classes.is_empty());
+        let mut a = Rng64::seed_from_u64(9);
+        let mut b = Rng64::seed_from_u64(9);
+        for _ in 0..32 {
+            assert_eq!(space.sample(&mut a), space.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn neighbors_differ_in_exactly_one_knob_axis() {
+        let g = crate::graph::build_resnet_ir(1, 8, 7).unwrap();
+        let space = KnobSpace::for_graph(&g, 4).unwrap();
+        let plan = SchedulePlan::default_for(&space.classes);
+        let ns = space.neighbors(&plan);
+        assert!(!ns.is_empty());
+        for n in &ns {
+            assert_ne!(n.describe(), plan.describe());
+        }
+    }
+}

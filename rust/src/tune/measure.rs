@@ -1,0 +1,160 @@
+//! Candidate measurement: compile a [`SchedulePlan`] through
+//! `graph::compile`, prove it bit-for-bit against the interpreter oracle,
+//! and only then time it on the real step stream.
+//!
+//! The oracle gate runs **before** any timing: a candidate whose output
+//! differs from [`crate::graph::interp::evaluate`] by a single bit is
+//! rejected with an error and can never become the incumbent, no matter
+//! how fast it ran.  (Schedule knobs cannot change results by
+//! construction — every banding mode assigns each row to exactly one band
+//! — so a rejection here means a compiler/executor bug; the tuner
+//! refusing to reward it is exactly the behaviour we want then.)
+//!
+//! Timing follows the repo's bench protocol in miniature: `warmup`
+//! untimed runs, then `iters` individually timed runs reduced by a
+//! **trimmed mean** (drop the top and bottom ~10% of samples) to shed
+//! scheduler noise without letting one lucky run win the search.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::knobs::SchedulePlan;
+use crate::executor::ArenaExec;
+use crate::graph::{evaluate, Graph};
+use crate::runtime::TensorData;
+
+/// Measurement protocol knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasureOpts {
+    /// Untimed runs before the clock starts.
+    pub warmup: usize,
+    /// Timed runs per candidate (trimmed-mean reduced).
+    pub iters: usize,
+}
+
+impl Default for MeasureOpts {
+    fn default() -> Self {
+        MeasureOpts { warmup: 2, iters: 10 }
+    }
+}
+
+/// One accepted candidate's timing.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Trimmed-mean nanoseconds per inference.
+    pub ns_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.ns_per_iter / 1e6
+    }
+}
+
+/// Something that can score a candidate plan — the search driver's only
+/// view of measurement.  The production implementation is [`Measurer`];
+/// tests substitute deterministic cost functions to pin the driver's
+/// seed-determinism without timing noise.
+pub trait Measure {
+    fn measure(&self, plan: &SchedulePlan) -> Result<Measurement>;
+}
+
+/// The real measurer: one model, one input, one pre-computed oracle
+/// output; every candidate compiles fresh and must reproduce the oracle
+/// exactly before its clock starts.
+pub struct Measurer {
+    g: Graph,
+    x: TensorData,
+    oracle: TensorData,
+    threads: usize,
+    opts: MeasureOpts,
+}
+
+impl Measurer {
+    /// Evaluate the oracle once and build a measurer around it.
+    pub fn new(g: &Graph, x: TensorData, threads: usize, opts: MeasureOpts) -> Result<Self> {
+        let oracle = evaluate(g, &x)?;
+        Ok(Self::with_oracle(g, x, oracle, threads, opts))
+    }
+
+    /// Build around a pre-computed expected output.  Public so tests can
+    /// verify the rejection path with a deliberately wrong oracle.
+    pub fn with_oracle(
+        g: &Graph,
+        x: TensorData,
+        oracle: TensorData,
+        threads: usize,
+        opts: MeasureOpts,
+    ) -> Self {
+        Measurer { g: g.clone(), x, oracle, threads: threads.max(1), opts }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Compile `plan` and prove it against the oracle (one run).  Returns
+    /// the executor ready for timing; `Err` if compilation fails or any
+    /// output bit differs.
+    pub fn check(&self, plan: &SchedulePlan) -> Result<ArenaExec> {
+        let exec = ArenaExec::with_schedule(
+            &self.g,
+            plan.fuse,
+            self.threads,
+            &plan.overrides(self.threads),
+        )?;
+        let mut out = TensorData::zeros(self.oracle.dtype, self.oracle.shape.clone());
+        exec.run_into(&self.x, &mut out)?;
+        if out != self.oracle {
+            return Err(anyhow!(
+                "oracle mismatch: candidate [{}] diverged from interp::evaluate — rejected",
+                plan.describe()
+            ));
+        }
+        Ok(exec)
+    }
+}
+
+impl Measure for Measurer {
+    fn measure(&self, plan: &SchedulePlan) -> Result<Measurement> {
+        let exec = self.check(plan)?;
+        let mut out = TensorData::zeros(self.oracle.dtype, self.oracle.shape.clone());
+        for _ in 0..self.opts.warmup {
+            exec.run_into(&self.x, &mut out)?;
+        }
+        let iters = self.opts.iters.max(1);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            exec.run_into(&self.x, &mut out)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        Ok(Measurement { ns_per_iter: trimmed_mean(&mut samples) })
+    }
+}
+
+/// Mean of the samples with ~10% shaved off each tail (at least one
+/// sample survives).
+pub fn trimmed_mean(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let trim = samples.len() / 10;
+    let kept = &samples[trim..samples.len() - trim];
+    kept.iter().sum::<f64>() / kept.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_sheds_outliers() {
+        let mut flat = vec![10.0; 10];
+        assert!((trimmed_mean(&mut flat) - 10.0).abs() < 1e-9);
+        // One wild outlier in ten samples lands in the trimmed tail.
+        let mut noisy = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 1e9];
+        assert!((trimmed_mean(&mut noisy) - 10.0).abs() < 1e-9);
+        let mut single = vec![7.0];
+        assert!((trimmed_mean(&mut single) - 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,48 @@
+//! `tune` — an AutoTVM-style schedule autotuner for the native arena tier.
+//!
+//! The paper's best numbers (163.88% / 194.98% improvement) come from
+//! *searched* schedule configurations, not from quantization alone: TVM
+//! tunes tiling, layout blocking, and thread mapping per task and the
+//! tuned-vs-default contrast **is** the experiment.  The arena tier used
+//! to hard-code one schedule per kernel; this subsystem searches instead
+//! of guessing:
+//!
+//! - [`knobs`] — the typed [`KnobSpace`]: per-anchor-class banding mode
+//!   (contiguous / interleaved / dynamic dequeue with chunk granularity),
+//!   band caps (thread mapping), fuse-vs-split epilogues, and the packed
+//!   lane-accumulator stack bound; deterministic seeded samplers and
+//!   single-knob neighbourhoods.
+//! - [`measure`] — the [`Measurer`]: compiles each candidate through
+//!   `graph::compile`, proves it **bit-for-bit** against
+//!   `graph::interp::evaluate` before any clock starts, then times it
+//!   in-process on the real step stream (warmup + trimmed-mean ns/iter).
+//! - [`search`] — [`tune_graph`]: seeded random sampling, optionally
+//!   ordered by the `perfmodel` roofline prior, then greedy hill-climb,
+//!   all under a fixed trial budget.
+//! - [`records`] — [`TuneRecords`]: the persisted JSON log / best-config
+//!   cache keyed by (step op, shape, layout, precision, threads), loaded
+//!   back by `NativeArenaFactory::with_schedule`, `tvmq run/serve
+//!   --tuned`, and `bench-arena --tuned`.
+//!
+//! CLI: `tvmq tune [--budget N --seed S --json PATH --quick]` runs a
+//! budgeted search on the seeded resnet model and writes the records
+//! file; `tvmq bench-arena --tuned [records.json]` prints tuned-vs-default
+//! rows across the whole layout × precision matrix.
+//!
+//! The one invariant everything here leans on: **schedule knobs are
+//! semantics-free**.  Banding modes each assign every output row to
+//! exactly one band, the spill knob only moves an integer accumulator
+//! between stack and arena, and fuse-vs-split is already pinned
+//! bit-exact by the fuzz harness — so tuning can chase speed without
+//! renegotiating correctness, and the measurer's oracle gate exists to
+//! catch compiler bugs, not numerical drift.
+
+pub mod knobs;
+pub mod measure;
+pub mod records;
+pub mod search;
+
+pub use knobs::{KnobSpace, SchedulePlan};
+pub use measure::{Measure, Measurement, MeasureOpts, Measurer};
+pub use records::{RunMeta, TaskKey, TuneRecord, TuneRecords};
+pub use search::{tune_graph, tune_with_measurer, Trial, TuneOptions, TuneOutcome};

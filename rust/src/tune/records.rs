@@ -1,0 +1,272 @@
+//! Persisted tuning records: the best-config cache keyed by
+//! (step op, shape, layout, precision, threads), JSON on disk, loadable
+//! back into a [`ScheduleOverrides`] table by the serving factory, the
+//! CLI, and the benches.
+//!
+//! The file is self-describing: run metadata (model geometry, thread
+//! width, budget), the winning global knobs, one task entry per anchor
+//! class with its chosen schedule, and the tuned-vs-default ns/iter the
+//! run measured.  Records survive `save → load → overrides` exactly (the
+//! round-trip test pins this), and unknown classes simply fall back to
+//! the default schedule, so a records file tuned on one model variant can
+//! be applied to another without breaking anything.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::knobs::{
+    banding_str, layout_str, parse_banding_str, parse_layout_str, SchedulePlan,
+};
+use super::search::TuneOutcome;
+use crate::graph::compile::{AnchorOp, ClassKey, ScheduleOverrides, StepSched};
+use crate::util::json::Json;
+
+/// The cache key of one tuned task, as persisted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskKey {
+    pub op: AnchorOp,
+    pub layout: Option<crate::graph::Layout>,
+    /// Precision the op family implies (`int8` for q-anchors).
+    pub precision: String,
+    /// Representative output shape of the class in the tuned model.
+    pub shape: Vec<usize>,
+    /// Pool width the schedule was tuned at.
+    pub threads: usize,
+}
+
+impl TaskKey {
+    pub fn class(&self) -> ClassKey {
+        ClassKey { op: self.op, layout: self.layout }
+    }
+}
+
+/// One tuned task: key + winning step schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRecord {
+    pub key: TaskKey,
+    pub sched: StepSched,
+}
+
+/// A whole tuning run, as persisted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRecords {
+    /// Model the run tuned (informational).
+    pub model: String,
+    pub layout: String,
+    pub precision: String,
+    pub image: usize,
+    pub batch: usize,
+    pub threads: usize,
+    /// Winning global knobs.
+    pub fuse: bool,
+    pub max_stack_lanes: usize,
+    /// Per-class winners.
+    pub records: Vec<TuneRecord>,
+    /// Run accounting.
+    pub trials: usize,
+    pub rejected: usize,
+    pub default_ns_per_iter: f64,
+    pub best_ns_per_iter: f64,
+}
+
+/// Metadata the caller knows about the tuned model (the outcome itself
+/// doesn't carry geometry).
+#[derive(Debug, Clone)]
+pub struct RunMeta {
+    pub model: String,
+    pub layout: String,
+    pub precision: String,
+    pub image: usize,
+    pub batch: usize,
+}
+
+fn precision_of(op: AnchorOp) -> &'static str {
+    match op {
+        AnchorOp::QConv2d | AnchorOp::QDense => "int8",
+        AnchorOp::Conv2d | AnchorOp::Dense => "fp32",
+    }
+}
+
+impl TuneRecords {
+    /// Freeze a search outcome into its persisted form.
+    pub fn from_outcome(outcome: &TuneOutcome, meta: &RunMeta) -> TuneRecords {
+        let best = &outcome.best.plan;
+        let sched_of = |key: &ClassKey| -> StepSched {
+            best.per_class
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, s)| *s)
+                .unwrap_or_default()
+        };
+        let records = outcome
+            .space
+            .classes
+            .iter()
+            .zip(&outcome.space.shapes)
+            .map(|(key, shape)| TuneRecord {
+                key: TaskKey {
+                    op: key.op,
+                    layout: key.layout,
+                    precision: precision_of(key.op).into(),
+                    shape: shape.clone(),
+                    threads: outcome.threads,
+                },
+                sched: sched_of(key),
+            })
+            .collect();
+        TuneRecords {
+            model: meta.model.clone(),
+            layout: meta.layout.clone(),
+            precision: meta.precision.clone(),
+            image: meta.image,
+            batch: meta.batch,
+            threads: outcome.threads,
+            fuse: best.fuse,
+            max_stack_lanes: best.max_stack_lanes,
+            records,
+            trials: outcome.trials.len(),
+            rejected: outcome.rejected,
+            default_ns_per_iter: outcome.default_ns,
+            best_ns_per_iter: outcome.best.ns_per_iter,
+        }
+    }
+
+    /// The compiler override table this records file selects.  `threads`
+    /// is the pool width of the engine being built (spill windows are
+    /// re-sized for it; the per-class knobs transfer as-is).
+    pub fn overrides(&self, threads: usize) -> ScheduleOverrides {
+        let per_class: HashMap<ClassKey, StepSched> = self
+            .records
+            .iter()
+            .map(|r| (r.key.class(), r.sched))
+            .collect();
+        ScheduleOverrides {
+            max_stack_lanes: self.max_stack_lanes,
+            threads: threads.max(1),
+            default_sched: StepSched::default(),
+            per_class,
+        }
+    }
+
+    /// Compact one-line knob summary (for bench rows / logs) — exactly
+    /// the recorded plan's identity string.
+    pub fn knob_summary(&self) -> String {
+        self.best_plan().describe()
+    }
+
+    /// The best plan restricted to the recorded classes (what `describe`
+    /// strings in trials referred to).
+    pub fn best_plan(&self) -> SchedulePlan {
+        SchedulePlan {
+            fuse: self.fuse,
+            max_stack_lanes: self.max_stack_lanes,
+            per_class: self.records.iter().map(|r| (r.key.class(), r.sched)).collect(),
+        }
+    }
+
+    // ---- JSON ----
+
+    pub fn to_json(&self) -> Json {
+        let tasks: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("op", Json::str(r.key.op.as_str())),
+                    ("layout", Json::str(layout_str(r.key.layout))),
+                    ("precision", Json::str(r.key.precision.clone())),
+                    (
+                        "shape",
+                        Json::Arr(r.key.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                    ),
+                    ("threads", Json::num(r.key.threads as f64)),
+                    ("banding", Json::str(banding_str(r.sched.banding))),
+                    ("max_bands", Json::num(r.sched.max_bands as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("kind", Json::str("tvmq-tune-records")),
+            ("model", Json::str(self.model.clone())),
+            ("layout", Json::str(self.layout.clone())),
+            ("precision", Json::str(self.precision.clone())),
+            ("image", Json::num(self.image as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("fuse", Json::Bool(self.fuse)),
+            ("max_stack_lanes", Json::num(self.max_stack_lanes as f64)),
+            ("tasks", Json::Arr(tasks)),
+            ("trials", Json::num(self.trials as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("default_ns_per_iter", Json::num(self.default_ns_per_iter)),
+            ("best_ns_per_iter", Json::num(self.best_ns_per_iter)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneRecords> {
+        if j.get("kind")?.as_str()? != "tvmq-tune-records" {
+            return Err(anyhow!("not a tune-records file"));
+        }
+        let records = j
+            .get("tasks")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                let sched = StepSched {
+                    banding: parse_banding_str(t.get("banding")?.as_str()?)?,
+                    max_bands: t.get("max_bands")?.as_usize()?,
+                };
+                Ok(TuneRecord {
+                    key: TaskKey {
+                        op: t.get("op")?.as_str()?.parse()?,
+                        layout: parse_layout_str(t.get("layout")?.as_str()?)?,
+                        precision: t.get("precision")?.as_str()?.to_string(),
+                        shape: t
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        threads: t.get("threads")?.as_usize()?,
+                    },
+                    sched,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TuneRecords {
+            model: j.get("model")?.as_str()?.to_string(),
+            layout: j.get("layout")?.as_str()?.to_string(),
+            precision: j.get("precision")?.as_str()?.to_string(),
+            image: j.get("image")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            threads: j.get("threads")?.as_usize()?,
+            fuse: match j.get("fuse")? {
+                Json::Bool(b) => *b,
+                other => return Err(anyhow!("fuse must be a boolean, got {other:?}")),
+            },
+            max_stack_lanes: j.get("max_stack_lanes")?.as_usize()?,
+            records,
+            trials: j.get("trials")?.as_usize()?,
+            rejected: j.get("rejected")?.as_usize()?,
+            default_ns_per_iter: j.get("default_ns_per_iter")?.as_f64()?,
+            best_ns_per_iter: j.get("best_ns_per_iter")?.as_f64()?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .with_context(|| format!("writing tune records to {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TuneRecords> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune records from {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing tune records {}", path.display()))
+    }
+}

@@ -1,0 +1,201 @@
+//! The search driver: seeded random sampling (optionally ordered by a
+//! `perfmodel` cost prior) followed by greedy hill-climbing over
+//! single-knob neighbours, under a fixed trial budget.
+//!
+//! Candidate *generation* is a pure function of the seed — same seed +
+//! budget ⇒ the same candidate sequence and, under a deterministic
+//! [`Measure`], the same best config (the determinism test pins this).
+//! On real hardware the measured numbers decide which candidate wins;
+//! every accepted trial already passed the measurer's bit-for-bit oracle
+//! gate.
+
+use std::collections::HashSet;
+
+use anyhow::{anyhow, Result};
+
+use super::knobs::{KnobSpace, SchedulePlan};
+use super::measure::{Measure, Measurement, MeasureOpts, Measurer};
+use crate::graph::Graph;
+use crate::perfmodel::{tune_prior_ms, MachineModel};
+use crate::runtime::TensorData;
+
+/// Search configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOptions {
+    /// Total measured candidates, including the default schedule.
+    pub budget: usize,
+    pub seed: u64,
+    /// Worker-pool width the candidates compile for.
+    pub threads: usize,
+    /// Measurement protocol (per candidate).
+    pub warmup: usize,
+    pub iters: usize,
+    /// Order the random phase's candidates by the analytic cost prior, so
+    /// a small budget measures the model's best guesses first.
+    pub use_prior: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { budget: 24, seed: 1, threads: 1, warmup: 2, iters: 8, use_prior: true }
+    }
+}
+
+/// One measured (oracle-verified) candidate.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub plan: SchedulePlan,
+    pub ns_per_iter: f64,
+}
+
+/// The search result: the incumbent, every accepted trial in measurement
+/// order, and the knob space it ran over.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub best: Trial,
+    pub default_ns: f64,
+    pub trials: Vec<Trial>,
+    /// Candidates the measurer rejected (compile failure or oracle
+    /// mismatch) — should be zero; schedule knobs are semantics-free.
+    pub rejected: usize,
+    pub space: KnobSpace,
+    pub threads: usize,
+}
+
+impl TuneOutcome {
+    /// The paper's improvement convention: default / best, as a
+    /// percentage (100% = parity).
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * self.default_ns / self.best.ns_per_iter
+    }
+}
+
+/// Tune `g`: enumerate its knob space, build an oracle-checked measurer
+/// over input `x`, and search.
+pub fn tune_graph(g: &Graph, x: TensorData, opts: &TuneOptions) -> Result<TuneOutcome> {
+    let space = KnobSpace::for_graph(g, opts.threads)?;
+    let measurer = Measurer::new(
+        g,
+        x,
+        opts.threads,
+        MeasureOpts { warmup: opts.warmup, iters: opts.iters },
+    )?;
+    tune_with_measurer(space, &measurer, opts)
+}
+
+/// The driver itself, over any [`Measure`] implementation.
+pub fn tune_with_measurer(
+    space: KnobSpace,
+    measurer: &dyn Measure,
+    opts: &TuneOptions,
+) -> Result<TuneOutcome> {
+    let mut rng = crate::util::rng::Rng64::seed_from_u64(opts.seed);
+    let mut trials: Vec<Trial> = Vec::new();
+    let mut rejected = 0usize;
+    let mut seen: HashSet<String> = HashSet::new();
+
+    // The default schedule is always trial 0 — it is the baseline the
+    // records file reports against, and if *it* fails the oracle the
+    // harness itself is broken: refuse to tune rather than search on top
+    // of a lying measurer.
+    let default_plan = SchedulePlan::default_for(&space.classes);
+    seen.insert(default_plan.describe());
+    let d: Measurement = measurer
+        .measure(&default_plan)
+        .map_err(|e| anyhow!("default schedule failed its oracle check — not tuning: {e}"))?;
+    trials.push(Trial { plan: default_plan, ns_per_iter: d.ns_per_iter });
+    let mut best = trials[0].clone();
+
+    let budget = opts.budget.max(1);
+    let measure_one =
+        |plan: SchedulePlan, trials: &mut Vec<Trial>, best: &mut Trial, rejected: &mut usize| {
+            match measurer.measure(&plan) {
+                Ok(m) => {
+                    let t = Trial { plan, ns_per_iter: m.ns_per_iter };
+                    if t.ns_per_iter < best.ns_per_iter {
+                        *best = t.clone();
+                    }
+                    trials.push(t);
+                    true
+                }
+                Err(_) => {
+                    // Oracle mismatch or compile failure: the candidate is
+                    // dropped on the floor — it can never become the
+                    // incumbent.
+                    *rejected += 1;
+                    false
+                }
+            }
+        };
+
+    // ---- Random phase: half the remaining budget ----
+    let random_budget = budget.saturating_sub(1) / 2;
+    let mut cands: Vec<SchedulePlan> = Vec::new();
+    // Oversample so dedup against `seen` still fills the quota.
+    for _ in 0..random_budget.saturating_mul(3) {
+        if cands.len() >= random_budget.saturating_mul(2) {
+            break;
+        }
+        let p = space.sample(&mut rng);
+        if seen.insert(p.describe()) {
+            cands.push(p);
+        }
+    }
+    if opts.use_prior {
+        // Stable sort by the analytic prior: deterministic tie-breaks, so
+        // the measured subset is still a pure function of the seed.
+        let m = MachineModel::default();
+        cands.sort_by(|a, b| {
+            prior_ms(&m, &space, a).total_cmp(&prior_ms(&m, &space, b))
+        });
+    }
+    cands.truncate(random_budget);
+    for p in cands {
+        measure_one(p, &mut trials, &mut best, &mut rejected);
+    }
+
+    // ---- Greedy hill-climb: spend what's left on single-knob moves ----
+    let mut remaining = budget.saturating_sub(trials.len() + rejected);
+    'climb: loop {
+        let mut improved = false;
+        for n in space.neighbors(&best.plan) {
+            if remaining == 0 {
+                break 'climb;
+            }
+            if !seen.insert(n.describe()) {
+                continue;
+            }
+            remaining -= 1;
+            let before = best.ns_per_iter;
+            if measure_one(n, &mut trials, &mut best, &mut rejected)
+                && best.ns_per_iter < before
+            {
+                improved = true;
+                break; // restart the neighbourhood around the new incumbent
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    let default_ns = trials[0].ns_per_iter;
+    let threads = space.threads;
+    Ok(TuneOutcome { best, default_ns, trials, rejected, space, threads })
+}
+
+/// Analytic prior for one candidate: the roofline with unfused plans
+/// paying doubled activation traffic and band-capped plans losing compute
+/// parallelism.  Ordering heuristic only — measurements decide.
+fn prior_ms(m: &MachineModel, space: &KnobSpace, plan: &SchedulePlan) -> f64 {
+    // The effective fan-out is the most restrictive band cap a class
+    // imposes (0 = full width).
+    let bands = plan
+        .per_class
+        .iter()
+        .map(|(_, s)| if s.max_bands == 0 { space.threads } else { s.max_bands.min(space.threads) })
+        .min()
+        .unwrap_or(space.threads)
+        .max(1);
+    tune_prior_ms(m, space.flops, space.act_bytes, space.int8, plan.fuse, bands)
+}

@@ -280,6 +280,56 @@ fn fuzz_arena_matches_oracle_across_threads() {
     );
 }
 
+/// One full fuzz pass under a NON-default `ScheduleOverrides`: dynamic
+/// chunk-1 banding on every anchor class plus a stack-lane bound of 2,
+/// which forces the packed q-conv chains with cb = 4 onto the arena-spill
+/// lane-accumulator path.  Schedule knobs must never change a bit.
+#[test]
+fn fuzz_overridden_schedule_matches_oracle() {
+    use tvmq::executor::{ArenaExec, Banding};
+    use tvmq::graph::compile::{ScheduleOverrides, StepSched};
+
+    let ovr = ScheduleOverrides {
+        max_stack_lanes: 2,
+        default_sched: StepSched {
+            banding: Some(Banding::Dynamic { chunk: 1 }),
+            max_bands: 0,
+        },
+        ..ScheduleOverrides::default()
+    };
+    let mut spill_steps = 0usize;
+    for case in 0..CASES {
+        let mut rng = Rng64::seed_from_u64(BASE_SEED ^ case);
+        let g = random_graph(&mut rng);
+        let g = maybe_quantize(&g, &mut rng);
+        let x = calibrate_ir(&g, rng.next_u64());
+        let want = evaluate(&g, &x)
+            .unwrap_or_else(|e| panic!("case {case}: oracle failed: {e}"));
+        let exec = ArenaExec::with_schedule(&g, true, 4, &ovr)
+            .unwrap_or_else(|e| panic!("case {case}: tuned compile failed: {e}"));
+        spill_steps += exec
+            .compiled()
+            .steps
+            .iter()
+            .filter(|s| s.spill.is_some())
+            .count();
+        let mut out = TensorData::zeros(want.dtype, want.shape.clone());
+        exec.run_into(&x, &mut out)
+            .unwrap_or_else(|e| panic!("case {case}: tuned run failed: {e}"));
+        assert_eq!(
+            want, out,
+            "case {case}: overridden schedule diverged from the oracle"
+        );
+    }
+    // The lowered bound must actually have exercised the spill kernel:
+    // the corpus's packed quantized chains with cb = 4 exceed the bound
+    // of 2 (cb = 2 chains stay on the stack — both strategies run).
+    assert!(
+        spill_steps >= 1,
+        "override pass never exercised the spill-accumulator path"
+    );
+}
+
 #[test]
 fn fuzz_generator_is_deterministic() {
     // The CI seed set must mean the same graphs everywhere.

@@ -1,0 +1,300 @@
+//! Tuner contracts (ISSUE 5): search determinism (same seed + budget →
+//! same best config), oracle-rejection (a candidate producing wrong bits
+//! is never accepted), records round-trip (save → load →
+//! `NativeArenaFactory` builds the tuned engine bit-equal to the oracle),
+//! and the packed lane-accumulator boundary — the real cb = 64 / 65 edge
+//! of `MAX_FUSED_QCONV_CB` plus the small-lane equivalent driven through
+//! the `max_stack_lanes` knob.
+
+use tvmq::executor::{
+    ArenaExec, Banding, EngineFactory, EngineKind, EngineSpec, Executor, LayoutTag,
+};
+use tvmq::graph::compile::{ScheduleOverrides, StepOp, StepSched, MAX_FUSED_QCONV_CB};
+use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+use tvmq::graph::{
+    build_conv_net, build_resnet_ir, calibrate_ir, evaluate, Graph, Layout, NetSpec, Op,
+    TensorTy,
+};
+use tvmq::tune::{
+    tune_graph, tune_with_measurer, KnobSpace, Measure, Measurement, MeasureOpts, Measurer,
+    RunMeta, SchedulePlan, TuneOptions, TuneRecords,
+};
+use tvmq::util::rng::Rng64;
+
+fn quantized(g: &Graph) -> Graph {
+    let calib = calibrate_ir(g, 1);
+    let scales = calibrate_graph(g, &calib).unwrap();
+    QuantizeRealize { scales }.run(g).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Determinism
+// ---------------------------------------------------------------------------
+
+/// A deterministic stand-in cost function: scoring is a pure function of
+/// the plan identity, so two same-seed searches must retrace each other
+/// exactly — no timing noise to hide driver nondeterminism behind.
+struct FakeMeasure;
+
+impl Measure for FakeMeasure {
+    fn measure(&self, plan: &SchedulePlan) -> anyhow::Result<Measurement> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in plan.describe().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Ok(Measurement { ns_per_iter: (h % 1_000_000) as f64 + 1.0 })
+    }
+}
+
+#[test]
+fn same_seed_and_budget_yield_the_same_best_config() {
+    let g = quantized(&build_resnet_ir(1, 8, 7).unwrap());
+    let space = KnobSpace::for_graph(&g, 4).unwrap();
+    let opts = TuneOptions { budget: 20, seed: 99, threads: 4, ..TuneOptions::default() };
+    let a = tune_with_measurer(space.clone(), &FakeMeasure, &opts).unwrap();
+    let b = tune_with_measurer(space, &FakeMeasure, &opts).unwrap();
+    assert_eq!(a.best.plan.describe(), b.best.plan.describe());
+    assert_eq!(a.best.ns_per_iter, b.best.ns_per_iter);
+    let seq_a: Vec<String> = a.trials.iter().map(|t| t.plan.describe()).collect();
+    let seq_b: Vec<String> = b.trials.iter().map(|t| t.plan.describe()).collect();
+    assert_eq!(seq_a, seq_b, "same seed must measure the same candidate sequence");
+    assert!(a.trials.len() <= opts.budget);
+    assert_eq!(a.trials[0].plan.describe(), SchedulePlan::default_for(&a.space.classes).describe());
+}
+
+// ---------------------------------------------------------------------------
+// Oracle rejection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn candidate_with_wrong_bits_is_rejected_not_timed() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let x = calibrate_ir(&g, 3);
+    let mut oracle = evaluate(&g, &x).unwrap();
+    // Flip one bit of the expected output: every candidate now "produces
+    // wrong bits" relative to the oracle and must be refused.
+    oracle.data[0] ^= 1;
+    let m = Measurer::with_oracle(&g, x, oracle, 2, MeasureOpts { warmup: 0, iters: 1 });
+
+    let space = KnobSpace::for_graph(&g, 2).unwrap();
+    let default = SchedulePlan::default_for(&space.classes);
+    let err = m.measure(&default).unwrap_err().to_string();
+    assert!(err.contains("oracle mismatch"), "wrong rejection reason: {err}");
+
+    // The driver refuses to search on a measurer whose baseline fails.
+    let err = tune_with_measurer(space, &m, &TuneOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("oracle"), "tune should surface the oracle failure: {err}");
+}
+
+#[test]
+fn honest_measurer_accepts_every_schedule_knob() {
+    // With the true oracle, candidates across the whole knob space are
+    // accepted (schedule knobs are semantics-free) — and the search's
+    // winner re-verifies against the interpreter.
+    let g = quantized(&build_conv_net(&NetSpec::small(1)).unwrap());
+    let x = calibrate_ir(&g, 5);
+    let opts = TuneOptions {
+        budget: 10,
+        seed: 3,
+        threads: 2,
+        warmup: 0,
+        iters: 2,
+        use_prior: true,
+    };
+    let outcome = tune_graph(&g, x.clone(), &opts).unwrap();
+    assert_eq!(outcome.rejected, 0, "no schedule knob may change a bit");
+    assert!(outcome.trials.len() >= 2, "search must measure beyond the default");
+    assert!(outcome.best.ns_per_iter <= outcome.default_ns);
+
+    let best = &outcome.best.plan;
+    let exec = ArenaExec::with_schedule(&g, best.fuse, 2, &best.overrides(2)).unwrap();
+    assert_eq!(evaluate(&g, &x).unwrap(), exec.run(&x).unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// Records round-trip → tuned factory engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn records_round_trip_and_factory_builds_the_tuned_engine() {
+    let spec = EngineSpec::new(EngineKind::Arena).layout(LayoutTag::Nchw);
+    let factory = tvmq::executor::NativeArenaFactory::new(spec, &[1, 2], 12, 1).unwrap();
+    let g1 = factory.graph(1).unwrap();
+    let g2 = factory.graph(2).unwrap();
+
+    let outcome = tune_graph(
+        &g1,
+        calibrate_ir(&g1, 42),
+        &TuneOptions { budget: 6, seed: 11, threads: 1, warmup: 0, iters: 2, use_prior: true },
+    )
+    .unwrap();
+    let records = TuneRecords::from_outcome(
+        &outcome,
+        &RunMeta {
+            model: "resnet10".into(),
+            layout: "NCHW".into(),
+            precision: "int8".into(),
+            image: 12,
+            batch: 1,
+        },
+    );
+    assert!(!records.records.is_empty(), "resnet must expose tunable anchor classes");
+
+    let path = std::env::temp_dir().join(format!("tvmq-tune-{}.json", std::process::id()));
+    records.save(&path).unwrap();
+    let loaded = TuneRecords::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(records, loaded, "records must survive save → load bit-exactly");
+
+    // The loaded records drive the factory's tuned path; the bucket-2
+    // engine (a batch the tune never saw — class-keyed transfer) must
+    // still be bit-identical to the interpreter oracle.
+    let tuned = factory.with_schedule(loaded.overrides(1), loaded.fuse);
+    assert!(tuned.describe().contains("tuned"), "factory should advertise the tuned path");
+    let engine = tuned.build(2).unwrap();
+    let x = calibrate_ir(&g2, 8);
+    assert_eq!(evaluate(&g2, &x).unwrap(), engine.run(&x).unwrap());
+
+    // Acceptance: the records file loaded into an engine must stay
+    // bit-for-bit equal to the oracle at threads 1 AND 4 (spill windows
+    // and band counts re-sized for the wider pool).
+    let x1 = calibrate_ir(&g1, 13);
+    let want = evaluate(&g1, &x1).unwrap();
+    for threads in [1usize, 4] {
+        let exec =
+            ArenaExec::with_schedule(&g1, loaded.fuse, threads, &loaded.overrides(threads))
+                .unwrap();
+        assert_eq!(want, exec.run(&x1).unwrap(), "t{threads}: tuned run diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed lane-accumulator boundary
+// ---------------------------------------------------------------------------
+
+/// Minimal packed quantized chain: `x → quantize → conv(NCHW{cb}c, i8
+/// weight) → dequantize`, 1×1 kernel so any `cb` stays tiny.
+fn packed_qconv_graph(cb: usize, seed: u64) -> Graph {
+    let mut g = Graph::new();
+    let mut rng = Rng64::seed_from_u64(seed);
+    let x = g.add_input("x", TensorTy::f32(vec![1, 1, 3, 3, cb]));
+    let q = g.add("q", Op::Quantize { scale: 0.05 }, vec![x]).unwrap();
+    let w: Vec<i8> = (0..cb * cb).map(|_| rng.i8()).collect();
+    let wid = g.add_const_i8("w", vec![1, 1, 1, 1, cb, cb], w).unwrap();
+    let conv = g
+        .add(
+            "conv",
+            Op::Conv2d { stride: 1, padding: 0, layout: Layout::Nchwc(cb) },
+            vec![q, wid],
+        )
+        .unwrap();
+    g.output = g.add("dq", Op::Dequantize { scale: 0.1 }, vec![conv]).unwrap();
+    g.validate().unwrap();
+    g
+}
+
+fn fused_qconv_step(exec: &ArenaExec) -> &tvmq::graph::compile::Step {
+    exec.compiled()
+        .steps
+        .iter()
+        .find(|s| matches!(s.op, StepOp::QConv2d { .. }))
+        .expect("chain should fuse into a QConv2d step")
+}
+
+#[test]
+fn cb_64_fuses_on_the_stack_and_cb_65_fuses_through_spill() {
+    // The real boundary of the fixed stack array: 64 stays stack-resident,
+    // 65 — which used to silently stay unfused — now fuses with per-band
+    // arena spill windows, and both match the oracle bit-for-bit.
+    for (cb, want_spill) in [(MAX_FUSED_QCONV_CB, false), (MAX_FUSED_QCONV_CB + 1, true)] {
+        let g = packed_qconv_graph(cb, 17);
+        let x = calibrate_ir(&g, 2);
+        let want = evaluate(&g, &x).unwrap();
+        for threads in [1usize, 2] {
+            let exec = ArenaExec::with_options(&g, true, threads).unwrap();
+            assert_eq!(
+                exec.compiled().fused_chains,
+                1,
+                "cb={cb}: the q→conv→dq chain must fuse"
+            );
+            let step = fused_qconv_step(&exec);
+            assert_eq!(
+                step.spill.is_some(),
+                want_spill,
+                "cb={cb}: wrong lane-accumulator strategy"
+            );
+            if let Some(sp) = step.spill {
+                assert!(sp.bands >= threads, "spill windows must cover the pool");
+                assert!(sp.band_bytes >= cb * 4);
+            }
+            assert_eq!(
+                want,
+                exec.run(&x).unwrap(),
+                "cb={cb} t{threads}: packed fused conv diverged from the oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn stack_lane_knob_boundary_small_lane_equivalent() {
+    // The same 64/65 edge exercised cheaply through the knob: with
+    // max_stack_lanes = b, a cb = b block accumulates on the stack and a
+    // cb > b block spills — both bit-exact, at 1 and 4 threads.
+    let g = packed_qconv_graph(4, 23);
+    let x = calibrate_ir(&g, 9);
+    let want = evaluate(&g, &x).unwrap();
+    for (lanes, want_spill) in [(4usize, false), (3, true), (2, true)] {
+        let ovr = ScheduleOverrides { max_stack_lanes: lanes, ..ScheduleOverrides::default() };
+        for threads in [1usize, 4] {
+            let exec = ArenaExec::with_schedule(&g, true, threads, &ovr).unwrap();
+            let step = fused_qconv_step(&exec);
+            assert_eq!(
+                step.spill.is_some(),
+                want_spill,
+                "lanes={lanes}: wrong strategy for cb=4"
+            );
+            assert_eq!(
+                want,
+                exec.run(&x).unwrap(),
+                "lanes={lanes} t{threads}: spill/stack strategies must agree bitwise"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Banding overrides are inert on results (direct, non-fuzz pin)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_banding_override_is_bit_exact_on_a_residual_net() {
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let qg = quantized(&g);
+    for graph in [&g, &qg] {
+        let x = calibrate_ir(graph, 6);
+        let want = evaluate(graph, &x).unwrap();
+        for banding in [
+            Banding::Contiguous,
+            Banding::Interleaved,
+            Banding::Dynamic { chunk: 1 },
+            Banding::Dynamic { chunk: 3 },
+        ] {
+            for max_bands in [0usize, 1, 3] {
+                let ovr = ScheduleOverrides {
+                    default_sched: StepSched { banding: Some(banding), max_bands },
+                    ..ScheduleOverrides::default()
+                };
+                let exec = ArenaExec::with_schedule(graph, true, 4, &ovr).unwrap();
+                assert_eq!(
+                    want,
+                    exec.run(&x).unwrap(),
+                    "{banding:?}/b{max_bands}: schedule changed the result"
+                );
+            }
+        }
+    }
+}
