@@ -1,0 +1,274 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! [`FaultyFactory`] wraps any [`EngineFactory`] and [`FaultyEngine`]
+//! wraps each engine it builds; both consult a [`FaultPlan`] — a
+//! scripted or seeded, fully deterministic source of faults — before
+//! delegating.  Driven through `InferenceServer::start_with`, this turns
+//! the coordinator's failure handling into something testable on demand
+//! rather than hoped-for: `tests/fault_serving.rs` asserts that
+//! per-request errors propagate without deadlock, that serving continues
+//! after an engine panic, that errors are counted in `ServerStats`, and
+//! that no `PendingReply` is ever lost — not even when the worker thread
+//! is killed outright.
+//!
+//! Fault severities ([`Fault`]):
+//!
+//! - [`Fault::Error`] — the engine returns `Err`; the coordinator must
+//!   fail exactly the affected batch and keep serving.
+//! - [`Fault::Panic`] — the engine panics; the coordinator's
+//!   `catch_unwind` must convert it to a per-batch error and keep the
+//!   worker alive.
+//! - [`Fault::Die`] — the engine panics with the [`FatalFault`] marker,
+//!   which the coordinator deliberately re-raises: the worker thread
+//!   dies, simulating an unrecoverable crash.  Outstanding and
+//!   subsequent submissions must then error promptly (no hangs).
+//! - [`Fault::Delay`] — the engine stalls before serving; for shutdown-
+//!   with-in-flight-requests coverage.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::FatalFault;
+use crate::executor::{EngineFactory, ExecSnapshot, Executor};
+use crate::runtime::{DType, TensorData};
+use crate::util::rng::Rng64;
+
+/// One injected misbehavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Return an error from the faulted call.
+    Error,
+    /// Panic with a plain message (recoverable by the coordinator).
+    Panic,
+    /// Panic with the [`FatalFault`] marker — simulated worker death
+    /// (the coordinator re-raises instead of recovering).
+    Die,
+    /// Sleep this long, then proceed normally.
+    Delay(Duration),
+}
+
+enum Mode {
+    /// Pop one step per call; exhausted script = no more faults.
+    Script(Mutex<VecDeque<Option<Fault>>>),
+    /// Draw per call: `fault` with probability `percent`/100.
+    Seeded(Mutex<(Rng64, u32, Fault)>),
+}
+
+/// A deterministic schedule of faults: one [`FaultPlan::next`] draw per
+/// intercepted call, shared (via `Arc`) by every engine the wrapped
+/// factory builds — so with one engine per batch, scripted step `k`
+/// faults batch `k`.
+pub struct FaultPlan {
+    mode: Mode,
+}
+
+impl FaultPlan {
+    /// Never faults.
+    pub fn none() -> Self {
+        FaultPlan { mode: Mode::Script(Mutex::new(VecDeque::new())) }
+    }
+
+    /// Fault call `k` with `steps[k]` (`None` entries and every call past
+    /// the end pass through clean).
+    pub fn script<I: IntoIterator<Item = Option<Fault>>>(steps: I) -> Self {
+        FaultPlan { mode: Mode::Script(Mutex::new(steps.into_iter().collect())) }
+    }
+
+    /// Fault each call independently with probability `percent`/100,
+    /// from a seeded generator — reproducible soak pressure.
+    pub fn seeded(seed: u64, percent: u32, fault: Fault) -> Self {
+        FaultPlan {
+            mode: Mode::Seeded(Mutex::new((Rng64::seed_from_u64(seed), percent.min(100), fault))),
+        }
+    }
+
+    /// The fault (if any) for the next intercepted call.
+    pub fn next(&self) -> Option<Fault> {
+        match &self.mode {
+            Mode::Script(q) => q
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .pop_front()
+                .flatten(),
+            Mode::Seeded(s) => {
+                let mut g = s.lock().unwrap_or_else(PoisonError::into_inner);
+                let st = &mut *g;
+                if (st.0.range_usize(0, 99) as u32) < st.1 {
+                    Some(st.2)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Act out one drawn fault (or pass).  `what` names the faulted call in
+/// the error/panic message.
+fn trip(plan: &FaultPlan, what: &str) -> Result<()> {
+    match plan.next() {
+        None => Ok(()),
+        Some(Fault::Error) => Err(anyhow!("injected {what} error")),
+        Some(Fault::Panic) => panic!("injected {what} panic"),
+        Some(Fault::Die) => std::panic::panic_any(FatalFault),
+        Some(Fault::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+/// An [`Executor`] that consults a [`FaultPlan`] before every `run` /
+/// `run_into`, then delegates.
+pub struct FaultyEngine {
+    inner: Box<dyn Executor>,
+    plan: Arc<FaultPlan>,
+    name: String,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn Executor>, plan: Arc<FaultPlan>) -> Self {
+        let name = format!("faulty({})", inner.name());
+        FaultyEngine { inner, plan, name }
+    }
+}
+
+impl Executor for FaultyEngine {
+    fn run(&self, input: &TensorData) -> Result<TensorData> {
+        trip(&self.plan, "engine run")?;
+        self.inner.run(input)
+    }
+
+    fn run_into(&self, input: &TensorData, out: &mut TensorData) -> Result<()> {
+        trip(&self.plan, "engine run")?;
+        self.inner.run_into(input, out)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        self.inner.input_desc()
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        self.inner.output_desc()
+    }
+
+    fn counters(&self) -> ExecSnapshot {
+        self.inner.counters()
+    }
+}
+
+/// An [`EngineFactory`] decorator: faults on `build` (startup-failure
+/// coverage) and hands every built engine a shared run-fault plan.
+pub struct FaultyFactory<F> {
+    inner: F,
+    build_plan: FaultPlan,
+    run_plan: Arc<FaultPlan>,
+}
+
+impl<F: EngineFactory> FaultyFactory<F> {
+    /// Wrap `inner` with no faults; add plans with the builders below.
+    pub fn new(inner: F) -> Self {
+        FaultyFactory {
+            inner,
+            build_plan: FaultPlan::none(),
+            run_plan: Arc::new(FaultPlan::none()),
+        }
+    }
+
+    /// Fault plan for `build` calls (one draw per bucket engine built).
+    pub fn build_faults(mut self, plan: FaultPlan) -> Self {
+        self.build_plan = plan;
+        self
+    }
+
+    /// Fault plan for engine `run`/`run_into` calls (one draw per served
+    /// batch, shared across all bucket engines in build order).
+    pub fn run_faults(mut self, plan: FaultPlan) -> Self {
+        self.run_plan = Arc::new(plan);
+        self
+    }
+}
+
+impl<F: EngineFactory> EngineFactory for FaultyFactory<F> {
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        trip(&self.build_plan, "factory build")?;
+        Ok(Box::new(FaultyEngine::new(self.inner.build(batch)?, Arc::clone(&self.run_plan))))
+    }
+
+    fn describe(&self) -> String {
+        format!("faulty({})", self.inner.describe())
+    }
+}
+
+/// Install (once, process-wide) a panic hook that swallows the injected
+/// fault panics — thousands of deliberate panics across a fault soak
+/// otherwise bury real test output — and delegates everything else.
+/// Call at the top of fault-injection tests.
+pub fn silence_injected_faults() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            if payload.is::<FatalFault>() {
+                return;
+            }
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if msg.starts_with("injected ") {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_plan_pops_in_order_then_runs_dry() {
+        let plan = FaultPlan::script([Some(Fault::Error), None, Some(Fault::Panic)]);
+        assert_eq!(plan.next(), Some(Fault::Error));
+        assert_eq!(plan.next(), None);
+        assert_eq!(plan.next(), Some(Fault::Panic));
+        assert_eq!(plan.next(), None, "exhausted script never faults again");
+        assert_eq!(plan.next(), None);
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_rate_bounded() {
+        let a = FaultPlan::seeded(42, 30, Fault::Error);
+        let b = FaultPlan::seeded(42, 30, Fault::Error);
+        let draws_a: Vec<_> = (0..200).map(|_| a.next()).collect();
+        let draws_b: Vec<_> = (0..200).map(|_| b.next()).collect();
+        assert_eq!(draws_a, draws_b, "same seed, same fault schedule");
+        let faults = draws_a.iter().filter(|d| d.is_some()).count();
+        assert!(
+            (20..=100).contains(&faults),
+            "30% of 200 draws should fault roughly 60 times, got {faults}"
+        );
+        let never = FaultPlan::seeded(7, 0, Fault::Panic);
+        assert!((0..100).all(|_| never.next().is_none()));
+    }
+}

@@ -1,0 +1,160 @@
+//! The checked scenario: the arena pool's **actual** epoch protocol —
+//! [`dispatch`], [`worker_loop`], [`signal_shutdown`] from
+//! `executor::pool`, not a transcription — run under the model scheduler
+//! over a small worker/band/epoch configuration.
+//!
+//! Per execution, logical thread 0 plays the dispatcher (`epochs`
+//! back-to-back dispatches, then shutdown) and threads `1..=workers`
+//! play pool workers.  Properties:
+//!
+//! - **covering exactly once**: every `(epoch, band)` pair runs exactly
+//!   once, across every explored schedule (validated post-run from
+//!   atomic hit counters).
+//! - **no lost wakeups / termination**: every dispatch and the final
+//!   shutdown complete under every schedule — a schedule that strands a
+//!   sleeping thread is reported as a deadlock by the scheduler itself.
+//! - **unwind soundness** (`panic_band`): the band that panics in epoch
+//!   0 still acknowledges; the panic surfaces on the dispatcher exactly
+//!   once; every later epoch runs clean.
+//!
+//! [`check_pool_with`] additionally threads a [`SabotageBug`] wake
+//! corruptor between the protocol and the scheduler — the checker's
+//! self-test: if it cannot convict a deliberately lost wakeup, its green
+//! runs are worthless.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::executor::pool::{dispatch, signal_shutdown, worker_loop};
+
+use super::sched::{CheckFailure, Explorer, Report, Sabotage, SabotageBug};
+
+/// One pool scenario shape.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCheckConfig {
+    /// Acknowledging pool workers (logical threads 1..=workers).
+    pub workers: usize,
+    /// Bands per dispatch; band 0 runs on the dispatcher.  Must satisfy
+    /// `1 <= bands <= workers + 1`, as `WorkerPool::run` guarantees by
+    /// clamping.
+    pub bands: usize,
+    /// Back-to-back dispatch epochs before shutdown.
+    pub epochs: usize,
+    /// Inject `panic!` into this band of epoch 0 (must be `< bands`);
+    /// the scenario then asserts unwind soundness.
+    pub panic_band: Option<usize>,
+}
+
+/// Exhaustively (within `explorer`'s bounds) check the pool protocol
+/// over `cfg`.  `Ok(report)` means every explored schedule terminated
+/// with full band coverage; `report.complete` says the schedule tree was
+/// exhausted (not budget-truncated).  `Err` carries the first failing
+/// schedule.
+pub fn check_pool(cfg: PoolCheckConfig, explorer: Explorer) -> Result<Report, CheckFailure> {
+    check_pool_with(cfg, explorer, None)
+}
+
+/// [`check_pool`] with an optional planted wake-dropping bug, used to
+/// prove the checker detects real protocol violations (expect `Err` with
+/// a deadlock report when `bug` is `Some`).
+pub fn check_pool_with(
+    cfg: PoolCheckConfig,
+    explorer: Explorer,
+    bug: Option<SabotageBug>,
+) -> Result<Report, CheckFailure> {
+    assert!(cfg.workers >= 1, "the protocol path needs at least one worker");
+    assert!(
+        cfg.bands >= 1 && cfg.bands <= cfg.workers + 1,
+        "bands must be in 1..=workers+1 (WorkerPool::run clamps): {cfg:?}"
+    );
+    if let Some(b) = cfg.panic_band {
+        assert!(b < cfg.bands, "panic_band {b} out of range for {} bands", cfg.bands);
+    }
+    if cfg.panic_band.is_some() {
+        silence_injected_panics();
+    }
+
+    explorer.run(|sched| {
+        // Fresh per execution; job bodies touch only these atomics, which
+        // is what licenses the scheduler's sections-are-atomic reduction.
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new(
+            (0..cfg.epochs * cfg.bands).map(|_| AtomicUsize::new(0)).collect(),
+        );
+        let dispatcher_panics = Arc::new(AtomicUsize::new(0));
+
+        {
+            let hits = Arc::clone(&hits);
+            let dispatcher_panics = Arc::clone(&dispatcher_panics);
+            sched.spawn("dispatch", move |sync| {
+                let sync = Sabotage::new(sync, bug);
+                for e in 0..cfg.epochs {
+                    let hits = &hits;
+                    let job = move |band: usize| {
+                        hits[e * cfg.bands + band].fetch_add(1, Ordering::Relaxed);
+                        if e == 0 && cfg.panic_band == Some(band) {
+                            panic!("injected check panic");
+                        }
+                    };
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        dispatch(&sync, cfg.workers, cfg.bands, &job);
+                    }));
+                    if run.is_err() {
+                        dispatcher_panics.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                signal_shutdown(&sync);
+            });
+        }
+        for w in 1..=cfg.workers {
+            sched.spawn(&format!("worker-{w}"), move |sync| {
+                let sync = Sabotage::new(sync, bug);
+                worker_loop(&sync, w);
+            });
+        }
+
+        move || {
+            for e in 0..cfg.epochs {
+                for b in 0..cfg.bands {
+                    let h = hits[e * cfg.bands + b].load(Ordering::Relaxed);
+                    if h != 1 {
+                        return Err(format!("epoch {e} band {b} ran {h} times (want exactly 1)"));
+                    }
+                }
+            }
+            let want = usize::from(cfg.panic_band.is_some());
+            let got = dispatcher_panics.load(Ordering::Relaxed);
+            if got != want {
+                return Err(format!(
+                    "dispatcher observed {got} epoch panics, want {want} \
+                     (a worker panic must re-raise on the caller, exactly once)"
+                ));
+            }
+            Ok(())
+        }
+    })
+}
+
+/// Unwind-soundness scenarios panic thousands of times across the DFS;
+/// install (once, process-wide) a panic hook that swallows exactly the
+/// injected messages and delegates everything else.
+fn silence_injected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if msg.contains("injected check panic")
+                || msg.contains("arena worker panicked while running a kernel band")
+            {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}

@@ -1,0 +1,671 @@
+//! The deterministic model scheduler: cooperative logical threads whose
+//! every synchronization decision belongs to a DFS explorer.
+//!
+//! ## Execution model
+//!
+//! An execution runs N *logical threads* (real OS threads, but at most
+//! one ever executes at a time — a run token is handed around by the
+//! scheduler).  The threads run the pool's **real protocol code**
+//! ([`crate::executor::pool::dispatch`] / `worker_loop`), generic over
+//! [`SyncOps`]; the model implementation ([`ModelSync`]) turns each
+//! primitive into scheduler events:
+//!
+//! - **critical sections are atomic**: `locked`/`locked_wait` bodies run
+//!   under the scheduler's own state mutex, so a section is one
+//!   indivisible step.  This is the standard reduction — a mutex-guarded
+//!   section with no internal blocking admits no observable internal
+//!   interleaving — and it is what keeps the schedule space tractable.
+//! - **a choice point precedes every critical-section entry** (and every
+//!   [`SyncOps::yield_point`]): the scheduler decides whether the running
+//!   thread proceeds or another runnable thread is scheduled first
+//!   (a *preemption*, counted against the preemption bound).
+//! - **condvar waits and thread exits force a switch**: the scheduler
+//!   picks any runnable thread, at no preemption cost.  Waiters move
+//!   back to runnable when a critical section requests the matching
+//!   [`Wake`]; there are no spurious wakeups (modeling strictly fewer
+//!   wakeups than std is conservative for *lost*-wakeup detection).
+//!
+//! Code between synchronization points is treated as atomic; scenario
+//! jobs must confine shared effects to commutative atomics (counters),
+//! which the pool harness does.
+//!
+//! ## Exploration
+//!
+//! Each choice is recorded as `(chosen index, admissible options)`.  A
+//! schedule is the sequence of chosen indices; the explorer replays a
+//! prefix, extends it greedily with option 0, and backtracks to the
+//! deepest decision with an untried option — depth-first over the whole
+//! schedule tree.  With a preemption bound `p`, choice points where the
+//! running thread is runnable admit alternatives only while preemptions
+//! remain, so the tree is the complete set of schedules with ≤ p
+//! preemptions (plus all blocking-driven switches, which are free).
+//! Exploration is **exhaustive within that bound** when it terminates
+//! under the schedule budget; [`Report::complete`] says which.
+//!
+//! ## Failure handling
+//!
+//! A deadlock (no runnable thread, some alive), a decision-depth
+//! overrun, or a panic on a logical thread fails the execution with the
+//! offending schedule.  The scheduler then enters *drain mode*: token
+//! discipline is suspended, the slot is poisoned toward shutdown
+//! (`shutdown = true`, and `outstanding` forced to 0 only once every
+//! alive thread is parked — never while a worker may still hold the
+//! dispatched job reference, preserving the pool's job-containment
+//! invariant even on failing runs), and every thread runs home so the
+//! explorer can join them and report.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::executor::pool::{Cv, Slot, SyncOps, Wake};
+
+const NONE: usize = usize::MAX;
+
+/// One logical thread's scheduler-visible state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TStatus {
+    /// May be granted the run token (includes currently holding it).
+    Runnable,
+    /// Sleeping on a model condvar; a matching wake flips it runnable.
+    Waiting(Cv),
+    Finished,
+}
+
+/// One recorded scheduling decision: which of the admissible options was
+/// taken.  Options are ordered deterministically (continue-current first
+/// at preemptible points, then runnable threads by id), so `(chosen,
+/// options)` pairs fully describe the schedule tree.
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    chosen: usize,
+    options: usize,
+}
+
+struct State {
+    status: Vec<TStatus>,
+    /// Logical thread holding the run token (NONE once all finished).
+    current: usize,
+    /// Model-mutex owner; with atomic critical sections it is only ever
+    /// taken and released inside one scheduler step, so this is a pure
+    /// sanity check.
+    lock_owner: usize,
+    /// The protocol state the critical sections mutate.
+    slot: Slot,
+    decisions: Vec<Decision>,
+    /// Forced choices for the first `prefix.len()` decision points.
+    prefix: Vec<usize>,
+    preemptions_left: usize,
+    max_decisions: usize,
+    failure: Option<String>,
+    draining: bool,
+    finished: usize,
+}
+
+/// The scheduler for ONE execution (one schedule).  Fresh per run.
+pub(crate) struct ModelSched {
+    state: Mutex<State>,
+    cv: Condvar,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn lock_state(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    // A panicking logical thread unwinds past guards by design (panic
+    // injection is part of what we check); recover rather than cascade.
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ModelSched {
+    pub(crate) fn new(prefix: Vec<usize>, max_decisions: usize, preemptions: usize) -> Self {
+        ModelSched {
+            state: Mutex::new(State {
+                status: Vec::new(),
+                current: NONE,
+                lock_owner: NONE,
+                slot: Slot::new(),
+                decisions: Vec::new(),
+                prefix,
+                preemptions_left: preemptions,
+                max_decisions,
+                failure: None,
+                draining: false,
+                finished: 0,
+            }),
+            cv: Condvar::new(),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register and spawn one logical thread.  Ids are assigned in call
+    /// order (the scenario's spawn order), which is what makes replay
+    /// deterministic.  Thread 0 receives the initial token.
+    pub(crate) fn spawn<F>(self: &Arc<Self>, name: &str, f: F)
+    where
+        F: FnOnce(&ModelSync) + Send + 'static,
+    {
+        let me = {
+            let mut g = lock_state(&self.state);
+            g.status.push(TStatus::Runnable);
+            g.status.len() - 1
+        };
+        let sched = Arc::clone(self);
+        let name = name.to_string();
+        let h = std::thread::Builder::new()
+            .name(format!("tvmq-check-{name}"))
+            .spawn(move || {
+                let sync = ModelSync { sched: Arc::clone(&sched), me };
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&sync)));
+                let mut g = lock_state(&sched.state);
+                if let Err(payload) = r {
+                    // A panic that escapes a logical thread is a verdict:
+                    // either the protocol swallowed/shouldn't-have or a
+                    // scenario assertion fired.  (During drain it is just
+                    // collateral of the already-recorded failure.)
+                    if !g.draining {
+                        let msg = panic_text(payload.as_ref());
+                        sched.fail(&mut g, format!("logical thread {me} ({name}) panicked: {msg}"));
+                    }
+                }
+                if g.lock_owner == me {
+                    g.lock_owner = NONE;
+                }
+                g.status[me] = TStatus::Finished;
+                g.finished += 1;
+                if g.draining {
+                    sched.cv.notify_all();
+                    return;
+                }
+                if g.finished == g.status.len() {
+                    g.current = NONE;
+                    sched.cv.notify_all();
+                } else if g.current == me {
+                    sched.grant(&mut g, me, false);
+                    sched.cv.notify_all();
+                }
+            })
+            .expect("spawn model thread");
+        self.handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(h);
+    }
+
+    /// Hand the initial token to thread 0 and release the threads.  Not a
+    /// decision: thread 0's first choice point offers every alternative
+    /// at no preemption cost (see [`ModelSched::grant`]), so all initial
+    /// orders are still explored — without a redundant extra level in the
+    /// schedule tree.
+    pub(crate) fn start(&self) {
+        let mut g = lock_state(&self.state);
+        if !g.status.is_empty() {
+            g.current = 0;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Join every logical thread, then report `(schedule, failure)`.
+    pub(crate) fn finish(&self) -> (Vec<(usize, usize)>, Option<String>) {
+        let handles: Vec<_> = self
+            .handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let g = lock_state(&self.state);
+        (
+            g.decisions.iter().map(|d| (d.chosen, d.options)).collect(),
+            g.failure.clone(),
+        )
+    }
+
+    /// Record a failure and switch to drain mode: suspend the token,
+    /// push the slot toward shutdown, wake everyone.
+    fn fail(&self, g: &mut State, msg: String) {
+        if g.failure.is_none() {
+            let trace: Vec<usize> = g.decisions.iter().map(|d| d.chosen).collect();
+            g.failure = Some(format!("{msg} [schedule {trace:?}]"));
+        }
+        g.draining = true;
+        g.slot.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Decide who runs next at a choice point.  `me_continues`: whether
+    /// "let `me` keep running" is an admissible option (true at
+    /// preemptible points, false when `me` just blocked or finished).
+    /// Sets `current` to the chosen thread; the caller notifies.
+    fn grant(&self, g: &mut State, me: usize, me_continues: bool) {
+        if g.draining {
+            return;
+        }
+        let mut options: Vec<usize> = Vec::new();
+        let first_decision = g.decisions.is_empty();
+        if me_continues {
+            options.push(me);
+            // Alternatives to a runnable current thread are preemptions —
+            // admissible only while budget remains.  The execution's very
+            // first choice point is exempt: picking which thread starts
+            // is an ordering, not a preemption.
+            if g.preemptions_left > 0 || first_decision {
+                for t in 0..g.status.len() {
+                    if t != me && g.status[t] == TStatus::Runnable {
+                        options.push(t);
+                    }
+                }
+            }
+        } else {
+            for t in 0..g.status.len() {
+                if t != me && g.status[t] == TStatus::Runnable {
+                    options.push(t);
+                }
+            }
+        }
+        if options.is_empty() {
+            // Nobody can run, somebody is still alive: every alive
+            // thread is asleep on a condvar — a lost wakeup.
+            self.fail(
+                g,
+                format!(
+                    "deadlock: no runnable thread ({} alive, statuses {:?})",
+                    g.status.len() - g.finished,
+                    g.status
+                ),
+            );
+            return;
+        }
+        let k = g.decisions.len();
+        if k >= g.max_decisions {
+            self.fail(g, format!("decision bound {} exceeded (livelock?)", g.max_decisions));
+            return;
+        }
+        let chosen = if k < g.prefix.len() { g.prefix[k] } else { 0 };
+        if chosen >= options.len() {
+            // Replay must be deterministic; divergence is a checker bug.
+            self.fail(
+                g,
+                format!(
+                    "replay diverged at decision {k}: prefix chose {chosen} of {} options",
+                    options.len()
+                ),
+            );
+            return;
+        }
+        if me_continues && chosen > 0 && !first_decision {
+            g.preemptions_left -= 1;
+        }
+        g.decisions.push(Decision { chosen, options: options.len() });
+        g.current = options[chosen];
+    }
+
+    /// Preemptible choice point taken by the token holder `me`; returns
+    /// once `me` may run again (immediately, or after the threads it was
+    /// preempted for have run), or once draining starts.
+    fn choice_point<'a>(
+        &'a self,
+        mut g: MutexGuard<'a, State>,
+        me: usize,
+    ) -> MutexGuard<'a, State> {
+        if g.draining {
+            return g;
+        }
+        debug_assert_eq!(g.current, me, "choice point from a thread without the token");
+        self.grant(&mut g, me, true);
+        self.cv.notify_all();
+        while !(g.draining || (g.current == me && g.status[me] == TStatus::Runnable)) {
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+        g
+    }
+
+    /// Park until granted the token (a thread arriving at its first sync
+    /// op, or re-arriving after being preempted elsewhere).
+    fn park_until_current<'a>(
+        &'a self,
+        mut g: MutexGuard<'a, State>,
+        me: usize,
+    ) -> MutexGuard<'a, State> {
+        while !(g.draining || (g.current == me && g.status[me] == TStatus::Runnable)) {
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+        g
+    }
+
+    /// Entry into a critical section: a preemptible choice point for the
+    /// token holder, a park for anyone else.
+    fn enter<'a>(&'a self, me: usize) -> MutexGuard<'a, State> {
+        let g = lock_state(&self.state);
+        if g.draining {
+            return g;
+        }
+        if g.current == me {
+            self.choice_point(g, me)
+        } else {
+            self.park_until_current(g, me)
+        }
+    }
+
+    /// Apply a critical section's wake requests: waiters flip runnable.
+    /// `done` wakes the lowest-id waiter (deterministic `notify_one`).
+    fn apply_wakes(g: &mut State, w: &Wake) {
+        if w.work_all {
+            for s in g.status.iter_mut() {
+                if *s == TStatus::Waiting(Cv::Work) {
+                    *s = TStatus::Runnable;
+                }
+            }
+        }
+        if w.done_one {
+            if let Some(s) = g
+                .status
+                .iter_mut()
+                .find(|s| **s == TStatus::Waiting(Cv::Done))
+            {
+                *s = TStatus::Runnable;
+            }
+        }
+    }
+
+    /// Drain-mode sweep: force the epoch counter open **only when every
+    /// alive thread is parked** — a worker holding the dispatched job
+    /// reference is running (not parked), so the dispatcher's barrier
+    /// stays intact until the job retires, exactly as in production.
+    fn drain_sweep(g: &mut State) {
+        g.slot.shutdown = true;
+        let all_parked = g
+            .status
+            .iter()
+            .all(|s| matches!(s, TStatus::Waiting(_) | TStatus::Finished));
+        if all_parked {
+            g.slot.outstanding = 0;
+        }
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// The model [`SyncOps`]: one handle per logical thread, delegating every
+/// primitive to the shared [`ModelSched`].
+pub(crate) struct ModelSync {
+    sched: Arc<ModelSched>,
+    me: usize,
+}
+
+impl ModelSync {
+    /// Run one atomic critical section under the already-entered state
+    /// guard, delivering wakes before the guard drops.
+    fn section<R>(
+        &self,
+        g: &mut State,
+        f: impl FnOnce(&mut Slot, &mut Wake) -> R,
+    ) -> R {
+        debug_assert_eq!(g.lock_owner, NONE, "atomic sections cannot nest");
+        g.lock_owner = self.me;
+        let mut w = Wake::default();
+        let r = f(&mut g.slot, &mut w);
+        ModelSched::apply_wakes(g, &w);
+        g.lock_owner = NONE;
+        r
+    }
+}
+
+impl SyncOps for ModelSync {
+    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
+        let mut g = self.sched.enter(self.me);
+        let r = self.section(&mut g, f);
+        if g.draining {
+            ModelSched::drain_sweep(&mut g);
+        }
+        self.sched.cv.notify_all();
+        r
+    }
+
+    fn locked_wait<R>(
+        &self,
+        cv: Cv,
+        mut f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>,
+    ) -> R {
+        let mut g = self.sched.enter(self.me);
+        loop {
+            if let Some(r) = self.section(&mut g, &mut f) {
+                if g.draining {
+                    ModelSched::drain_sweep(&mut g);
+                }
+                g.status[self.me] = TStatus::Runnable;
+                self.sched.cv.notify_all();
+                return r;
+            }
+            g.status[self.me] = TStatus::Waiting(cv);
+            if g.draining {
+                // Drain: no token discipline; poll with a timeout so a
+                // missed drain notification can never wedge the join.
+                ModelSched::drain_sweep(&mut g);
+                self.sched.cv.notify_all();
+                let (ng, _) = self
+                    .sched
+                    .cv
+                    .wait_timeout(g, std::time::Duration::from_millis(2))
+                    .unwrap_or_else(PoisonError::into_inner);
+                g = ng;
+                continue;
+            }
+            // Forced switch: `me` just went to sleep; any runnable thread
+            // may take over, at no preemption cost.
+            self.sched.grant(&mut g, self.me, false);
+            self.sched.cv.notify_all();
+            g = self.sched.park_until_current(g, self.me);
+        }
+    }
+
+    fn yield_point(&self) {
+        let g = lock_state(&self.sched.state);
+        if g.draining || g.current != self.me {
+            return;
+        }
+        let g = self.sched.choice_point(g, self.me);
+        drop(g);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The DFS explorer
+// ---------------------------------------------------------------------------
+
+/// One failing schedule, with enough context to replay it by hand.
+#[derive(Debug, Clone)]
+pub struct CheckFailure {
+    /// What went wrong (deadlock / panic / bound overrun / property).
+    pub description: String,
+    /// The decision sequence (chosen option per choice point) of the
+    /// failing execution.
+    pub schedule: Vec<usize>,
+    /// Schedules explored before the failure surfaced.
+    pub schedules_explored: usize,
+}
+
+impl std::fmt::Display for CheckFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (after {} schedules; failing schedule: {:?})",
+            self.description, self.schedules_explored, self.schedule
+        )
+    }
+}
+
+impl std::error::Error for CheckFailure {}
+
+/// What an exploration covered.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Executions (complete schedules) run.
+    pub schedules: usize,
+    /// True when the DFS exhausted the schedule tree within the budget —
+    /// i.e. the verified properties hold over **every** schedule within
+    /// the preemption bound, not just the ones a budget allowed.
+    pub complete: bool,
+    /// Deepest decision sequence seen (a state-space size proxy).
+    pub peak_decisions: usize,
+}
+
+/// Bounds for one exploration.
+#[derive(Debug, Clone, Copy)]
+pub struct Explorer {
+    /// Max executions before giving up (incomplete, not failed).
+    pub max_schedules: usize,
+    /// Max scheduling decisions per execution (livelock guard).
+    pub max_decisions: usize,
+    /// Preemption bound: extra context switches at points where the
+    /// running thread could have continued.  Blocking-driven switches are
+    /// always free, so even bound 0 explores every wait/notify ordering.
+    pub preemptions: usize,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer { max_schedules: 200_000, max_decisions: 10_000, preemptions: 2 }
+    }
+}
+
+impl Explorer {
+    /// Run the DFS: `setup` is called once per execution to spawn the
+    /// scenario's logical threads onto the fresh scheduler and returns
+    /// the post-run property validator.  Returns the first failure
+    /// (scheduler-detected or validator-rejected) or a coverage report.
+    /// Crate-visible (the scheduler types are not public API); external
+    /// callers go through `check::check_pool`.
+    pub(crate) fn run<S, V>(&self, mut setup: S) -> Result<Report, CheckFailure>
+    where
+        S: FnMut(&Arc<ModelSched>) -> V,
+        V: FnOnce() -> Result<(), String>,
+    {
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut schedules = 0usize;
+        let mut peak = 0usize;
+        loop {
+            if schedules >= self.max_schedules {
+                return Ok(Report { schedules, complete: false, peak_decisions: peak });
+            }
+            let sched = Arc::new(ModelSched::new(
+                prefix.clone(),
+                self.max_decisions,
+                self.preemptions,
+            ));
+            let validate = setup(&sched);
+            sched.start();
+            let (decisions, failure) = sched.finish();
+            schedules += 1;
+            peak = peak.max(decisions.len());
+            let schedule: Vec<usize> = decisions.iter().map(|d| d.0).collect();
+            if let Some(description) = failure {
+                return Err(CheckFailure {
+                    description,
+                    schedule,
+                    schedules_explored: schedules,
+                });
+            }
+            if let Err(msg) = validate() {
+                return Err(CheckFailure {
+                    description: format!("property violated: {msg}"),
+                    schedule,
+                    schedules_explored: schedules,
+                });
+            }
+            // Backtrack: deepest decision with an untried option.  The
+            // admissible-options count already encodes the preemption
+            // budget at that point, so plain increment is sound.
+            match decisions
+                .iter()
+                .rposition(|&(chosen, options)| chosen + 1 < options)
+            {
+                Some(k) => {
+                    prefix = decisions[..k].iter().map(|d| d.0).collect();
+                    prefix.push(decisions[k].0 + 1);
+                }
+                None => {
+                    return Ok(Report { schedules, complete: true, peak_decisions: peak })
+                }
+            }
+        }
+    }
+}
+
+/// A [`SyncOps`] wrapper that corrupts wake delivery — the checker's own
+/// oracle.  A checker that cannot find a deliberately-planted lost
+/// wakeup proves nothing; `tests/pool_check.rs` plants these and asserts
+/// a deadlock is reported.
+pub(crate) struct Sabotage<S> {
+    inner: S,
+    /// `None` = faithful passthrough (the harness always wraps, so the
+    /// checked protocol code is byte-identical with and without a bug).
+    bug: Option<SabotageBug>,
+    fired: AtomicBool,
+}
+
+/// Which wakeup to lose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SabotageBug {
+    /// Swallow the first `notify_all(work)` — a dispatch whose workers
+    /// were already asleep never starts, so the dispatcher's barrier
+    /// hangs.
+    DropFirstWorkWake,
+    /// Swallow every `notify_one(done)` — the last acknowledgement never
+    /// wakes a sleeping dispatcher.
+    DropDoneWake,
+}
+
+impl<S> Sabotage<S> {
+    pub(crate) fn new(inner: S, bug: Option<SabotageBug>) -> Self {
+        Sabotage { inner, bug, fired: AtomicBool::new(false) }
+    }
+
+    fn doctor(&self, w: &mut Wake) {
+        match self.bug {
+            None => {}
+            Some(SabotageBug::DropFirstWorkWake) => {
+                if w.work_all && !self.fired.swap(true, Ordering::Relaxed) {
+                    w.work_all = false;
+                }
+            }
+            Some(SabotageBug::DropDoneWake) => {
+                w.done_one = false;
+            }
+        }
+    }
+}
+
+impl<S: SyncOps> SyncOps for Sabotage<S> {
+    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
+        self.inner.locked(|s, w| {
+            let r = f(s, w);
+            self.doctor(w);
+            r
+        })
+    }
+
+    fn locked_wait<R>(
+        &self,
+        cv: Cv,
+        mut f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>,
+    ) -> R {
+        self.inner.locked_wait(cv, |s, w| {
+            let r = f(s, w);
+            self.doctor(w);
+            r
+        })
+    }
+
+    fn yield_point(&self) {
+        self.inner.yield_point();
+    }
+}

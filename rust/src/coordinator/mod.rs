@@ -24,7 +24,8 @@
 //! `!Send`, so engines live on one dedicated worker thread; clients talk
 //! to it over channels and get their replies via oneshot.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -54,6 +55,25 @@ impl Default for ServeConfig {
             batch_timeout: Duration::from_millis(2),
         }
     }
+}
+
+/// Panic payload marking an *unrecoverable* worker failure.  The worker
+/// converts ordinary engine panics into per-batch errors and keeps
+/// serving; a panic carrying this marker is deliberately re-raised
+/// instead, killing the worker thread — `check::fault` throws it
+/// (`Fault::Die`) to prove the server-side handling of true worker death:
+/// pending replies resolve with errors (never hang) and subsequent
+/// submissions fail promptly.
+#[derive(Debug, Clone, Copy)]
+pub struct FatalFault;
+
+/// Lock the stats mutex, recovering from poisoning: the stats are plain
+/// monotone counters plus a reservoir — every update is complete the
+/// moment it is made, so a panic elsewhere on the worker thread cannot
+/// leave them torn, and propagating the poison would turn one engine
+/// panic into a `stats()` panic for every later observer.
+fn lock_stats(m: &Mutex<ServerStats>) -> MutexGuard<'_, ServerStats> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// One inference reply.
@@ -199,7 +219,22 @@ pub struct InferenceServer {
     tx: std::sync::mpsc::Sender<Msg>,
     stats: Arc<Mutex<ServerStats>>,
     handle: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Raised when the worker thread exits for any reason — normal
+    /// shutdown, error return, or panic (a drop guard on the worker sets
+    /// it even mid-unwind) — so `submit` fails promptly instead of
+    /// enqueueing onto a dead server.
+    down: Arc<AtomicBool>,
     pub buckets: Vec<usize>,
+}
+
+/// Sets the server's `down` flag when the worker thread exits, however
+/// it exits (the `Drop` runs during unwind too).
+struct DownGuard(Arc<AtomicBool>);
+
+impl Drop for DownGuard {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
 }
 
 impl InferenceServer {
@@ -230,9 +265,12 @@ impl InferenceServer {
         let worker_stats = stats.clone();
         let worker_buckets = buckets.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let down = Arc::new(AtomicBool::new(false));
+        let worker_down = Arc::clone(&down);
         let handle = std::thread::Builder::new()
             .name("tvmq-worker".into())
             .spawn(move || {
+                let _down = DownGuard(worker_down);
                 worker_loop(factory, cfg, worker_buckets, rx, worker_stats, ready_tx)
             })
             .map_err(|e| anyhow!("spawning worker: {e}"))?;
@@ -240,11 +278,20 @@ impl InferenceServer {
         ready_rx
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))??;
-        Ok(Self { tx, stats, handle: Some(handle), buckets })
+        Ok(Self { tx, stats, handle: Some(handle), down, buckets })
     }
 
     /// Fire-and-wait-later submit: enqueue the image, get a pending reply.
+    ///
+    /// Fails promptly — never with a reply that would block forever — once
+    /// the server is down: after [`InferenceServer::request_shutdown`], or
+    /// after the worker thread exited or died (its drop guard raises the
+    /// flag even when it dies mid-unwind, before the channel observably
+    /// disconnects).
     pub fn submit(&self, image: TensorData) -> Result<PendingReply> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(anyhow!("server is down (worker exited or shutdown requested)"));
+        }
         let (reply, rx) = std::sync::mpsc::sync_channel(1);
         self.tx
             .send(Msg::Job(Job { image, enqueued: Instant::now(), reply }))
@@ -258,11 +305,20 @@ impl InferenceServer {
     }
 
     pub fn stats(&self) -> ServerStats {
-        self.stats.lock().expect("stats lock").clone()
+        lock_stats(&self.stats).clone()
+    }
+
+    /// Begin shutdown without consuming the server: new submissions fail
+    /// immediately, while the worker drains whatever is already queued
+    /// (every pending reply resolves — with a result or a clean error).
+    /// Call [`InferenceServer::shutdown`] (or drop) afterwards to join.
+    pub fn request_shutdown(&self) {
+        self.down.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
     }
 
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.request_shutdown();
         if let Some(h) = self.handle.take() {
             h.join().map_err(|_| anyhow!("worker panicked"))??;
         }
@@ -272,7 +328,7 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.request_shutdown();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -403,9 +459,32 @@ fn serve_batch(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
 /// Fail every job in the batch with the same message and count them.
 fn fail_batch(jobs: Vec<Job>, stats: &Arc<Mutex<ServerStats>>, e: anyhow::Error) {
     let msg = format!("{e}");
-    stats.lock().expect("stats lock").errors += jobs.len() as u64;
+    lock_stats(stats).errors += jobs.len() as u64;
     for job in jobs {
         let _ = job.reply.send(Err(anyhow!("batch failed: {msg}")));
+    }
+}
+
+/// Run the engine, containing panics: an engine panic becomes a per-batch
+/// error (the worker keeps serving) — except a [`FatalFault`]-carrying
+/// panic, which is re-raised to model unrecoverable worker death.  The
+/// batch's jobs are still owned by the caller either way, so their reply
+/// channels drop (clients get prompt errors, never hangs) when the fatal
+/// path unwinds the worker.
+fn serve_batch_contained(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| serve_batch(eng, jobs))) {
+        Ok(r) => r,
+        Err(payload) => {
+            if payload.is::<FatalFault>() {
+                std::panic::resume_unwind(payload);
+            }
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string payload>".into());
+            Err(anyhow!("engine panicked: {msg}"))
+        }
     }
 }
 
@@ -427,7 +506,7 @@ fn process_batch(
         Some(e) => e,
         None => return fail_batch(jobs, stats, anyhow!("no engine for bucket {bucket}")),
     };
-    if let Err(e) = serve_batch(eng, &jobs) {
+    if let Err(e) = serve_batch_contained(eng, &jobs) {
         return fail_batch(jobs, stats, e);
     }
 
@@ -435,7 +514,7 @@ fn process_batch(
     let mut row_shape = eng.out.shape.clone();
     row_shape[0] = 1;
 
-    let mut s = stats.lock().expect("stats lock");
+    let mut s = lock_stats(stats);
     s.requests += n as u64;
     s.batches += 1;
     *s.batch_histogram.entry(bucket).or_insert(0) += 1;
@@ -496,6 +575,27 @@ mod tests {
         let stats = r.stats();
         assert_eq!(stats.p50_ms, 50.0);
         assert!((stats.mean_ms - 49.5).abs() < 1e-9);
+    }
+
+    /// A panic on the worker thread while holding the stats lock must not
+    /// make every later `stats()` reader panic: `lock_stats` recovers the
+    /// guard (counters are complete at every update, so there is no torn
+    /// state to fear).
+    #[test]
+    fn stats_lock_recovers_from_poisoning() {
+        crate::check::fault::silence_injected_faults();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        lock_stats(&stats).requests = 7;
+        let poisoner = Arc::clone(&stats);
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.lock().unwrap();
+            panic!("injected poisoning panic");
+        })
+        .join();
+        assert!(stats.is_poisoned(), "the panic above must have poisoned the lock");
+        assert_eq!(lock_stats(&stats).requests, 7);
+        lock_stats(&stats).errors += 1;
+        assert_eq!(lock_stats(&stats).errors, 1, "the recovered guard still writes");
     }
 
     #[test]

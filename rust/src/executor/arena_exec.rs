@@ -35,6 +35,14 @@
 //! Every mode assigns each row to exactly one band, so the schedule can
 //! never change a result bit.
 //!
+//! The pool's epoch protocol itself is model-checked: `crate::check`
+//! runs the same generic `dispatch`/`worker_loop` code this executor's
+//! pool monomorphizes under a deterministic scheduler that enumerates
+//! interleavings exhaustively (`tests/pool_check.rs` — covering exactly
+//! once, termination under every schedule, unwind soundness), and the
+//! pool's slot lock recovers from poisoning, so one kernel panic cannot
+//! wedge later dispatches.
+//!
 //! Layouts: every conv kernel exists for NCHW, NHWC, and NCHW{c}, in
 //! fp32, standalone int8 (i32 out), and fused-quantized (q→conv→dq
 //! collapsed) forms, each with the full `[bias] [add] [relu] [add]`

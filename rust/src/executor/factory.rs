@@ -56,6 +56,24 @@ pub trait EngineFactory {
     }
 }
 
+/// Boxed factories are factories, so callers can assemble decorator
+/// stacks (e.g. `crate::check::fault::FaultyFactory` around a native
+/// factory) behind `Box<dyn EngineFactory + Send>` and still hand them to
+/// `InferenceServer::start_with`.
+impl<F: EngineFactory + ?Sized> EngineFactory for Box<F> {
+    fn buckets(&self) -> Vec<usize> {
+        (**self).buckets()
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        (**self).build(batch)
+    }
+
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Artifact-backed factory
 // ---------------------------------------------------------------------------

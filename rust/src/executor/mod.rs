@@ -32,7 +32,10 @@
 mod arena_exec;
 pub mod factory;
 mod graph_exec;
-mod pool;
+// Crate-visible (not `pub`): `crate::check` runs the pool's generic epoch
+// protocol under its model scheduler, but the SyncOps surface stays out of
+// the public API.
+pub(crate) mod pool;
 pub mod spec;
 mod vm;
 

@@ -26,6 +26,10 @@
 //! - [`quant`]    — host-side quantization + memory footprint accounting
 //! - [`coordinator`] — batching inference server (artifact-backed or
 //!   native arena engines, via any `EngineFactory`)
+//! - [`check`]    — concurrency checking: the pool's epoch protocol run
+//!   under a deterministic model scheduler that enumerates interleavings
+//!   exhaustively (bounded DFS), plus deterministic fault injection for
+//!   the serving path (`FaultyFactory`/`FaultyEngine`)
 //! - [`perfmodel`] — analytic roofline / ideal-speedup model (Table 2)
 //! - [`tune`]     — AutoTVM-style schedule autotuner for the arena tier:
 //!   typed knob space (banding / band caps / fuse / lane strategy),
@@ -43,6 +47,7 @@
 compile_error!("tvmq assumes a little-endian target");
 
 pub mod bench;
+pub mod check;
 pub mod coordinator;
 pub mod executor;
 pub mod graph;

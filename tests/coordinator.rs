@@ -220,3 +220,32 @@ fn empty_factory_fails_startup() {
     let factory = MockFactory::new(&[]);
     assert!(InferenceServer::start_with(factory, cfg(4, 1)).is_err());
 }
+
+/// Shutdown with in-flight requests: everything accepted before
+/// `request_shutdown` resolves (bounded by `wait_timeout`, so a lost
+/// reply fails the assert instead of hanging the suite), and submissions
+/// after it fail promptly instead of returning a reply that would block
+/// forever.
+#[test]
+fn request_shutdown_rejects_new_submits_and_drains_queued_work() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let server = InferenceServer::start_with(factory, cfg(4, 50)).unwrap();
+
+    let pending: Vec<PendingReply> =
+        (0..3).map(|c| server.submit(image(c)).unwrap()).collect();
+    server.request_shutdown();
+
+    let err = server.submit(image(5)).unwrap_err();
+    assert!(err.to_string().contains("down"), "got: {err}");
+
+    for (c, p) in pending.into_iter().enumerate() {
+        let reply = p
+            .wait_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("queued request {c} hung across shutdown: {e}"));
+        assert_eq!(reply.class, c, "reply routed to the wrong request");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 0);
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,310 @@
+//! Fault-injected serving: the coordinator under deterministic engine
+//! failure, panic, worker death, stall, and build-time faults — driven
+//! through `InferenceServer::start_with` over a `FaultyFactory`.
+//!
+//! The properties pinned here (the tentpole's serving half):
+//! - per-request errors propagate without deadlock and are counted in
+//!   `ServerStats.errors`;
+//! - the worker survives an engine *panic* and keeps serving;
+//! - true worker death (`Fault::Die`) resolves every pending reply with
+//!   an error — promptly, never a hang — and later submissions fail fast;
+//! - build-time faults fail startup cleanly instead of hanging it;
+//! - shutdown with in-flight requests resolves every `PendingReply`
+//!   (bounded by `wait_timeout`, so a regression hangs the assert, not
+//!   the suite).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use tvmq::check::fault::{silence_injected_faults, Fault, FaultPlan, FaultyFactory};
+use tvmq::coordinator::{InferenceServer, PendingReply, ServeConfig};
+use tvmq::executor::{EngineFactory, EngineKind, EngineSpec, ExecSnapshot, Executor};
+use tvmq::runtime::{DType, TensorData};
+
+const DIM: usize = 4;
+const CLASSES: usize = 8;
+
+/// Minimal deterministic engine (same construction as tests/coordinator.rs):
+/// row `i`'s logits peak at `round(input[i][0])`.
+struct MockExec {
+    batch: usize,
+    calls: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Executor for MockExec {
+    fn run(&self, input: &TensorData) -> Result<TensorData> {
+        if input.shape != vec![self.batch, DIM] {
+            return Err(anyhow!("mock: bad input shape {:?}", input.shape));
+        }
+        self.calls.lock().unwrap().push(self.batch);
+        let x = input.as_f32_slice()?;
+        let mut out = vec![0f32; self.batch * CLASSES];
+        for i in 0..self.batch {
+            let v = x[i * DIM];
+            for j in 0..CLASSES {
+                out[i * CLASSES + j] = -((j as f32) - v).abs();
+            }
+        }
+        TensorData::from_f32(vec![self.batch, CLASSES], &out)
+    }
+
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn input_desc(&self) -> (Vec<usize>, DType) {
+        (vec![self.batch, DIM], DType::F32)
+    }
+
+    fn output_desc(&self) -> (Vec<usize>, DType) {
+        (vec![self.batch, CLASSES], DType::F32)
+    }
+
+    fn counters(&self) -> ExecSnapshot {
+        ExecSnapshot {
+            invocations: 0,
+            dispatches: 0,
+            dynamic_allocs: 0,
+            boundary_bytes: 0,
+            instructions: 0,
+        }
+    }
+}
+
+struct MockFactory {
+    buckets: Vec<usize>,
+    calls: Arc<Mutex<Vec<usize>>>,
+}
+
+impl MockFactory {
+    fn new(buckets: &[usize]) -> Self {
+        MockFactory { buckets: buckets.to_vec(), calls: Arc::new(Mutex::new(Vec::new())) }
+    }
+}
+
+impl EngineFactory for MockFactory {
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(MockExec { batch, calls: self.calls.clone() }))
+    }
+}
+
+fn image(class: usize) -> TensorData {
+    TensorData::from_f32(vec![1, DIM], &[class as f32; DIM]).unwrap()
+}
+
+fn cfg(max_batch: usize, timeout_ms: u64) -> ServeConfig {
+    ServeConfig {
+        spec: EngineSpec::new(EngineKind::Arena),
+        max_batch,
+        batch_timeout: Duration::from_millis(timeout_ms),
+    }
+}
+
+/// Bound every wait so a lost reply fails the assert instead of hanging
+/// the suite.
+const REPLY_BOUND: Duration = Duration::from_secs(10);
+
+/// Append one JSONL record to the CI summary artifact (same file the
+/// model-check suite writes its explored-schedule counts to).
+fn record_summary(scenario: &str, requests: usize, ok: usize, errors: usize) {
+    let Some(path) = std::env::var_os("TVMQ_CHECK_SUMMARY") else {
+        return;
+    };
+    use std::io::Write;
+    let line = format!(
+        "{{\"scenario\":\"{scenario}\",\"requests\":{requests},\"ok\":{ok},\"errors\":{errors}}}\n"
+    );
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+#[test]
+fn engine_error_fails_its_batch_and_serving_continues() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Error)]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+
+    let err = server.submit(image(2)).unwrap().wait_timeout(REPLY_BOUND).unwrap_err();
+    assert!(err.to_string().contains("injected engine run error"), "got: {err}");
+
+    // The very next request is served normally by the same worker.
+    let reply = server.submit(image(3)).unwrap().wait_timeout(REPLY_BOUND).unwrap();
+    assert_eq!(reply.class, 3);
+
+    let stats = server.stats();
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.requests, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn engine_panic_is_contained_and_serving_continues() {
+    silence_injected_faults();
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Panic)]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+
+    // The panic becomes a per-batch error; the worker stays alive.
+    let err = server.submit(image(1)).unwrap().wait_timeout(REPLY_BOUND).unwrap_err();
+    assert!(err.to_string().contains("engine panicked"), "got: {err}");
+    assert!(err.to_string().contains("injected engine run panic"), "got: {err}");
+
+    let reply = server.submit(image(5)).unwrap().wait_timeout(REPLY_BOUND).unwrap();
+    assert_eq!(reply.class, 5);
+
+    let stats = server.stats();
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.requests, 1);
+    // Stats stay readable even though a panic crossed the worker (the
+    // lock recovers from poisoning rather than cascading).
+    assert_eq!(stats.batches, 1);
+    server.shutdown().unwrap();
+}
+
+/// The killed-worker regression: `Fault::Die` re-raises out of the
+/// worker thread.  The in-flight reply must resolve with an error
+/// (bounded, no hang) and subsequent submissions must fail promptly.
+#[test]
+fn worker_death_resolves_pending_replies_and_fails_later_submits() {
+    silence_injected_faults();
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Die)]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+
+    let pending = server.submit(image(0)).unwrap();
+    let err = pending.wait_timeout(REPLY_BOUND).unwrap_err();
+    assert!(
+        err.to_string().contains("dropped request") || err.to_string().contains("timed out"),
+        "a dead worker must drop the reply channel, got: {err}"
+    );
+
+    // The down flag is raised by the worker's drop guard during unwind;
+    // give the dying thread a bounded moment, then submits must fail.
+    let deadline = std::time::Instant::now() + REPLY_BOUND;
+    loop {
+        match server.submit(image(1)) {
+            Err(e) => {
+                assert!(e.to_string().contains("down"), "got: {e}");
+                break;
+            }
+            Ok(reply) => {
+                // Raced the unwind: the enqueued job can never be served;
+                // its reply must still resolve to an error, not hang.
+                assert!(reply.wait_timeout(REPLY_BOUND).is_err());
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "submit never started failing after worker death"
+                );
+            }
+        }
+    }
+
+    // Joining a dead worker reports the death instead of pretending a
+    // clean exit.
+    assert!(server.shutdown().is_err());
+}
+
+#[test]
+fn build_error_fails_startup_cleanly() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1, 2]))
+        .build_faults(FaultPlan::script([Some(Fault::Error)]));
+    let err = InferenceServer::start_with(factory, cfg(2, 1)).unwrap_err();
+    assert!(err.to_string().contains("injected factory build error"), "got: {err}");
+}
+
+#[test]
+fn build_panic_fails_startup_instead_of_hanging_it() {
+    silence_injected_faults();
+    let factory = FaultyFactory::new(MockFactory::new(&[1, 2]))
+        .build_faults(FaultPlan::script([None, Some(Fault::Panic)]));
+    let err = InferenceServer::start_with(factory, cfg(2, 1)).unwrap_err();
+    assert!(err.to_string().contains("worker died during startup"), "got: {err}");
+}
+
+/// Seeded soak: a 25% error rate over 40 requests across mixed buckets.
+/// Every single reply resolves (success or error — never a timeout), and
+/// the stats ledger balances: every request is accounted as served or
+/// errored.
+#[test]
+fn seeded_error_soak_never_loses_a_reply_and_stats_balance() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1, 2, 4]))
+        .run_faults(FaultPlan::seeded(0xFA17, 25, Fault::Error));
+    let server = InferenceServer::start_with(factory, cfg(4, 1)).unwrap();
+
+    const N: usize = 40;
+    let mut outcomes = (0usize, 0usize);
+    for c in 0..N {
+        let pending = server.submit(image(c % CLASSES)).unwrap();
+        match pending.wait_timeout(REPLY_BOUND) {
+            Ok(reply) => {
+                assert_eq!(reply.class, c % CLASSES, "reply routed to the wrong request");
+                outcomes.0 += 1;
+            }
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("injected engine run error"),
+                    "only the injected fault may fail requests, got: {e}"
+                );
+                outcomes.1 += 1;
+            }
+        }
+    }
+    assert_eq!(outcomes.0 + outcomes.1, N);
+    assert!(outcomes.0 > 0, "soak produced no successes");
+    assert!(outcomes.1 > 0, "soak produced no injected errors — plan never fired");
+
+    let stats = server.stats();
+    assert_eq!(
+        stats.requests + stats.errors,
+        N as u64,
+        "every request must be accounted exactly once: {stats:?}"
+    );
+    assert_eq!(stats.requests, outcomes.0 as u64);
+    assert_eq!(stats.errors, outcomes.1 as u64);
+    record_summary("fault-soak-seeded-25pct", N, outcomes.0, outcomes.1);
+    server.shutdown().unwrap();
+}
+
+/// Shutdown with requests still in flight (the engine is stalled by an
+/// injected delay): every pending reply resolves within the bound, new
+/// submissions fail immediately, and the join is clean.
+#[test]
+fn shutdown_with_in_flight_requests_resolves_every_reply() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1])).run_faults(FaultPlan::script([
+        Some(Fault::Delay(Duration::from_millis(50))),
+        Some(Fault::Delay(Duration::from_millis(50))),
+        Some(Fault::Delay(Duration::from_millis(50))),
+    ]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+
+    let pending: Vec<PendingReply> =
+        (0..3).map(|c| server.submit(image(c)).unwrap()).collect();
+    server.request_shutdown();
+
+    // Submitting after shutdown fails promptly — no phantom PendingReply.
+    let err = server.submit(image(7)).unwrap_err();
+    assert!(err.to_string().contains("down"), "got: {err}");
+
+    // The queued requests were accepted before shutdown: each resolves.
+    for (c, p) in pending.into_iter().enumerate() {
+        let reply = p
+            .wait_timeout(REPLY_BOUND)
+            .unwrap_or_else(|e| panic!("in-flight request {c} never resolved: {e}"));
+        assert_eq!(reply.class, c);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 0);
+    record_summary("fault-shutdown-in-flight", 3, 3, 0);
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,149 @@
+//! Exhaustive interleaving verification of the arena pool's epoch
+//! protocol — the concurrency gate ROADMAP item 5 asked for.
+//!
+//! Each test hands `tvmq::check::check_pool` a small worker/band/epoch
+//! configuration; the checker runs the **real** `dispatch`/`worker_loop`/
+//! `signal_shutdown` code under a deterministic scheduler and explores
+//! every schedule within the stated preemption bound (see
+//! `tvmq::check` module docs for exactly what that does and does not
+//! prove).  A reported `complete` means the property held over the whole
+//! bounded schedule tree, not a sample.
+//!
+//! Environment knobs (CI sets all three):
+//! - `TVMQ_CHECK_BUDGET` — max schedules per scenario (default 200000);
+//!   a truncated scenario FAILS its test, because partial coverage is
+//!   not proof.
+//! - `TVMQ_CHECK_PREEMPTIONS` — preemption bound for the large (3×3)
+//!   scenario (default 1; the small scenarios always run at 2).
+//! - `TVMQ_CHECK_SUMMARY` — JSONL path appended with one line per
+//!   scenario (explored-schedule counts; uploaded as a CI artifact).
+
+use tvmq::check::{check_pool, check_pool_with, Explorer, PoolCheckConfig, Report, SabotageBug};
+
+fn budget() -> usize {
+    std::env::var("TVMQ_CHECK_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000)
+}
+
+fn big_config_preemptions() -> usize {
+    std::env::var("TVMQ_CHECK_PREEMPTIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+fn explorer(preemptions: usize) -> Explorer {
+    Explorer { max_schedules: budget(), max_decisions: 10_000, preemptions }
+}
+
+/// Append one JSONL record of what a scenario explored (CI artifact).
+fn record_summary(scenario: &str, cfg: &PoolCheckConfig, preemptions: usize, r: &Report) {
+    let Some(path) = std::env::var_os("TVMQ_CHECK_SUMMARY") else {
+        return;
+    };
+    use std::io::Write;
+    let line = format!(
+        "{{\"scenario\":\"{scenario}\",\"workers\":{},\"bands\":{},\"epochs\":{},\
+         \"preemptions\":{preemptions},\"schedules\":{},\"complete\":{},\
+         \"peak_decisions\":{}}}\n",
+        cfg.workers, cfg.bands, cfg.epochs, r.schedules, r.complete, r.peak_decisions
+    );
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Check `cfg` exhaustively at `preemptions`; fail on any convicted
+/// schedule AND on budget truncation (incomplete exploration is not a
+/// pass).
+fn prove(scenario: &str, cfg: PoolCheckConfig, preemptions: usize) -> Report {
+    let r = check_pool(cfg, explorer(preemptions))
+        .unwrap_or_else(|f| panic!("{scenario}: {f}"));
+    record_summary(scenario, &cfg, preemptions, &r);
+    assert!(
+        r.complete,
+        "{scenario}: exploration truncated at {} schedules — raise TVMQ_CHECK_BUDGET",
+        r.schedules
+    );
+    r
+}
+
+fn cfg(workers: usize, bands: usize, epochs: usize) -> PoolCheckConfig {
+    PoolCheckConfig { workers, bands, epochs, panic_band: None }
+}
+
+/// Covering-exactly-once + termination over every schedule, small
+/// configurations, preemption bound 2.
+#[test]
+fn small_configs_prove_covering_and_termination_at_preemption_2() {
+    for (w, b) in [(1, 1), (1, 2), (2, 2), (2, 3)] {
+        let name = format!("cover-{w}w{b}b");
+        let r = prove(&name, cfg(w, b, 2), 2);
+        assert!(r.schedules >= 2, "{name}: {} schedules — scheduler never branched", r.schedules);
+    }
+}
+
+/// The acceptance-criteria configuration: 3 workers × 3 bands, two
+/// back-to-back epochs plus shutdown, exhaustive at the stated
+/// preemption bound.
+#[test]
+fn three_workers_three_bands_is_exhaustively_verified() {
+    // Preemption bound 0 first: every blocking-driven ordering, both
+    // epochs — cheap and still a complete tree.
+    let r0 = prove("cover-3w3b-p0", cfg(3, 3, 2), 0);
+    assert!(r0.schedules >= 6, "3 workers must yield at least 3! ack orders, got {}", r0.schedules);
+    // Then the stated bound (default 1) over a single epoch + shutdown.
+    prove("cover-3w3b", cfg(3, 3, 1), big_config_preemptions());
+}
+
+/// Unwind soundness: a panicking worker band still acknowledges its
+/// epoch, the panic re-raises on the dispatcher exactly once, and the
+/// next epoch runs clean — under every schedule.
+#[test]
+fn panicking_worker_band_is_unwind_sound_under_every_schedule() {
+    prove(
+        "unwind-worker-band",
+        PoolCheckConfig { workers: 2, bands: 3, epochs: 2, panic_band: Some(1) },
+        1,
+    );
+}
+
+/// Unwind soundness when the *dispatcher's own* band panics: the epoch
+/// barrier must still wait out the workers during unwind, and the next
+/// dispatch starts clean.
+#[test]
+fn panicking_dispatcher_band_is_unwind_sound_under_every_schedule() {
+    prove(
+        "unwind-band0",
+        PoolCheckConfig { workers: 2, bands: 2, epochs: 2, panic_band: Some(0) },
+        1,
+    );
+}
+
+/// The checker's own oracle: a deliberately lost "work" wakeup (workers
+/// asleep through a dispatch) must be convicted as a deadlock.  A green
+/// checker that cannot find this bug proves nothing.
+#[test]
+fn checker_convicts_a_lost_work_wakeup() {
+    let f = check_pool_with(cfg(2, 2, 1), explorer(1), Some(SabotageBug::DropFirstWorkWake))
+        .expect_err("a dropped work wakeup must be detected");
+    assert!(
+        f.description.contains("deadlock"),
+        "expected a deadlock conviction, got: {f}"
+    );
+    assert!(!f.schedule.is_empty(), "conviction must carry the failing schedule");
+}
+
+/// Same oracle for the other direction: a lost "done" wakeup (dispatcher
+/// asleep through the final acknowledgement) must be convicted.
+#[test]
+fn checker_convicts_a_lost_done_wakeup() {
+    let f = check_pool_with(cfg(2, 2, 1), explorer(1), Some(SabotageBug::DropDoneWake))
+        .expect_err("a dropped done wakeup must be detected");
+    assert!(
+        f.description.contains("deadlock"),
+        "expected a deadlock conviction, got: {f}"
+    );
+}
