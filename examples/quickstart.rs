@@ -55,6 +55,7 @@ fn main() -> Result<()> {
             spec: EngineSpec::new(EngineKind::Graph),
             max_batch: 64,
             batch_timeout: Duration::from_millis(2),
+            ..ServeConfig::default()
         },
     )?);
     println!("serving with batch buckets {:?}", server.buckets);

@@ -1,0 +1,372 @@
+//! `bench-serve --load` — open-loop load generation against the sharded
+//! serving tier.
+//!
+//! The closed-loop `serve_bench` clients (submit, wait, submit again)
+//! self-throttle: when the server slows down, so do they, which hides
+//! exactly the tail behavior a serving tier is judged on.  This harness
+//! replays a **seeded arrival trace** instead — requests are submitted at
+//! their scheduled instants whether or not earlier ones have finished —
+//! so queueing delay, load shedding, and the p999 tail are all visible.
+//!
+//! Two trace shapes per run, same offered rate:
+//!
+//! - **poisson** — exponential inter-arrivals (`-ln(1-u)/λ`, seeded), the
+//!   standard memoryless open-loop workload;
+//! - **bursty** — the same mean rate delivered as back-to-back bursts
+//!   with idle gaps, the worst case for head-of-line blocking and the
+//!   shape that exercises admission shedding.
+//!
+//! Every reply's logits are compared **bit-for-bit** against
+//! `graph::interp::evaluate` on the factory's own template graph — a
+//! load run that returns wrong answers fails, it does not get to report
+//! a throughput.  Shed submissions (typed [`Rejected::Overloaded`]) are
+//! counted into the shed rate; they are the backpressure working, not
+//! errors.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{InferenceServer, PendingReply, Rejected, ServeConfig, WaitError};
+use crate::executor::{EngineKind, EngineSpec, NativeArenaFactory};
+use crate::graph::evaluate;
+use crate::metrics::{fmt_ms, EpochStats, Table};
+use crate::runtime::{synthetic_images, TensorData};
+use crate::util::rng::Rng64;
+
+/// Distinct request images per run; oracle logits are precomputed once
+/// per image and every reply is checked against its image's oracle.
+const LOAD_IMAGES: usize = 8;
+
+/// Reply-collector fan-in threads (the submitter round-robins pending
+/// replies across them so waiting never backpressures the trace clock).
+const COLLECTORS: usize = 4;
+
+/// How long a collector waits for any single reply before calling it a
+/// client-side timeout.  Generous: a healthy run never hits it.
+const COLLECT_WAIT: Duration = Duration::from_secs(30);
+
+/// One load run's shape.
+#[derive(Debug, Clone)]
+pub struct LoadOpts {
+    pub buckets: Vec<usize>,
+    pub image: usize,
+    pub threads: usize,
+    pub workers: usize,
+    pub queue_bound: usize,
+    pub batch_timeout: Duration,
+    /// Offered rate, requests/second (both traces share it).
+    pub rate_rps: f64,
+    /// Requests per trace.
+    pub requests: usize,
+    /// Burst size for the bursty trace.
+    pub burst: usize,
+    pub seed: u64,
+}
+
+impl LoadOpts {
+    /// CI smoke shape: 2 workers, a short bounded trace, and a queue
+    /// bound tight enough that the bursty trace actually exercises the
+    /// shedding path on most machines.
+    pub fn quick() -> Self {
+        LoadOpts {
+            buckets: vec![1, 4, 8],
+            image: 16,
+            threads: 1,
+            workers: 2,
+            queue_bound: 32,
+            batch_timeout: Duration::from_millis(2),
+            rate_rps: 2000.0,
+            requests: 600,
+            burst: 48,
+            seed: 7,
+        }
+    }
+}
+
+/// One trace's results — the machine-readable perf record.
+#[derive(Debug, Clone)]
+pub struct LoadRow {
+    pub trace: String,
+    pub offered: usize,
+    /// Replies served OK (and oracle-verified).
+    pub served: usize,
+    /// Submissions shed at the admission gate.
+    pub shed: usize,
+    /// Everything else that went wrong, by kind.
+    pub worker_died: usize,
+    pub timeouts: usize,
+    pub other_errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub shed_rate: f64,
+    pub mean_batch: f64,
+}
+
+/// Cumulative arrival offsets (seconds) with exponential inter-arrivals.
+fn poisson_offsets(n: usize, rate_rps: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.f32() as f64;
+            t += -(1.0 - u).ln() / rate_rps;
+            t
+        })
+        .collect()
+}
+
+/// Same mean rate, delivered as back-to-back bursts separated by idle
+/// gaps: `burst` arrivals at one instant, then silence for `burst/rate`.
+fn bursty_offsets(n: usize, rate_rps: f64, burst: usize) -> Vec<f64> {
+    let burst = burst.max(1);
+    let gap = burst as f64 / rate_rps;
+    (0..n).map(|i| (i / burst) as f64 * gap).collect()
+}
+
+struct TraceOutcome {
+    served: usize,
+    shed: usize,
+    worker_died: usize,
+    timeouts: usize,
+    other_errors: usize,
+    mismatches: usize,
+    wall_s: f64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Replay one arrival trace open-loop against `server`, verifying every
+/// reply against `oracle` (indexed like `images`).
+fn run_trace(
+    server: &Arc<InferenceServer>,
+    images: &[TensorData],
+    oracle: &Arc<Vec<TensorData>>,
+    offsets: &[f64],
+) -> Result<TraceOutcome> {
+    type Pending = (usize, PendingReply, Instant);
+    let mut txs: Vec<mpsc::Sender<Pending>> = Vec::with_capacity(COLLECTORS);
+    let mut collectors = Vec::with_capacity(COLLECTORS);
+    for _ in 0..COLLECTORS {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        txs.push(tx);
+        let oracle = Arc::clone(oracle);
+        collectors.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            let (mut ok, mut died, mut timed_out, mut other, mut bad) = (0, 0, 0, 0, 0);
+            while let Ok((idx, pending, t0)) = rx.recv() {
+                match pending.wait_timeout(COLLECT_WAIT) {
+                    Ok(reply) => {
+                        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                        // Bit-identical or it does not count as served.
+                        if reply.logits.data == oracle[idx].data {
+                            ok += 1;
+                        } else {
+                            bad += 1;
+                        }
+                    }
+                    Err(e) => match e.downcast_ref::<WaitError>() {
+                        Some(WaitError::WorkerDied) => died += 1,
+                        Some(WaitError::Timeout) => timed_out += 1,
+                        None => other += 1,
+                    },
+                }
+            }
+            (lat, ok, died, timed_out, other, bad)
+        }));
+    }
+
+    let start = Instant::now();
+    let mut shed = 0usize;
+    let mut submit_other = 0usize;
+    for (i, &off) in offsets.iter().enumerate() {
+        // Open loop: hold to the trace clock, never to the server's pace.
+        let target = start + Duration::from_secs_f64(off);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let idx = i % images.len();
+        match server.submit(images[idx].clone()) {
+            Ok(pending) => {
+                let _ = txs[i % COLLECTORS].send((idx, pending, Instant::now()));
+            }
+            Err(e) => match e.downcast_ref::<Rejected>() {
+                Some(Rejected::Overloaded { .. }) => shed += 1,
+                _ => submit_other += 1,
+            },
+        }
+    }
+    drop(txs);
+
+    let mut out = TraceOutcome {
+        served: 0,
+        shed,
+        worker_died: 0,
+        timeouts: 0,
+        other_errors: submit_other,
+        mismatches: 0,
+        wall_s: 0.0,
+        latencies_ms: Vec::new(),
+    };
+    for c in collectors {
+        let (lat, ok, died, timed_out, other, bad) =
+            c.join().map_err(|_| anyhow!("load collector panicked"))?;
+        out.latencies_ms.extend(lat);
+        out.served += ok;
+        out.worker_died += died;
+        out.timeouts += timed_out;
+        out.other_errors += other;
+        out.mismatches += bad;
+    }
+    out.wall_s = start.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Run both traces against a fresh sharded server and report.  Fails on
+/// any oracle mismatch, any client-side timeout, and (absent worker
+/// faults there is nothing to die) any lost reply — shed submissions are
+/// the only acceptable non-answers.
+pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
+    let spec = EngineSpec::new(EngineKind::Arena);
+    let factory = NativeArenaFactory::new(spec, &opts.buckets, opts.image, opts.threads)?;
+    let buckets = factory.buckets();
+
+    // Seeded request images + their interpreter-oracle logits, computed
+    // on the factory's OWN template graph (same weights the engines
+    // compiled), before any load is offered.
+    let g1 = factory.graph(1)?;
+    let images: Vec<TensorData> = (0..LOAD_IMAGES)
+        .map(|k| synthetic_images(1, &[3, opts.image, opts.image], opts.seed + k as u64))
+        .collect();
+    let oracle: Arc<Vec<TensorData>> = Arc::new(
+        images.iter().map(|x| evaluate(&g1, x)).collect::<Result<_>>()?,
+    );
+
+    let cfg = ServeConfig {
+        spec,
+        max_batch: *buckets.last().expect("non-empty buckets"),
+        batch_timeout: opts.batch_timeout,
+        workers: opts.workers,
+        queue_bound: opts.queue_bound,
+    };
+    let server = Arc::new(InferenceServer::start_with(factory, cfg)?);
+
+    let mut t = Table::new(
+        format!(
+            "bench-serve --load — open-loop arrival traces \
+             ({} req @ {:.0} rps, {} worker(s), queue bound {}, buckets {:?}, image {})",
+            opts.requests, opts.rate_rps, opts.workers, opts.queue_bound, buckets, opts.image
+        ),
+        &["Trace", "Served", "Shed", "Shed %", "Req/s", "p50 (ms)", "p99 (ms)",
+          "p999 (ms)", "Mean batch", "Errors"],
+    );
+
+    let traces: [(&str, Vec<f64>); 2] = [
+        ("poisson", poisson_offsets(opts.requests, opts.rate_rps, opts.seed)),
+        ("bursty", bursty_offsets(opts.requests, opts.rate_rps, opts.burst)),
+    ];
+    let mut rows = Vec::with_capacity(traces.len());
+    for (name, offsets) in traces {
+        let before = server.stats();
+        let outcome = run_trace(&server, &images, &oracle, &offsets)?;
+        let after = server.stats();
+        if outcome.mismatches > 0 {
+            bail!(
+                "{name}: {} replies were NOT bit-identical to the interpreter oracle",
+                outcome.mismatches
+            );
+        }
+        if outcome.timeouts > 0 || outcome.worker_died > 0 || outcome.other_errors > 0 {
+            bail!(
+                "{name}: {} timeouts, {} dead-worker replies, {} other errors \
+                 (a fault-free load run may shed, never fail)",
+                outcome.timeouts, outcome.worker_died, outcome.other_errors
+            );
+        }
+        let lat = EpochStats::from_samples(&outcome.latencies_ms, 0);
+        // Mean gathered batch over THIS trace's batches only.
+        let d_req = after.requests.saturating_sub(before.requests);
+        let d_batches = after.batches.saturating_sub(before.batches);
+        let mean_batch =
+            if d_batches == 0 { 0.0 } else { d_req as f64 / d_batches as f64 };
+        let shed_rate = outcome.shed as f64 / offsets.len().max(1) as f64;
+        let throughput = outcome.served as f64 / outcome.wall_s.max(1e-9);
+        t.row(vec![
+            name.into(),
+            outcome.served.to_string(),
+            outcome.shed.to_string(),
+            format!("{:.1}%", 100.0 * shed_rate),
+            format!("{throughput:.1}"),
+            fmt_ms(lat.p50_ms),
+            fmt_ms(lat.p99_ms),
+            fmt_ms(lat.p999_ms),
+            format!("{mean_batch:.2}"),
+            (outcome.timeouts + outcome.worker_died + outcome.other_errors).to_string(),
+        ]);
+        rows.push(LoadRow {
+            trace: name.into(),
+            offered: offsets.len(),
+            served: outcome.served,
+            shed: outcome.shed,
+            worker_died: outcome.worker_died,
+            timeouts: outcome.timeouts,
+            other_errors: outcome.other_errors,
+            wall_s: outcome.wall_s,
+            throughput_rps: throughput,
+            p50_ms: lat.p50_ms,
+            p99_ms: lat.p99_ms,
+            p999_ms: lat.p999_ms,
+            shed_rate,
+            mean_batch,
+        });
+    }
+
+    // Cross-check the client-side ledger against the server's: every
+    // offered request settled exactly one way.
+    let stats = server.stats();
+    let settled: usize = rows.iter().map(|r| r.served + r.shed).sum();
+    if settled != 2 * opts.requests {
+        bail!(
+            "load ledger mismatch: {} served+shed across both traces, offered {} \
+             (server saw {} ok / {} errors / {} shed)",
+            settled, 2 * opts.requests, stats.requests, stats.errors, stats.shed
+        );
+    }
+    Arc::try_unwrap(server)
+        .map_err(|_| anyhow!("load clients still hold server handles"))?
+        .shutdown()?;
+    Ok((t, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_seeded_and_monotone() {
+        let a = poisson_offsets(64, 500.0, 9);
+        let b = poisson_offsets(64, 500.0, 9);
+        assert_eq!(a, b, "same seed, same trace");
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "offsets must be non-decreasing");
+        assert!(a[0] > 0.0);
+        // Mean inter-arrival should land near 1/rate (loose bound: the
+        // trace is short and the check only guards unit mistakes).
+        let mean = a.last().unwrap() / a.len() as f64;
+        assert!((0.2e-3..=10.0e-3).contains(&mean), "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn bursty_trace_groups_arrivals() {
+        let off = bursty_offsets(10, 100.0, 4);
+        // Bursts of 4 at t=0, t=0.04, t=0.08.
+        assert_eq!(&off[..4], &[0.0; 4]);
+        assert!(off[4] > 0.0 && (off[4] - 0.04).abs() < 1e-12);
+        assert_eq!(off[4], off[7]);
+        assert_eq!(off[8], off[9]);
+    }
+}

@@ -2,6 +2,10 @@
 //! same rows the paper reports (DESIGN.md §5).  Shared by the `tvmq
 //! bench-*` CLI and the criterion benches.
 
+mod load;
+
+pub use load::{load_bench, LoadOpts, LoadRow};
+
 use std::rc::Rc;
 
 use anyhow::Result;
@@ -655,6 +659,7 @@ pub fn serve_bench(
     requests: usize,
     clients: usize,
     batch_timeout: std::time::Duration,
+    workers: usize,
 ) -> Result<Table> {
     use crate::coordinator::{InferenceServer, ServeConfig};
     use crate::executor::{ArenaExec, EngineFactory, NativeArenaFactory};
@@ -673,7 +678,7 @@ pub fn serve_bench(
         format!(
             "bench-serve — arena bucket serving vs per-request run \
              (image {image}, {total} requests, {clients} clients, \
-             buckets {buckets:?}, {threads} thread(s))"
+             buckets {buckets:?}, {threads} thread(s), {workers} worker(s))"
         ),
         &["Config", "Req/s", "p50 (ms)", "p95 (ms)", "p99 (ms)",
           "Mean batch", "Padded", "Errors"],
@@ -684,6 +689,8 @@ pub fn serve_bench(
         spec,
         max_batch: *buckets.last().expect("non-empty buckets"),
         batch_timeout,
+        workers,
+        ..ServeConfig::default()
     };
     let server = std::sync::Arc::new(InferenceServer::start_with(factory, cfg)?);
     let t0 = Instant::now();

@@ -55,6 +55,12 @@ enum Mode {
     Script(Mutex<VecDeque<Option<Fault>>>),
     /// Draw per call: `fault` with probability `percent`/100.
     Seeded(Mutex<(Rng64, u32, Fault)>),
+    /// Route each draw by the serving worker making it: worker `w` draws
+    /// from `plans[w]`, any other thread (or `w >= plans.len()`) from the
+    /// default plan.  This is what makes multi-worker fault scenarios
+    /// deterministic — a shared scripted plan would hand its steps to
+    /// whichever worker happens to run first.
+    PerWorker(Vec<FaultPlan>, Box<FaultPlan>),
 }
 
 /// A deterministic schedule of faults: one [`FaultPlan::next`] draw per
@@ -85,6 +91,18 @@ impl FaultPlan {
         }
     }
 
+    /// Per-worker routing: a draw made on serving worker `w` (per
+    /// [`crate::coordinator::current_worker`]) comes from `plans[w]`;
+    /// draws from any other thread — or a worker index past the end —
+    /// come from `default`.  Use to target exactly one shard of a
+    /// multi-worker server ("kill worker 1's third batch") without the
+    /// nondeterminism of N workers racing for one shared script.
+    pub fn per_worker<I: IntoIterator<Item = FaultPlan>>(plans: I, default: FaultPlan) -> Self {
+        FaultPlan {
+            mode: Mode::PerWorker(plans.into_iter().collect(), Box::new(default)),
+        }
+    }
+
     /// The fault (if any) for the next intercepted call.
     pub fn next(&self) -> Option<Fault> {
         match &self.mode {
@@ -100,6 +118,12 @@ impl FaultPlan {
                     Some(st.2)
                 } else {
                     None
+                }
+            }
+            Mode::PerWorker(plans, default) => {
+                match crate::coordinator::current_worker() {
+                    Some(w) if w < plans.len() => plans[w].next(),
+                    _ => default.next(),
                 }
             }
         }
@@ -254,6 +278,33 @@ mod tests {
         assert_eq!(plan.next(), Some(Fault::Panic));
         assert_eq!(plan.next(), None, "exhausted script never faults again");
         assert_eq!(plan.next(), None);
+    }
+
+    #[test]
+    fn per_worker_plan_routes_by_current_worker() {
+        let plan = FaultPlan::per_worker(
+            [
+                FaultPlan::script([Some(Fault::Error)]),
+                FaultPlan::script([Some(Fault::Die)]),
+            ],
+            FaultPlan::none(),
+        );
+        // Off-worker threads (and worker ids past the vec) hit the default.
+        assert_eq!(plan.next(), None);
+        std::thread::scope(|s| {
+            let plan = &plan;
+            s.spawn(move || {
+                crate::coordinator::set_worker_id(Some(1));
+                assert_eq!(plan.next(), Some(Fault::Die));
+                assert_eq!(plan.next(), None, "worker 1's script is exhausted");
+                crate::coordinator::set_worker_id(Some(5));
+                assert_eq!(plan.next(), None, "unplanned worker uses the default");
+            });
+            s.spawn(move || {
+                crate::coordinator::set_worker_id(Some(0));
+                assert_eq!(plan.next(), Some(Fault::Error));
+            });
+        });
     }
 
     #[test]

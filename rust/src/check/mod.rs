@@ -1,6 +1,6 @@
 //! Concurrency checking: exhaustive interleaving exploration for the
-//! arena pool's epoch protocol, and deterministic fault injection for
-//! the serving path.
+//! arena pool's epoch protocol and the coordinator's admission queue,
+//! and deterministic fault injection for the serving path.
 //!
 //! The repo's discipline is that a performance claim is worthless
 //! without a correctness gate (the tuner refuses to time a candidate
@@ -28,12 +28,22 @@
 //!   on the dispatcher exactly once, and later epochs run clean (unwind
 //!   soundness).
 //!
+//! [`check_queue`] applies the same treatment to the sharded
+//! coordinator's bounded admission queue (`coordinator::queue`): over a
+//! producers × consumers × items × bound configuration it establishes
+//! that every offered item settles as consumed-exactly-once or shed-
+//! exactly-once, that shutdown drains accepted work before consumers go
+//! home, and that a consumer dying mid-stream strands nothing — the
+//! survivors finish the drain (worker-death failover at the protocol
+//! level).
+//!
 //! Because the model substrate has **no spurious wakeups**, it delivers
 //! strictly fewer wakeups than std's condvars may — conservative in the
 //! direction that matters for lost-wakeup bugs.  And because the checker
 //! runs the real generic protocol (`dispatch`/`worker_loop`/
-//! `signal_shutdown` over `SyncOps`), a property proved here is a
-//! property of the code the production `WorkerPool` monomorphizes.
+//! `signal_shutdown`, `q_push`/`q_pop`/`q_shutdown` over `SyncOps`), a
+//! property proved here is a property of the code the production
+//! `WorkerPool` and `InferenceServer` monomorphize.
 //!
 //! ## What it CANNOT prove
 //!
@@ -69,7 +79,9 @@
 
 pub mod fault;
 mod pool_model;
-mod sched;
+mod queue_model;
+pub(crate) mod sched;
 
 pub use pool_model::{check_pool, check_pool_with, PoolCheckConfig};
+pub use queue_model::{check_queue, check_queue_with, QueueCheckConfig, QueueReport};
 pub use sched::{CheckFailure, Explorer, Report, SabotageBug};

@@ -25,7 +25,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::executor::pool::{dispatch, signal_shutdown, worker_loop};
+use crate::executor::pool::{dispatch, signal_shutdown, worker_loop, Slot};
 
 use super::sched::{CheckFailure, Explorer, Report, Sabotage, SabotageBug};
 
@@ -74,7 +74,7 @@ pub fn check_pool_with(
         silence_injected_panics();
     }
 
-    explorer.run(|sched| {
+    explorer.run(Slot::new, |sched| {
         // Fresh per execution; job bodies touch only these atomics, which
         // is what licenses the scheduler's sections-are-atomic reduction.
         let hits: Arc<Vec<AtomicUsize>> = Arc::new(

@@ -1,0 +1,183 @@
+//! The checked scenario for the sharded coordinator's admission queue:
+//! the **actual** protocol code — `q_push`, `q_pop`, `q_shutdown`,
+//! `q_await_settled` from `coordinator::queue`, not a transcription —
+//! run under the model scheduler over a small producers × consumers ×
+//! items × bound configuration.
+//!
+//! Per execution, logical thread 0 plays the *closer* (it waits until
+//! every offered item has settled — popped or shed — then signals
+//! shutdown; that dependence is what turns a lost consumer wakeup into
+//! a scheduler-convicted deadlock), threads `1..=producers` offer
+//! disjoint item ids through the bounded admission gate, and the
+//! remaining threads consume.  Properties:
+//!
+//! - **settled exactly once**: every offered item is either accepted and
+//!   consumed exactly once, or shed exactly once — never both, never
+//!   neither, never twice (multi-worker dispatch fairness: no item is
+//!   duplicated to two workers or starved forever).
+//! - **bounded depth**: the queue never holds more than `bound` items
+//!   (asserted inside `q_push` itself).
+//! - **termination / no lost wakeups**: the closer's settle-wait, every
+//!   producer, and every consumer go home under every schedule; a
+//!   stranded sleeper is a scheduler-reported deadlock.
+//! - **worker-death failover** (`dead_consumer`): a consumer that exits
+//!   after its first pop strands nothing — the surviving consumers
+//!   drain every remaining accepted item.
+//!
+//! [`check_queue_with`] threads the same [`SabotageBug`] wake corruptors
+//! the pool self-test uses — losing the push's `notify_one` or the
+//! settle counters' done-wake must be convicted, or the green runs prove
+//! nothing.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::queue::{q_await_settled, q_pop, q_push, q_shutdown, PushOutcome, QState};
+
+use super::sched::{CheckFailure, Explorer, Report, Sabotage, SabotageBug};
+
+/// One admission-queue scenario shape.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueCheckConfig {
+    /// Producer threads, each offering `items_per_producer` distinct ids.
+    pub producers: usize,
+    /// Consumer threads (the serving workers of the model).
+    pub consumers: usize,
+    pub items_per_producer: usize,
+    /// Admission bound; offers beyond it shed.
+    pub bound: usize,
+    /// Consumer index (0-based, `< consumers`) that exits after its
+    /// first pop — the worker-death failover scenario.  Requires at
+    /// least 2 consumers so survivors exist.
+    pub dead_consumer: Option<usize>,
+}
+
+/// Coverage plus cross-schedule protocol totals (per-schedule shed
+/// counts are interleaving-dependent, so shed coverage is only
+/// meaningful summed over the whole exploration).
+#[derive(Debug, Clone, Copy)]
+pub struct QueueReport {
+    pub report: Report,
+    /// Items shed at the admission gate, summed across every explored
+    /// schedule.
+    pub shed_total: u64,
+    /// Items consumed, summed across every explored schedule.
+    pub popped_total: u64,
+}
+
+/// Exhaustively (within `explorer`'s bounds) check the admission-queue
+/// protocol over `cfg`.
+pub fn check_queue(
+    cfg: QueueCheckConfig,
+    explorer: Explorer,
+) -> Result<QueueReport, CheckFailure> {
+    check_queue_with(cfg, explorer, None)
+}
+
+/// [`check_queue`] with an optional planted wake-dropping bug — expect
+/// `Err` with a deadlock conviction when `bug` is `Some`.
+pub fn check_queue_with(
+    cfg: QueueCheckConfig,
+    explorer: Explorer,
+    bug: Option<SabotageBug>,
+) -> Result<QueueReport, CheckFailure> {
+    assert!(cfg.producers >= 1 && cfg.consumers >= 1 && cfg.items_per_producer >= 1);
+    if let Some(d) = cfg.dead_consumer {
+        assert!(
+            d < cfg.consumers && cfg.consumers >= 2,
+            "worker-death needs a valid victim and at least one survivor: {cfg:?}"
+        );
+    }
+    let total = cfg.producers * cfg.items_per_producer;
+    let shed_total = Arc::new(AtomicU64::new(0));
+    let popped_total = Arc::new(AtomicU64::new(0));
+
+    let report = explorer.run(
+        || QState::<usize>::new(cfg.bound),
+        |sched| {
+            // Fresh per execution; thread bodies touch only these atomics
+            // outside critical sections (the scheduler's sections-are-
+            // atomic reduction requires commutative shared effects).
+            let accepted: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+            let shed: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+            let hits: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+
+            // Thread 0: the closer — shutdown only after every offered
+            // item settled, so nothing is cut short by the close itself.
+            sched.spawn("closer", move |sync| {
+                let sync = Sabotage::new(sync, bug);
+                q_await_settled(&sync, total as u64);
+                q_shutdown(&sync);
+            });
+            for p in 0..cfg.producers {
+                let accepted = Arc::clone(&accepted);
+                let shed = Arc::clone(&shed);
+                sched.spawn(&format!("producer-{p}"), move |sync| {
+                    let sync = Sabotage::new(sync, bug);
+                    for k in 0..cfg.items_per_producer {
+                        let id = p * cfg.items_per_producer + k;
+                        match q_push(&sync, id) {
+                            PushOutcome::Accepted => {
+                                accepted[id].fetch_add(1, Ordering::Relaxed);
+                            }
+                            PushOutcome::Shed { depth } => {
+                                assert!(depth <= cfg.bound, "shed at depth {depth} > bound");
+                                shed[id].fetch_add(1, Ordering::Relaxed);
+                            }
+                            PushOutcome::Closed => {
+                                panic!("queue closed while producers still offering")
+                            }
+                        }
+                    }
+                });
+            }
+            for c in 0..cfg.consumers {
+                let hits = Arc::clone(&hits);
+                let dies = cfg.dead_consumer == Some(c);
+                sched.spawn(&format!("consumer-{c}"), move |sync| {
+                    let sync = Sabotage::new(sync, bug);
+                    while let Some(id) = q_pop(&sync) {
+                        hits[id].fetch_add(1, Ordering::Relaxed);
+                        if dies {
+                            // Worker death: exit mid-stream without
+                            // draining; the survivors must finish.
+                            return;
+                        }
+                    }
+                });
+            }
+
+            let shed_total = Arc::clone(&shed_total);
+            let popped_total = Arc::clone(&popped_total);
+            move || {
+                for id in 0..total {
+                    let a = accepted[id].load(Ordering::Relaxed);
+                    let s = shed[id].load(Ordering::Relaxed);
+                    let h = hits[id].load(Ordering::Relaxed);
+                    if a + s != 1 {
+                        return Err(format!(
+                            "item {id} settled {a} accepts + {s} sheds (want exactly one)"
+                        ));
+                    }
+                    if h != a {
+                        return Err(format!(
+                            "item {id} consumed {h} times but accepted {a} times \
+                             (every accepted item exactly once, shed items never)"
+                        ));
+                    }
+                    shed_total.fetch_add(s as u64, Ordering::Relaxed);
+                    popped_total.fetch_add(h as u64, Ordering::Relaxed);
+                }
+                Ok(())
+            }
+        },
+    )?;
+    Ok(QueueReport {
+        report,
+        shed_total: shed_total.load(Ordering::Relaxed),
+        popped_total: popped_total.load(Ordering::Relaxed),
+    })
+}

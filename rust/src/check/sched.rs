@@ -62,6 +62,29 @@ use crate::executor::pool::{Cv, Slot, SyncOps, Wake};
 
 const NONE: usize = usize::MAX;
 
+/// A protocol state the scheduler can model-check: plain data mutated
+/// only inside critical sections, plus a drain hook.  The scheduler is
+/// generic over this, so the pool's epoch protocol ([`Slot`]) and the
+/// coordinator's admission queue (`QState`) share one checker.
+pub(crate) trait ProtoState: Send + 'static {
+    /// Poison the state toward shutdown on a failing run so every thread
+    /// runs home for the join.  `all_parked` is true once every alive
+    /// thread is waiting or finished — protocols whose drain would break
+    /// an in-flight containment invariant (the pool forcing
+    /// `outstanding = 0` while a worker still holds the dispatched job
+    /// reference) gate the destructive part on it.
+    fn drain(&mut self, all_parked: bool);
+}
+
+impl ProtoState for Slot {
+    fn drain(&mut self, all_parked: bool) {
+        self.shutdown = true;
+        if all_parked {
+            self.outstanding = 0;
+        }
+    }
+}
+
 /// One logical thread's scheduler-visible state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum TStatus {
@@ -82,7 +105,7 @@ struct Decision {
     options: usize,
 }
 
-struct State {
+struct State<P> {
     status: Vec<TStatus>,
     /// Logical thread holding the run token (NONE once all finished).
     current: usize,
@@ -91,7 +114,7 @@ struct State {
     /// sanity check.
     lock_owner: usize,
     /// The protocol state the critical sections mutate.
-    slot: Slot,
+    proto: P,
     decisions: Vec<Decision>,
     /// Forced choices for the first `prefix.len()` decision points.
     prefix: Vec<usize>,
@@ -103,26 +126,31 @@ struct State {
 }
 
 /// The scheduler for ONE execution (one schedule).  Fresh per run.
-pub(crate) struct ModelSched {
-    state: Mutex<State>,
+pub(crate) struct ModelSched<P: ProtoState> {
+    state: Mutex<State<P>>,
     cv: Condvar,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
-fn lock_state(m: &Mutex<State>) -> MutexGuard<'_, State> {
+fn lock_state<P>(m: &Mutex<State<P>>) -> MutexGuard<'_, State<P>> {
     // A panicking logical thread unwinds past guards by design (panic
     // injection is part of what we check); recover rather than cascade.
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-impl ModelSched {
-    pub(crate) fn new(prefix: Vec<usize>, max_decisions: usize, preemptions: usize) -> Self {
+impl<P: ProtoState> ModelSched<P> {
+    pub(crate) fn new(
+        prefix: Vec<usize>,
+        max_decisions: usize,
+        preemptions: usize,
+        proto: P,
+    ) -> Self {
         ModelSched {
             state: Mutex::new(State {
                 status: Vec::new(),
                 current: NONE,
                 lock_owner: NONE,
-                slot: Slot::new(),
+                proto,
                 decisions: Vec::new(),
                 prefix,
                 preemptions_left: preemptions,
@@ -141,7 +169,7 @@ impl ModelSched {
     /// deterministic.  Thread 0 receives the initial token.
     pub(crate) fn spawn<F>(self: &Arc<Self>, name: &str, f: F)
     where
-        F: FnOnce(&ModelSync) + Send + 'static,
+        F: FnOnce(&ModelSync<P>) + Send + 'static,
     {
         let me = {
             let mut g = lock_state(&self.state);
@@ -222,14 +250,14 @@ impl ModelSched {
     }
 
     /// Record a failure and switch to drain mode: suspend the token,
-    /// push the slot toward shutdown, wake everyone.
-    fn fail(&self, g: &mut State, msg: String) {
+    /// push the protocol state toward shutdown, wake everyone.
+    fn fail(&self, g: &mut State<P>, msg: String) {
         if g.failure.is_none() {
             let trace: Vec<usize> = g.decisions.iter().map(|d| d.chosen).collect();
             g.failure = Some(format!("{msg} [schedule {trace:?}]"));
         }
         g.draining = true;
-        g.slot.shutdown = true;
+        g.proto.drain(false);
         self.cv.notify_all();
     }
 
@@ -237,7 +265,7 @@ impl ModelSched {
     /// "let `me` keep running" is an admissible option (true at
     /// preemptible points, false when `me` just blocked or finished).
     /// Sets `current` to the chosen thread; the caller notifies.
-    fn grant(&self, g: &mut State, me: usize, me_continues: bool) {
+    fn grant(&self, g: &mut State<P>, me: usize, me_continues: bool) {
         if g.draining {
             return;
         }
@@ -305,9 +333,9 @@ impl ModelSched {
     /// preempted for have run), or once draining starts.
     fn choice_point<'a>(
         &'a self,
-        mut g: MutexGuard<'a, State>,
+        mut g: MutexGuard<'a, State<P>>,
         me: usize,
-    ) -> MutexGuard<'a, State> {
+    ) -> MutexGuard<'a, State<P>> {
         if g.draining {
             return g;
         }
@@ -324,9 +352,9 @@ impl ModelSched {
     /// op, or re-arriving after being preempted elsewhere).
     fn park_until_current<'a>(
         &'a self,
-        mut g: MutexGuard<'a, State>,
+        mut g: MutexGuard<'a, State<P>>,
         me: usize,
-    ) -> MutexGuard<'a, State> {
+    ) -> MutexGuard<'a, State<P>> {
         while !(g.draining || (g.current == me && g.status[me] == TStatus::Runnable)) {
             g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
@@ -335,7 +363,7 @@ impl ModelSched {
 
     /// Entry into a critical section: a preemptible choice point for the
     /// token holder, a park for anyone else.
-    fn enter<'a>(&'a self, me: usize) -> MutexGuard<'a, State> {
+    fn enter<'a>(&'a self, me: usize) -> MutexGuard<'a, State<P>> {
         let g = lock_state(&self.state);
         if g.draining {
             return g;
@@ -348,13 +376,24 @@ impl ModelSched {
     }
 
     /// Apply a critical section's wake requests: waiters flip runnable.
-    /// `done` wakes the lowest-id waiter (deterministic `notify_one`).
-    fn apply_wakes(g: &mut State, w: &Wake) {
+    /// `notify_one` deterministically wakes the lowest-id waiter — the
+    /// checker explores *whether* a wake lands in time, not which of
+    /// several equivalent waiters receives it (conservative for lost
+    /// wakeups, which is the bug class this layer hunts).
+    fn apply_wakes(g: &mut State<P>, w: &Wake) {
         if w.work_all {
             for s in g.status.iter_mut() {
                 if *s == TStatus::Waiting(Cv::Work) {
                     *s = TStatus::Runnable;
                 }
+            }
+        } else if w.work_one {
+            if let Some(s) = g
+                .status
+                .iter_mut()
+                .find(|s| **s == TStatus::Waiting(Cv::Work))
+            {
+                *s = TStatus::Runnable;
             }
         }
         if w.done_one {
@@ -368,19 +407,17 @@ impl ModelSched {
         }
     }
 
-    /// Drain-mode sweep: force the epoch counter open **only when every
-    /// alive thread is parked** — a worker holding the dispatched job
-    /// reference is running (not parked), so the dispatcher's barrier
+    /// Drain-mode sweep: the destructive part of the protocol's drain
+    /// (the pool forcing its epoch counter open) applies **only when
+    /// every alive thread is parked** — a worker holding the dispatched
+    /// job reference is running (not parked), so the dispatcher's barrier
     /// stays intact until the job retires, exactly as in production.
-    fn drain_sweep(g: &mut State) {
-        g.slot.shutdown = true;
+    fn drain_sweep(g: &mut State<P>) {
         let all_parked = g
             .status
             .iter()
             .all(|s| matches!(s, TStatus::Waiting(_) | TStatus::Finished));
-        if all_parked {
-            g.slot.outstanding = 0;
-        }
+        g.proto.drain(all_parked);
     }
 }
 
@@ -396,31 +433,33 @@ fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
 
 /// The model [`SyncOps`]: one handle per logical thread, delegating every
 /// primitive to the shared [`ModelSched`].
-pub(crate) struct ModelSync {
-    sched: Arc<ModelSched>,
+pub(crate) struct ModelSync<P: ProtoState> {
+    sched: Arc<ModelSched<P>>,
     me: usize,
 }
 
-impl ModelSync {
+impl<P: ProtoState> ModelSync<P> {
     /// Run one atomic critical section under the already-entered state
     /// guard, delivering wakes before the guard drops.
     fn section<R>(
         &self,
-        g: &mut State,
-        f: impl FnOnce(&mut Slot, &mut Wake) -> R,
+        g: &mut State<P>,
+        f: impl FnOnce(&mut P, &mut Wake) -> R,
     ) -> R {
         debug_assert_eq!(g.lock_owner, NONE, "atomic sections cannot nest");
         g.lock_owner = self.me;
         let mut w = Wake::default();
-        let r = f(&mut g.slot, &mut w);
+        let r = f(&mut g.proto, &mut w);
         ModelSched::apply_wakes(g, &w);
         g.lock_owner = NONE;
         r
     }
 }
 
-impl SyncOps for ModelSync {
-    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
+impl<P: ProtoState> SyncOps for ModelSync<P> {
+    type St = P;
+
+    fn locked<R>(&self, f: impl FnOnce(&mut P, &mut Wake) -> R) -> R {
         let mut g = self.sched.enter(self.me);
         let r = self.section(&mut g, f);
         if g.draining {
@@ -433,7 +472,7 @@ impl SyncOps for ModelSync {
     fn locked_wait<R>(
         &self,
         cv: Cv,
-        mut f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>,
+        mut f: impl FnMut(&mut P, &mut Wake) -> Option<R>,
     ) -> R {
         let mut g = self.sched.enter(self.me);
         loop {
@@ -538,15 +577,18 @@ impl Default for Explorer {
 }
 
 impl Explorer {
-    /// Run the DFS: `setup` is called once per execution to spawn the
+    /// Run the DFS: `init` builds the fresh protocol state for each
+    /// execution, and `setup` is called once per execution to spawn the
     /// scenario's logical threads onto the fresh scheduler and returns
     /// the post-run property validator.  Returns the first failure
     /// (scheduler-detected or validator-rejected) or a coverage report.
     /// Crate-visible (the scheduler types are not public API); external
-    /// callers go through `check::check_pool`.
-    pub(crate) fn run<S, V>(&self, mut setup: S) -> Result<Report, CheckFailure>
+    /// callers go through `check::check_pool` / `check::check_queue`.
+    pub(crate) fn run<P, I, S, V>(&self, init: I, mut setup: S) -> Result<Report, CheckFailure>
     where
-        S: FnMut(&Arc<ModelSched>) -> V,
+        P: ProtoState,
+        I: Fn() -> P,
+        S: FnMut(&Arc<ModelSched<P>>) -> V,
         V: FnOnce() -> Result<(), String>,
     {
         let mut prefix: Vec<usize> = Vec::new();
@@ -560,6 +602,7 @@ impl Explorer {
                 prefix.clone(),
                 self.max_decisions,
                 self.preemptions,
+                init(),
             ));
             let validate = setup(&sched);
             sched.start();
@@ -615,12 +658,14 @@ pub(crate) struct Sabotage<S> {
 /// Which wakeup to lose.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SabotageBug {
-    /// Swallow the first `notify_all(work)` — a dispatch whose workers
-    /// were already asleep never starts, so the dispatcher's barrier
-    /// hangs.
+    /// Swallow the first work-side wake, `notify_all` or `notify_one` —
+    /// for the pool, a dispatch whose workers were already asleep never
+    /// starts, so the dispatcher's barrier hangs; for the admission
+    /// queue, the first accepted item never wakes its consumer.
     DropFirstWorkWake,
-    /// Swallow every `notify_one(done)` — the last acknowledgement never
-    /// wakes a sleeping dispatcher.
+    /// Swallow every `notify_one(done)` — the pool's last acknowledgement
+    /// never wakes a sleeping dispatcher; the queue's drained counters
+    /// never wake the settle-waiter.
     DropDoneWake,
 }
 
@@ -633,8 +678,9 @@ impl<S> Sabotage<S> {
         match self.bug {
             None => {}
             Some(SabotageBug::DropFirstWorkWake) => {
-                if w.work_all && !self.fired.swap(true, Ordering::Relaxed) {
+                if (w.work_all || w.work_one) && !self.fired.swap(true, Ordering::Relaxed) {
                     w.work_all = false;
+                    w.work_one = false;
                 }
             }
             Some(SabotageBug::DropDoneWake) => {
@@ -645,7 +691,9 @@ impl<S> Sabotage<S> {
 }
 
 impl<S: SyncOps> SyncOps for Sabotage<S> {
-    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
+    type St = S::St;
+
+    fn locked<R>(&self, f: impl FnOnce(&mut Self::St, &mut Wake) -> R) -> R {
         self.inner.locked(|s, w| {
             let r = f(s, w);
             self.doctor(w);
@@ -656,7 +704,7 @@ impl<S: SyncOps> SyncOps for Sabotage<S> {
     fn locked_wait<R>(
         &self,
         cv: Cv,
-        mut f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>,
+        mut f: impl FnMut(&mut Self::St, &mut Wake) -> Option<R>,
     ) -> R {
         self.inner.locked_wait(cv, |s, w| {
             let r = f(s, w);

@@ -1,11 +1,23 @@
-//! Inference coordinator: request queue → dynamic batcher → bucket engines.
+//! Inference coordinator: admission queue → sharded batchers → bucket engines.
 //!
 //! The serving layer that hosts the paper's memory-bound experiments
-//! (Table 3) as a real system: clients submit single images; the batcher
-//! gathers them under a max-batch/timeout policy and routes each batch to
-//! the engine compiled for the smallest fitting **bucket** (both XLA
-//! modules and arena plans are static-shaped, so there is one compiled
-//! engine per batch size — vLLM-style bucket batching).
+//! (Table 3) as a real system: clients submit single images into a
+//! **bounded admission queue**; N serving workers (CLI `--workers N`,
+//! default 1) each gather batches under a max-batch/timeout policy and
+//! route them to the engine compiled for the smallest fitting **bucket**
+//! (both XLA modules and arena plans are static-shaped, so there is one
+//! compiled engine per batch size — vLLM-style bucket batching).
+//!
+//! Sharding changes two things over the single-worker coordinator:
+//!
+//! - **backpressure**: the queue sheds with a typed
+//!   [`Rejected::Overloaded`] once depth hits `queue_bound`, so a burst
+//!   degrades into fast errors instead of unbounded memory growth and
+//!   unbounded latency.  The queue itself is a checkable protocol
+//!   ([`queue`], model-checked by `check::queue_model`).
+//! - **no head-of-line blocking across batches**: while worker 0 runs a
+//!   batch-32, worker 1 pops the next arrivals — small batches are no
+//!   longer stuck behind big ones.
 //!
 //! Engines come from an [`EngineFactory`], not from the coordinator
 //! itself: [`InferenceServer::start_with`] accepts any factory, so the
@@ -14,17 +26,30 @@
 //! [`crate::executor::ArenaExec`] engines
 //! ([`crate::executor::NativeArenaFactory`]) — the latter needs no
 //! artifacts at all, which is what makes `tvmq serve --executor arena`
-//! work on the offline build.
+//! work on the offline build.  Replicating engines per worker is cheap:
+//! the factory's weight set is `Arc`-shared, so each worker's per-bucket
+//! engines alias one constant pool.
 //!
-//! The worker pre-allocates one stacked input and one output tensor per
+//! Each worker pre-allocates one stacked input and one output tensor per
 //! bucket at startup and serves every batch through
 //! [`crate::executor::Executor::run_into`]; with arena engines the
 //! request path therefore performs **zero heap allocations inside the
-//! executor** (`tests/arena_alloc.rs` counts them).  PJRT handles are
-//! `!Send`, so engines live on one dedicated worker thread; clients talk
-//! to it over channels and get their replies via oneshot.
+//! executor** (`tests/arena_alloc.rs` counts them, including the sharded
+//! steady state).  PJRT handles are `!Send`, so each worker builds its
+//! engines on its own thread; clients talk to the shard over the shared
+//! queue and get replies via oneshot channels.
+//!
+//! Worker death is survivable: a worker that dies (panic carrying
+//! [`FatalFault`]) drops its in-flight jobs — their reply channels close,
+//! so clients get prompt [`WaitError::WorkerDied`] errors — while the
+//! surviving workers keep serving.  Only when the *last* worker exits
+//! does the server go down: the drop guard raises the `down` flag, closes
+//! the queue, and purges queued jobs so nothing ever hangs on work nobody
+//! will serve.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+pub(crate) mod queue;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -36,15 +61,22 @@ use crate::metrics::EpochStats;
 use crate::runtime::TensorData;
 use crate::util::rng::Rng64;
 
-/// Which model variant the server runs, plus batching policy.
+use queue::{q_pop, q_push, q_shutdown, PopTimed, PushOutcome, StdQueue};
+
+/// Which model variant the server runs, plus batching and sharding policy.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// The typed variant selector (layout/schedule/precision/engine).
     pub spec: EngineSpec,
     /// Upper bound on gathered batch size (clamped to largest bucket).
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch.
+    /// How long a worker waits to fill a batch.
     pub batch_timeout: Duration,
+    /// Serving workers, each with its own per-bucket engine set.
+    pub workers: usize,
+    /// Admission-queue bound: submissions beyond this depth are shed
+    /// with [`Rejected::Overloaded`] instead of queueing unboundedly.
+    pub queue_bound: usize,
 }
 
 impl Default for ServeConfig {
@@ -53,30 +85,101 @@ impl Default for ServeConfig {
             spec: EngineSpec::default(),
             max_batch: 64,
             batch_timeout: Duration::from_millis(2),
+            workers: 1,
+            queue_bound: 1024,
         }
     }
 }
 
-/// Panic payload marking an *unrecoverable* worker failure.  The worker
+/// Typed submit-time rejection.  Callers (the load generator, retry
+/// layers) classify with `err.downcast_ref::<Rejected>()`; the display
+/// strings keep the previous substrings so log-grepping callers survive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// The admission queue is at its bound: the request was shed, not
+    /// enqueued.  Retry later or elsewhere.
+    Overloaded { depth: usize, bound: usize },
+    /// The server is down: shutdown was requested or every worker exited.
+    Down,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Overloaded { depth, bound } => write!(
+                f,
+                "server overloaded: admission queue at bound {bound} (depth {depth}); request shed"
+            ),
+            Rejected::Down => {
+                write!(f, "server is down (worker exited or shutdown requested)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Typed wait-time failure: a reply that never arrived, with the *why*
+/// preserved — the load generator must tell a client-side timeout from
+/// worker death, and a shed (which is a [`Rejected`] at submit time)
+/// from both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitError {
+    /// The caller's wait bound elapsed; the request may still complete.
+    Timeout,
+    /// The serving side dropped the reply channel: the worker holding
+    /// this job died, or the job was purged when the last worker exited.
+    WorkerDied,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Timeout => write!(f, "timed out waiting for inference reply"),
+            WaitError::WorkerDied => write!(f, "server dropped request (worker died)"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
+/// Panic payload marking an *unrecoverable* worker failure.  A worker
 /// converts ordinary engine panics into per-batch errors and keeps
 /// serving; a panic carrying this marker is deliberately re-raised
-/// instead, killing the worker thread — `check::fault` throws it
+/// instead, killing that worker thread — `check::fault` throws it
 /// (`Fault::Die`) to prove the server-side handling of true worker death:
-/// pending replies resolve with errors (never hang) and subsequent
-/// submissions fail promptly.
+/// pending replies resolve with errors (never hang), surviving workers
+/// keep serving, and once no workers remain submissions fail promptly.
 #[derive(Debug, Clone, Copy)]
 pub struct FatalFault;
 
+thread_local! {
+    /// The serving-worker index of the current thread, if it is one.
+    static WORKER_ID: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// The serving-worker index of the current thread (`None` off the
+/// coordinator's worker threads).  `check::fault`'s per-worker
+/// [`FaultPlan`](crate::check::fault::FaultPlan)s key on this to target
+/// fault scripts at a specific worker.
+pub fn current_worker() -> Option<usize> {
+    WORKER_ID.with(|c| c.get())
+}
+
+pub(crate) fn set_worker_id(w: Option<usize>) {
+    WORKER_ID.with(|c| c.set(w));
+}
+
 /// Lock the stats mutex, recovering from poisoning: the stats are plain
 /// monotone counters plus a reservoir — every update is complete the
-/// moment it is made, so a panic elsewhere on the worker thread cannot
+/// moment it is made, so a panic elsewhere on a worker thread cannot
 /// leave them torn, and propagating the poison would turn one engine
 /// panic into a `stats()` panic for every later observer.
 fn lock_stats(m: &Mutex<ServerStats>) -> MutexGuard<'_, ServerStats> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// One inference reply.
+/// One inference reply with full logits.
 #[derive(Debug, Clone)]
 pub struct InferenceReply {
     pub logits: TensorData,
@@ -86,33 +189,83 @@ pub struct InferenceReply {
     pub latency: Duration,
 }
 
-/// One-shot reply channel (std-based; the offline build has no tokio).
+/// A class-only reply: no logits row is ever copied for these (the
+/// worker computes argmax straight out of the engine's output tensor),
+/// which is the cheap path for top-1 clients.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassReply {
+    pub class: usize,
+    /// Batch size the request was served in (bucket).
+    pub batch: usize,
+    pub latency: Duration,
+}
+
+/// One-shot reply channels (std-based; the offline build has no tokio).
 type ReplyTx = std::sync::mpsc::SyncSender<Result<InferenceReply>>;
+type ClassTx = std::sync::mpsc::SyncSender<Result<ClassReply>>;
+
+/// Where one job's answer goes: a full-logits client or a class-only
+/// client (which never pays the per-reply logits copy).
+enum ReplySink {
+    Full(ReplyTx),
+    Class(ClassTx),
+}
+
+impl ReplySink {
+    fn send_err(&self, e: anyhow::Error) {
+        match self {
+            ReplySink::Full(tx) => {
+                let _ = tx.send(Err(e));
+            }
+            ReplySink::Class(tx) => {
+                let _ = tx.send(Err(e));
+            }
+        }
+    }
+}
+
+fn classify_recv_timeout(e: std::sync::mpsc::RecvTimeoutError) -> anyhow::Error {
+    match e {
+        std::sync::mpsc::RecvTimeoutError::Timeout => anyhow::Error::new(WaitError::Timeout),
+        std::sync::mpsc::RecvTimeoutError::Disconnected => {
+            anyhow::Error::new(WaitError::WorkerDied)
+        }
+    }
+}
 
 /// A pending reply: wait on it to get the inference result.
 pub struct PendingReply(std::sync::mpsc::Receiver<Result<InferenceReply>>);
 
 impl PendingReply {
     pub fn wait(self) -> Result<InferenceReply> {
-        self.0.recv().map_err(|_| anyhow!("server dropped request"))?
+        self.0.recv().map_err(|_| anyhow::Error::new(WaitError::WorkerDied))?
     }
 
+    /// Bounded wait.  The error is typed: [`WaitError::Timeout`] when
+    /// `d` elapsed, [`WaitError::WorkerDied`] when the serving side
+    /// dropped the channel — downcast to tell them apart.
     pub fn wait_timeout(self, d: Duration) -> Result<InferenceReply> {
-        self.0
-            .recv_timeout(d)
-            .map_err(|_| anyhow!("timed out or server dropped request"))?
+        self.0.recv_timeout(d).map_err(classify_recv_timeout)?
+    }
+}
+
+/// A pending class-only reply (from [`InferenceServer::submit_class`]).
+pub struct PendingClassReply(std::sync::mpsc::Receiver<Result<ClassReply>>);
+
+impl PendingClassReply {
+    pub fn wait(self) -> Result<ClassReply> {
+        self.0.recv().map_err(|_| anyhow::Error::new(WaitError::WorkerDied))?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<ClassReply> {
+        self.0.recv_timeout(d).map_err(classify_recv_timeout)?
     }
 }
 
 struct Job {
     image: TensorData,
     enqueued: Instant,
-    reply: ReplyTx,
-}
-
-enum Msg {
-    Job(Job),
-    Shutdown,
+    reply: ReplySink,
 }
 
 /// Pick the smallest bucket that fits a gathered batch of `n`.
@@ -189,10 +342,18 @@ impl LatencyReservoir {
 pub struct ServerStats {
     /// Requests answered successfully.
     pub requests: u64,
-    /// Requests answered with an error (batch failures).
+    /// Requests answered with an error (batch failures, per-job
+    /// validation rejections).
     pub errors: u64,
+    /// Requests shed at the admission gate ([`Rejected::Overloaded`]).
+    pub shed: u64,
     pub batches: u64,
+    /// Batches by the *bucket* (padded size) they were served in.
     pub batch_histogram: std::collections::BTreeMap<usize, u64>,
+    /// Batches by the *actual gathered* size, pre-padding — the honest
+    /// batching-efficiency signal (the bucket histogram alone inflates
+    /// it: a 3-request gather served in bucket 4 counts as 4 there).
+    pub gathered_histogram: std::collections::BTreeMap<usize, u64>,
     pub latencies: LatencyReservoir,
     pub padded_slots: u64,
 }
@@ -202,38 +363,55 @@ impl ServerStats {
         self.latencies.stats()
     }
 
+    /// Mean *gathered* batch size: served requests per batch.  Computed
+    /// from the request/batch counters, NOT from the bucket histogram —
+    /// buckets are padded sizes, and averaging them over-reports the
+    /// gather efficiency whenever padding happens.
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
         }
-        let total: u64 = self
-            .batch_histogram
-            .iter()
-            .map(|(b, n)| *b as u64 * n)
-            .sum();
-        total as f64 / self.batches as f64
+        self.requests as f64 / self.batches as f64
     }
 }
 
+/// Sharded inference server: N workers over one bounded admission queue.
 pub struct InferenceServer {
-    tx: std::sync::mpsc::Sender<Msg>,
+    queue: Arc<StdQueue<Job>>,
     stats: Arc<Mutex<ServerStats>>,
-    handle: Option<std::thread::JoinHandle<Result<()>>>,
-    /// Raised when the worker thread exits for any reason — normal
-    /// shutdown, error return, or panic (a drop guard on the worker sets
-    /// it even mid-unwind) — so `submit` fails promptly instead of
-    /// enqueueing onto a dead server.
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    /// Raised when the *last* worker thread exits for any reason —
+    /// normal shutdown, error return, or panic (each worker's drop guard
+    /// participates even mid-unwind) — so `submit` fails promptly
+    /// instead of enqueueing onto a dead server.  While at least one
+    /// worker survives, the server keeps serving.
     down: Arc<AtomicBool>,
+    alive: Arc<AtomicUsize>,
     pub buckets: Vec<usize>,
+    queue_bound: usize,
+    workers: usize,
 }
 
-/// Sets the server's `down` flag when the worker thread exits, however
-/// it exits (the `Drop` runs during unwind too).
-struct DownGuard(Arc<AtomicBool>);
+/// Per-worker exit guard (runs during unwind too): decrements the live
+/// count; the last worker out raises `down`, closes the queue, and
+/// purges queued jobs so their reply channels resolve promptly — the
+/// shared queue would otherwise hold jobs nobody will ever serve.
+struct WorkerGuard {
+    down: Arc<AtomicBool>,
+    alive: Arc<AtomicUsize>,
+    queue: Arc<StdQueue<Job>>,
+}
 
-impl Drop for DownGuard {
+impl Drop for WorkerGuard {
     fn drop(&mut self) {
-        self.0.store(true, Ordering::SeqCst);
+        if self.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.down.store(true, Ordering::SeqCst);
+            // Order matters: close first (pushes racing this drop get a
+            // typed `Closed` under the queue lock), then purge what was
+            // accepted before the close.
+            q_shutdown(&*self.queue);
+            self.queue.purge();
+        }
     }
 }
 
@@ -247,12 +425,15 @@ impl InferenceServer {
         Self::start_with(factory, cfg)
     }
 
-    /// Start the worker thread over any engine factory: compiles one
-    /// engine + one pre-allocated input/output tensor pair per bucket,
-    /// then serves until shutdown.
+    /// Start `cfg.workers` worker threads over one engine factory: each
+    /// worker compiles its own engine + pre-allocated input/output tensor
+    /// pair per bucket (on its own thread — PJRT handles are `!Send`),
+    /// then serves from the shared admission queue until shutdown.  The
+    /// factory is shared behind an `Arc`, and with arena factories the
+    /// replicated engines alias one `Arc`'d weight set.
     pub fn start_with<F>(factory: F, cfg: ServeConfig) -> Result<Self>
     where
-        F: EngineFactory + Send + 'static,
+        F: EngineFactory + Send + Sync + 'static,
     {
         let mut buckets = factory.buckets();
         buckets.sort_unstable();
@@ -260,43 +441,118 @@ impl InferenceServer {
         if buckets.is_empty() {
             return Err(anyhow!("no engine buckets from {}", factory.describe()));
         }
+        let workers = cfg.workers.max(1);
+        let queue_bound = cfg.queue_bound.max(1);
         let stats = Arc::new(Mutex::new(ServerStats::default()));
-        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
-        let worker_stats = stats.clone();
-        let worker_buckets = buckets.clone();
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let queue = Arc::new(StdQueue::<Job>::new(queue_bound));
         let down = Arc::new(AtomicBool::new(false));
-        let worker_down = Arc::clone(&down);
-        let handle = std::thread::Builder::new()
-            .name("tvmq-worker".into())
-            .spawn(move || {
-                let _down = DownGuard(worker_down);
-                worker_loop(factory, cfg, worker_buckets, rx, worker_stats, ready_tx)
-            })
-            .map_err(|e| anyhow!("spawning worker: {e}"))?;
-        // Wait for engine compilation so `submit` never races startup.
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))??;
-        Ok(Self { tx, stats, handle: Some(handle), down, buckets })
+        let alive = Arc::new(AtomicUsize::new(workers));
+        let factory = Arc::new(factory);
+
+        let mut handles = Vec::with_capacity(workers);
+        let mut readies = Vec::with_capacity(workers);
+        let mut startup_err: Option<anyhow::Error> = None;
+        for w in 0..workers {
+            let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+            let factory = Arc::clone(&factory);
+            let worker_queue = Arc::clone(&queue);
+            let worker_stats = Arc::clone(&stats);
+            let worker_buckets = buckets.clone();
+            let guard = WorkerGuard {
+                down: Arc::clone(&down),
+                alive: Arc::clone(&alive),
+                queue: Arc::clone(&queue),
+            };
+            match std::thread::Builder::new()
+                .name(format!("tvmq-worker-{w}"))
+                .spawn(move || {
+                    let _guard = guard;
+                    worker_loop(
+                        w,
+                        factory,
+                        cfg,
+                        worker_buckets,
+                        worker_queue,
+                        worker_stats,
+                        ready_tx,
+                    )
+                }) {
+                Ok(h) => {
+                    handles.push(h);
+                    readies.push(ready_rx);
+                }
+                Err(e) => {
+                    // Unspawned workers never decrement `alive`; settle
+                    // their share so the last *spawned* worker's guard
+                    // still closes the server.
+                    alive.fetch_sub(workers - w, Ordering::SeqCst);
+                    startup_err = Some(anyhow!("spawning worker {w}: {e}"));
+                    break;
+                }
+            }
+        }
+        if startup_err.is_none() {
+            // Wait for every worker's engine compilation so `submit`
+            // never races startup; per-worker channels, so one worker
+            // panicking mid-build closes *its* channel (not the shared
+            // one) and is reported instead of hanging the recv.
+            for ready_rx in &readies {
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        startup_err = Some(e);
+                        break;
+                    }
+                    Err(_) => {
+                        startup_err = Some(anyhow!("worker died during startup"));
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            down.store(true, Ordering::SeqCst);
+            q_shutdown(&*queue);
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(Self { queue, stats, handles, down, alive, buckets, queue_bound, workers })
+    }
+
+    fn submit_sink(&self, image: TensorData, reply: ReplySink) -> Result<()> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(anyhow::Error::new(Rejected::Down));
+        }
+        match q_push(&*self.queue, Job { image, enqueued: Instant::now(), reply }) {
+            PushOutcome::Accepted => Ok(()),
+            PushOutcome::Shed { depth } => {
+                Err(anyhow::Error::new(Rejected::Overloaded { depth, bound: self.queue_bound }))
+            }
+            PushOutcome::Closed => Err(anyhow::Error::new(Rejected::Down)),
+        }
     }
 
     /// Fire-and-wait-later submit: enqueue the image, get a pending reply.
     ///
-    /// Fails promptly — never with a reply that would block forever — once
-    /// the server is down: after [`InferenceServer::request_shutdown`], or
-    /// after the worker thread exited or died (its drop guard raises the
-    /// flag even when it dies mid-unwind, before the channel observably
-    /// disconnects).
+    /// Fails promptly with a typed [`Rejected`] — never with a reply that
+    /// would block forever — when the admission queue is at bound
+    /// (`Overloaded`: the request is shed) or the server is down
+    /// (`Down`: after [`InferenceServer::request_shutdown`], or once the
+    /// last worker exited; the drop guard raises the flag even mid-unwind).
     pub fn submit(&self, image: TensorData) -> Result<PendingReply> {
-        if self.down.load(Ordering::SeqCst) {
-            return Err(anyhow!("server is down (worker exited or shutdown requested)"));
-        }
         let (reply, rx) = std::sync::mpsc::sync_channel(1);
-        self.tx
-            .send(Msg::Job(Job { image, enqueued: Instant::now(), reply }))
-            .map_err(|_| anyhow!("server is down"))?;
+        self.submit_sink(image, ReplySink::Full(reply))?;
         Ok(PendingReply(rx))
+    }
+
+    /// Class-only submit: the reply carries argmax/batch/latency and the
+    /// serve path never copies the logits row for this request.
+    pub fn submit_class(&self, image: TensorData) -> Result<PendingClassReply> {
+        let (reply, rx) = std::sync::mpsc::sync_channel(1);
+        self.submit_sink(image, ReplySink::Class(reply))?;
+        Ok(PendingClassReply(rx))
     }
 
     /// Submit and wait (for simple callers and benches).
@@ -305,31 +561,59 @@ impl InferenceServer {
     }
 
     pub fn stats(&self) -> ServerStats {
-        lock_stats(&self.stats).clone()
+        let mut s = lock_stats(&self.stats).clone();
+        (s.shed, _) = self.queue.shed_and_depth();
+        s
+    }
+
+    /// Workers the server was started with.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Workers still serving (drops as workers die).
+    pub fn alive_workers(&self) -> usize {
+        self.alive.load(Ordering::SeqCst)
     }
 
     /// Begin shutdown without consuming the server: new submissions fail
-    /// immediately, while the worker drains whatever is already queued
+    /// immediately, while the workers drain whatever is already queued
     /// (every pending reply resolves — with a result or a clean error).
     /// Call [`InferenceServer::shutdown`] (or drop) afterwards to join.
     pub fn request_shutdown(&self) {
         self.down.store(true, Ordering::SeqCst);
-        let _ = self.tx.send(Msg::Shutdown);
+        q_shutdown(&*self.queue);
     }
 
+    /// Shut down and join every worker.  Errs if any worker exited with
+    /// an error or panic (a dead worker reports its death instead of
+    /// pretending a clean exit).
     pub fn shutdown(mut self) -> Result<()> {
         self.request_shutdown();
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow!("worker panicked"))??;
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.handles.drain(..) {
+            let r = match h.join() {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => Err(e),
+                Err(_) => Err(anyhow!("worker panicked")),
+            };
+            if let Err(e) = r {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
         self.request_shutdown();
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -346,7 +630,7 @@ struct BucketEngine {
     out: TensorData,
 }
 
-fn build_engines<F: EngineFactory>(
+fn build_engines<F: EngineFactory + ?Sized>(
     factory: &F,
     buckets: &[usize],
 ) -> Result<Vec<BucketEngine>> {
@@ -380,15 +664,17 @@ fn build_engines<F: EngineFactory>(
 }
 
 fn worker_loop<F: EngineFactory>(
-    factory: F,
+    worker: usize,
+    factory: Arc<F>,
     cfg: ServeConfig,
     buckets: Vec<usize>,
-    rx: std::sync::mpsc::Receiver<Msg>,
+    queue: Arc<StdQueue<Job>>,
     stats: Arc<Mutex<ServerStats>>,
     ready: std::sync::mpsc::Sender<Result<()>>,
 ) -> Result<()> {
+    set_worker_id(Some(worker));
     // Compile every bucket engine up front (startup, not request path).
-    let mut engines = match build_engines(&factory, &buckets) {
+    let mut engines = match build_engines(&*factory, &buckets) {
         Ok(e) => e,
         Err(e) => {
             let _ = ready.send(Err(anyhow!("{e}")));
@@ -396,72 +682,66 @@ fn worker_loop<F: EngineFactory>(
         }
     };
     let _ = ready.send(Ok(()));
+    drop(ready);
 
     let max_bucket = *buckets.last().expect("non-empty buckets");
     let max_batch = cfg.max_batch.min(max_bucket).max(1);
 
-    'serve: loop {
-        // Block for the first job.
-        let first = match rx.recv() {
-            Ok(Msg::Job(j)) => j,
-            Ok(Msg::Shutdown) | Err(_) => break 'serve,
+    loop {
+        // Block for the first job — `q_pop` is the checked protocol pop:
+        // drains remaining accepted work even after shutdown, returns
+        // `None` only once the queue is shut down *and* empty.
+        let first = match q_pop(&*queue) {
+            Some(j) => j,
+            None => return Ok(()),
         };
         let mut jobs = vec![first];
-        // Gather until the batch fills or the timeout expires.
+        // Gather until the batch fills or the timeout expires.  The
+        // deadline-bounded pop is production-only (timing is outside the
+        // model checker's scope); shutdown mid-gather just ends the
+        // gather — the batch in hand is still served, and the next
+        // `q_pop` drains or exits.
         let deadline = Instant::now() + cfg.batch_timeout;
         while jobs.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Job(j)) => jobs.push(j),
-                Ok(Msg::Shutdown) => {
-                    process_batch(&mut engines, &buckets, jobs, &stats);
-                    break 'serve;
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    process_batch(&mut engines, &buckets, jobs, &stats);
-                    break 'serve;
-                }
+            match queue.pop_until(deadline) {
+                PopTimed::Got(j) => jobs.push(j),
+                PopTimed::TimedOut | PopTimed::Closed => break,
             }
         }
         process_batch(&mut engines, &buckets, jobs, &stats);
     }
-    Ok(())
+}
+
+/// Does one request image fit the engines' per-row input descriptor?
+/// (All buckets share row geometry — `build_engines` verified batch-major
+/// I/O — so validating against any one engine covers them all.)
+fn image_fits(input: &TensorData, img: &TensorData) -> bool {
+    img.dtype == input.dtype
+        && img.shape.first() == Some(&1)
+        && img.shape.get(1..) == input.shape.get(1..)
 }
 
 /// Copy the gathered job images into the engine's pre-allocated stacked
-/// input (zeroing the padding rows) and run in place.  Nothing in here
-/// allocates except what the engine's own `run_into` does — zero for
-/// arena engines.
+/// input (zeroing the padding rows) and run in place.  Jobs are already
+/// validated; nothing in here allocates except what the engine's own
+/// `run_into` does — zero for arena engines.
 fn serve_batch(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
     let row_bytes = eng.input.byte_len() / eng.batch;
     for (i, job) in jobs.iter().enumerate() {
-        let img = &job.image;
-        if img.dtype != eng.input.dtype
-            || img.shape.first() != Some(&1)
-            || img.shape.get(1..) != eng.input.shape.get(1..)
-        {
-            return Err(anyhow!(
-                "request image {:?}/{:?} does not fit engine input {:?}/{:?}",
-                img.shape, img.dtype, eng.input.shape, eng.input.dtype
-            ));
-        }
-        eng.input.data[i * row_bytes..(i + 1) * row_bytes].copy_from_slice(&img.data);
+        eng.input.data[i * row_bytes..(i + 1) * row_bytes].copy_from_slice(&job.image.data);
     }
     eng.input.data[jobs.len() * row_bytes..].fill(0);
     let BucketEngine { exec, input, out, .. } = eng;
     exec.run_into(input, out)
 }
 
-/// Fail every job in the batch with the same message and count them.
+/// Fail every job in the batch with the same message: count the errors
+/// in one short critical section, send the replies outside the lock.
 fn fail_batch(jobs: Vec<Job>, stats: &Arc<Mutex<ServerStats>>, e: anyhow::Error) {
     let msg = format!("{e}");
     lock_stats(stats).errors += jobs.len() as u64;
     for job in jobs {
-        let _ = job.reply.send(Err(anyhow!("batch failed: {msg}")));
+        job.reply.send_err(anyhow!("batch failed: {msg}"));
     }
 }
 
@@ -488,53 +768,114 @@ fn serve_batch_contained(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
     }
 }
 
+/// Argmax over one logits row.  Ties resolve to the *highest* index —
+/// exactly what `TensorData::argmax_last` does (`max_by` keeps the last
+/// maximal element) — so the class computed here is bit-for-bit the one
+/// the full-logits reply path and the interpreter oracle would report.
+fn argmax_row(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 fn process_batch(
     engines: &mut [BucketEngine],
     buckets: &[usize],
     jobs: Vec<Job>,
     stats: &Arc<Mutex<ServerStats>>,
 ) {
-    let n = jobs.len();
+    if jobs.is_empty() {
+        return;
+    }
+    // Per-job validation against the engine input descriptor: one
+    // malformed image fails only its own job — the innocents it was
+    // co-gathered with stay in the batch.
+    let row_desc = &engines[0].input;
+    let (valid, invalid): (Vec<Job>, Vec<Job>) =
+        jobs.into_iter().partition(|j| image_fits(row_desc, &j.image));
+    if !invalid.is_empty() {
+        lock_stats(stats).errors += invalid.len() as u64;
+        for job in invalid {
+            job.reply.send_err(anyhow!(
+                "request image {:?}/{:?} does not fit engine input {:?}/{:?}",
+                job.image.shape,
+                job.image.dtype,
+                row_desc.shape,
+                row_desc.dtype
+            ));
+        }
+    }
+    let n = valid.len();
     if n == 0 {
         return;
     }
     let bucket = match pick_bucket(buckets, n) {
         Ok(b) => b,
-        Err(e) => return fail_batch(jobs, stats, e),
+        Err(e) => return fail_batch(valid, stats, e),
     };
     let eng = match engines.iter_mut().find(|e| e.batch == bucket) {
         Some(e) => e,
-        None => return fail_batch(jobs, stats, anyhow!("no engine for bucket {bucket}")),
+        None => return fail_batch(valid, stats, anyhow!("no engine for bucket {bucket}")),
     };
-    if let Err(e) = serve_batch_contained(eng, &jobs) {
-        return fail_batch(jobs, stats, e);
+    if let Err(e) = serve_batch_contained(eng, &valid) {
+        return fail_batch(valid, stats, e);
     }
 
     let out_row = eng.out.byte_len() / eng.batch;
     let mut row_shape = eng.out.shape.clone();
     row_shape[0] = 1;
+    let latencies: Vec<Duration> = valid.iter().map(|j| j.enqueued.elapsed()).collect();
 
-    let mut s = lock_stats(stats);
-    s.requests += n as u64;
-    s.batches += 1;
-    *s.batch_histogram.entry(bucket).or_insert(0) += 1;
-    s.padded_slots += (bucket - n) as u64;
-    for (i, job) in jobs.into_iter().enumerate() {
-        let latency = job.enqueued.elapsed();
-        s.latencies.push(latency.as_secs_f64() * 1e3);
-        let logits = TensorData::new(
-            eng.out.dtype,
-            row_shape.clone(),
-            eng.out.data[i * out_row..(i + 1) * out_row].to_vec(),
-        )
-        .expect("row tensor");
-        let class = logits.argmax_last().map(|v| v[0]).unwrap_or(0);
-        let _ = job.reply.send(Ok(InferenceReply {
-            logits,
-            class,
-            batch: bucket,
-            latency,
-        }));
+    // One short critical section: counters and the reservoir only.  The
+    // reply loop below — including any logits copies and the channel
+    // sends — runs outside the lock, so N workers sharing these stats
+    // don't serialize their reply fan-out on each other.
+    {
+        let mut s = lock_stats(stats);
+        s.requests += n as u64;
+        s.batches += 1;
+        *s.batch_histogram.entry(bucket).or_insert(0) += 1;
+        *s.gathered_histogram.entry(n).or_insert(0) += 1;
+        s.padded_slots += (bucket - n) as u64;
+        for l in &latencies {
+            s.latencies.push(l.as_secs_f64() * 1e3);
+        }
+    }
+
+    // Fast path: every engine in the repo emits f32 logits, so argmax
+    // reads straight out of the shared output tensor — class-only
+    // clients get their answer with no per-reply copy at all.
+    let logits_f32: Option<&[f32]> = eng.out.as_f32_slice().ok();
+    let row_elems = logits_f32.map(|f| f.len() / eng.batch).unwrap_or(0);
+    for (i, (job, latency)) in valid.into_iter().zip(latencies).enumerate() {
+        let class = match logits_f32 {
+            Some(f) => argmax_row(&f[i * row_elems..(i + 1) * row_elems]),
+            None => TensorData::new(
+                eng.out.dtype,
+                row_shape.clone(),
+                eng.out.data[i * out_row..(i + 1) * out_row].to_vec(),
+            )
+            .ok()
+            .and_then(|t| t.argmax_last().ok())
+            .map(|v| v[0])
+            .unwrap_or(0),
+        };
+        match job.reply {
+            ReplySink::Full(tx) => {
+                let logits = TensorData::new(
+                    eng.out.dtype,
+                    row_shape.clone(),
+                    eng.out.data[i * out_row..(i + 1) * out_row].to_vec(),
+                )
+                .expect("row tensor");
+                let _ = tx.send(Ok(InferenceReply { logits, class, batch: bucket, latency }));
+            }
+            ReplySink::Class(tx) => {
+                let _ = tx.send(Ok(ClassReply { class, batch: bucket, latency }));
+            }
+        }
     }
 }
 
@@ -563,6 +904,48 @@ mod tests {
         assert!(pick_bucket(&[], 1).is_err());
     }
 
+    /// The padding-inflation regression: 3 requests served in bucket 4
+    /// must report a mean gathered batch of 3, not 4.
+    #[test]
+    fn mean_batch_reports_gathered_not_padded_size() {
+        let mut s = ServerStats::default();
+        s.requests = 3;
+        s.batches = 1;
+        *s.batch_histogram.entry(4).or_insert(0) += 1;
+        *s.gathered_histogram.entry(3).or_insert(0) += 1;
+        s.padded_slots = 1;
+        assert!((s.mean_batch() - 3.0).abs() < 1e-12, "got {}", s.mean_batch());
+        assert_eq!(s.batch_histogram.get(&4), Some(&1));
+        assert_eq!(s.gathered_histogram.get(&3), Some(&1));
+    }
+
+    #[test]
+    fn argmax_row_matches_argmax_last_tie_behavior() {
+        // Ties resolve to the last maximal index, as argmax_last does.
+        let t = TensorData::from_f32(vec![1, 4], &[0.0, 3.0, 3.0, 1.0]).unwrap();
+        assert_eq!(argmax_row(&[0.0, 3.0, 3.0, 1.0]), t.argmax_last().unwrap()[0]);
+        assert_eq!(argmax_row(&[0.0, 3.0, 3.0, 1.0]), 2);
+        assert_eq!(argmax_row(&[-2.0, -1.0, -3.0]), 1);
+        assert_eq!(argmax_row(&[5.0]), 0);
+    }
+
+    #[test]
+    fn rejected_and_wait_errors_downcast_through_anyhow() {
+        let e = anyhow::Error::new(Rejected::Overloaded { depth: 8, bound: 8 });
+        match e.downcast_ref::<Rejected>() {
+            Some(Rejected::Overloaded { depth: 8, bound: 8 }) => {}
+            other => panic!("bad downcast: {other:?}"),
+        }
+        assert!(e.to_string().contains("overloaded"), "got: {e}");
+        let e = anyhow::Error::new(Rejected::Down);
+        assert!(e.to_string().contains("down"), "got: {e}");
+        let e = anyhow::Error::new(WaitError::Timeout);
+        assert_eq!(e.downcast_ref::<WaitError>(), Some(&WaitError::Timeout));
+        assert!(e.to_string().contains("timed out"), "got: {e}");
+        let e = anyhow::Error::new(WaitError::WorkerDied);
+        assert!(e.to_string().contains("dropped request"), "got: {e}");
+    }
+
     #[test]
     fn latency_reservoir_is_exact_below_the_cap() {
         let mut r = LatencyReservoir::default();
@@ -577,7 +960,7 @@ mod tests {
         assert!((stats.mean_ms - 49.5).abs() < 1e-9);
     }
 
-    /// A panic on the worker thread while holding the stats lock must not
+    /// A panic on a worker thread while holding the stats lock must not
     /// make every later `stats()` reader panic: `lock_stats` recovers the
     /// guard (counters are complete at every update, so there is no torn
     /// state to fear).

@@ -1,0 +1,374 @@
+//! The sharded coordinator's bounded admission queue, written as a
+//! checkable protocol over [`SyncOps`] — the same discipline the arena
+//! pool's epoch protocol follows (PR 6's gate: new concurrency lands
+//! with its checker scenario, not after it).
+//!
+//! ## Protocol
+//!
+//! Producers (client threads inside [`super::InferenceServer::submit`])
+//! call [`q_push`]: if the queue is at its bound the request is **shed**
+//! — counted, never enqueued, the caller gets a typed
+//! `Rejected::Overloaded` — otherwise it is appended and exactly one
+//! sleeping consumer is woken (`notify_one` on the work condvar; one
+//! item needs one worker).  Consumers (serving workers) call [`q_pop`]:
+//! take the head item, or sleep until one arrives or shutdown is
+//! signalled.  [`q_shutdown`] sets the flag and wakes every consumer;
+//! pops **drain remaining items first** and only then observe shutdown,
+//! so accepted work is never silently dropped by a clean shutdown.
+//!
+//! The settle counters (`pushed`/`popped`/`shed`) make the whole flow
+//! auditable: every offered item is eventually accounted as popped or
+//! shed, which [`q_await_settled`] can wait on (the check scenarios'
+//! closer thread does, turning a lost consumer wakeup into a scheduler-
+//! convicted deadlock instead of a silent truncation).
+//!
+//! ## Substrates
+//!
+//! - [`StdQueue`]: production.  One futex-backed `Mutex<QState>` + two
+//!   condvars; push/pop are allocation-free beyond the `VecDeque`'s
+//!   steady-state ring (preallocated to the bound at construction).  It
+//!   additionally offers [`StdQueue::pop_until`], the deadline-bounded
+//!   pop the batch gather loop needs — *timing* is explicitly outside
+//!   the model checker's scope (see `check`'s module docs; the fault
+//!   layer covers stalls).
+//! - `check::sched::ModelSync<QState>`: the model checker, which runs
+//!   `q_push`/`q_pop`/`q_shutdown`/`q_await_settled` — this exact code —
+//!   under exhaustively enumerated interleavings
+//!   (`check::queue_model`, driven by `tests/queue_check.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::executor::pool::{Cv, SyncOps, Wake};
+
+/// The queue protocol's entire mutable state, always accessed under the
+/// substrate's lock.
+pub(crate) struct QState<T> {
+    pub(crate) items: VecDeque<T>,
+    /// Admission bound: `q_push` sheds instead of growing past it.
+    pub(crate) bound: usize,
+    pub(crate) shutdown: bool,
+    /// Offered items rejected at the admission gate.
+    pub(crate) shed: u64,
+    /// Items accepted into the queue.
+    pub(crate) pushed: u64,
+    /// Items handed to a consumer.
+    pub(crate) popped: u64,
+    /// Someone is (or is about to be) waiting on the done condvar for
+    /// the settle counters; pop/shed paths only pay a done-notify while
+    /// this is set, keeping the steady-state serve path at one wake per
+    /// push and zero per pop.
+    pub(crate) done_watch: bool,
+}
+
+impl<T> QState<T> {
+    pub(crate) fn new(bound: usize) -> Self {
+        let bound = bound.max(1);
+        QState {
+            items: VecDeque::with_capacity(bound),
+            bound,
+            shutdown: false,
+            shed: 0,
+            pushed: 0,
+            popped: 0,
+            done_watch: false,
+        }
+    }
+}
+
+/// The drain hook for failing model-checker runs: shutting the queue
+/// down is always safe (pops drain items first), so no part of it needs
+/// the all-parked gate the pool's epoch counter does.
+impl<T: Send + 'static> crate::check::sched::ProtoState for QState<T> {
+    fn drain(&mut self, _all_parked: bool) {
+        self.shutdown = true;
+    }
+}
+
+/// What happened to one offered item at the admission gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PushOutcome {
+    Accepted,
+    /// Queue at bound: the item was counted and discarded.
+    Shed { depth: usize },
+    /// Shutdown already signalled: nothing will consume the item.
+    Closed,
+}
+
+/// Offer one item.  Sheds (never blocks) when the queue is at bound —
+/// backpressure by rejection, so a burst degrades into fast typed
+/// errors instead of unbounded memory growth and unbounded latency.
+pub(crate) fn q_push<T, S: SyncOps<St = QState<T>>>(sync: &S, item: T) -> PushOutcome {
+    sync.locked(|q, w| {
+        if q.shutdown {
+            return PushOutcome::Closed;
+        }
+        if q.items.len() >= q.bound {
+            q.shed += 1;
+            if q.done_watch {
+                w.notify_done_one();
+            }
+            return PushOutcome::Shed { depth: q.items.len() };
+        }
+        q.items.push_back(item);
+        q.pushed += 1;
+        debug_assert!(q.items.len() <= q.bound);
+        w.notify_work_one();
+        PushOutcome::Accepted
+    })
+}
+
+/// Take the head item, sleeping until one arrives.  Returns `None` only
+/// when the queue is shut down **and** empty: accepted work drains
+/// before consumers go home.
+pub(crate) fn q_pop<T, S: SyncOps<St = QState<T>>>(sync: &S) -> Option<T> {
+    sync.locked_wait(Cv::Work, |q, w| {
+        if let Some(item) = q.items.pop_front() {
+            q.popped += 1;
+            if q.done_watch {
+                w.notify_done_one();
+            }
+            return Some(Some(item));
+        }
+        if q.shutdown {
+            return Some(None);
+        }
+        None
+    })
+}
+
+/// Signal shutdown and wake every sleeping consumer so each can drain
+/// and exit.
+pub(crate) fn q_shutdown<T, S: SyncOps<St = QState<T>>>(sync: &S) {
+    sync.locked(|q, w| {
+        q.shutdown = true;
+        w.notify_work_all();
+    });
+}
+
+/// Block until every one of `offered` items has settled — been popped or
+/// shed.  The check scenarios' closer thread gates shutdown on this,
+/// which is what makes a lost push wake *convictable*: a stranded
+/// consumer means the counters never settle, the closer never closes,
+/// and the scheduler reports a deadlock.
+pub(crate) fn q_await_settled<T, S: SyncOps<St = QState<T>>>(sync: &S, offered: u64) {
+    sync.locked_wait(Cv::Done, |q, _| {
+        q.done_watch = true;
+        (q.popped + q.shed >= offered).then_some(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Production substrate
+// ---------------------------------------------------------------------------
+
+/// Result of a deadline-bounded pop (production gather loop only).
+pub(crate) enum PopTimed<T> {
+    Got(T),
+    TimedOut,
+    /// Shut down and drained: the consumer should process what it has
+    /// and exit.
+    Closed,
+}
+
+/// The production queue substrate: `Mutex<QState>` + work/done condvars,
+/// mirroring `executor::pool::StdSync` (poison-recovering for the same
+/// reason: a panicking worker must not poison admission for everyone
+/// else — the state is plain counters plus jobs that are re-validated
+/// downstream).
+pub(crate) struct StdQueue<T> {
+    state: Mutex<QState<T>>,
+    work: Condvar,
+    done: Condvar,
+}
+
+impl<T> StdQueue<T> {
+    pub(crate) fn new(bound: usize) -> Self {
+        StdQueue {
+            state: Mutex::new(QState::new(bound)),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QState<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn deliver(&self, w: &Wake) {
+        if w.work_all {
+            self.work.notify_all();
+        } else if w.work_one {
+            self.work.notify_one();
+        }
+        if w.done_one {
+            self.done.notify_one();
+        }
+    }
+
+    /// Deadline-bounded pop for the batch gather loop: an item, a
+    /// drained shutdown, or the deadline — whichever comes first.
+    pub(crate) fn pop_until(&self, deadline: Instant) -> PopTimed<T> {
+        let mut g = self.lock();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                g.popped += 1;
+                let watch = g.done_watch;
+                drop(g);
+                if watch {
+                    self.done.notify_one();
+                }
+                return PopTimed::Got(item);
+            }
+            if g.shutdown {
+                return PopTimed::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimed::TimedOut;
+            }
+            g = self
+                .work
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
+        }
+    }
+
+    /// Drop every queued item (the last-worker-death path): their reply
+    /// channels close as the jobs drop, so blocked clients resolve with
+    /// a disconnect error promptly instead of hanging on work nobody
+    /// will ever serve.  Returns how many were purged.
+    pub(crate) fn purge(&self) -> usize {
+        let drained: Vec<T> = {
+            let mut g = self.lock();
+            g.items.drain(..).collect()
+        };
+        // Drop outside the lock: dropping a job sends nothing but may
+        // run arbitrary channel teardown.
+        drained.len()
+    }
+
+    /// Snapshot `(shed, current depth)` for stats reporting.
+    pub(crate) fn shed_and_depth(&self) -> (u64, usize) {
+        let g = self.lock();
+        (g.shed, g.items.len())
+    }
+}
+
+impl<T: Send> SyncOps for StdQueue<T> {
+    type St = QState<T>;
+
+    fn locked<R>(&self, f: impl FnOnce(&mut QState<T>, &mut Wake) -> R) -> R {
+        let mut g = self.lock();
+        let mut w = Wake::default();
+        let r = f(&mut g, &mut w);
+        drop(g);
+        // Notify after release: waiters re-check under the lock, so late
+        // delivery is safe and avoids waking into a held mutex.
+        self.deliver(&w);
+        r
+    }
+
+    fn locked_wait<R>(
+        &self,
+        cv: Cv,
+        mut f: impl FnMut(&mut QState<T>, &mut Wake) -> Option<R>,
+    ) -> R {
+        let mut g = self.lock();
+        loop {
+            let mut w = Wake::default();
+            let r = f(&mut g, &mut w);
+            // Deliver while holding the lock — the sleep below must not
+            // open a window between f's state change and its wakes.
+            self.deliver(&w);
+            match r {
+                Some(r) => return r,
+                None => {
+                    let cv = match cv {
+                        Cv::Work => &self.work,
+                        Cv::Done => &self.done,
+                    };
+                    g = cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn push_pop_preserves_order_and_counters() {
+        let q: StdQueue<usize> = StdQueue::new(4);
+        for i in 0..3 {
+            assert_eq!(q_push(&q, i), PushOutcome::Accepted);
+        }
+        for i in 0..3 {
+            assert_eq!(q_pop(&q), Some(i));
+        }
+        let g = q.lock();
+        assert_eq!((g.pushed, g.popped, g.shed), (3, 3, 0));
+    }
+
+    #[test]
+    fn push_past_bound_sheds_instead_of_growing() {
+        let q: StdQueue<usize> = StdQueue::new(2);
+        assert_eq!(q_push(&q, 0), PushOutcome::Accepted);
+        assert_eq!(q_push(&q, 1), PushOutcome::Accepted);
+        assert_eq!(q_push(&q, 2), PushOutcome::Shed { depth: 2 });
+        assert_eq!(q.shed_and_depth(), (1, 2));
+        // Popping opens a slot again.
+        assert_eq!(q_pop(&q), Some(0));
+        assert_eq!(q_push(&q, 3), PushOutcome::Accepted);
+    }
+
+    #[test]
+    fn shutdown_drains_remaining_items_then_closes() {
+        let q: StdQueue<usize> = StdQueue::new(4);
+        q_push(&q, 7);
+        q_shutdown(&q);
+        assert_eq!(q_push(&q, 8), PushOutcome::Closed);
+        assert_eq!(q_pop(&q), Some(7), "accepted work drains before close");
+        assert_eq!(q_pop(&q), None);
+    }
+
+    #[test]
+    fn pop_until_times_out_on_an_empty_queue() {
+        let q: StdQueue<usize> = StdQueue::new(4);
+        let t0 = Instant::now();
+        match q.pop_until(t0 + Duration::from_millis(5)) {
+            PopTimed::TimedOut => {}
+            _ => panic!("empty queue must time out"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn sleeping_consumer_is_woken_by_a_push() {
+        let q: Arc<StdQueue<usize>> = Arc::new(StdQueue::new(4));
+        let qc = Arc::clone(&q);
+        let h = std::thread::spawn(move || q_pop(&*qc));
+        // Give the consumer a moment to park, then push.
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q_push(&*q, 42), PushOutcome::Accepted);
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn await_settled_accounts_pops_and_sheds() {
+        let q: Arc<StdQueue<usize>> = Arc::new(StdQueue::new(1));
+        assert_eq!(q_push(&*q, 0), PushOutcome::Accepted);
+        assert!(matches!(q_push(&*q, 1), PushOutcome::Shed { .. }));
+        let qc = Arc::clone(&q);
+        let h = std::thread::spawn(move || q_await_settled(&*qc, 2));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(q_pop(&*q), Some(0));
+        h.join().unwrap();
+    }
+}

@@ -175,6 +175,9 @@ pub(crate) enum Cv {
 #[derive(Default)]
 pub(crate) struct Wake {
     pub(crate) work_all: bool,
+    /// Wake exactly one `Cv::Work` waiter (the admission queue's push
+    /// path: one item needs one consumer).  Subsumed by `work_all`.
+    pub(crate) work_one: bool,
     pub(crate) done_one: bool,
 }
 
@@ -183,28 +186,43 @@ impl Wake {
         self.work_all = true;
     }
 
+    pub(crate) fn notify_work_one(&mut self) {
+        self.work_one = true;
+    }
+
     pub(crate) fn notify_done_one(&mut self) {
         self.done_one = true;
     }
 }
 
-/// The synchronization substrate the epoch protocol runs on: one lock
-/// around [`Slot`], the two condvars of [`Cv`], and an optional yield
-/// point.  Production uses [`StdSync`] (futex-backed, allocation-free);
-/// the model checker substitutes `check::sched::ModelSync`, whose
-/// implementation hands every one of these decisions to a deterministic
-/// scheduler — which is what makes the protocol *checkable*: the checker
-/// runs this very code under every interleaving it enumerates.
+/// The synchronization substrate a checkable protocol runs on: one lock
+/// around the protocol state `St`, the two condvars of [`Cv`], and an
+/// optional yield point.  The pool's epoch protocol instantiates it with
+/// `St = Slot`; the coordinator's admission queue with `St = QState`.
+/// Production uses [`StdSync`]-style substrates (futex-backed,
+/// allocation-free); the model checker substitutes
+/// `check::sched::ModelSync`, whose implementation hands every one of
+/// these decisions to a deterministic scheduler — which is what makes a
+/// protocol *checkable*: the checker runs this very code under every
+/// interleaving it enumerates.
 pub(crate) trait SyncOps: Sync {
-    /// Critical section: run `f` under the slot lock, then deliver the
+    /// The protocol's entire mutable state, always accessed under the
+    /// substrate's lock.
+    type St;
+
+    /// Critical section: run `f` under the state lock, then deliver the
     /// wakes `f` requested.
-    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R;
+    fn locked<R>(&self, f: impl FnOnce(&mut Self::St, &mut Wake) -> R) -> R;
 
     /// Critical section with a wait loop: run `f` under the lock; when it
     /// returns `None`, release the lock, sleep on `cv` until notified,
     /// and re-run `f` under the re-acquired lock.  Wakes requested by `f`
     /// are delivered at every release (including before sleeping).
-    fn locked_wait<R>(&self, cv: Cv, f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>) -> R;
+    fn locked_wait<R>(
+        &self,
+        cv: Cv,
+        f: impl FnMut(&mut Self::St, &mut Wake) -> Option<R>,
+    ) -> R;
 
     /// A scheduler-visible point in *unlocked* code (the model scheduler
     /// may preempt here); free in production.
@@ -215,11 +233,17 @@ pub(crate) trait SyncOps: Sync {
 /// a harness hand each logical thread a borrowed substrate (the checker
 /// wraps a per-thread `&ModelSync`).
 impl<S: SyncOps> SyncOps for &S {
-    fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
+    type St = S::St;
+
+    fn locked<R>(&self, f: impl FnOnce(&mut Self::St, &mut Wake) -> R) -> R {
         (**self).locked(f)
     }
 
-    fn locked_wait<R>(&self, cv: Cv, f: impl FnMut(&mut Slot, &mut Wake) -> Option<R>) -> R {
+    fn locked_wait<R>(
+        &self,
+        cv: Cv,
+        f: impl FnMut(&mut Self::St, &mut Wake) -> Option<R>,
+    ) -> R {
         (**self).locked_wait(cv, f)
     }
 
@@ -232,7 +256,7 @@ impl<S: SyncOps> SyncOps for &S {
 /// job, run band 0 inline, wait for every acknowledgement, re-raise a
 /// worker panic.  `bands` must already be clamped to the pool width and
 /// `>= 1`; `workers >= 1` (the inline fast paths never reach here).
-pub(crate) fn dispatch<S: SyncOps>(
+pub(crate) fn dispatch<S: SyncOps<St = Slot>>(
     sync: &S,
     workers: usize,
     bands: usize,
@@ -279,9 +303,9 @@ pub(crate) fn dispatch<S: SyncOps>(
 /// Drop guard for one dispatch epoch: blocks until every worker has
 /// acknowledged, then retires the job reference — on normal return *and*
 /// on unwind from the dispatcher's own band.
-struct EpochBarrier<'a, S: SyncOps>(&'a S);
+struct EpochBarrier<'a, S: SyncOps<St = Slot>>(&'a S);
 
-impl<S: SyncOps> Drop for EpochBarrier<'_, S> {
+impl<S: SyncOps<St = Slot>> Drop for EpochBarrier<'_, S> {
     fn drop(&mut self) {
         self.0.locked_wait(Cv::Done, |s, _| {
             if s.outstanding == 0 {
@@ -298,7 +322,7 @@ impl<S: SyncOps> Drop for EpochBarrier<'_, S> {
 /// acknowledge — and keep the worker alive across kernel panics so the
 /// dispatcher waiting on the epoch never deadlocks (it re-raises after
 /// the barrier).  Returns on shutdown.
-pub(crate) fn worker_loop<S: SyncOps>(sync: &S, band: usize) {
+pub(crate) fn worker_loop<S: SyncOps<St = Slot>>(sync: &S, band: usize) {
     let mut seen = 0u64;
     loop {
         let claimed = sync.locked_wait(Cv::Work, |s, _| {
@@ -341,7 +365,7 @@ pub(crate) fn worker_loop<S: SyncOps>(sync: &S, band: usize) {
 
 /// Ask every worker to exit (the pool's drop path; the checker's
 /// scenarios call it to prove shutdown drains without deadlock).
-pub(crate) fn signal_shutdown<S: SyncOps>(sync: &S) {
+pub(crate) fn signal_shutdown<S: SyncOps<St = Slot>>(sync: &S) {
     sync.locked(|s, w| {
         s.shutdown = true;
         w.notify_work_all();
@@ -392,6 +416,8 @@ impl StdSync {
     fn deliver(&self, w: &Wake) {
         if w.work_all {
             self.work.notify_all();
+        } else if w.work_one {
+            self.work.notify_one();
         }
         if w.done_one {
             self.done.notify_one();
@@ -400,6 +426,8 @@ impl StdSync {
 }
 
 impl SyncOps for StdSync {
+    type St = Slot;
+
     fn locked<R>(&self, f: impl FnOnce(&mut Slot, &mut Wake) -> R) -> R {
         let mut g = self.lock();
         let mut w = Wake::default();

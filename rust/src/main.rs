@@ -46,10 +46,13 @@ COMMANDS:
                     against the interpreter oracle before it is timed.
   serve             Batched serving: --executor graph|vm|arena --precision int8
                     --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
+                    --workers 1 --queue-bound 1024
                     (--executor arena serves natively compiled bucket engines —
                     no artifacts; --buckets 1,4,8,16 --image 32 --threads N;
-                    --tuned records.json serves under the autotuned schedule;
-                    exits non-zero unless every request succeeds)
+                    --workers N shards serving across N engine sets over one
+                    bounded admission queue; --tuned records.json serves under
+                    the autotuned schedule; exits non-zero unless every
+                    request succeeds)
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
@@ -63,7 +66,13 @@ COMMANDS:
                     an inline micro-tune (--tune-budget 6) when bare]
   bench-serve       Arena bucket serving vs per-request run (no artifacts)
                     [--requests 256 --clients 16 --buckets 1,4,8 --image 32
-                    --threads 1 --batch-timeout-ms 2]
+                    --threads 1 --batch-timeout-ms 2 --workers 1]
+                    --load replays seeded open-loop arrival traces (Poisson
+                    + bursty) instead of closed-loop clients, reporting
+                    p50/p99/p999 latency, throughput, and shed rate; every
+                    reply is verified bit-for-bit against the interpreter
+                    oracle [--rate 400 --requests 2000 --burst 32
+                    --queue-bound 64 --seed 7 --json PATH | --quick]
   compile-demo      In-process graph-IR pass pipeline  [--batch 1 --c-block 16]
 
 The arena commands default --threads to the TVMQ_THREADS env var (else 1);
@@ -140,15 +149,20 @@ fn main() -> Result<()> {
             print_arena_ablation(&args)?;
         }
         Some("bench-serve") => {
-            serve_bench(
-                &args.usize_list("buckets", &[1, 4, 8])?,
-                args.usize("image", 32)?,
-                args.usize("threads", env_threads())?,
-                args.usize("requests", 256)?,
-                args.usize("clients", 16)?,
-                Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
-            )?
-            .print();
+            if args.flag("load") {
+                bench_serve_load(&args)?;
+            } else {
+                serve_bench(
+                    &args.usize_list("buckets", &[1, 4, 8])?,
+                    args.usize("image", 32)?,
+                    args.usize("threads", env_threads())?,
+                    args.usize("requests", 256)?,
+                    args.usize("clients", 16)?,
+                    Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
+                    args.usize("workers", 1)?,
+                )?
+                .print();
+            }
         }
         Some("compile-demo") => {
             compile_demo(args.usize("batch", 1)?, args.usize("c-block", 16)?)?;
@@ -258,6 +272,96 @@ fn print_arena_ablation(args: &Args) -> Result<()> {
         println!("wrote {} perf records to {path}", rows.len());
     }
     Ok(())
+}
+
+/// `bench-serve --load` — open-loop load generation against the sharded
+/// serving tier.  `--quick` is the CI smoke shape (2 workers, short
+/// bounded trace, tight queue bound); explicit flags win either way.
+/// `--json PATH` writes the per-trace records (p50/p99/p999, throughput,
+/// shed rate) next to the other perf artifacts.
+fn bench_serve_load(args: &Args) -> Result<()> {
+    use tvmq::bench::{load_bench, LoadOpts};
+
+    let mut opts = if args.flag("quick") {
+        LoadOpts::quick()
+    } else {
+        LoadOpts {
+            buckets: vec![1, 4, 8],
+            image: 32,
+            threads: env_threads(),
+            workers: 1,
+            queue_bound: 64,
+            batch_timeout: Duration::from_millis(2),
+            rate_rps: 400.0,
+            requests: 2000,
+            burst: 32,
+            seed: 7,
+        }
+    };
+    opts.buckets = args.usize_list("buckets", &opts.buckets)?;
+    opts.image = args.usize("image", opts.image)?;
+    opts.threads = args.usize("threads", opts.threads)?;
+    opts.workers = args.usize("workers", opts.workers)?;
+    opts.queue_bound = args.usize("queue-bound", opts.queue_bound)?;
+    opts.batch_timeout =
+        Duration::from_millis(args.u64("batch-timeout-ms", opts.batch_timeout.as_millis() as u64)?);
+    opts.rate_rps = args.usize("rate", opts.rate_rps as usize)? as f64;
+    opts.requests = args.usize("requests", opts.requests)?;
+    opts.burst = args.usize("burst", opts.burst)?;
+    opts.seed = args.u64("seed", opts.seed)?;
+
+    let (table, rows) = load_bench(&opts)?;
+    table.print();
+    if let Some(path) = args.opt_str("json") {
+        write_load_json(&path, &rows, &opts)?;
+        println!("wrote {} load records to {path}", rows.len());
+    }
+    Ok(())
+}
+
+/// Serialize the load rows with the offered-trace parameters, so a stored
+/// record is self-describing when diffed across PRs.
+fn write_load_json(
+    path: &str,
+    rows: &[tvmq::bench::LoadRow],
+    opts: &tvmq::bench::LoadOpts,
+) -> Result<()> {
+    use tvmq::util::json::Json;
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("trace", Json::str(r.trace.clone())),
+                ("offered", Json::num(r.offered as f64)),
+                ("served", Json::num(r.served as f64)),
+                ("shed", Json::num(r.shed as f64)),
+                ("worker_died", Json::num(r.worker_died as f64)),
+                ("timeouts", Json::num(r.timeouts as f64)),
+                ("other_errors", Json::num(r.other_errors as f64)),
+                ("wall_s", Json::num(r.wall_s)),
+                ("throughput_rps", Json::num(r.throughput_rps)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p99_ms", Json::num(r.p99_ms)),
+                ("p999_ms", Json::num(r.p999_ms)),
+                ("shed_rate", Json::num(r.shed_rate)),
+                ("mean_batch", Json::num(r.mean_batch)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve-load")),
+        ("workers", Json::num(opts.workers as f64)),
+        ("queue_bound", Json::num(opts.queue_bound as f64)),
+        ("rate_rps", Json::num(opts.rate_rps)),
+        ("requests", Json::num(opts.requests as f64)),
+        ("burst", Json::num(opts.burst as f64)),
+        ("image", Json::num(opts.image as f64)),
+        ("threads", Json::num(opts.threads as f64)),
+        ("seed", Json::num(opts.seed as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    std::fs::write(path, doc.to_string_pretty() + "\n")
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
 }
 
 /// Serialize the arena perf rows with the run protocol (epochs, warmup,
@@ -459,6 +563,8 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         spec,
         max_batch: args.usize("max-batch", 64)?,
         batch_timeout: Duration::from_millis(args.u64("batch-timeout-ms", 2)?),
+        workers: args.usize("workers", 1)?,
+        queue_bound: args.usize("queue-bound", 1024)?,
     };
     let requests = args.usize("requests", 512)?;
     let clients = args.usize("clients", 32)?.max(1);
@@ -495,7 +601,11 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         (InferenceServer::start(artifacts.clone(), cfg)?, rest)
     };
     let server = std::sync::Arc::new(server);
-    println!("serving {spec} with buckets {:?}", server.buckets);
+    println!(
+        "serving {spec} with buckets {:?} across {} worker(s)",
+        server.buckets,
+        server.workers()
+    );
 
     let t0 = std::time::Instant::now();
     let per_client = (requests / clients).max(1);
@@ -532,10 +642,15 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         stats.errors
     );
     println!(
-        "latency ms: p50={:.2} p95={:.2} p99={:.2}  mean batch={:.1}  batches={} padded={}",
-        lat.p50_ms, lat.p95_ms, lat.p99_ms, stats.mean_batch(), stats.batches, stats.padded_slots
+        "latency ms: p50={:.2} p95={:.2} p99={:.2} p999={:.2}  mean batch={:.1}  \
+         batches={} padded={} shed={}",
+        lat.p50_ms, lat.p95_ms, lat.p99_ms, lat.p999_ms, stats.mean_batch(),
+        stats.batches, stats.padded_slots, stats.shed
     );
-    println!("bucket histogram: {:?}", stats.batch_histogram);
+    println!(
+        "bucket histogram: {:?}  gathered histogram: {:?}",
+        stats.batch_histogram, stats.gathered_histogram
+    );
     // Smoke contract (CI relies on this): every request answered, none
     // with an error.
     if stats.requests != expected || stats.errors != 0 || client_errors != 0 {

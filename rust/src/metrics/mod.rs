@@ -18,6 +18,10 @@ pub struct EpochStats {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Tail of the tail — the serving tier's SLO metric (a p999 spike
+    /// with a healthy p50 is exactly the head-of-line-blocking signature
+    /// the sharded coordinator exists to remove).
+    pub p999_ms: f64,
     pub max_ms: f64,
 }
 
@@ -45,6 +49,7 @@ impl EpochStats {
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
+            p999_ms: pct(0.999),
             max_ms: sorted.last().copied().unwrap_or(0.0),
         }
     }

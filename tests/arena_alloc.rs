@@ -248,6 +248,7 @@ fn serve_loop_executor_path_is_allocation_free_in_steady_state() {
             spec,
             max_batch: 2,
             batch_timeout: Duration::from_millis(1),
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -278,4 +279,82 @@ fn serve_loop_executor_path_is_allocation_free_in_steady_state() {
     );
     drop(deltas);
     server.shutdown().unwrap();
+}
+
+/// The sharded tier keeps the contract: with 2 workers each owning its
+/// own engine set, steady-state serving still performs zero allocations
+/// inside `run_into` — replication multiplies engines, not per-request
+/// heap traffic.
+#[test]
+fn sharded_serve_loop_executor_path_is_allocation_free_in_steady_state() {
+    use std::time::Duration;
+    use tvmq::coordinator::{InferenceServer, ServeConfig};
+    use tvmq::executor::{EngineKind, EngineSpec};
+    use tvmq::util::rng::Rng64;
+
+    let _serial = SERIAL.lock().unwrap();
+
+    let spec = EngineSpec::new(EngineKind::Arena);
+    let deltas = Arc::new(Mutex::new(Vec::with_capacity(128)));
+    let factory = CountingFactory {
+        inner: NativeArenaFactory::new(spec, &[1, 2], 12, 1).unwrap(),
+        deltas: deltas.clone(),
+    };
+    let server = Arc::new(
+        InferenceServer::start_with(
+            factory,
+            ServeConfig {
+                spec,
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(1),
+                workers: 2,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(server.workers(), 2);
+
+    let image = {
+        let mut rng = Rng64::seed_from_u64(13);
+        let vals: Vec<f32> = (0..3 * 12 * 12).map(|_| rng.normal() * 0.5).collect();
+        TensorData::from_f32(vec![1, 3, 12, 12], &vals).unwrap()
+    };
+
+    // Concurrent warm-up: enough parallel clients that both workers pop
+    // work and fault in their arenas (the run_into deltas themselves
+    // should be zero even cold — the arena preallocates at build — but
+    // only the steady state is the contract).
+    let warmers: Vec<_> = (0..4)
+        .map(|_| {
+            let server = Arc::clone(&server);
+            let image = image.clone();
+            std::thread::spawn(move || {
+                for _ in 0..3 {
+                    server.submit_blocking(image.clone()).unwrap();
+                }
+            })
+        })
+        .collect();
+    for w in warmers {
+        w.join().unwrap();
+    }
+    let warm = deltas.lock().unwrap().len();
+
+    // Measured phase: serial, so every delta window is quiet.
+    for _ in 0..6 {
+        let reply = server.submit_blocking(image.clone()).unwrap();
+        assert!(reply.logits.as_f32_slice().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    let tail: Vec<u64> = deltas.lock().unwrap()[warm..].to_vec();
+    assert_eq!(tail.len(), 6);
+    assert!(
+        tail.iter().all(|&d| d == 0),
+        "sharded steady-state serving allocated inside the executor path: {tail:?}"
+    );
+    let stats = server.stats();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.requests, 12 + 6);
+    Arc::try_unwrap(server).ok().expect("clients joined").shutdown().unwrap();
 }

@@ -111,6 +111,7 @@ fn cfg(max_batch: usize, timeout_ms: u64) -> ServeConfig {
         spec: EngineSpec::new(EngineKind::Arena),
         max_batch,
         batch_timeout: Duration::from_millis(timeout_ms),
+        ..ServeConfig::default()
     }
 }
 
@@ -141,6 +142,12 @@ fn partial_batch_pads_to_the_next_bucket_and_truncates_replies() {
     assert_eq!(stats.batches, 1);
     assert_eq!(stats.padded_slots, 1);
     assert_eq!(stats.batch_histogram.get(&4), Some(&1));
+    // The mean-batch regression: 3 requests in one (padded) batch must
+    // report 3.0, not the bucket size the old histogram average gave.
+    assert!((stats.mean_batch() - 3.0).abs() < 1e-12, "got {}", stats.mean_batch());
+    // And the gathered histogram keys on the actual pre-padding size.
+    assert_eq!(stats.gathered_histogram.get(&3), Some(&1));
+    assert_eq!(stats.gathered_histogram.get(&4), None);
     assert_eq!(*calls.lock().unwrap(), vec![4]);
     server.shutdown().unwrap();
 }
@@ -208,11 +215,99 @@ fn mismatched_image_is_rejected_not_served() {
     let factory = MockFactory::new(&[1]);
     let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
     let bad = TensorData::from_f32(vec![1, DIM + 1], &[0.0; DIM + 1]).unwrap();
-    assert!(server.submit_blocking(bad).is_err());
+    let err = server.submit_blocking(bad).unwrap_err().to_string();
+    assert!(err.contains("does not fit"), "got: {err}");
     let stats = server.stats();
     assert_eq!(stats.requests, 0);
     assert_eq!(stats.errors, 1);
     server.shutdown().unwrap();
+}
+
+/// The blast-radius regression: one malformed image co-gathered with two
+/// valid requests must fail alone — the innocents are still served, with
+/// the right rows.
+#[test]
+fn malformed_image_fails_only_its_own_job() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let calls = factory.calls.clone();
+    // Generous timeout so all three land in one gather.
+    let server = InferenceServer::start_with(factory, cfg(4, 200)).unwrap();
+
+    let good_a = server.submit(image(1)).unwrap();
+    let bad = server
+        .submit(TensorData::from_f32(vec![1, DIM + 1], &[9.0; DIM + 1]).unwrap())
+        .unwrap();
+    let good_b = server.submit(image(2)).unwrap();
+
+    let err = bad.wait_timeout(Duration::from_secs(10)).unwrap_err().to_string();
+    assert!(err.contains("does not fit"), "got: {err}");
+    let a = good_a.wait_timeout(Duration::from_secs(10)).unwrap();
+    let b = good_b.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!((a.class, b.class), (1, 2), "valid jobs must serve, correctly routed");
+    // The two survivors fit bucket 2 after the invalid job was peeled off.
+    assert_eq!(a.batch, 2);
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.gathered_histogram.get(&2), Some(&1));
+    assert_eq!(*calls.lock().unwrap(), vec![2]);
+    server.shutdown().unwrap();
+}
+
+/// The class-only submit path: same answer, no logits payload.
+#[test]
+fn submit_class_replies_with_argmax_only() {
+    let factory = MockFactory::new(&[1, 2]);
+    let server = InferenceServer::start_with(factory, cfg(2, 1)).unwrap();
+    for c in 0..3 {
+        let reply = server.submit_class(image(c)).unwrap().wait().unwrap();
+        assert_eq!(reply.class, c);
+        assert_eq!(reply.batch, 1);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 0);
+    server.shutdown().unwrap();
+}
+
+/// Sharded serving: N workers over one queue, every reply still routed to
+/// the right request with the right logits, regardless of which worker's
+/// engine set served it.
+#[test]
+fn multi_worker_server_serves_concurrent_clients_correctly() {
+    let factory = MockFactory::new(&[1, 2, 4]);
+    let server = Arc::new(
+        InferenceServer::start_with(
+            factory,
+            ServeConfig { workers: 3, ..cfg(4, 2) },
+        )
+        .unwrap(),
+    );
+    assert_eq!(server.workers(), 3);
+    assert_eq!(server.alive_workers(), 3);
+
+    let mut clients = Vec::new();
+    for t in 0..4 {
+        let server = Arc::clone(&server);
+        clients.push(std::thread::spawn(move || {
+            for i in 0..8 {
+                let c = (t * 8 + i) % CLASSES;
+                let reply = server.submit_blocking(image(c)).unwrap();
+                assert_eq!(reply.class, c, "reply routed to the wrong request");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 32);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shed, 0, "32 blocking clients cannot fill a 1024 queue");
+    assert_eq!(server.alive_workers(), 3);
+    Arc::try_unwrap(server).ok().expect("clients joined").shutdown().unwrap();
 }
 
 #[test]

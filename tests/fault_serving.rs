@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 use tvmq::check::fault::{silence_injected_faults, Fault, FaultPlan, FaultyFactory};
-use tvmq::coordinator::{InferenceServer, PendingReply, ServeConfig};
+use tvmq::coordinator::{InferenceServer, PendingReply, Rejected, ServeConfig, WaitError};
 use tvmq::executor::{EngineFactory, EngineKind, EngineSpec, ExecSnapshot, Executor};
 use tvmq::runtime::{DType, TensorData};
 
@@ -106,6 +106,7 @@ fn cfg(max_batch: usize, timeout_ms: u64) -> ServeConfig {
         spec: EngineSpec::new(EngineKind::Arena),
         max_batch,
         batch_timeout: Duration::from_millis(timeout_ms),
+        ..ServeConfig::default()
     }
 }
 
@@ -307,4 +308,181 @@ fn shutdown_with_in_flight_requests_resolves_every_reply() {
     assert_eq!(stats.errors, 0);
     record_summary("fault-shutdown-in-flight", 3, 3, 0);
     server.shutdown().unwrap();
+}
+
+/// The wait-time errors are typed, not one blurred message: a client-side
+/// timeout downcasts to [`WaitError::Timeout`] (the request may still
+/// complete), worker death to [`WaitError::WorkerDied`].
+#[test]
+fn wait_errors_are_typed_timeout_vs_worker_death() {
+    silence_injected_faults();
+    // Timeout: the engine is merely slow; a 10ms wait on a 300ms stall
+    // must say "timed out", not "worker died".
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Delay(Duration::from_millis(300)))]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+    let err = server
+        .submit(image(2))
+        .unwrap()
+        .wait_timeout(Duration::from_millis(10))
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<WaitError>(),
+        Some(&WaitError::Timeout),
+        "got: {err}"
+    );
+    server.shutdown().unwrap();
+
+    // Death: the worker is gone; the reply channel drops and the error
+    // says so.
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Die)]));
+    let server = InferenceServer::start_with(factory, cfg(1, 1)).unwrap();
+    let err = server.submit(image(0)).unwrap().wait_timeout(REPLY_BOUND).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<WaitError>(),
+        Some(&WaitError::WorkerDied),
+        "got: {err}"
+    );
+    assert!(server.shutdown().is_err());
+}
+
+/// Backpressure is a typed shed, not an unbounded queue: with the single
+/// worker stalled and the admission queue at its bound, further submits
+/// fail immediately with [`Rejected::Overloaded`] carrying the bound —
+/// and every *accepted* request is still served correctly afterwards.
+#[test]
+fn overloaded_queue_sheds_with_typed_error_and_serves_the_accepted() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1]))
+        .run_faults(FaultPlan::script([Some(Fault::Delay(Duration::from_millis(300)))]));
+    let server = InferenceServer::start_with(
+        factory,
+        ServeConfig { queue_bound: 2, ..cfg(1, 1) },
+    )
+    .unwrap();
+
+    // First request occupies the worker (stalled inside the engine);
+    // then overfill the bound-2 queue.
+    let stalled = server.submit(image(1)).unwrap();
+    // Give the worker a moment to pop the stalled job off the queue.
+    std::thread::sleep(Duration::from_millis(50));
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for c in 0..6 {
+        match server.submit(image(c % CLASSES)) {
+            Ok(p) => accepted.push((c % CLASSES, p)),
+            Err(e) => {
+                match e.downcast_ref::<Rejected>() {
+                    Some(&Rejected::Overloaded { bound, depth }) => {
+                        assert_eq!(bound, 2, "shed must report the configured bound");
+                        assert!(depth >= bound, "shed below the bound: {e}");
+                    }
+                    other => panic!("expected Overloaded, got {other:?}: {e}"),
+                }
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed >= 1, "overfilling a bound-2 queue by 6 must shed");
+    assert!(accepted.len() >= 2, "the queue must still accept up to its bound");
+
+    // The stalled request and every accepted one resolve correctly.
+    assert_eq!(stalled.wait_timeout(REPLY_BOUND).unwrap().class, 1);
+    for (want, p) in accepted {
+        assert_eq!(p.wait_timeout(REPLY_BOUND).unwrap().class, want);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.shed, shed as u64, "server ledger must count every shed");
+    assert_eq!(stats.errors, 0, "sheds are not errors");
+    record_summary("fault-overload-shed", 7, 1 + (7 - 1 - shed), shed);
+    server.shutdown().unwrap();
+}
+
+/// The multi-worker death matrix: kill workers under load via per-worker
+/// fault plans and assert the failover contract — survivors keep serving
+/// with zero wrong replies, in-flight jobs on dead workers error promptly,
+/// and shutdown reports the deaths.
+#[test]
+fn killing_workers_under_load_leaves_survivors_serving() {
+    silence_injected_faults();
+    // Workers 0 and 1 die on their first served batch; worker 2 is clean.
+    let factory = FaultyFactory::new(MockFactory::new(&[1])).run_faults(
+        FaultPlan::per_worker(
+            [FaultPlan::script([Some(Fault::Die)]), FaultPlan::script([Some(Fault::Die)])],
+            FaultPlan::none(),
+        ),
+    );
+    let server = Arc::new(
+        InferenceServer::start_with(factory, ServeConfig { workers: 3, ..cfg(1, 1) }).unwrap(),
+    );
+    assert_eq!(server.alive_workers(), 3);
+
+    // Load until both doomed workers have served (and died), bounded so a
+    // starved worker fails the test instead of hanging it.  Every reply
+    // either carries the RIGHT class or is a prompt typed error — a wrong
+    // class is an immediate failure.
+    let deadline = std::time::Instant::now() + REPLY_BOUND;
+    let (mut ok, mut errors) = (0usize, 0usize);
+    while server.alive_workers() > 1 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "doomed workers never served a batch (ok={ok} errors={errors})"
+        );
+        // Burst one request per worker so every blocked worker gets
+        // woken — a serial drip could let the clean worker starve the
+        // doomed ones of work indefinitely.
+        let pending: Vec<(usize, PendingReply)> = (0..3)
+            .map(|k| {
+                let c = (ok + errors + k) % CLASSES;
+                (c, server.submit(image(c)).expect("a worker survives"))
+            })
+            .collect();
+        for (c, p) in pending {
+            match p.wait_timeout(REPLY_BOUND) {
+                Ok(reply) => {
+                    assert_eq!(reply.class, c, "reply routed to the wrong request");
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert_eq!(
+                        e.downcast_ref::<WaitError>(),
+                        Some(&WaitError::WorkerDied),
+                        "in-flight on a dying worker must error as WorkerDied: {e}"
+                    );
+                    errors += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(server.alive_workers(), 1);
+    assert_eq!(errors, 2, "exactly the two Die batches may fail");
+
+    // The survivor keeps serving: the next submissions all succeed.
+    for c in 0..4 {
+        let reply = server.submit(image(c)).unwrap().wait_timeout(REPLY_BOUND).unwrap();
+        assert_eq!(reply.class, c);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, ok as u64 + 4);
+    record_summary("fault-multi-worker-kill", ok + errors + 4, ok + 4, errors);
+    assert!(
+        Arc::try_unwrap(server).ok().expect("no clients left").shutdown().is_err(),
+        "join must report the dead workers"
+    );
+}
+
+/// Per-worker build faults make multi-worker startup failures
+/// deterministic: worker 1's build errors, worker 0's succeeds, and
+/// startup reports the injected error instead of hanging or succeeding.
+#[test]
+fn per_worker_build_fault_fails_startup_deterministically() {
+    let factory = FaultyFactory::new(MockFactory::new(&[1])).build_faults(
+        FaultPlan::per_worker(
+            [FaultPlan::none(), FaultPlan::script([Some(Fault::Error)])],
+            FaultPlan::none(),
+        ),
+    );
+    let err = InferenceServer::start_with(factory, ServeConfig { workers: 2, ..cfg(1, 1) })
+        .unwrap_err();
+    assert!(err.to_string().contains("injected factory build error"), "got: {err}");
 }

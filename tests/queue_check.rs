@@ -1,0 +1,170 @@
+//! Exhaustive interleaving verification of the sharded coordinator's
+//! admission-queue protocol — the multi-worker topologies the tentpole's
+//! synchronization must survive.
+//!
+//! Each test hands `tvmq::check::check_queue` a small producers ×
+//! consumers × items × bound configuration; the checker runs the **real**
+//! `q_push`/`q_pop`/`q_shutdown`/`q_await_settled` code under the
+//! deterministic scheduler and explores every schedule within the stated
+//! preemption bound.  The validated property is settled-exactly-once:
+//! every offered item is accepted-and-consumed once or shed once — which
+//! is simultaneously dispatch fairness (no duplication, no starvation),
+//! bounded depth, and no-lost-wakeup termination.  See the
+//! `tvmq::check` module docs for exactly what a `complete` report does
+//! and does not prove.
+//!
+//! Environment knobs (CI sets all three):
+//! - `TVMQ_CHECK_BUDGET` — max schedules per scenario (default 200000);
+//!   a truncated scenario FAILS its test.
+//! - `TVMQ_CHECK_PREEMPTIONS` — preemption bound for the larger
+//!   scenarios (default 1; the smallest always run at 2).
+//! - `TVMQ_CHECK_SUMMARY` — JSONL path appended with one line per
+//!   scenario (uploaded as a CI artifact).
+
+use tvmq::check::{
+    check_queue, check_queue_with, Explorer, QueueCheckConfig, QueueReport, SabotageBug,
+};
+
+fn budget() -> usize {
+    std::env::var("TVMQ_CHECK_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000)
+}
+
+fn big_config_preemptions() -> usize {
+    std::env::var("TVMQ_CHECK_PREEMPTIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+fn explorer(preemptions: usize) -> Explorer {
+    Explorer { max_schedules: budget(), max_decisions: 10_000, preemptions }
+}
+
+/// Append one JSONL record of what a scenario explored (CI artifact).
+fn record_summary(scenario: &str, cfg: &QueueCheckConfig, preemptions: usize, r: &QueueReport) {
+    let Some(path) = std::env::var_os("TVMQ_CHECK_SUMMARY") else {
+        return;
+    };
+    use std::io::Write;
+    let line = format!(
+        "{{\"scenario\":\"{scenario}\",\"producers\":{},\"consumers\":{},\
+         \"items_per_producer\":{},\"bound\":{},\"preemptions\":{preemptions},\
+         \"schedules\":{},\"complete\":{},\"peak_decisions\":{},\
+         \"shed_total\":{},\"popped_total\":{}}}\n",
+        cfg.producers,
+        cfg.consumers,
+        cfg.items_per_producer,
+        cfg.bound,
+        r.report.schedules,
+        r.report.complete,
+        r.report.peak_decisions,
+        r.shed_total,
+        r.popped_total
+    );
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Check `cfg` exhaustively at `preemptions`; fail on any convicted
+/// schedule AND on budget truncation (incomplete exploration is not a
+/// pass).
+fn prove(scenario: &str, cfg: QueueCheckConfig, preemptions: usize) -> QueueReport {
+    let r = check_queue(cfg, explorer(preemptions))
+        .unwrap_or_else(|f| panic!("{scenario}: {f}"));
+    record_summary(scenario, &cfg, preemptions, &r);
+    assert!(
+        r.report.complete,
+        "{scenario}: exploration truncated at {} schedules — raise TVMQ_CHECK_BUDGET",
+        r.report.schedules
+    );
+    r
+}
+
+fn cfg(producers: usize, consumers: usize, items: usize, bound: usize) -> QueueCheckConfig {
+    QueueCheckConfig {
+        producers,
+        consumers,
+        items_per_producer: items,
+        bound,
+        dead_consumer: None,
+    }
+}
+
+/// Dispatch fairness across a multi-worker topology: one producer's
+/// items through two consuming workers, queue roomy enough that nothing
+/// sheds — every item must reach exactly one worker, under every
+/// schedule at preemption bound 2.
+#[test]
+fn two_workers_dispatch_each_item_exactly_once() {
+    let r = prove("queue-fair-1p2c", cfg(1, 2, 3, 3), 2);
+    assert!(
+        r.report.schedules >= 2,
+        "scheduler never branched over {} schedules",
+        r.report.schedules
+    );
+    assert_eq!(r.shed_total, 0, "a bound-3 queue offered 3 items must never shed");
+    assert!(r.popped_total > 0);
+}
+
+/// Shed-under-burst: two producers racing two items each into a bound-1
+/// queue with one consumer.  Every schedule settles every item exactly
+/// once (accepted xor shed), and at least some schedules actually shed —
+/// otherwise the admission gate was never exercised.
+#[test]
+fn burst_into_tiny_bound_sheds_cleanly() {
+    let r = prove("queue-shed-burst", cfg(2, 1, 2, 1), 1);
+    assert!(
+        r.shed_total > 0,
+        "a 4-item burst into a bound-1 queue must shed on some schedule"
+    );
+    assert!(r.popped_total > 0, "and still serve on some schedule");
+}
+
+/// Worker-death failover: consumer 0 exits after its first pop; the
+/// surviving consumer must drain every remaining accepted item — no
+/// stranded work, no lost wakeups, under every schedule.
+#[test]
+fn dead_consumer_strands_nothing() {
+    let r = prove(
+        "queue-death-failover",
+        QueueCheckConfig {
+            producers: 1,
+            consumers: 2,
+            items_per_producer: 3,
+            bound: 2,
+            dead_consumer: Some(0),
+        },
+        big_config_preemptions(),
+    );
+    assert!(r.popped_total > 0);
+}
+
+/// The checker's own oracle: a deliberately lost push wakeup (a consumer
+/// asleep through an item's arrival) must be convicted as a deadlock.
+/// A green checker that cannot find this bug proves nothing.
+#[test]
+fn checker_convicts_a_lost_push_wakeup() {
+    let f = check_queue_with(cfg(1, 1, 1, 1), explorer(1), Some(SabotageBug::DropFirstWorkWake))
+        .expect_err("a dropped push wakeup must be detected");
+    assert!(
+        f.description.contains("deadlock"),
+        "expected a deadlock conviction, got: {f}"
+    );
+    assert!(!f.schedule.is_empty(), "conviction must carry the failing schedule");
+}
+
+/// Same oracle for the settle side: losing the done-wake that releases
+/// the closer's settle-wait must be convicted.
+#[test]
+fn checker_convicts_a_lost_settle_wakeup() {
+    let f = check_queue_with(cfg(1, 1, 1, 1), explorer(1), Some(SabotageBug::DropDoneWake))
+        .expect_err("a dropped settle wakeup must be detected");
+    assert!(
+        f.description.contains("deadlock"),
+        "expected a deadlock conviction, got: {f}"
+    );
+}

@@ -45,6 +45,7 @@ fn serve_and_check(precision: Precision) {
             max_batch: 8,
             // Generous: each group below must gather into one batch.
             batch_timeout: Duration::from_millis(150),
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -128,6 +129,7 @@ fn same_image_is_bucket_invariant() {
             spec,
             max_batch: 8,
             batch_timeout: Duration::from_millis(150),
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -152,4 +154,69 @@ fn same_image_is_bucket_invariant() {
         "logits changed with the serving bucket"
     );
     server.shutdown().unwrap();
+}
+
+/// The sharded tier preserves the oracle contract: with 3 workers each
+/// holding its own per-bucket engine set, every concurrently-served
+/// request returns logits bit-identical to the interpreter — whichever
+/// worker and whichever bucket served it.
+#[test]
+fn multi_worker_serving_is_bit_identical_to_oracle() {
+    let spec = EngineSpec::new(EngineKind::Arena).precision(Precision::Int8);
+    let factory = NativeArenaFactory::new(spec, &BUCKETS, IMAGE, 1).unwrap();
+    let oracle_graph = factory.graph(1).unwrap();
+
+    let server = std::sync::Arc::new(
+        InferenceServer::start_with(
+            factory,
+            ServeConfig {
+                spec,
+                max_batch: 8,
+                // Short: let batches form per-worker rather than forcing
+                // one big gather, so several workers serve concurrently.
+                batch_timeout: Duration::from_millis(5),
+                workers: 3,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(server.workers(), 3);
+
+    // 24 requests from 4 client threads, each checked bit-exactly
+    // against its own interpreter run.
+    let clients: Vec<_> = (0..4)
+        .map(|t| {
+            let server = std::sync::Arc::clone(&server);
+            let oracle_graph = oracle_graph.clone();
+            std::thread::spawn(move || {
+                for i in 0..6 {
+                    let img = seeded_image(1000 + (t * 6 + i) as u64);
+                    let reply = server.submit_blocking(img.clone()).unwrap();
+                    let want = evaluate(&oracle_graph, &img).unwrap();
+                    let got_bits: Vec<u32> =
+                        reply.logits.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+                    let want_bits: Vec<u32> =
+                        want.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        got_bits, want_bits,
+                        "worker-served logits diverged from the oracle (client {t}, req {i})"
+                    );
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, 24);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shed, 0);
+    std::sync::Arc::try_unwrap(server)
+        .ok()
+        .expect("clients joined")
+        .shutdown()
+        .unwrap();
 }
