@@ -459,6 +459,41 @@ pub struct ArenaRow {
     pub steps: usize,
     pub fused_chains: usize,
     pub arena_bytes: usize,
+    /// Cold engine construction time (ms): the `graph::compile` path this
+    /// row's engine actually took.  0 for interpreter rows.
+    pub compile_ms: f64,
+    /// Warm-start construction time (ms): the same program rebuilt
+    /// through an in-memory compile-cache round-trip (serialize → parse →
+    /// validate → [`crate::executor::ArenaExec::from_compiled`]) — what
+    /// `serve --cache-dir` pays on a hit instead of compiling.  0 for
+    /// interpreter rows.
+    pub compile_cached_ms: f64,
+}
+
+/// Time the warm-start build path for an already-compiled engine: a full
+/// in-memory cache round-trip.  Serialization is excluded (that cost is
+/// paid at store time, not on the hit path); parse + validation against
+/// the graph + arena wrap-up are included.
+fn cached_build_ms(
+    exec: &crate::executor::ArenaExec,
+    g: &crate::graph::Graph,
+    ovr: &crate::graph::ScheduleOverrides,
+    fuse: bool,
+    threads: usize,
+) -> Result<f64> {
+    use crate::cache::store::{compiled_from_json, compiled_to_json};
+    use crate::cache::CacheKey;
+    use crate::util::json::Json;
+
+    let key = CacheKey::of(g, ovr, fuse, threads);
+    let text = compiled_to_json(exec.compiled(), &key).to_string_pretty();
+    let t0 = std::time::Instant::now();
+    let j = Json::parse(&text)?;
+    let cg = compiled_from_json(&j, g, &key)?;
+    let warm = crate::executor::ArenaExec::from_compiled(cg, threads)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    debug_assert_eq!(warm.compiled().steps.len(), exec.compiled().steps.len());
+    Ok(ms)
 }
 
 /// Where `bench-arena --tuned` gets each cell's tuned schedule from: a
@@ -538,6 +573,7 @@ pub fn arena_ablation(
                     schedule: "default".into(), knobs: "-".into(),
                     mean_ms: base.mean_ms, ns_per_iter: base.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
+                    compile_ms: 0.0, compile_cached_ms: 0.0,
                 });
 
                 let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
@@ -552,6 +588,7 @@ pub fn arena_ablation(
                     schedule: "default".into(), knobs: "-".into(),
                     mean_ms: qi.mean_ms, ns_per_iter: qi.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
+                    compile_ms: 0.0, compile_cached_ms: 0.0,
                 });
             }
 
@@ -561,7 +598,16 @@ pub fn arena_ablation(
                         "arena {precision} ({})",
                         if fuse { "fused" } else { "unfused" }
                     );
+                    let t0 = std::time::Instant::now();
                     let exec = ArenaExec::with_options(graph, fuse, threads)?;
+                    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let compile_cached_ms = cached_build_ms(
+                        &exec,
+                        graph,
+                        &crate::graph::ScheduleOverrides::default(),
+                        fuse,
+                        threads,
+                    )?;
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
                     let cg = exec.compiled();
@@ -579,6 +625,7 @@ pub fn arena_ablation(
                         mean_ms: stats.mean_ms, ns_per_iter: stats.mean_ms * 1e6,
                         steps: cg.steps.len(), fused_chains: cg.fused_chains,
                         arena_bytes: cg.arena_bytes,
+                        compile_ms, compile_cached_ms,
                     });
                 }
 
@@ -616,7 +663,11 @@ pub fn arena_ablation(
                             (plan.fuse, plan.overrides(threads), plan.describe())
                         }
                     };
+                    let t0 = std::time::Instant::now();
                     let exec = ArenaExec::with_schedule(graph, fuse, threads, &ovr)?;
+                    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let compile_cached_ms =
+                        cached_build_ms(&exec, graph, &ovr, fuse, threads)?;
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
                     let cg = exec.compiled();
@@ -635,6 +686,7 @@ pub fn arena_ablation(
                         mean_ms: stats.mean_ms, ns_per_iter: stats.mean_ms * 1e6,
                         steps: cg.steps.len(), fused_chains: cg.fused_chains,
                         arena_bytes: cg.arena_bytes,
+                        compile_ms, compile_cached_ms,
                     });
                 }
             }

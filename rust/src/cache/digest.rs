@@ -1,0 +1,525 @@
+//! Structural content digests over the graph IR and schedule tables.
+//!
+//! The compile cache is keyed by *what a graph means*, not by how it was
+//! built: two independently constructed but identical graphs must share
+//! one key, and any change that could alter the compiled step stream must
+//! change the key.  The digest therefore covers topology (operator kinds,
+//! attribute values, input order), tensor types (shape + dtype, so
+//! re-batched bucket graphs key differently), and constant *payloads*
+//! (weights hash by value, never by `Arc` pointer).  Node ids and names
+//! are deliberately excluded — appending the same dataflow in a different
+//! order yields the same digest.
+//!
+//! Digests compose recursively: each node's digest hashes its operator,
+//! its attributes, its children's digests (in input order — `Add` operand
+//! order is observable for NaN), and its type.  The graph digest is the
+//! output node's digest, so dead branches never perturb the key, matching
+//! the DCE the compiler itself performs.  A separate *constant-pool*
+//! digest hashes the sorted set of live constant digests: re-batched
+//! bucket graphs produce distinct graph digests that share one pool
+//! digest, which is how the on-disk store validates that a cached entry's
+//! `Slot::Const` indices still point at the weights the caller holds.
+//!
+//! The hash is an in-crate SHA-256 (FIPS 180-4; the offline build has no
+//! hashing dependency).  All multi-byte values are hashed little-endian
+//! with length prefixes on variable-length fields, so no two distinct
+//! structures serialize to the same byte stream.
+
+use std::fmt;
+
+use crate::executor::Banding;
+use crate::graph::compile::{ClassKey, ScheduleOverrides, StepSched};
+use crate::graph::ir::{ConstValue, Graph, IrDType, Layout, Op, TensorTy};
+
+// ---------------------------------------------------------------------------
+// SHA-256
+// ---------------------------------------------------------------------------
+
+/// A 256-bit content digest.  `Ord` gives constant-pool digests a
+/// canonical sort; hex rendering is the on-disk / log identity.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub [u8; 32]);
+
+impl Digest {
+    pub fn hex(&self) -> String {
+        let mut s = String::with_capacity(64);
+        for b in &self.0 {
+            s.push_str(&format!("{b:02x}"));
+        }
+        s
+    }
+
+    /// Leading 16 hex chars — enough to name files and log lines.
+    pub fn short(&self) -> String {
+        self.hex()[..16].to_string()
+    }
+
+    pub fn from_hex(s: &str) -> Option<Digest> {
+        if s.len() != 64 {
+            return None;
+        }
+        let mut out = [0u8; 32];
+        for (i, chunk) in s.as_bytes().chunks(2).enumerate() {
+            let hi = (chunk[0] as char).to_digit(16)?;
+            let lo = (chunk[1] as char).to_digit(16)?;
+            out[i] = (hi * 16 + lo) as u8;
+        }
+        Some(Digest(out))
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+impl fmt::Debug for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Digest({})", self.short())
+    }
+}
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Streaming SHA-256 (FIPS 180-4).
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 {
+            state: [
+                0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+                0x1f83d9ab, 0x5be0cd19,
+            ],
+            buf: [0u8; 64],
+            buf_len: 0,
+            total_len: 0,
+        }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> Digest {
+        let bit_len = self.total_len.wrapping_mul(8);
+        // Padding: 0x80, zeros, then the 64-bit big-endian message length.
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Write the length directly into the buffer tail (update would
+        // recount it).
+        self.buf[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        Digest(out)
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+
+    // -- typed feeders (length-prefixed / fixed-width, little-endian) ------
+
+    fn put_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    fn put_f32(&mut self, v: f32) {
+        self.update(&v.to_bits().to_le_bytes());
+    }
+
+    fn put_tag(&mut self, t: u8) {
+        self.update(&[t]);
+    }
+
+    fn put_layout(&mut self, l: Layout) {
+        match l {
+            Layout::Nchw => {
+                self.put_tag(0);
+                self.put_u64(0);
+            }
+            Layout::Nhwc => {
+                self.put_tag(1);
+                self.put_u64(0);
+            }
+            Layout::Nchwc(cb) => {
+                self.put_tag(2);
+                self.put_usize(cb);
+            }
+        }
+    }
+
+    fn put_ty(&mut self, ty: &TensorTy) {
+        self.put_usize(ty.shape.len());
+        for &d in &ty.shape {
+            self.put_usize(d);
+        }
+        self.put_tag(match ty.dtype {
+            IrDType::F32 => 0,
+            IrDType::S8 => 1,
+            IrDType::S32 => 2,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structural graph digests
+// ---------------------------------------------------------------------------
+
+/// Hash an operator kind + attributes (not its operands — the node walk
+/// feeds child digests separately).
+fn put_op(h: &mut Sha256, op: &Op) {
+    match op {
+        Op::Input => h.put_tag(0),
+        Op::Constant(c) => {
+            h.put_tag(1);
+            match c {
+                ConstValue::F32(v) => {
+                    h.put_tag(0);
+                    h.put_usize(v.len());
+                    for x in v.iter() {
+                        h.put_f32(*x);
+                    }
+                }
+                ConstValue::I8(v) => {
+                    h.put_tag(1);
+                    h.put_usize(v.len());
+                    // i8 payloads hash byte-for-byte.
+                    let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                    h.update(&bytes);
+                }
+            }
+        }
+        Op::Conv2d { stride, padding, layout } => {
+            h.put_tag(2);
+            h.put_usize(*stride);
+            h.put_usize(*padding);
+            h.put_layout(*layout);
+        }
+        Op::Dense => h.put_tag(3),
+        Op::BiasAdd { layout } => {
+            h.put_tag(4);
+            h.put_layout(*layout);
+        }
+        Op::Relu => h.put_tag(5),
+        Op::Add => h.put_tag(6),
+        Op::MaxPool { window, stride, padding, layout } => {
+            h.put_tag(7);
+            h.put_usize(*window);
+            h.put_usize(*stride);
+            h.put_usize(*padding);
+            h.put_layout(*layout);
+        }
+        Op::GlobalAvgPool { layout } => {
+            h.put_tag(8);
+            h.put_layout(*layout);
+        }
+        Op::Quantize { scale } => {
+            h.put_tag(9);
+            h.put_f32(*scale);
+        }
+        Op::Dequantize { scale } => {
+            h.put_tag(10);
+            h.put_f32(*scale);
+        }
+        Op::LayoutTransform { from, to } => {
+            h.put_tag(11);
+            h.put_layout(*from);
+            h.put_layout(*to);
+        }
+    }
+}
+
+/// Per-node recursive digests, computed in id order (the graph is
+/// append-only, so every input precedes its users).  A node's digest is a
+/// pure function of its op, attributes, child digests (input order), and
+/// type — never of its id or name.
+pub fn node_digests(g: &Graph) -> Vec<Digest> {
+    let mut out: Vec<Digest> = Vec::with_capacity(g.len());
+    for n in &g.nodes {
+        let mut h = Sha256::new();
+        h.update(b"tvmq-node-v1");
+        put_op(&mut h, &n.op);
+        h.put_usize(n.inputs.len());
+        for &i in &n.inputs {
+            h.update(&out[i].0);
+        }
+        h.put_ty(&n.ty);
+        out.push(h.finalize());
+    }
+    out
+}
+
+/// The two digests a graph exports: its own identity and its live
+/// constant pool's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphDigest {
+    /// Identity of the computation reachable from the output (plus the
+    /// declared input), invariant under node reordering and renaming.
+    pub graph: Digest,
+    /// Hash of the sorted live constant digests — shared by re-batched
+    /// variants of the same model.
+    pub const_pool: Digest,
+}
+
+pub fn graph_digest(g: &Graph) -> GraphDigest {
+    let nodes = node_digests(g);
+    let graph = {
+        let mut h = Sha256::new();
+        h.update(b"tvmq-graph-v1");
+        h.update(&nodes[g.output].0);
+        // The declared input participates even when (degenerately) the
+        // output does not reach it — its type is part of the contract.
+        h.update(&nodes[g.input].0);
+        h.finalize()
+    };
+    let live = g.live_set();
+    let mut const_digests: Vec<Digest> = g
+        .nodes
+        .iter()
+        .filter(|n| live[n.id] && matches!(n.op, Op::Constant(_)))
+        .map(|n| nodes[n.id])
+        .collect();
+    const_digests.sort();
+    let const_pool = {
+        let mut h = Sha256::new();
+        h.update(b"tvmq-constpool-v1");
+        h.put_usize(const_digests.len());
+        for d in &const_digests {
+            h.update(&d.0);
+        }
+        h.finalize()
+    };
+    GraphDigest { graph, const_pool }
+}
+
+fn put_sched(h: &mut Sha256, s: &StepSched) {
+    match s.banding {
+        None => {
+            h.put_tag(0);
+            h.put_u64(0);
+        }
+        Some(Banding::Contiguous) => {
+            h.put_tag(1);
+            h.put_u64(0);
+        }
+        Some(Banding::Interleaved) => {
+            h.put_tag(2);
+            h.put_u64(0);
+        }
+        Some(Banding::Dynamic { chunk }) => {
+            h.put_tag(3);
+            h.put_usize(chunk);
+        }
+    }
+    h.put_usize(s.max_bands);
+}
+
+/// Digest of a schedule-override table plus the fuse flag.  The pool
+/// width (`ovr.threads`) is deliberately *excluded* — it is a separate
+/// component of the cache key, because executors overwrite it with their
+/// own thread count before compiling.
+pub fn overrides_digest(ovr: &ScheduleOverrides, fuse: bool) -> Digest {
+    let mut h = Sha256::new();
+    h.update(b"tvmq-overrides-v1");
+    h.put_tag(fuse as u8);
+    h.put_usize(ovr.max_stack_lanes);
+    put_sched(&mut h, &ovr.default_sched);
+    let mut entries: Vec<(&ClassKey, &StepSched)> = ovr.per_class.iter().collect();
+    entries.sort_by_key(|(k, _)| **k);
+    h.put_usize(entries.len());
+    for (k, s) in entries {
+        h.put_tag(match k.op {
+            crate::graph::compile::AnchorOp::Conv2d => 0,
+            crate::graph::compile::AnchorOp::QConv2d => 1,
+            crate::graph::compile::AnchorOp::Dense => 2,
+            crate::graph::compile::AnchorOp::QDense => 3,
+        });
+        match k.layout {
+            None => {
+                h.put_tag(0);
+                h.put_u64(0);
+            }
+            Some(l) => {
+                h.put_tag(1);
+                h.put_layout(l);
+            }
+        }
+        put_sched(&mut h, s);
+    }
+    h.finalize()
+}
+
+/// The full compile-cache key: what to build (graph), how to build it
+/// (schedule table + fuse), and the pool width the spill windows were
+/// sized for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub graph: Digest,
+    pub const_pool: Digest,
+    pub overrides: Digest,
+    pub threads: usize,
+}
+
+impl CacheKey {
+    pub fn of(g: &Graph, ovr: &ScheduleOverrides, fuse: bool, threads: usize) -> CacheKey {
+        let gd = graph_digest(g);
+        CacheKey {
+            graph: gd.graph,
+            const_pool: gd.const_pool,
+            overrides: overrides_digest(ovr, fuse),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Stable file stem for the on-disk store.
+    pub fn file_stem(&self) -> String {
+        format!(
+            "cg-{}-{}-t{}",
+            &self.graph.hex()[..24],
+            &self.overrides.hex()[..12],
+            self.threads
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        let empty = Sha256::new().finalize();
+        assert_eq!(
+            empty.hex(),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        let mut h = Sha256::new();
+        h.update(b"abc");
+        assert_eq!(
+            h.finalize().hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // A two-block message (len 56 forces the length into a second
+        // padding block).
+        let mut h = Sha256::new();
+        h.update(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq");
+        assert_eq!(
+            h.finalize().hex(),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn sha256_streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let mut one = Sha256::new();
+        one.update(&data);
+        let mut chunked = Sha256::new();
+        for c in data.chunks(17) {
+            chunked.update(c);
+        }
+        assert_eq!(one.finalize(), chunked.finalize());
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        let mut h = Sha256::new();
+        h.update(b"round trip");
+        let d = h.finalize();
+        assert_eq!(Digest::from_hex(&d.hex()), Some(d));
+        assert_eq!(Digest::from_hex("zz"), None);
+    }
+}

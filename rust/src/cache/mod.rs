@@ -1,0 +1,52 @@
+//! `cache` — the content-addressed compile/tune cache behind warm-start
+//! serving.
+//!
+//! The paper's best configurations are *searched*, which makes
+//! compile+tune latency the startup tax of every serving-fleet variant.
+//! This subsystem removes that tax for repeat builds: compiled arena
+//! programs are stored on disk keyed by **what** is being built rather
+//! than by file names or process identity, so `tvmq serve --cache-dir D`
+//! warm-starts in milliseconds with zero `graph::compile` calls on hits.
+//!
+//! # What is keyed
+//!
+//! A [`CacheKey`] is three digests plus the pool width:
+//!
+//! - **graph digest** ([`digest::graph_digest`]) — a recursive SHA-256
+//!   over the dataflow reachable from the output: operator kinds and
+//!   attributes, input order, tensor shapes/dtypes, and constant
+//!   *payloads* (by value, never by pointer).  Node ids and names do not
+//!   participate: two independently built but identical graphs share one
+//!   key, and re-batched bucket graphs get distinct keys that share a
+//!   constant-pool digest.
+//! - **overrides digest** ([`digest::overrides_digest`]) — the schedule
+//!   table (per-class banding/band-cap knobs, the lane-accumulator stack
+//!   bound, the default schedule) plus the fuse flag.
+//! - **threads** — the pool width spill windows were sized for.
+//!
+//! # What invalidates
+//!
+//! Any change to any keyed input — topology, attributes, layouts,
+//! shapes (including batch), constant values, schedule knobs, fuse,
+//! threads — changes the key; stale entries are never looked up.
+//! Corrupt, truncated, or future-versioned entries are logged misses
+//! (the cold path recompiles and overwrites), never errors.
+//!
+//! # What `--verify-cache` proves
+//!
+//! With verification on, every hit is executed on a seeded input and
+//! compared **bit-for-bit** against `graph::interp::evaluate` before the
+//! engine is handed to the caller; a mismatch rejects the entry and
+//! falls back to a cold compile.  A verified hit therefore carries the
+//! same oracle guarantee the compile path itself is tested under.
+//!
+//! The sibling tune cache rides in the same directory: any tune-records
+//! files found there are merged by task key (best measured config wins,
+//! [`crate::tune::records::merge`]) and applied to the engines built
+//! from the cache — see [`store::scan_tune_records`].
+
+pub mod digest;
+pub mod store;
+
+pub use digest::{graph_digest, overrides_digest, CacheKey, Digest, GraphDigest, Sha256};
+pub use store::{scan_tune_records, CacheStats, CompileCache, MERGED_RECORDS_FILE};

@@ -1,0 +1,747 @@
+//! The on-disk compile cache: serialized step streams + arena plans,
+//! keyed by [`CacheKey`] (graph digest × schedule digest × pool width).
+//!
+//! # What an entry holds
+//!
+//! Everything `compile_graph_with` produced *except* the constant pool:
+//! the step stream (ops, slots, schedules, spill windows), the verified
+//! [`StaticPlan`], and the I/O types.  Constants are deliberately **not**
+//! serialized — they are rebuilt from the caller's graph (the DCE'd
+//! constant nodes in node order, exactly the order the compiler pools
+//! them in), so cached engines keep sharing one `Arc`-backed weight set
+//! with everything else built from the same template, and entries stay
+//! kilobytes instead of megabytes.  The key's constant-pool digest pins
+//! that the rebuilt pool is byte-identical to the one the entry was
+//! compiled against.
+//!
+//! # What invalidates
+//!
+//! Any change to graph topology, op attributes, layouts, constant
+//! values, tensor shapes (including batch), the schedule-override table,
+//! the fuse flag, or the pool width produces a different key — the old
+//! entry is simply never looked up again.  A corrupt, truncated,
+//! unparsable, or future-versioned entry is a logged **miss**, never an
+//! error: the caller falls back to a cold compile and overwrites it.
+//!
+//! # What `--verify-cache` proves
+//!
+//! In verify mode every hit is differentially re-checked before it is
+//! trusted: the deserialized program is run through a fresh `ArenaExec`
+//! on a seeded input and its output compared **bit-for-bit** against
+//! `graph::interp::evaluate` on the caller's graph.  A mismatch rejects
+//! the entry (logged, counted, treated as a miss) — so a verified hit
+//! carries exactly the same oracle guarantee as a cold compile.
+//!
+//! Writes are atomic (temp file + rename), so a crashed process never
+//! leaves a half-written entry that later parses.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::digest::{graph_digest, CacheKey, Digest};
+use crate::executor::{ArenaExec, Banding, Executor};
+use crate::graph::compile::{
+    CompiledGraph, Epilogue, Residual, Slot, SpillSpec, Step, StepOp, StepSched,
+};
+use crate::graph::ir::{ConstValue, Graph, IrDType, Layout, Op, TensorTy};
+use crate::graph::passes::{DeadCodeElim, Pass};
+use crate::memplan::StaticPlan;
+use crate::runtime::TensorData;
+use crate::tune::knobs::{banding_str, layout_str, parse_banding_str, parse_layout_str};
+use crate::tune::TuneRecords;
+use crate::util::json::Json;
+use crate::util::rng::Rng64;
+
+pub const STORE_KIND: &str = "tvmq-compile-cache";
+pub const STORE_VERSION: u64 = 1;
+
+/// File name the auto-merged tune records are written under (and skipped
+/// when re-scanning, so the merge's inputs stay the primary files).
+pub const MERGED_RECORDS_FILE: &str = "merged-tune-records.json";
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization of the compiled program
+// ---------------------------------------------------------------------------
+
+/// f32 values (quantization scales) serialize as their IEEE-754 bit
+/// patterns: a `u32` is exact in JSON's f64 and round-trips bit-for-bit,
+/// which a decimal rendering would not guarantee.
+fn f32_to_json(v: f32) -> Json {
+    Json::num(v.to_bits() as f64)
+}
+
+fn f32_from_json(j: &Json) -> Result<f32> {
+    let bits = j.as_u64()?;
+    if bits > u32::MAX as u64 {
+        bail!("f32 bit pattern out of range: {bits}");
+    }
+    Ok(f32::from_bits(bits as u32))
+}
+
+fn layout_to_json(l: Layout) -> Json {
+    Json::str(layout_str(Some(l)))
+}
+
+fn layout_from_json(j: &Json) -> Result<Layout> {
+    parse_layout_str(j.as_str()?)?.ok_or_else(|| anyhow!("expected a concrete layout"))
+}
+
+fn dtype_str(d: IrDType) -> &'static str {
+    match d {
+        IrDType::F32 => "f32",
+        IrDType::S8 => "s8",
+        IrDType::S32 => "s32",
+    }
+}
+
+fn dtype_from_str(s: &str) -> Result<IrDType> {
+    Ok(match s {
+        "f32" => IrDType::F32,
+        "s8" => IrDType::S8,
+        "s32" => IrDType::S32,
+        other => bail!("unknown dtype {other:?}"),
+    })
+}
+
+fn ty_to_json(ty: &TensorTy) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::Arr(ty.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        ("dtype", Json::str(dtype_str(ty.dtype))),
+    ])
+}
+
+fn ty_from_json(j: &Json) -> Result<TensorTy> {
+    Ok(TensorTy {
+        shape: j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        dtype: dtype_from_str(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn slot_to_json(s: &Slot) -> Json {
+    match s {
+        Slot::Arena { offset, bytes } => Json::obj(vec![
+            ("kind", Json::str("arena")),
+            ("offset", Json::num(*offset as f64)),
+            ("bytes", Json::num(*bytes as f64)),
+        ]),
+        Slot::Const(i) => Json::obj(vec![
+            ("kind", Json::str("const")),
+            ("index", Json::num(*i as f64)),
+        ]),
+    }
+}
+
+fn slot_from_json(j: &Json) -> Result<Slot> {
+    match j.get("kind")?.as_str()? {
+        "arena" => Ok(Slot::Arena {
+            offset: j.get("offset")?.as_usize()?,
+            bytes: j.get("bytes")?.as_usize()?,
+        }),
+        "const" => Ok(Slot::Const(j.get("index")?.as_usize()?)),
+        other => bail!("unknown slot kind {other:?}"),
+    }
+}
+
+fn epi_to_json(e: &Epilogue) -> Json {
+    Json::obj(vec![
+        (
+            "bias",
+            e.bias.map(|i| Json::num(i as f64)).unwrap_or(Json::Null),
+        ),
+        ("relu", Json::Bool(e.relu)),
+        (
+            "residual",
+            match e.residual {
+                None => Json::Null,
+                Some(r) => Json::obj(vec![
+                    ("pre_relu", Json::Bool(r.pre_relu)),
+                    ("chain_lhs", Json::Bool(r.chain_lhs)),
+                ]),
+            },
+        ),
+    ])
+}
+
+fn bool_from_json(j: &Json) -> Result<bool> {
+    match j {
+        Json::Bool(b) => Ok(*b),
+        other => bail!("expected a boolean, got {other:?}"),
+    }
+}
+
+fn epi_from_json(j: &Json) -> Result<Epilogue> {
+    Ok(Epilogue {
+        bias: match j.opt("bias") {
+            None => None,
+            Some(v) => Some(v.as_usize()?),
+        },
+        relu: bool_from_json(j.get("relu")?)?,
+        residual: match j.opt("residual") {
+            None => None,
+            Some(r) => Some(Residual {
+                pre_relu: bool_from_json(r.get("pre_relu")?)?,
+                chain_lhs: bool_from_json(r.get("chain_lhs")?)?,
+            }),
+        },
+    })
+}
+
+fn step_op_to_json(op: &StepOp) -> Json {
+    match op {
+        StepOp::LoadInput => Json::obj(vec![("op", Json::str("load_input"))]),
+        StepOp::Conv2d { stride, padding, layout, epi } => Json::obj(vec![
+            ("op", Json::str("conv2d")),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::num(*padding as f64)),
+            ("layout", layout_to_json(*layout)),
+            ("epi", epi_to_json(epi)),
+        ]),
+        StepOp::QConv2d { qscale, dqscale, stride, padding, layout, epi } => Json::obj(vec![
+            ("op", Json::str("qconv2d")),
+            ("qscale_bits", f32_to_json(*qscale)),
+            ("dqscale_bits", f32_to_json(*dqscale)),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::num(*padding as f64)),
+            ("layout", layout_to_json(*layout)),
+            ("epi", epi_to_json(epi)),
+        ]),
+        StepOp::Dense { epi } => {
+            Json::obj(vec![("op", Json::str("dense")), ("epi", epi_to_json(epi))])
+        }
+        StepOp::QDense { qscale, dqscale, epi } => Json::obj(vec![
+            ("op", Json::str("qdense")),
+            ("qscale_bits", f32_to_json(*qscale)),
+            ("dqscale_bits", f32_to_json(*dqscale)),
+            ("epi", epi_to_json(epi)),
+        ]),
+        StepOp::BiasAdd { layout } => Json::obj(vec![
+            ("op", Json::str("bias_add")),
+            ("layout", layout_to_json(*layout)),
+        ]),
+        StepOp::Relu => Json::obj(vec![("op", Json::str("relu"))]),
+        StepOp::Add => Json::obj(vec![("op", Json::str("add"))]),
+        StepOp::MaxPool { window, stride, padding, layout } => Json::obj(vec![
+            ("op", Json::str("max_pool")),
+            ("window", Json::num(*window as f64)),
+            ("stride", Json::num(*stride as f64)),
+            ("padding", Json::num(*padding as f64)),
+            ("layout", layout_to_json(*layout)),
+        ]),
+        StepOp::GlobalAvgPool { layout } => Json::obj(vec![
+            ("op", Json::str("global_avg_pool")),
+            ("layout", layout_to_json(*layout)),
+        ]),
+        StepOp::Quantize { scale } => Json::obj(vec![
+            ("op", Json::str("quantize")),
+            ("scale_bits", f32_to_json(*scale)),
+        ]),
+        StepOp::Dequantize { scale } => Json::obj(vec![
+            ("op", Json::str("dequantize")),
+            ("scale_bits", f32_to_json(*scale)),
+        ]),
+        StepOp::LayoutTransform { from, to } => Json::obj(vec![
+            ("op", Json::str("layout_transform")),
+            ("from", layout_to_json(*from)),
+            ("to", layout_to_json(*to)),
+        ]),
+    }
+}
+
+fn step_op_from_json(j: &Json) -> Result<StepOp> {
+    Ok(match j.get("op")?.as_str()? {
+        "load_input" => StepOp::LoadInput,
+        "conv2d" => StepOp::Conv2d {
+            stride: j.get("stride")?.as_usize()?,
+            padding: j.get("padding")?.as_usize()?,
+            layout: layout_from_json(j.get("layout")?)?,
+            epi: epi_from_json(j.get("epi")?)?,
+        },
+        "qconv2d" => StepOp::QConv2d {
+            qscale: f32_from_json(j.get("qscale_bits")?)?,
+            dqscale: f32_from_json(j.get("dqscale_bits")?)?,
+            stride: j.get("stride")?.as_usize()?,
+            padding: j.get("padding")?.as_usize()?,
+            layout: layout_from_json(j.get("layout")?)?,
+            epi: epi_from_json(j.get("epi")?)?,
+        },
+        "dense" => StepOp::Dense { epi: epi_from_json(j.get("epi")?)? },
+        "qdense" => StepOp::QDense {
+            qscale: f32_from_json(j.get("qscale_bits")?)?,
+            dqscale: f32_from_json(j.get("dqscale_bits")?)?,
+            epi: epi_from_json(j.get("epi")?)?,
+        },
+        "bias_add" => StepOp::BiasAdd { layout: layout_from_json(j.get("layout")?)? },
+        "relu" => StepOp::Relu,
+        "add" => StepOp::Add,
+        "max_pool" => StepOp::MaxPool {
+            window: j.get("window")?.as_usize()?,
+            stride: j.get("stride")?.as_usize()?,
+            padding: j.get("padding")?.as_usize()?,
+            layout: layout_from_json(j.get("layout")?)?,
+        },
+        "global_avg_pool" => {
+            StepOp::GlobalAvgPool { layout: layout_from_json(j.get("layout")?)? }
+        }
+        "quantize" => StepOp::Quantize { scale: f32_from_json(j.get("scale_bits")?)? },
+        "dequantize" => StepOp::Dequantize { scale: f32_from_json(j.get("scale_bits")?)? },
+        "layout_transform" => StepOp::LayoutTransform {
+            from: layout_from_json(j.get("from")?)?,
+            to: layout_from_json(j.get("to")?)?,
+        },
+        other => bail!("unknown step op {other:?}"),
+    })
+}
+
+fn sched_to_json(s: &StepSched) -> Json {
+    Json::obj(vec![
+        ("banding", Json::str(banding_str(s.banding))),
+        ("max_bands", Json::num(s.max_bands as f64)),
+    ])
+}
+
+fn sched_from_json(j: &Json) -> Result<StepSched> {
+    Ok(StepSched {
+        banding: parse_banding_str(j.get("banding")?.as_str()?)?,
+        max_bands: j.get("max_bands")?.as_usize()?,
+    })
+}
+
+fn spill_to_json(s: &SpillSpec) -> Json {
+    Json::obj(vec![
+        ("offset", Json::num(s.offset as f64)),
+        ("band_bytes", Json::num(s.band_bytes as f64)),
+        ("bands", Json::num(s.bands as f64)),
+    ])
+}
+
+fn spill_from_json(j: &Json) -> Result<SpillSpec> {
+    Ok(SpillSpec {
+        offset: j.get("offset")?.as_usize()?,
+        band_bytes: j.get("band_bytes")?.as_usize()?,
+        bands: j.get("bands")?.as_usize()?,
+    })
+}
+
+fn step_to_json(s: &Step) -> Json {
+    Json::obj(vec![
+        ("op", step_op_to_json(&s.op)),
+        (
+            "srcs",
+            Json::Arr(
+                s.srcs
+                    .iter()
+                    .map(|(slot, ty)| {
+                        Json::obj(vec![("slot", slot_to_json(slot)), ("ty", ty_to_json(ty))])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("dst", slot_to_json(&s.dst)),
+        ("dst_ty", ty_to_json(&s.dst_ty)),
+        (
+            "scratch",
+            s.scratch.as_ref().map(slot_to_json).unwrap_or(Json::Null),
+        ),
+        ("sched", sched_to_json(&s.sched)),
+        (
+            "spill",
+            s.spill.as_ref().map(spill_to_json).unwrap_or(Json::Null),
+        ),
+        ("name", Json::str(s.name.clone())),
+    ])
+}
+
+fn step_from_json(j: &Json) -> Result<Step> {
+    Ok(Step {
+        op: step_op_from_json(j.get("op")?)?,
+        srcs: j
+            .get("srcs")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok((slot_from_json(s.get("slot")?)?, ty_from_json(s.get("ty")?)?)))
+            .collect::<Result<Vec<_>>>()?,
+        dst: slot_from_json(j.get("dst")?)?,
+        dst_ty: ty_from_json(j.get("dst_ty")?)?,
+        scratch: match j.opt("scratch") {
+            None => None,
+            Some(s) => Some(slot_from_json(s)?),
+        },
+        sched: sched_from_json(j.get("sched")?)?,
+        spill: match j.opt("spill") {
+            None => None,
+            Some(s) => Some(spill_from_json(s)?),
+        },
+        name: j.get("name")?.as_str()?.to_string(),
+    })
+}
+
+/// Serialize a compiled program under its cache key.  The constant pool
+/// is represented only by per-entry metadata (dtype + element count) —
+/// payloads are rebuilt from the graph on load.
+pub fn compiled_to_json(cg: &CompiledGraph, key: &CacheKey) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(STORE_KIND)),
+        ("version", Json::num(STORE_VERSION as f64)),
+        ("graph_digest", Json::str(key.graph.hex())),
+        ("const_pool_digest", Json::str(key.const_pool.hex())),
+        ("overrides_digest", Json::str(key.overrides.hex())),
+        ("threads", Json::num(key.threads as f64)),
+        ("steps", Json::Arr(cg.steps.iter().map(step_to_json).collect())),
+        (
+            "consts",
+            Json::Arr(
+                cg.consts
+                    .iter()
+                    .map(|(c, ty)| {
+                        Json::obj(vec![
+                            ("dtype", Json::str(dtype_str(c.dtype()))),
+                            ("len", Json::num(c.len() as f64)),
+                            ("ty", ty_to_json(ty)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("plan", cg.plan.to_json()),
+        ("arena_bytes", Json::num(cg.arena_bytes as f64)),
+        ("input_ty", ty_to_json(&cg.input_ty)),
+        ("output_ty", ty_to_json(&cg.output_ty)),
+        ("output_slot", slot_to_json(&cg.output_slot)),
+        ("fused_chains", Json::num(cg.fused_chains as f64)),
+    ])
+}
+
+/// Rebuild the constant pool the way `compile_graph_with` pools it: the
+/// DCE'd graph's `Op::Constant` nodes in node order.
+fn rebuild_consts(g: &Graph) -> Result<Vec<(ConstValue, TensorTy)>> {
+    let g = DeadCodeElim.run(g)?;
+    Ok(g.nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            Op::Constant(c) => Some((c.clone(), n.ty.clone())),
+            _ => None,
+        })
+        .collect())
+}
+
+/// Deserialize an entry against the caller's graph + key, validating
+/// every integrity property the executor later relies on.  Any failure
+/// here is reported to the cache as corruption (a miss), never a panic.
+pub fn compiled_from_json(j: &Json, g: &Graph, key: &CacheKey) -> Result<CompiledGraph> {
+    if j.get("kind")?.as_str()? != STORE_KIND {
+        bail!("not a compile-cache entry");
+    }
+    let version = j.get("version")?.as_u64()?;
+    if version > STORE_VERSION {
+        bail!("entry version {version} is newer than supported {STORE_VERSION}");
+    }
+    let stored_graph = Digest::from_hex(j.get("graph_digest")?.as_str()?)
+        .ok_or_else(|| anyhow!("bad graph digest"))?;
+    let stored_pool = Digest::from_hex(j.get("const_pool_digest")?.as_str()?)
+        .ok_or_else(|| anyhow!("bad const-pool digest"))?;
+    let stored_ovr = Digest::from_hex(j.get("overrides_digest")?.as_str()?)
+        .ok_or_else(|| anyhow!("bad overrides digest"))?;
+    if stored_graph != key.graph || stored_ovr != key.overrides || stored_pool != key.const_pool
+    {
+        bail!("entry digests do not match the requested key");
+    }
+    if j.get("threads")?.as_usize()? != key.threads {
+        bail!("entry pool width does not match the requested key");
+    }
+    // The caller's graph must actually be the graph the key was computed
+    // from — otherwise `Slot::Const` indices would dereference the wrong
+    // weights.
+    let gd = graph_digest(g);
+    if gd.graph != key.graph || gd.const_pool != key.const_pool {
+        bail!("caller graph does not match the requested key");
+    }
+
+    let consts = rebuild_consts(g)?;
+    let const_meta = j.get("consts")?.as_arr()?;
+    if const_meta.len() != consts.len() {
+        bail!(
+            "constant pool size mismatch: entry has {}, graph rebuilds {}",
+            const_meta.len(),
+            consts.len()
+        );
+    }
+    for (i, (m, (c, _ty))) in const_meta.iter().zip(&consts).enumerate() {
+        if m.get("dtype")?.as_str()? != dtype_str(c.dtype()) || m.get("len")?.as_usize()? != c.len()
+        {
+            bail!("constant {i} metadata mismatch");
+        }
+    }
+
+    let steps = j
+        .get("steps")?
+        .as_arr()?
+        .iter()
+        .map(step_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    // Every const slot must point inside the rebuilt pool.
+    for (si, step) in steps.iter().enumerate() {
+        for (slot, _) in &step.srcs {
+            if let Slot::Const(i) = slot {
+                if *i >= consts.len() {
+                    bail!("step {si} references constant {i} beyond pool of {}", consts.len());
+                }
+            }
+        }
+        if let Some(e) = step.op.epilogue() {
+            if let Some(b) = e.bias {
+                if b >= consts.len() {
+                    bail!("step {si} bias constant {b} beyond pool of {}", consts.len());
+                }
+            }
+        }
+    }
+
+    let plan = StaticPlan::from_json(j.get("plan")?)?;
+    plan.verify().map_err(|e| anyhow!("arena plan failed verification: {e}"))?;
+    let arena_bytes = j.get("arena_bytes")?.as_usize()?;
+    if arena_bytes != plan.arena_bytes {
+        bail!("arena extent {arena_bytes} != plan extent {}", plan.arena_bytes);
+    }
+
+    Ok(CompiledGraph {
+        steps,
+        consts,
+        plan,
+        arena_bytes,
+        input_ty: ty_from_json(j.get("input_ty")?)?,
+        output_ty: ty_from_json(j.get("output_ty")?)?,
+        output_slot: slot_from_json(j.get("output_slot")?)?,
+        fused_chains: j.get("fused_chains")?.as_usize()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The cache itself
+// ---------------------------------------------------------------------------
+
+/// Hit/miss accounting, snapshotted for logs and the stats artifact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+    /// Entries discarded as corrupt, mismatched, or failing oracle
+    /// re-verification (each also counts as a miss).
+    pub rejected: u64,
+}
+
+/// A content-addressed compile cache rooted at one directory.  Lookups
+/// and stores are thread-safe; the factory shares one handle across the
+/// serving tier's worker threads.
+pub struct CompileCache {
+    dir: PathBuf,
+    verify: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl CompileCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<CompileCache> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(CompileCache {
+            dir,
+            verify: false,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// Enable `--verify-cache`: every hit is differentially re-checked
+    /// against the interpreter oracle before being trusted.
+    pub fn with_verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn verifying(&self) -> bool {
+        self.verify
+    }
+
+    fn entry_path(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.json", key.file_stem()))
+    }
+
+    /// Look up `key`.  `g` must be the graph the key was computed from —
+    /// its constants are spliced into the deserialized program.  Every
+    /// failure mode (absent, corrupt, version-mismatched, digest
+    /// mismatch, failed verification) returns `None`.
+    pub fn load(&self, key: &CacheKey, g: &Graph) -> Option<CompiledGraph> {
+        let path = self.entry_path(key);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        let parsed = Json::parse(&text).and_then(|j| compiled_from_json(&j, g, key));
+        let cg = match parsed {
+            Ok(cg) => cg,
+            Err(e) => {
+                eprintln!(
+                    "tvmq: cache: ignoring unusable entry {}: {e:#}",
+                    path.display()
+                );
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        if self.verify {
+            if let Err(e) = verify_against_oracle(&cg, g, key.threads) {
+                eprintln!(
+                    "tvmq: cache: entry {} failed oracle re-verification: {e:#}",
+                    path.display()
+                );
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(cg)
+    }
+
+    /// Persist an entry atomically (temp file + rename, so readers never
+    /// observe a torn write).
+    pub fn store(&self, key: &CacheKey, cg: &CompiledGraph) -> Result<()> {
+        let path = self.entry_path(key);
+        let tmp = self.dir.join(format!(
+            ".{}.tmp-{}",
+            key.file_stem(),
+            std::process::id()
+        ));
+        let text = compiled_to_json(cg, key).to_string_pretty() + "\n";
+        fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cache entry {}", path.display()))?;
+        self.stores.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("kind", Json::str("tvmq-cache-stats")),
+            ("dir", Json::str(self.dir.display().to_string())),
+            ("verify", Json::Bool(self.verify)),
+            ("hits", Json::num(s.hits as f64)),
+            ("misses", Json::num(s.misses as f64)),
+            ("stores", Json::num(s.stores as f64)),
+            ("rejected", Json::num(s.rejected as f64)),
+        ])
+    }
+
+    /// Write `cache-stats.json` into the cache dir (the CI artifact).
+    pub fn write_stats(&self) -> Result<PathBuf> {
+        let path = self.dir.join("cache-stats.json");
+        fs::write(&path, self.stats_json().to_string_pretty() + "\n")
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Differential oracle check for `--verify-cache`: run the deserialized
+/// program on a seeded input and require bit-identical output to
+/// `graph::interp::evaluate`.
+fn verify_against_oracle(cg: &CompiledGraph, g: &Graph, threads: usize) -> Result<()> {
+    let exec = ArenaExec::from_compiled(cg.clone(), threads)?;
+    let ty = &g.node(g.input).ty;
+    let mut rng = Rng64::seed_from_u64(0x5eed_cac4);
+    let vals: Vec<f32> = (0..ty.element_count()).map(|_| rng.normal() * 0.5).collect();
+    let x = TensorData::from_f32(ty.shape.clone(), &vals)?;
+    let want = crate::graph::evaluate(g, &x)?;
+    let got = exec.run(&x)?;
+    let (got, want) = (got.as_f32()?, want.as_f32()?);
+    if got.len() != want.len() {
+        bail!("output length {} != oracle {}", got.len(), want.len());
+    }
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            bail!(
+                "output diverges from the oracle at element {i}: {a:?} vs {b:?}"
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tune-records discovery in the cache dir
+// ---------------------------------------------------------------------------
+
+/// All loadable tune-records files in `dir` (sorted by path for
+/// determinism).  Files of other kinds (cache entries, stats) are
+/// silently skipped; files that *claim* to be records but fail to load
+/// are logged and skipped — corruption never errors the serve path.
+pub fn scan_tune_records(dir: &Path) -> Vec<(PathBuf, TuneRecords)> {
+    let mut out = Vec::new();
+    let Ok(entries) = fs::read_dir(dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().map_or(false, |e| e == "json")
+                && p.file_name().map_or(false, |n| n != MERGED_RECORDS_FILE)
+        })
+        .collect();
+    paths.sort();
+    for p in paths {
+        let Ok(text) = fs::read_to_string(&p) else {
+            continue;
+        };
+        let Ok(j) = Json::parse(&text) else {
+            continue;
+        };
+        let kind = j.opt("kind").and_then(|k| k.as_str().ok());
+        if kind != Some("tvmq-tune-records") {
+            continue;
+        }
+        match TuneRecords::from_json(&j) {
+            Ok(r) => out.push((p, r)),
+            Err(e) => eprintln!(
+                "tvmq: cache: ignoring unreadable tune records {}: {e:#}",
+                p.display()
+            ),
+        }
+    }
+    out
+}

@@ -1,0 +1,253 @@
+//! In-situ tuned-engine hot-swap: upgrade serving engines *while the
+//! server is live*, without dropping, double-serving, or corrupting a
+//! single request.
+//!
+//! The protocol is deliberately minimal:
+//!
+//! - A background producer (typically [`spawn_insitu_tuner`], or a test
+//!   harness) publishes an [`EngineUpgrade`] into the shared
+//!   [`UpgradeSlot`].  An upgrade carries a *builder closure*, not an
+//!   engine: executors may be `!Send` (PJRT handles, `RefCell` arenas),
+//!   so the engine itself is always constructed **on the worker thread
+//!   that will run it**.
+//! - Every coordinator worker polls the slot's generation counter at the
+//!   top of its batch loop — i.e. strictly **between** batches.  On a
+//!   bump it rebuilds the affected bucket engines in place and tags them
+//!   with the upgrade's generation.
+//!
+//! Because the swap happens only at batch boundaries, every request is
+//! gathered, executed, and replied to by exactly one engine generation —
+//! there is no window where a half-swapped engine can see a batch.  The
+//! fault-injected test in `tests/insitu_swap.rs` drives live client load
+//! through a swap (including deliberately failing and wrong-batch
+//! upgrade builds) and proves served logits stay bit-identical to the
+//! interpreter oracle throughout.
+//!
+//! Publication ordering: [`UpgradeSlot::publish`] inserts the upgrade
+//! into the bucket map *before* bumping the generation counter with
+//! `Release`; workers read the counter with `Acquire` before touching
+//! the map, so a bumped counter always observes the fully-inserted
+//! upgrade.  A failed build keeps the old engine serving (and the worker
+//! records the generation so it does not retry a known-bad build every
+//! batch).
+//!
+//! The tuner side ([`spawn_insitu_tuner`]) runs the oracle-gated
+//! [`crate::tune`] search over each live bucket graph and publishes only
+//! configs that are **strictly better** than the measured default — and
+//! every candidate it measures already passed the measurer's bit-for-bit
+//! oracle gate, so a hot-swapped engine can change latency but never
+//! bytes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::cache::{CacheKey, CompileCache};
+use crate::executor::{ArenaExec, EngineFactory, Executor, NativeArenaFactory};
+use crate::graph::{calibrate_ir, compile_graph_with};
+use crate::tune::{tune_graph, TuneOptions};
+
+/// A published engine replacement for one serving bucket.
+///
+/// The engine is *not* built at publish time — `build` runs on each
+/// worker's own thread (executors may be `!Send`), once per worker that
+/// adopts the upgrade.
+pub struct EngineUpgrade {
+    /// The bucket batch size this upgrade replaces the engine for.
+    pub bucket: usize,
+    /// Slot-assigned, strictly increasing across all publishes.
+    pub generation: u64,
+    /// Measured speed of the upgraded config (whole-plan ns/iter).
+    pub ns_per_iter: f64,
+    /// Measured speed of the default schedule it beat.
+    pub baseline_ns: f64,
+    /// Human-readable description for logs.
+    pub describe: String,
+    build: Box<dyn Fn() -> Result<Box<dyn Executor>> + Send + Sync>,
+}
+
+impl EngineUpgrade {
+    /// Construct the upgraded engine — called on the adopting worker's
+    /// thread.  Errors leave the worker's current engine serving.
+    pub fn build_engine(&self) -> Result<Box<dyn Executor>> {
+        (self.build)()
+    }
+}
+
+/// The shared mailbox between upgrade producers and coordinator workers:
+/// the latest upgrade per bucket, plus a generation counter workers can
+/// poll without taking the lock.
+#[derive(Default)]
+pub struct UpgradeSlot {
+    generation: AtomicU64,
+    latest: Mutex<HashMap<usize, Arc<EngineUpgrade>>>,
+}
+
+impl UpgradeSlot {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// The latest published generation (0 = nothing published).  Workers
+    /// poll this between batches; `Acquire` pairs with the `Release` bump
+    /// in [`UpgradeSlot::publish`] so a changed counter guarantees the
+    /// map insert is visible.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Publish a replacement engine for `bucket`; returns the assigned
+    /// generation.  A later publish for the same bucket supersedes the
+    /// earlier one — workers only ever adopt the latest.
+    pub fn publish(
+        &self,
+        bucket: usize,
+        ns_per_iter: f64,
+        baseline_ns: f64,
+        describe: String,
+        build: Box<dyn Fn() -> Result<Box<dyn Executor>> + Send + Sync>,
+    ) -> u64 {
+        let mut latest = self.latest.lock().unwrap_or_else(|p| p.into_inner());
+        // Serialized by the map lock: generation assignment and insertion
+        // happen atomically with respect to other publishers, and the
+        // counter bump below is the last thing a publish does.
+        let generation = self.generation.load(Ordering::Relaxed) + 1;
+        latest.insert(
+            bucket,
+            Arc::new(EngineUpgrade { bucket, generation, ns_per_iter, baseline_ns, describe, build }),
+        );
+        self.generation.store(generation, Ordering::Release);
+        generation
+    }
+
+    /// The latest upgrade for one bucket, if any.
+    pub fn latest_for(&self, bucket: usize) -> Option<Arc<EngineUpgrade>> {
+        self.latest.lock().unwrap_or_else(|p| p.into_inner()).get(&bucket).cloned()
+    }
+
+    /// Every bucket's latest upgrade (diagnostics / tests).
+    pub fn snapshot(&self) -> Vec<Arc<EngineUpgrade>> {
+        let mut v: Vec<_> =
+            self.latest.lock().unwrap_or_else(|p| p.into_inner()).values().cloned().collect();
+        v.sort_by_key(|u| u.bucket);
+        v
+    }
+}
+
+/// Tune every bucket of a live [`NativeArenaFactory`] in the background
+/// and hot-swap strictly-better verified configs into the serving tier.
+///
+/// For each bucket (smallest first, so the cheapest wins land soonest)
+/// the tuner re-derives the exact graph the serving engine compiled
+/// (`factory.graph(b)`), runs the budgeted oracle-gated search, and — only
+/// when the winner measured strictly faster than the default schedule —
+/// compiles the winning config **once** into a [`CompiledGraph`] and
+/// publishes an upgrade whose builder clones it per adopting worker
+/// (`ArenaExec::from_compiled` — zero compiler calls on the worker).
+/// Tuned programs are also stored into `cache` when one is attached, so
+/// the *next* cold start warm-starts straight into the tuned schedule.
+///
+/// The returned handle joins when every bucket has been processed; the
+/// server keeps serving (old engines) throughout and adopts upgrades at
+/// its own batch boundaries.
+pub fn spawn_insitu_tuner(
+    factory: Arc<NativeArenaFactory>,
+    slot: Arc<UpgradeSlot>,
+    opts: TuneOptions,
+    cache: Option<Arc<CompileCache>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("tvmq-insitu-tuner".into())
+        .spawn(move || {
+            for b in EngineFactory::buckets(&*factory) {
+                if let Err(e) = tune_one_bucket(&factory, &slot, &opts, cache.as_deref(), b) {
+                    eprintln!("tvmq: insitu: bucket {b}: tuning failed (engine unchanged): {e:#}");
+                }
+            }
+        })
+        .expect("spawn insitu tuner thread")
+}
+
+fn tune_one_bucket(
+    factory: &NativeArenaFactory,
+    slot: &UpgradeSlot,
+    opts: &TuneOptions,
+    cache: Option<&CompileCache>,
+    bucket: usize,
+) -> Result<()> {
+    let g = factory.graph(bucket)?;
+    let x = calibrate_ir(&g, opts.seed);
+    let mut opts = *opts;
+    opts.threads = factory.threads();
+    let outcome = tune_graph(&g, x, &opts)?;
+    if outcome.best.ns_per_iter >= outcome.default_ns {
+        eprintln!(
+            "tvmq: insitu: bucket {bucket}: default schedule already best \
+             ({:.0} ns/iter) — no swap",
+            outcome.default_ns
+        );
+        return Ok(());
+    }
+    let fuse = outcome.best.plan.fuse;
+    let ovr = outcome.best.plan.overrides(opts.threads);
+    // Compile the winner once; adopting workers clone the program and
+    // wrap it without re-running the compiler.
+    let cg = compile_graph_with(&g, fuse, &ovr)?;
+    if let Some(cache) = cache {
+        let key = CacheKey::of(&g, &ovr, fuse, opts.threads);
+        if let Err(e) = cache.store(&key, &cg) {
+            eprintln!("tvmq: insitu: bucket {bucket}: could not cache tuned program: {e:#}");
+        }
+    }
+    let threads = opts.threads;
+    let describe = format!(
+        "bucket {bucket}: {} ({:.0} -> {:.0} ns/iter, {:.1}%)",
+        outcome.best.plan.describe(),
+        outcome.default_ns,
+        outcome.best.ns_per_iter,
+        outcome.improvement_pct()
+    );
+    eprintln!("tvmq: insitu: publishing upgrade — {describe}");
+    let cg_for_build = cg;
+    slot.publish(
+        bucket,
+        outcome.best.ns_per_iter,
+        outcome.default_ns,
+        describe,
+        Box::new(move || {
+            Ok(Box::new(ArenaExec::from_compiled(cg_for_build.clone(), threads)?)
+                as Box<dyn Executor>)
+        }),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_bumps_generation_and_supersedes() {
+        let slot = UpgradeSlot::new();
+        assert_eq!(slot.generation(), 0);
+        assert!(slot.latest_for(4).is_none());
+
+        let g1 = slot.publish(4, 100.0, 200.0, "first".into(), Box::new(|| unreachable!()));
+        assert_eq!(g1, 1);
+        assert_eq!(slot.generation(), 1);
+        assert_eq!(slot.latest_for(4).unwrap().describe, "first");
+
+        let g2 = slot.publish(4, 90.0, 200.0, "second".into(), Box::new(|| unreachable!()));
+        assert_eq!(g2, 2);
+        // Same bucket: the later publish supersedes.
+        assert_eq!(slot.latest_for(4).unwrap().describe, "second");
+        assert_eq!(slot.snapshot().len(), 1);
+
+        slot.publish(8, 50.0, 60.0, "other bucket".into(), Box::new(|| unreachable!()));
+        assert_eq!(slot.generation(), 3);
+        assert_eq!(slot.snapshot().len(), 2);
+    }
+}

@@ -47,6 +47,7 @@
 //! the queue, and purges queued jobs so nothing ever hangs on work nobody
 //! will serve.
 
+pub mod insitu;
 pub(crate) mod queue;
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -628,6 +629,11 @@ struct BucketEngine {
     exec: Box<dyn Executor>,
     input: TensorData,
     out: TensorData,
+    /// Which [`insitu::EngineUpgrade`] generation this engine came from
+    /// (0 = the factory's startup build).  Swaps happen only at batch
+    /// boundaries in the worker loop, so every request is served by
+    /// exactly one generation.
+    generation: u64,
 }
 
 fn build_engines<F: EngineFactory + ?Sized>(
@@ -658,6 +664,7 @@ fn build_engines<F: EngineFactory + ?Sized>(
             input: TensorData::zeros(in_dt, in_shape),
             out: TensorData::zeros(out_dt, out_shape),
             exec,
+            generation: 0,
         });
     }
     Ok(engines)
@@ -687,7 +694,19 @@ fn worker_loop<F: EngineFactory>(
     let max_bucket = *buckets.last().expect("non-empty buckets");
     let max_batch = cfg.max_batch.min(max_bucket).max(1);
 
+    // In-situ hot-swap: factories that expose an upgrade slot get their
+    // engines replaced at batch boundaries.  `seen_gen` starts at 0 so
+    // upgrades published before this worker's first batch are adopted
+    // on the first poll.
+    let upgrade_slot = factory.upgrade_slot();
+    let mut seen_gen = 0u64;
+
     loop {
+        // Swap point: strictly between batches, before blocking for the
+        // next job, so no request ever straddles two engine generations.
+        if let Some(slot) = &upgrade_slot {
+            poll_upgrades(worker, &mut engines, slot, &mut seen_gen);
+        }
         // Block for the first job — `q_pop` is the checked protocol pop:
         // drains remaining accepted work even after shutdown, returns
         // `None` only once the queue is shut down *and* empty.
@@ -709,6 +728,71 @@ fn worker_loop<F: EngineFactory>(
             }
         }
         process_batch(&mut engines, &buckets, jobs, &stats);
+    }
+}
+
+/// Adopt any newly published engine upgrades — called only at batch
+/// boundaries (the worker loop's top), which is the whole swap-safety
+/// argument: a batch in flight finishes on the engine that started it.
+///
+/// Each upgrade's builder runs on THIS worker's thread (engines may be
+/// `!Send`).  A failed or malformed build keeps the old engine serving —
+/// an in-situ tuner must never be able to take a healthy worker down —
+/// and `seen_gen` advances regardless so a known-bad build is not
+/// retried before every batch.
+fn poll_upgrades(
+    worker: usize,
+    engines: &mut [BucketEngine],
+    slot: &insitu::UpgradeSlot,
+    seen_gen: &mut u64,
+) {
+    let gen = slot.generation();
+    if gen == *seen_gen {
+        return;
+    }
+    *seen_gen = gen;
+    for eng in engines.iter_mut() {
+        let Some(up) = slot.latest_for(eng.batch) else { continue };
+        if up.generation <= eng.generation {
+            continue;
+        }
+        match up.build_engine() {
+            Ok(exec) => {
+                let (in_shape, in_dt) = exec.input_desc();
+                let (out_shape, out_dt) = exec.output_desc();
+                if exec.batch() != eng.batch
+                    || in_shape.first() != Some(&eng.batch)
+                    || out_shape.first() != Some(&eng.batch)
+                {
+                    eprintln!(
+                        "tvmq: worker {worker}: rejecting upgrade gen {} for bucket {}: \
+                         built a batch-{} engine ({in_shape:?} -> {out_shape:?})",
+                        up.generation,
+                        eng.batch,
+                        exec.batch()
+                    );
+                    continue;
+                }
+                // Buffers are re-allocated with the new engine (startup
+                // path parity); this is swap-time work, not request-path
+                // work — steady-state serving stays zero-alloc.
+                eng.input = TensorData::zeros(in_dt, in_shape);
+                eng.out = TensorData::zeros(out_dt, out_shape);
+                eng.exec = exec;
+                eng.generation = up.generation;
+                eprintln!(
+                    "tvmq: worker {worker}: hot-swapped bucket {} engine to gen {} ({})",
+                    eng.batch, up.generation, up.describe
+                );
+            }
+            Err(e) => {
+                eprintln!(
+                    "tvmq: worker {worker}: upgrade build failed for bucket {} \
+                     (keeping gen {}): {e:#}",
+                    eng.batch, eng.generation
+                );
+            }
+        }
     }
 }
 

@@ -136,6 +136,40 @@ impl ArenaExec {
         })
     }
 
+    /// Wrap an already-compiled program — the warm-start path: the
+    /// compile cache (or an in-situ tuner's publication) hands over a
+    /// deserialized/verified [`CompiledGraph`] and this constructor runs
+    /// **zero** compiler calls, only allocating the arena and spawning
+    /// the pool.  The plan's spill windows must have been sized for
+    /// `threads` (the cache keys entries by pool width for exactly this
+    /// reason); a wider pool than the plan was built for is rejected.
+    pub fn from_compiled(cg: CompiledGraph, threads: usize) -> Result<Self> {
+        let threads = threads.max(1);
+        for (i, step) in cg.steps.iter().enumerate() {
+            if let Some(sp) = &step.spill {
+                if sp.bands < threads {
+                    return Err(anyhow!(
+                        "step {i} spill windows sized for {} bands, pool width is {threads}",
+                        sp.bands
+                    ));
+                }
+            }
+        }
+        let words = cg.arena_bytes / 8 + 1;
+        let batch = cg.input_ty.shape.first().copied().unwrap_or(1);
+        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
+        let name = format!("arena(b{batch},cached)");
+        Ok(Self {
+            cg,
+            arena: RefCell::new(vec![0u64; words]),
+            pool,
+            threads,
+            name,
+            batch,
+            counters: ExecCounters::default(),
+        })
+    }
+
     pub fn compiled(&self) -> &CompiledGraph {
         &self.cg
     }

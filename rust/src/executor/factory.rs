@@ -25,6 +25,7 @@
 //! thread that drives them).
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -32,6 +33,8 @@ use super::{
     ArenaExec, EngineKind, EngineSpec, Executor, GraphExecutor, LayoutTag, Precision,
     VmExecutor,
 };
+use crate::cache::{CacheKey, CompileCache};
+use crate::coordinator::insitu::UpgradeSlot;
 use crate::graph::compile::ScheduleOverrides;
 use crate::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
 use crate::graph::{build_resnet_ir_in, calibrate_ir, rebatch_graph, Graph, Layout};
@@ -54,6 +57,15 @@ pub trait EngineFactory {
     fn describe(&self) -> String {
         "engine factory".into()
     }
+
+    /// The in-situ upgrade mailbox, if this factory participates in live
+    /// engine hot-swap.  Coordinator workers poll the slot's generation
+    /// at batch boundaries and rebuild affected bucket engines on their
+    /// own thread (see [`crate::coordinator::insitu`]).  Default: none —
+    /// factories opt in.
+    fn upgrade_slot(&self) -> Option<Arc<UpgradeSlot>> {
+        None
+    }
 }
 
 /// Boxed factories are factories, so callers can assemble decorator
@@ -71,6 +83,10 @@ impl<F: EngineFactory + ?Sized> EngineFactory for Box<F> {
 
     fn describe(&self) -> String {
         (**self).describe()
+    }
+
+    fn upgrade_slot(&self) -> Option<Arc<UpgradeSlot>> {
+        (**self).upgrade_slot()
     }
 }
 
@@ -179,6 +195,7 @@ pub fn ir_layout(tag: LayoutTag) -> Layout {
 /// constants).  Because every kernel is per-sample-independent, a
 /// request's logits are bit-identical no matter which bucket served it
 /// (the serving differential test pins this).
+#[derive(Clone)]
 pub struct NativeArenaFactory {
     buckets: Vec<usize>,
     image: usize,
@@ -191,6 +208,13 @@ pub struct NativeArenaFactory {
     overrides: Option<ScheduleOverrides>,
     /// Batch-1 template (quantize-realized for int8); buckets re-batch it.
     template: Graph,
+    /// Content-addressed compile cache (`serve --cache-dir`): hits skip
+    /// `graph::compile` entirely via [`ArenaExec::from_compiled`]; cold
+    /// builds are stored for the next run.  `None` = always compile.
+    cache: Option<Arc<CompileCache>>,
+    /// In-situ hot-swap mailbox handed to coordinator workers via
+    /// [`EngineFactory::upgrade_slot`].
+    upgrade_slot: Option<Arc<UpgradeSlot>>,
 }
 
 impl NativeArenaFactory {
@@ -230,6 +254,8 @@ impl NativeArenaFactory {
             fuse: true,
             overrides: None,
             template,
+            cache: None,
+            upgrade_slot: None,
         })
     }
 
@@ -247,6 +273,41 @@ impl NativeArenaFactory {
         self.overrides = Some(overrides);
         self.fuse = fuse;
         self
+    }
+
+    /// Attach a content-addressed compile cache: `build` consults it
+    /// before compiling and stores what it compiles.  A hit constructs
+    /// the engine with **zero** `graph::compile` calls
+    /// (`tests/warm_start.rs` counter-asserts this).
+    pub fn with_cache(mut self, cache: Arc<CompileCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Attach an in-situ upgrade mailbox; coordinator workers will poll
+    /// it at batch boundaries and hot-swap published engines.
+    pub fn with_upgrade_slot(mut self, slot: Arc<UpgradeSlot>) -> Self {
+        self.upgrade_slot = Some(slot);
+        self
+    }
+
+    /// Per-engine worker-pool width (also the cache-key thread component).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The schedule overrides `build` actually compiles under — the tuned
+    /// set when one was attached, otherwise the defaults — with `threads`
+    /// pinned to this factory's pool width.  Exposed so cache keys and
+    /// in-situ tuners derive from the identical configuration.
+    pub fn effective_overrides(&self) -> ScheduleOverrides {
+        let mut ovr = self.overrides.clone().unwrap_or_default();
+        ovr.threads = self.threads;
+        ovr
+    }
+
+    pub fn fuse(&self) -> bool {
+        self.fuse
     }
 
     /// The exact graph the bucket engine for `batch` compiles — exposed so
@@ -288,10 +349,31 @@ impl EngineFactory for NativeArenaFactory {
 
     fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
         let g = self.graph(batch)?;
-        Ok(Box::new(match &self.overrides {
-            Some(ovr) => ArenaExec::with_schedule(&g, self.fuse, self.threads, ovr)?,
-            None => ArenaExec::with_options(&g, self.fuse, self.threads)?,
-        }))
+        let Some(cache) = &self.cache else {
+            return Ok(Box::new(match &self.overrides {
+                Some(ovr) => ArenaExec::with_schedule(&g, self.fuse, self.threads, ovr)?,
+                None => ArenaExec::with_options(&g, self.fuse, self.threads)?,
+            }));
+        };
+        // Warm-start path: key the exact (graph, schedule, threads)
+        // configuration this build would compile, and skip the compiler
+        // entirely on a verified hit.
+        let ovr = self.effective_overrides();
+        let key = CacheKey::of(&g, &ovr, self.fuse, self.threads);
+        if let Some(cg) = cache.load(&key, &g) {
+            println!("tvmq: cache hit: bucket {batch} ({}) — compile skipped", key.file_stem());
+            return Ok(Box::new(ArenaExec::from_compiled(cg, self.threads)?));
+        }
+        println!("tvmq: cache miss: bucket {batch} ({}) — compiling", key.file_stem());
+        let exec = ArenaExec::with_schedule(&g, self.fuse, self.threads, &ovr)?;
+        if let Err(e) = cache.store(&key, exec.compiled()) {
+            eprintln!("tvmq: cache: failed to store bucket {batch} entry: {e:#}");
+        }
+        Ok(Box::new(exec))
+    }
+
+    fn upgrade_slot(&self) -> Option<Arc<UpgradeSlot>> {
+        self.upgrade_slot.clone()
     }
 }
 

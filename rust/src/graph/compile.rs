@@ -70,6 +70,7 @@
 //! `tests/graph_fuzz.rs` randomized harness enforce this.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Result};
 
@@ -392,6 +393,17 @@ struct ProtoStep {
     name: String,
 }
 
+/// Process-wide count of compiler invocations (every path funnels through
+/// [`compile_graph_with`]).  The warm-start tests assert this stays flat
+/// across cache hits — the claim "zero compiles on a hit" is counted, not
+/// inferred.
+static COMPILE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times `compile_graph_with` has run in this process.
+pub fn compile_calls() -> u64 {
+    COMPILE_CALLS.load(Ordering::Relaxed)
+}
+
 /// Lower `g` into an arena-planned step stream under the default schedule.
 /// `fuse = false` keeps every node a separate step (the "unfused arena"
 /// ablation).
@@ -408,6 +420,7 @@ pub fn compile_graph_with(
     fuse: bool,
     ovr: &ScheduleOverrides,
 ) -> Result<CompiledGraph> {
+    COMPILE_CALLS.fetch_add(1, Ordering::Relaxed);
     g.validate()?;
     if !g.live_set()[g.input] {
         return Err(anyhow!("compile: graph output does not depend on the input"));

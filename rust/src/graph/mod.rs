@@ -26,8 +26,8 @@ pub use builder::{
     StageSpec,
 };
 pub use compile::{
-    compile_graph, compile_graph_with, AnchorOp, ClassKey, CompiledGraph, ScheduleOverrides,
-    StepSched,
+    compile_calls, compile_graph, compile_graph_with, AnchorOp, ClassKey, CompiledGraph,
+    ScheduleOverrides, StepSched,
 };
 pub use interp::evaluate;
 pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

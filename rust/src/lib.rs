@@ -36,6 +36,9 @@
 //!   oracle-gated in-process measurer, seeded random + hill-climb search,
 //!   persisted `TuneRecords` (`tvmq tune`, `bench-arena --tuned`,
 //!   `run/serve --tuned records.json`)
+//! - [`cache`]    — content-addressed compile/tune cache: structural
+//!   graph digests, the versioned on-disk store behind
+//!   `serve --cache-dir` warm starts, and cross-run tune-record merging
 //! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
 //! - [`bench`]    — harnesses that regenerate every paper table & figure
 
@@ -47,6 +50,7 @@
 compile_error!("tvmq assumes a little-endian target");
 
 pub mod bench;
+pub mod cache;
 pub mod check;
 pub mod coordinator;
 pub mod executor;

@@ -44,6 +44,8 @@ COMMANDS:
                     --warmup 2 --iters 10 [--json records.json] [--quick]
                     Every accepted candidate is verified bit-for-bit
                     against the interpreter oracle before it is timed.
+                    --merge a.json b.json ... -o merged.json instead merges
+                    records files by task key (best measured config wins).
   serve             Batched serving: --executor graph|vm|arena --precision int8
                     --max-batch 64 --batch-timeout-ms 2 --requests 512 --clients 32
                     --workers 1 --queue-bound 1024
@@ -53,6 +55,17 @@ COMMANDS:
                     bounded admission queue; --tuned records.json serves under
                     the autotuned schedule; exits non-zero unless every
                     request succeeds)
+                    --cache-dir D warm-starts from the content-addressed
+                    compile cache (hits skip graph compilation entirely;
+                    cold builds are stored for the next run; tune-records
+                    files found in D are merged and auto-applied, and
+                    cache stats land in D/cache-stats.json).
+                    --verify-cache re-proves every hit bit-for-bit against
+                    the interpreter oracle before serving it.
+                    --insitu-tune tunes the live bucket graphs in the
+                    background and hot-swaps strictly-better verified
+                    schedules into the serving workers at batch
+                    boundaries (--tune-budget N bounds the search).
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
@@ -103,6 +116,11 @@ fn parse_spec(args: &Args) -> Result<EngineSpec> {
 
 fn main() -> Result<()> {
     let args = Args::parse()?;
+    // Only `tune` takes positional operands (the `--merge` input files);
+    // everywhere else a stray positional is still a hard parse error.
+    if args.subcommand.as_deref() != Some("tune") {
+        args.reject_rest()?;
+    }
     let artifacts: PathBuf = args
         .opt_str("artifacts")
         .map(PathBuf::from)
@@ -391,6 +409,8 @@ fn write_arena_json(
                 ("steps", Json::num(r.steps as f64)),
                 ("fused_chains", Json::num(r.fused_chains as f64)),
                 ("arena_bytes", Json::num(r.arena_bytes as f64)),
+                ("compile_ms", Json::num(r.compile_ms)),
+                ("compile_cached_ms", Json::num(r.compile_cached_ms)),
             ])
         })
         .collect();
@@ -480,6 +500,12 @@ fn tune_cmd(args: &Args) -> Result<()> {
     use tvmq::metrics::Table;
     use tvmq::tune::{tune_graph, RunMeta, TuneOptions, TuneRecords};
 
+    if args.flag("merge") || args.opt_str("merge").is_some() {
+        return merge_records_cmd(args);
+    }
+    // Plain tuning takes no positional operands — those belong to --merge.
+    args.reject_rest()?;
+
     let quick = args.flag("quick");
     let spec = {
         let mut spec = EngineSpec::new(EngineKind::Arena);
@@ -557,6 +583,44 @@ fn tune_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tvmq tune --merge a.json b.json ... -o merged.json` — merge tune
+/// records files by task key, keeping the best measured config for each
+/// task (see [`tvmq::tune::records::merge`]).  Inputs are loaded
+/// *strictly*: a corrupt file named on the command line is an error, not
+/// a silent skip (the lenient path is for the serve-time scan, where the
+/// user never named the file).
+fn merge_records_cmd(args: &Args) -> Result<()> {
+    use tvmq::tune::{merge, TuneRecords};
+
+    // The flag grammar makes `--merge a.json` put the first operand in
+    // the flag's value slot and the rest in `args.rest`.
+    let mut inputs: Vec<String> = Vec::new();
+    if let Some(first) = args.opt_str("merge") {
+        inputs.push(first);
+    }
+    inputs.extend(args.rest.iter().cloned());
+    if inputs.is_empty() {
+        bail!("tune --merge needs at least one records file");
+    }
+    let out = args
+        .opt_str("o")
+        .or_else(|| args.opt_str("out"))
+        .ok_or_else(|| anyhow::anyhow!("tune --merge needs an output path: -o merged.json"))?;
+    let mut runs = Vec::with_capacity(inputs.len());
+    for p in &inputs {
+        runs.push(TuneRecords::load(p)?);
+    }
+    let merged = merge(&runs)?;
+    merged.save(&out)?;
+    println!(
+        "merged {} records file(s) ({} task records) -> {out}: {}",
+        runs.len(),
+        merged.records.len(),
+        merged.knob_summary()
+    );
+    Ok(())
+}
+
 fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let spec = parse_spec(args)?;
     let cfg = ServeConfig {
@@ -569,6 +633,15 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let requests = args.usize("requests", 512)?;
     let clients = args.usize("clients", 32)?.max(1);
 
+    use std::sync::Arc;
+    use tvmq::cache::{scan_tune_records, CompileCache, MERGED_RECORDS_FILE};
+    use tvmq::coordinator::insitu::{spawn_insitu_tuner, UpgradeSlot};
+    use tvmq::tune::{TuneOptions, TuneRecords};
+
+    // Arena-only extras, reported on after the load finishes.
+    let mut cache: Option<Arc<CompileCache>> = None;
+    let mut tuner: Option<(std::thread::JoinHandle<()>, Arc<UpgradeSlot>)> = None;
+
     // The arena engine serves natively compiled bucket engines (no
     // artifacts); the graph/vm engines serve AOT bundles from the
     // manifest.  Either way the image geometry must match the model.
@@ -577,11 +650,71 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         let image = args.usize("image", 32)?;
         let threads = args.usize("threads", env_threads())?;
         let mut factory = NativeArenaFactory::new(spec, &buckets, image, threads)?;
-        if let Some(path) = args.opt_str("tuned") {
-            let records = tvmq::tune::TuneRecords::load(&path)?;
-            println!("serving tuned schedule from {path}: {}", records.knob_summary());
-            factory = factory.with_schedule(records.overrides(threads), records.fuse);
+
+        // Warm-start: hits skip graph compilation entirely; cold builds
+        // are stored for the next run.
+        if let Some(dir) = args.opt_str("cache-dir") {
+            let c = Arc::new(
+                CompileCache::open(&dir)?.with_verify(args.flag("verify-cache")),
+            );
+            println!(
+                "compile cache at {dir}{}",
+                if c.verifying() { " (verifying hits against the oracle)" } else { "" }
+            );
+            factory = factory.with_cache(c.clone());
+            cache = Some(c);
         }
+
+        if let Some(path) = args.opt_str("tuned") {
+            // Lenient on the serve path: a corrupt or future-versioned
+            // records file logs a warning and serves the default
+            // schedule instead of refusing to start.
+            if let Some(records) = TuneRecords::load_lenient(&path) {
+                records.warn_if_thread_mismatch(threads);
+                println!("serving tuned schedule from {path}: {}", records.knob_summary());
+                factory = factory.with_schedule(records.overrides(threads), records.fuse);
+            }
+        } else if let Some(c) = &cache {
+            // No explicit records file: merge whatever tune records live
+            // in the cache dir (best measured config per task wins) and
+            // serve under the merged schedule.
+            let runs: Vec<TuneRecords> =
+                scan_tune_records(c.dir()).into_iter().map(|(_, r)| r).collect();
+            if !runs.is_empty() {
+                let merged = tvmq::tune::merge(&runs)?;
+                merged.warn_if_thread_mismatch(threads);
+                let mpath = c.dir().join(MERGED_RECORDS_FILE);
+                if let Err(e) = merged.save(&mpath) {
+                    eprintln!("tvmq: warning: could not write {}: {e:#}", mpath.display());
+                }
+                println!(
+                    "serving merged tuned schedule ({} records file(s) in cache dir): {}",
+                    runs.len(),
+                    merged.knob_summary()
+                );
+                factory = factory.with_schedule(merged.overrides(threads), merged.fuse);
+            }
+        }
+
+        // In-situ tuning: a background thread tunes the live bucket
+        // graphs and publishes strictly-better verified configs; workers
+        // hot-swap them at batch boundaries while serving continues.
+        if args.flag("insitu-tune") {
+            let slot = UpgradeSlot::new();
+            factory = factory.with_upgrade_slot(slot.clone());
+            let opts = TuneOptions {
+                budget: args.usize("tune-budget", 8)?,
+                seed: args.u64("seed", 1)?,
+                threads,
+                warmup: 1,
+                iters: 3,
+                use_prior: true,
+            };
+            let handle =
+                spawn_insitu_tuner(Arc::new(factory.clone()), slot.clone(), opts, cache.clone());
+            tuner = Some((handle, slot));
+        }
+
         let server = InferenceServer::start_with(factory, cfg)?;
         // NHWC models take channels-last images; NCHW and packed NCHWc
         // models both take plain NCHW (the packed stem is unblocked).
@@ -651,6 +784,28 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         "bucket histogram: {:?}  gathered histogram: {:?}",
         stats.batch_histogram, stats.gathered_histogram
     );
+    if let Some((handle, slot)) = tuner {
+        // The tuner owns its own factory clone, so joining here only
+        // waits on the search — serving already finished above.
+        let _ = handle.join();
+        let ups = slot.snapshot();
+        println!("in-situ tuner finished: {} upgrade(s) published", ups.len());
+        for u in ups {
+            println!("  gen {}: {}", u.generation, u.describe);
+        }
+    }
+    if let Some(c) = &cache {
+        let s = c.stats();
+        let path = c.write_stats()?;
+        println!(
+            "cache: {} hit(s), {} miss(es), {} store(s), {} rejected -> {}",
+            s.hits,
+            s.misses,
+            s.stores,
+            s.rejected,
+            path.display()
+        );
+    }
     // Smoke contract (CI relies on this): every request answered, none
     // with an error.
     if stats.requests != expected || stats.errors != 0 || client_errors != 0 {

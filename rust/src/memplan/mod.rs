@@ -199,6 +199,55 @@ impl StaticPlan {
         }
         self.unshared_bytes as f64 / self.arena_bytes as f64
     }
+
+    // ---- JSON (the compile cache persists plans verbatim) ----
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "placements",
+                Json::Arr(
+                    self.placements
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("name", Json::str(p.name.clone())),
+                                ("offset", Json::num(p.offset as f64)),
+                                ("bytes", Json::num(p.bytes as f64)),
+                                ("def_step", Json::num(p.def_step as f64)),
+                                ("last_use_step", Json::num(p.last_use_step as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("arena_bytes", Json::num(self.arena_bytes as f64)),
+            ("unshared_bytes", Json::num(self.unshared_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<StaticPlan> {
+        let placements = j
+            .get("placements")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(Placement {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    offset: p.get("offset")?.as_usize()?,
+                    bytes: p.get("bytes")?.as_usize()?,
+                    def_step: p.get("def_step")?.as_usize()?,
+                    last_use_step: p.get("last_use_step")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(StaticPlan {
+            placements,
+            arena_bytes: j.get("arena_bytes")?.as_usize()?,
+            unshared_bytes: j.get("unshared_bytes")?.as_usize()?,
+        })
+    }
 }
 
 /// The VM's allocator: no plan, just counted mallocs.

@@ -44,5 +44,5 @@ pub mod search;
 
 pub use knobs::{KnobSpace, SchedulePlan};
 pub use measure::{Measure, Measurement, MeasureOpts, Measurer};
-pub use records::{RunMeta, TaskKey, TuneRecord, TuneRecords};
+pub use records::{merge, RunMeta, TaskKey, TuneRecord, TuneRecords, RECORDS_VERSION};
 pub use search::{tune_graph, tune_with_measurer, Trial, TuneOptions, TuneOutcome};

@@ -10,6 +10,20 @@
 //! round-trip test pins this), and unknown classes simply fall back to
 //! the default schedule, so a records file tuned on one model variant can
 //! be applied to another without breaking anything.
+//!
+//! Format evolution: the file carries a schema `version`
+//! ([`RECORDS_VERSION`]).  Loading tolerates unknown fields (they are
+//! simply ignored) and older versions (missing newer fields default), so
+//! records written by past builds keep loading; files from a *future*
+//! schema, or corrupt files, fail `load` — serving paths use
+//! [`TuneRecords::load_lenient`], which logs and falls back to the
+//! default schedule instead of erroring.
+//!
+//! Cross-run merging ([`merge`]): records files accumulated across runs
+//! (different budgets, seeds, machines) merge by task key, keeping the
+//! config with the best measured ns/iter — `tvmq tune --merge a.json
+//! b.json -o out.json`, applied automatically when a `--cache-dir`
+//! holds several records files.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -47,6 +61,10 @@ impl TaskKey {
 pub struct TuneRecord {
     pub key: TaskKey,
     pub sched: StepSched,
+    /// Whole-plan ns/iter measured for the run this config won (schema
+    /// v2; v1 files load with `None` and fall back to the run-level
+    /// `best_ns_per_iter`).  The merge keeps the lowest.
+    pub ns_per_iter: Option<f64>,
 }
 
 /// A whole tuning run, as persisted.
@@ -89,6 +107,11 @@ fn precision_of(op: AnchorOp) -> &'static str {
     }
 }
 
+/// Current schema version.  v1 files (no per-task `ns_per_iter`) still
+/// load; versions beyond this fail `load` (and fall back to defaults via
+/// [`TuneRecords::load_lenient`]).
+pub const RECORDS_VERSION: u64 = 2;
+
 impl TuneRecords {
     /// Freeze a search outcome into its persisted form.
     pub fn from_outcome(outcome: &TuneOutcome, meta: &RunMeta) -> TuneRecords {
@@ -114,6 +137,7 @@ impl TuneRecords {
                     threads: outcome.threads,
                 },
                 sched: sched_of(key),
+                ns_per_iter: Some(outcome.best.ns_per_iter),
             })
             .collect();
         TuneRecords {
@@ -184,11 +208,15 @@ impl TuneRecords {
                     ("threads", Json::num(r.key.threads as f64)),
                     ("banding", Json::str(banding_str(r.sched.banding))),
                     ("max_bands", Json::num(r.sched.max_bands as f64)),
+                    (
+                        "ns_per_iter",
+                        r.ns_per_iter.map(Json::num).unwrap_or(Json::Null),
+                    ),
                 ])
             })
             .collect();
         Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(RECORDS_VERSION as f64)),
             ("kind", Json::str("tvmq-tune-records")),
             ("model", Json::str(self.model.clone())),
             ("layout", Json::str(self.layout.clone())),
@@ -206,9 +234,23 @@ impl TuneRecords {
         ])
     }
 
+    /// Parse a records file.  Unknown fields are ignored (the parser only
+    /// looks keys up, never enumerates), so files written by newer builds
+    /// that merely *added* fields still load; a `version` beyond
+    /// [`RECORDS_VERSION`] is refused, because its semantics are unknown.
     pub fn from_json(j: &Json) -> Result<TuneRecords> {
         if j.get("kind")?.as_str()? != "tvmq-tune-records" {
             return Err(anyhow!("not a tune-records file"));
+        }
+        // v0 files (pre-versioning) carry no version key; treat as 1.
+        let version = match j.opt("version") {
+            Some(v) => v.as_u64()?,
+            None => 1,
+        };
+        if version > RECORDS_VERSION {
+            return Err(anyhow!(
+                "records schema version {version} is newer than supported {RECORDS_VERSION}"
+            ));
         }
         let records = j
             .get("tasks")?
@@ -233,6 +275,10 @@ impl TuneRecords {
                         threads: t.get("threads")?.as_usize()?,
                     },
                     sched,
+                    ns_per_iter: match t.opt("ns_per_iter") {
+                        Some(v) => Some(v.as_f64()?),
+                        None => None,
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -269,4 +315,116 @@ impl TuneRecords {
         Self::from_json(&Json::parse(&text)?)
             .with_context(|| format!("parsing tune records {}", path.display()))
     }
+
+    /// [`TuneRecords::load`] for serving paths: a corrupt, unreadable, or
+    /// future-versioned file logs a warning to stderr and yields `None`
+    /// (the caller falls back to the default schedule) instead of killing
+    /// the serve.
+    pub fn load_lenient(path: impl AsRef<Path>) -> Option<TuneRecords> {
+        let path = path.as_ref();
+        match Self::load(path) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!(
+                    "tvmq: warning: ignoring tune records {} (falling back to the \
+                     default schedule): {e:#}",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Warn (once per process, to stderr) when these records were tuned
+    /// at a different pool width than the engine now being built.  The
+    /// per-class knobs still transfer — spill windows are re-sized — but
+    /// the measured ranking may not, so the mismatch should be visible
+    /// rather than silent.
+    pub fn warn_if_thread_mismatch(&self, serving_threads: usize) {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        if self.threads != serving_threads.max(1) {
+            WARNED.call_once(|| {
+                eprintln!(
+                    "tvmq: warning: tune records were tuned at {} thread(s) but serving \
+                     uses {}; applying the schedule anyway (re-tune at the serving width \
+                     for best results)",
+                    self.threads,
+                    serving_threads.max(1)
+                );
+            });
+        }
+    }
+}
+
+/// Canonical identity of a task entry (merge key): everything in
+/// [`TaskKey`], rendered stably.
+fn task_key_str(k: &TaskKey) -> String {
+    format!(
+        "{}|{}|{}|{:?}|t{}",
+        k.op.as_str(),
+        layout_str(k.layout),
+        k.precision,
+        k.shape,
+        k.threads
+    )
+}
+
+/// Merge tuning runs by task key, keeping the best-measured config.
+///
+/// Per-task measurement is the record's `ns_per_iter` (schema v2),
+/// falling back to the run-level `best_ns_per_iter` for v1 files.  Global
+/// knobs (`fuse`, `max_stack_lanes`) and run metadata come from the run
+/// with the best overall ns/iter; trial/rejection counts accumulate.
+pub fn merge(runs: &[TuneRecords]) -> Result<TuneRecords> {
+    if runs.is_empty() {
+        return Err(anyhow!("nothing to merge: no records"));
+    }
+    let base = runs
+        .iter()
+        .min_by(|a, b| a.best_ns_per_iter.total_cmp(&b.best_ns_per_iter))
+        .expect("non-empty");
+    // Insertion order is kept (first-seen key wins position), so merging
+    // is deterministic in input order.
+    let mut order: Vec<String> = Vec::new();
+    let mut best: HashMap<String, (TuneRecord, f64)> = HashMap::new();
+    for run in runs {
+        for r in &run.records {
+            let ns = r.ns_per_iter.unwrap_or(run.best_ns_per_iter);
+            let key = task_key_str(&r.key);
+            match best.get_mut(&key) {
+                None => {
+                    order.push(key.clone());
+                    let mut rec = r.clone();
+                    rec.ns_per_iter = Some(ns);
+                    best.insert(key, (rec, ns));
+                }
+                Some((cur, cur_ns)) => {
+                    if ns < *cur_ns {
+                        *cur = r.clone();
+                        cur.ns_per_iter = Some(ns);
+                        *cur_ns = ns;
+                    }
+                }
+            }
+        }
+    }
+    let records: Vec<TuneRecord> = order
+        .iter()
+        .map(|k| best[k].0.clone())
+        .collect();
+    Ok(TuneRecords {
+        model: base.model.clone(),
+        layout: base.layout.clone(),
+        precision: base.precision.clone(),
+        image: base.image,
+        batch: base.batch,
+        threads: base.threads,
+        fuse: base.fuse,
+        max_stack_lanes: base.max_stack_lanes,
+        records,
+        trials: runs.iter().map(|r| r.trials).sum(),
+        rejected: runs.iter().map(|r| r.rejected).sum(),
+        default_ns_per_iter: base.default_ns_per_iter,
+        best_ns_per_iter: base.best_ns_per_iter,
+    })
 }

@@ -1,7 +1,14 @@
 //! Minimal CLI argument parsing (clap replacement for the offline build).
 //!
-//! Supports `--flag value`, `--flag=value`, bare `--flag` booleans, and a
-//! positional subcommand, with generated usage text.
+//! Supports `--flag value`, `--flag=value`, bare `--flag` booleans, short
+//! `-x value` flags, a positional subcommand, and trailing positional
+//! operands (`rest`), with generated usage text.
+//!
+//! Positional operands after the subcommand are *collected*, not
+//! rejected — but only subcommands that declare they take operands
+//! should accept them: callers that don't, guard with
+//! [`Args::reject_rest`] so a typo like `tvmq serve arena` still fails
+//! loudly instead of being silently ignored.
 
 use std::collections::HashMap;
 
@@ -10,6 +17,9 @@ use anyhow::{anyhow, bail, Result};
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Positional operands after the subcommand (e.g. the input record
+    /// files of `tvmq tune --merge a.json b.json -o merged.json`).
+    pub rest: Vec<String>,
     flags: HashMap<String, String>,
     bools: Vec<String>,
 }
@@ -24,26 +34,44 @@ impl Args {
         let mut out = Args::default();
         let mut it = items.into_iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(rest) = a.strip_prefix("--") {
-                if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().expect("peeked");
-                    out.flags.insert(rest.to_string(), v);
-                } else {
-                    out.bools.push(rest.to_string());
-                }
-            } else if out.subcommand.is_none() {
-                out.subcommand = Some(a);
+            let key = if let Some(rest) = a.strip_prefix("--") {
+                Some(rest.to_string())
+            } else if a.len() == 2 && a.starts_with('-') && !a[1..].starts_with(|c: char| c.is_ascii_digit()) {
+                // Short flag (`-o out.json`); negative numbers are operands.
+                Some(a[1..].to_string())
             } else {
-                bail!("unexpected positional argument {a:?}");
+                None
+            };
+            match key {
+                Some(k) => {
+                    if let Some((k, v)) = k.split_once('=') {
+                        out.flags.insert(k.to_string(), v.to_string());
+                    } else if it
+                        .peek()
+                        .map(|n| !n.starts_with('-'))
+                        .unwrap_or(false)
+                    {
+                        let v = it.next().expect("peeked");
+                        out.flags.insert(k, v);
+                    } else {
+                        out.bools.push(k);
+                    }
+                }
+                None if out.subcommand.is_none() => out.subcommand = Some(a),
+                None => out.rest.push(a),
             }
         }
         Ok(out)
+    }
+
+    /// Fail if positional operands were given — for subcommands that
+    /// take none, so stray arguments stay an error (the pre-`rest`
+    /// behaviour) instead of being dropped on the floor.
+    pub fn reject_rest(&self) -> Result<()> {
+        if let Some(a) = self.rest.first() {
+            bail!("unexpected positional argument {a:?}");
+        }
+        Ok(())
     }
 
     pub fn str(&self, key: &str, default: &str) -> String {
@@ -104,6 +132,7 @@ mod tests {
         assert_eq!(a.str("precision", "fp32"), "int8");
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
+        assert!(a.reject_rest().is_ok());
     }
 
     #[test]
@@ -111,5 +140,29 @@ mod tests {
         let a = parse("bench --batches 1,16,64");
         assert_eq!(a.usize_list("batches", &[1]).unwrap(), vec![1, 16, 64]);
         assert_eq!(a.usize_list("other", &[2, 3]).unwrap(), vec![2, 3]);
+    }
+
+    #[test]
+    fn rest_operands_and_short_flags() {
+        let a = parse("tune --merge a.json b.json -o out.json");
+        assert_eq!(a.subcommand.as_deref(), Some("tune"));
+        // `--merge` takes the first operand as its value (flag-with-value
+        // grammar); the remainder land in `rest`.
+        assert_eq!(a.str("merge", ""), "a.json");
+        assert_eq!(a.rest, vec!["b.json".to_string()]);
+        assert_eq!(a.opt_str("o").as_deref(), Some("out.json"));
+        assert!(a.reject_rest().is_err());
+    }
+
+    #[test]
+    fn flag_values_never_start_with_dash() {
+        // A following `-`-prefixed token is a flag, not a value …
+        let a = parse("tune --merge -o out.json a.json");
+        assert!(a.flag("merge"));
+        assert_eq!(a.opt_str("o").as_deref(), Some("out.json"));
+        assert_eq!(a.rest, vec!["a.json".to_string()]);
+        // … and `-2` stays an operand (negative-number escape hatch).
+        let b = parse("cmd x -2");
+        assert_eq!(b.rest, vec!["x".to_string(), "-2".to_string()]);
     }
 }

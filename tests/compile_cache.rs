@@ -1,0 +1,293 @@
+//! Tier-1 integration tests for the content-addressed compile cache:
+//! golden digest stability, key sensitivity, on-disk round-trips that
+//! stay bit-identical to the cold compile, corruption tolerance, and
+//! tune-record merging.
+
+use std::fs;
+use std::path::PathBuf;
+
+use tvmq::cache::{graph_digest, overrides_digest, CacheKey, CompileCache};
+use tvmq::executor::{ArenaExec, Banding, Executor};
+use tvmq::graph::{
+    build_resnet_ir_in, calibrate_ir, evaluate, rebatch_graph, AnchorOp, ClassKey, Graph, Layout,
+    Op, ScheduleOverrides, StepSched, TensorTy,
+};
+use tvmq::tune::{merge, TaskKey, TuneRecord, TuneRecords, RECORDS_VERSION};
+
+/// A fresh scratch dir under the system temp dir, unique per test so the
+/// suite can run in parallel.
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tvmq-cache-test-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+/// A two-layer dense net whose constants can be appended in either
+/// order; `scale` perturbs one weight so value changes are testable.
+fn two_dense(swapped: bool, scale: f32) -> Graph {
+    let va: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 - 2.0).collect();
+    let vb: Vec<f32> = (0..16).map(|i| (i * i) as f32 * 0.125 * scale - 1.0).collect();
+    let mut g = Graph::new();
+    let x = g.add_input("x", TensorTy::f32(vec![1, 4]));
+    // Node ids (and names) differ between the two orders; only the
+    // dataflow is the same.
+    let (wa, wb) = if swapped {
+        let wb = g.add_const_f32("second", vec![4, 4], vb).unwrap();
+        let wa = g.add_const_f32("first", vec![4, 4], va).unwrap();
+        (wa, wb)
+    } else {
+        let wa = g.add_const_f32("wa", vec![4, 4], va).unwrap();
+        let wb = g.add_const_f32("wb", vec![4, 4], vb).unwrap();
+        (wa, wb)
+    };
+    let d1 = g.add("d1", Op::Dense, vec![x, wa]).unwrap();
+    let d2 = g.add("d2", Op::Dense, vec![d1, wb]).unwrap();
+    g.output = d2;
+    g.validate().unwrap();
+    g
+}
+
+#[test]
+fn digest_ignores_build_order_and_names() {
+    let a = two_dense(false, 1.0);
+    let b = two_dense(true, 1.0);
+    let (da, db) = (graph_digest(&a), graph_digest(&b));
+    assert_eq!(da.graph, db.graph, "identical dataflow must share a graph digest");
+    assert_eq!(da.const_pool, db.const_pool);
+    let ovr = ScheduleOverrides::default();
+    assert_eq!(CacheKey::of(&a, &ovr, true, 1), CacheKey::of(&b, &ovr, true, 1));
+}
+
+#[test]
+fn digest_tracks_constant_values_and_layout() {
+    let base = two_dense(false, 1.0);
+    let tweaked = two_dense(false, 1.0001);
+    assert_ne!(
+        graph_digest(&base).graph,
+        graph_digest(&tweaked).graph,
+        "constant payloads are keyed by value"
+    );
+    assert_ne!(graph_digest(&base).const_pool, graph_digest(&tweaked).const_pool);
+
+    let nchw = build_resnet_ir_in(1, 16, 7, Layout::Nchw).unwrap();
+    let nhwc = build_resnet_ir_in(1, 16, 7, Layout::Nhwc).unwrap();
+    assert_ne!(
+        graph_digest(&nchw).graph,
+        graph_digest(&nhwc).graph,
+        "layout changes the compiled program, so it must change the key"
+    );
+}
+
+#[test]
+fn overrides_digest_tracks_knobs_but_not_threads() {
+    let d0 = overrides_digest(&ScheduleOverrides::default(), true);
+
+    // Threads are a separate key component, not part of the table digest.
+    let mut threaded = ScheduleOverrides::default();
+    threaded.threads = 8;
+    assert_eq!(d0, overrides_digest(&threaded, true));
+
+    let mut lanes = ScheduleOverrides::default();
+    lanes.max_stack_lanes += 1;
+    assert_ne!(d0, overrides_digest(&lanes, true));
+
+    assert_ne!(d0, overrides_digest(&ScheduleOverrides::default(), false), "fuse is keyed");
+
+    let mut per_class = ScheduleOverrides::default();
+    per_class.per_class.insert(
+        ClassKey { op: AnchorOp::Dense, layout: None },
+        StepSched { banding: Some(Banding::Interleaved), max_bands: 2 },
+    );
+    assert_ne!(d0, overrides_digest(&per_class, true));
+
+    // And keys built from them differ too.
+    let g = two_dense(false, 1.0);
+    assert_ne!(
+        CacheKey::of(&g, &ScheduleOverrides::default(), true, 1),
+        CacheKey::of(&g, &lanes, true, 1)
+    );
+    assert_ne!(
+        CacheKey::of(&g, &ScheduleOverrides::default(), true, 1),
+        CacheKey::of(&g, &ScheduleOverrides::default(), true, 4),
+        "thread width is keyed (spill windows are sized for it)"
+    );
+}
+
+#[test]
+fn rebatched_buckets_share_the_constant_pool() {
+    let template = build_resnet_ir_in(1, 16, 7, Layout::Nchw).unwrap();
+    let g2 = rebatch_graph(&template, 2).unwrap();
+    let g4 = rebatch_graph(&template, 4).unwrap();
+    let (d2, d4) = (graph_digest(&g2), graph_digest(&g4));
+    assert_ne!(d2.graph, d4.graph, "batch is part of the program");
+    assert_eq!(
+        d2.const_pool, d4.const_pool,
+        "re-batched bucket graphs share one weight pool digest"
+    );
+}
+
+#[test]
+fn store_round_trip_is_bit_identical() {
+    // fp32 at threads=1, int8 (quantize-realized, f32 scale fields) at
+    // threads=4 — the pooled build sizes spill bands for 4 workers.
+    for (threads, layout) in [(1usize, Layout::Nchw), (4usize, Layout::Nchwc(4))] {
+        let dir = scratch(&format!("roundtrip-t{threads}"));
+        let cache = CompileCache::open(&dir).unwrap().with_verify(true);
+        let g = match layout {
+            Layout::Nchw => build_resnet_ir_in(1, 16, 7, Layout::Nchw).unwrap(),
+            _ => {
+                // Quantize-realize so the stored program exercises the f32
+                // scale (de)serialization.
+                use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+                let g1 = build_resnet_ir_in(1, 16, 7, layout).unwrap();
+                let calib = calibrate_ir(&g1, 1);
+                let scales = calibrate_graph(&g1, &calib).unwrap();
+                QuantizeRealize { scales }.run(&g1).unwrap()
+            }
+        };
+        let ovr = ScheduleOverrides::default();
+        let cold = ArenaExec::with_schedule(&g, true, threads, &ovr).unwrap();
+        let key = CacheKey::of(&g, &ovr, true, threads);
+
+        cache.store(&key, cold.compiled()).unwrap();
+        let cg = cache.load(&key, &g).expect("freshly stored entry must hit");
+        let warm = ArenaExec::from_compiled(cg, threads).unwrap();
+
+        let x = calibrate_ir(&g, 42);
+        let a = cold.run(&x).unwrap();
+        let b = warm.run(&x).unwrap();
+        let oracle = evaluate(&g, &x).unwrap();
+        let bits = |t: &tvmq::runtime::TensorData| -> Vec<u32> {
+            t.as_f32().unwrap().iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b), "threads={threads}: warm engine diverged from cold");
+        assert_eq!(bits(&a), bits(&oracle), "threads={threads}: diverged from interpreter");
+
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.stores, s.rejected), (1, 0, 1, 0));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn corrupt_and_future_entries_are_logged_misses() {
+    let dir = scratch("corrupt");
+    let cache = CompileCache::open(&dir).unwrap();
+    let g = two_dense(false, 1.0);
+    let ovr = ScheduleOverrides::default();
+    let exec = ArenaExec::with_schedule(&g, true, 1, &ovr).unwrap();
+    let key = CacheKey::of(&g, &ovr, true, 1);
+    cache.store(&key, exec.compiled()).unwrap();
+    let entry = dir.join(format!("{}.json", key.file_stem()));
+    assert!(entry.is_file(), "entry file {entry:?} must exist");
+
+    // Truncated garbage: a miss, never an error.
+    fs::write(&entry, "{\"kind\": \"tvmq-compile-cache\", \"vers").unwrap();
+    assert!(cache.load(&key, &g).is_none());
+
+    // A future store version: also a miss.
+    fs::write(&entry, "{\"kind\": \"tvmq-compile-cache\", \"version\": 999}").unwrap();
+    assert!(cache.load(&key, &g).is_none());
+
+    let s = cache.stats();
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.rejected, 2, "unusable entries are counted as rejected");
+
+    // The cold path overwrites the bad entry and the key hits again.
+    cache.store(&key, exec.compiled()).unwrap();
+    assert!(cache.load(&key, &g).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A hand-built single-record run for merge tests.
+fn run(ns: f64, best_ns: f64, max_bands: usize, banding: Option<Banding>) -> TuneRecords {
+    TuneRecords {
+        model: "resnet-ir".into(),
+        layout: "nchw".into(),
+        precision: "fp32".into(),
+        image: 16,
+        batch: 1,
+        threads: 1,
+        fuse: true,
+        max_stack_lanes: 8,
+        records: vec![TuneRecord {
+            key: TaskKey {
+                op: AnchorOp::Conv2d,
+                layout: Some(Layout::Nchw),
+                precision: "fp32".into(),
+                shape: vec![1, 16, 8, 8],
+                threads: 1,
+            },
+            sched: StepSched { banding, max_bands },
+            ns_per_iter: Some(ns),
+        }],
+        trials: 4,
+        rejected: 0,
+        default_ns_per_iter: 1000.0,
+        best_ns_per_iter: best_ns,
+    }
+}
+
+#[test]
+fn merge_keeps_best_measured_config_per_key() {
+    let slow = run(100.0, 100.0, 1, Some(Banding::Contiguous));
+    let fast = run(80.0, 80.0, 3, Some(Banding::Interleaved));
+    let merged = merge(&[slow.clone(), fast.clone()]).unwrap();
+    assert_eq!(merged.records.len(), 1, "same task key must collapse to one record");
+    assert_eq!(merged.records[0].sched, fast.records[0].sched, "lowest ns/iter wins");
+    assert_eq!(merged.records[0].ns_per_iter, Some(80.0));
+    // Run-level base comes from the fastest run; accounting sums.
+    assert_eq!(merged.best_ns_per_iter, 80.0);
+    assert_eq!(merged.trials, 8);
+
+    // Order independence: the winner does not depend on argument order.
+    let flipped = merge(&[fast, slow]).unwrap();
+    assert_eq!(flipped.records[0].ns_per_iter, Some(80.0));
+}
+
+#[test]
+fn records_schema_versioning_round_trips_and_rejects_the_future() {
+    let dir = scratch("records");
+    fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.json");
+    let r = run(90.0, 90.0, 2, None);
+    r.save(&path).unwrap();
+    assert_eq!(TuneRecords::load(&path).unwrap(), r);
+
+    // A file written by a future tvmq: strict load errors, the serve
+    // path's lenient load falls back to defaults (None) instead.
+    let text = fs::read_to_string(&path).unwrap();
+    let future = text.replace(
+        &format!("\"version\": {RECORDS_VERSION}"),
+        "\"version\": 99",
+    );
+    assert_ne!(text, future, "version field must be present to rewrite");
+    fs::write(&path, &future).unwrap();
+    assert!(TuneRecords::load(&path).is_err());
+    assert!(TuneRecords::load_lenient(&path).is_none());
+
+    // Corrupt file: same story.
+    fs::write(&path, "not json at all").unwrap();
+    assert!(TuneRecords::load_lenient(&path).is_none());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scan_tune_records_skips_cache_entries_and_bad_files() {
+    let dir = scratch("scan");
+    let cache = CompileCache::open(&dir).unwrap();
+    // A compile-cache entry, a valid records file, and a corrupt one all
+    // share the directory; only the valid records file is returned.
+    let g = two_dense(false, 1.0);
+    let ovr = ScheduleOverrides::default();
+    let exec = ArenaExec::with_schedule(&g, true, 1, &ovr).unwrap();
+    cache.store(&CacheKey::of(&g, &ovr, true, 1), exec.compiled()).unwrap();
+    let r = run(70.0, 70.0, 1, Some(Banding::Contiguous));
+    r.save(dir.join("tuned.json")).unwrap();
+    fs::write(dir.join("broken.json"), "{").unwrap();
+
+    let found = tvmq::cache::scan_tune_records(&dir);
+    assert_eq!(found.len(), 1);
+    assert_eq!(found[0].1, r);
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,80 @@
+//! Warm-start serving: a second `serve` over the same cache dir must
+//! build every bucket engine with **zero** `graph::compile` calls while
+//! still replying bit-identically to the interpreter oracle.
+//!
+//! This file holds exactly one test: `tvmq::graph::compile_calls()` is a
+//! process-global counter, so sharing the binary with other tests would
+//! make the zero-delta assertion racy.
+
+use std::sync::Arc;
+
+use tvmq::cache::CompileCache;
+use tvmq::coordinator::{InferenceServer, ServeConfig};
+use tvmq::executor::{EngineFactory, EngineKind, EngineSpec, NativeArenaFactory, Precision};
+use tvmq::graph::{compile_calls, evaluate};
+use tvmq::runtime::TensorData;
+use tvmq::util::rng::Rng64;
+
+const IMAGE: usize = 16;
+const BUCKETS: [usize; 2] = [1, 2];
+
+fn seeded_image(seed: u64) -> TensorData {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let vals: Vec<f32> = (0..3 * IMAGE * IMAGE).map(|_| rng.normal() * 0.5).collect();
+    TensorData::from_f32(vec![1, 3, IMAGE, IMAGE], &vals).unwrap()
+}
+
+#[test]
+fn warm_start_serves_with_zero_compiles_and_oracle_exact_logits() {
+    let dir = std::env::temp_dir().join(format!("tvmq-warmstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = EngineSpec::new(EngineKind::Arena).precision(Precision::Fp32);
+
+    // Cold pass: compile every bucket once, populating the cache.
+    let cache = Arc::new(CompileCache::open(&dir).unwrap());
+    let cold = NativeArenaFactory::new(spec, &BUCKETS, IMAGE, 1)
+        .unwrap()
+        .with_cache(cache.clone());
+    for &b in &BUCKETS {
+        cold.build(b).unwrap();
+    }
+    let s = cache.stats();
+    assert_eq!((s.misses, s.stores, s.hits), (2, 2, 0), "cold pass populates, never hits");
+
+    // Warm pass: a fresh factory and a fresh (verifying) cache handle over
+    // the same directory, serving through the full coordinator.
+    let cache2 = Arc::new(CompileCache::open(&dir).unwrap().with_verify(true));
+    let warm = NativeArenaFactory::new(spec, &BUCKETS, IMAGE, 1)
+        .unwrap()
+        .with_cache(cache2.clone());
+    let oracle_graph = warm.graph(1).unwrap();
+
+    let before = compile_calls();
+    let server = InferenceServer::start_with(
+        warm,
+        ServeConfig { spec, max_batch: 2, ..ServeConfig::default() },
+    )
+    .unwrap();
+    for seed in 0..4u64 {
+        let img = seeded_image(seed);
+        let reply = server.submit_blocking(img.clone()).unwrap();
+        let want = evaluate(&oracle_graph, &img).unwrap();
+        let got_bits: Vec<u32> =
+            reply.logits.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> =
+            want.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "warm-start reply diverged from the oracle");
+    }
+    let after = compile_calls();
+    server.shutdown().unwrap();
+
+    assert_eq!(
+        after - before,
+        0,
+        "warm start must construct every bucket engine without invoking graph::compile"
+    );
+    let s = cache2.stats();
+    assert_eq!(s.hits, BUCKETS.len() as u64, "every bucket must be a cache hit");
+    assert_eq!((s.misses, s.rejected), (0, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
