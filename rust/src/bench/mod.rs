@@ -16,7 +16,10 @@ use crate::executor::{
 };
 use crate::manifest::Manifest;
 use crate::metrics::{fmt_mib, fmt_ms, fmt_pct, improvement_pct, measure, EpochStats, Table};
-use crate::perfmodel::{int8_alu_factor, schedule_table, MachineModel};
+use crate::perfmodel::{
+    int8_alu_factor, resnet10_activation_bytes, resnet10_flops, roofline_fraction,
+    schedule_table, MachineModel,
+};
 use crate::runtime::{synthetic_images, Runtime, TensorData};
 
 /// Paper protocol defaults (§2.2): 110 epochs, 10 warm-up.  Overridable for
@@ -468,6 +471,60 @@ pub struct ArenaRow {
     /// `serve --cache-dir` pays on a hit instead of compiling.  0 for
     /// interpreter rows.
     pub compile_cached_ms: f64,
+    /// Register-tile geometry the compiled steps with a pre-packed panel
+    /// actually run under (`m{mr}n{nr}k{ku}`, `+`-joined when mixed);
+    /// `"-"` means every anchor ran the scalar loops.
+    pub micro: String,
+    /// Achieved effective bandwidth (GiB/s) against the perfmodel's
+    /// activation-traffic estimate for this cell's workload.
+    pub gibs: f64,
+    /// Achieved int8 MAC-op rate (ops/s) against the perfmodel's FLOP
+    /// count; 0 for fp32 rows.
+    pub int8_ops_per_s: f64,
+    /// Fraction of [`crate::perfmodel::roofline_ms`] this row achieves
+    /// (1.0 = at the model's bound) — the machine-readable
+    /// compute-bound vs memory-bound contrast.
+    pub roofline_frac: f64,
+}
+
+/// The register-tile token a compiled program actually runs under: the
+/// distinct `micro` geometries of steps that carry a pre-packed weight
+/// panel, sorted and `+`-joined (`"-"` = all scalar loops).  This is the
+/// field the CI smoke greps to prove every JSON row records its chosen
+/// tile knobs.
+fn micro_summary(cg: &crate::graph::CompiledGraph) -> String {
+    use crate::tune::micro_str;
+    let mut ms: Vec<crate::graph::MicroKernel> = cg
+        .steps
+        .iter()
+        .filter(|s| s.packed.is_some())
+        .filter_map(|s| s.sched.micro)
+        .collect();
+    ms.sort();
+    ms.dedup();
+    if ms.is_empty() {
+        "-".into()
+    } else {
+        ms.iter().map(|&m| micro_str(Some(m))).collect::<Vec<String>>().join("+")
+    }
+}
+
+/// Analytic achieved-rate metrics for one row: (GiB/s, int8 ops/s,
+/// roofline fraction).  Workload terms come from the perfmodel (same
+/// flops/bytes the tuner's prior uses), so the numbers are comparable
+/// across rows and across PRs, not a per-row instrumentation.
+fn row_metrics(image: usize, batch: usize, int8: bool, mean_ms: f64) -> (f64, f64, f64) {
+    let m = MachineModel::default();
+    let flops = resnet10_flops(image) * batch as f64;
+    let bytes =
+        resnet10_activation_bytes(image, if int8 { 1.0 } else { 4.0 }) * batch as f64;
+    let secs = mean_ms / 1e3;
+    if secs <= 0.0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let gibs = bytes / secs / (1u64 << 30) as f64;
+    let ops = if int8 { flops / secs } else { 0.0 };
+    (gibs, ops, roofline_fraction(&m, flops, bytes, int8, mean_ms))
 }
 
 /// Time the warm-start build path for an already-compiled engine: a full
@@ -521,12 +578,20 @@ fn layout_label(layout: crate::graph::Layout) -> String {
 /// paper's best-row contrast (packed-layout int8 vs plain fp32)
 /// reproduced natively: the same seeded model function in every layout,
 /// so row differences are storage and fusion, not weights.
+///
+/// `force_micro` pins the default-schedule rows to the register-blocked
+/// int8 microkernels (`MicroKernel::default()` on every anchor; inert on
+/// fp32 rows, which have no int8 panel to pre-pack) — the CI smoke runs
+/// the matrix both ways so the scalar loops and the blocked tiles are
+/// both exercised on every merge.  Tuned rows keep whatever geometry the
+/// records/search chose.
 pub fn arena_ablation(
     opts: &BenchOpts,
     batches: &[usize],
     image: usize,
     threads: usize,
     tuned: Option<&TunedSource<'_>>,
+    force_micro: bool,
 ) -> Result<(Table, Vec<ArenaRow>)> {
     use crate::executor::factory::ARENA_PACK_BLOCK;
     use crate::executor::ArenaExec;
@@ -545,9 +610,19 @@ pub fn arena_ablation(
             if threads == 1 { "" } else { "s" }
         ),
         &["Batch", "Layout", "Config", "Time (ms)", "Speedup", "Steps",
-          "Arena KiB", "Fused"],
+          "Arena KiB", "Fused", "Micro"],
     );
     let kib = |b: usize| format!("{:.1}", b as f64 / 1024.0);
+    // The schedule table the default (non-tuned) arena rows compile
+    // under: hard-coded defaults, or the same with the register-blocked
+    // microkernel geometry pinned on every anchor.
+    let default_ovr = {
+        let mut ovr = crate::graph::ScheduleOverrides::default();
+        if force_micro {
+            ovr.default_sched.micro = Some(crate::graph::MicroKernel::default());
+        }
+        ovr
+    };
     for &batch in batches {
         // The NCHW fp32 interpreter is the cross-layout baseline; the
         // interp int8 row keeps the paper's unfused-q/dq contrast visible.
@@ -565,8 +640,9 @@ pub fn arena_ablation(
                 t.row(vec![
                     batch.to_string(), lname.clone(), "interp fp32 (oracle)".into(),
                     fmt_ms(base.mean_ms), fmt_speedup(1.0), "-".into(), "-".into(),
-                    "-".into(),
+                    "-".into(), "-".into(),
                 ]);
+                let (gibs, ops, rf) = row_metrics(image, batch, false, base.mean_ms);
                 rows.push(ArenaRow {
                     batch, layout: lname.clone(), precision: "fp32".into(),
                     config: "interp fp32 (oracle)".into(), fused: false, threads: 1,
@@ -574,14 +650,16 @@ pub fn arena_ablation(
                     mean_ms: base.mean_ms, ns_per_iter: base.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
                     compile_ms: 0.0, compile_cached_ms: 0.0,
+                    micro: "-".into(), gibs, int8_ops_per_s: ops, roofline_frac: rf,
                 });
 
                 let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
                 t.row(vec![
                     batch.to_string(), lname.clone(), "interp int8 (unfused q/dq)".into(),
                     fmt_ms(qi.mean_ms), fmt_speedup(base.mean_ms / qi.mean_ms),
-                    "-".into(), "-".into(), "0".into(),
+                    "-".into(), "-".into(), "0".into(), "-".into(),
                 ]);
+                let (gibs, ops, rf) = row_metrics(image, batch, true, qi.mean_ms);
                 rows.push(ArenaRow {
                     batch, layout: lname.clone(), precision: "int8".into(),
                     config: "interp int8 (unfused q/dq)".into(), fused: false, threads: 1,
@@ -589,6 +667,7 @@ pub fn arena_ablation(
                     mean_ms: qi.mean_ms, ns_per_iter: qi.mean_ms * 1e6, steps: 0,
                     fused_chains: 0, arena_bytes: 0,
                     compile_ms: 0.0, compile_cached_ms: 0.0,
+                    micro: "-".into(), gibs, int8_ops_per_s: ops, roofline_frac: rf,
                 });
             }
 
@@ -599,25 +678,24 @@ pub fn arena_ablation(
                         if fuse { "fused" } else { "unfused" }
                     );
                     let t0 = std::time::Instant::now();
-                    let exec = ArenaExec::with_options(graph, fuse, threads)?;
+                    let exec = ArenaExec::with_schedule(graph, fuse, threads, &default_ovr)?;
                     let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let compile_cached_ms = cached_build_ms(
-                        &exec,
-                        graph,
-                        &crate::graph::ScheduleOverrides::default(),
-                        fuse,
-                        threads,
-                    )?;
+                    let compile_cached_ms =
+                        cached_build_ms(&exec, graph, &default_ovr, fuse, threads)?;
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
                     let cg = exec.compiled();
+                    let micro = micro_summary(cg);
                     t.row(vec![
                         batch.to_string(), lname.clone(), label.clone(),
                         fmt_ms(stats.mean_ms), fmt_speedup(base_ms / stats.mean_ms),
                         cg.steps.len().to_string(),
                         kib(cg.arena_bytes),
                         cg.fused_chains.to_string(),
+                        micro.clone(),
                     ]);
+                    let (gibs, ops, rf) =
+                        row_metrics(image, batch, precision == "int8", stats.mean_ms);
                     rows.push(ArenaRow {
                         batch, layout: lname.clone(), precision: precision.into(),
                         config: label, fused: fuse, threads,
@@ -626,6 +704,7 @@ pub fn arena_ablation(
                         steps: cg.steps.len(), fused_chains: cg.fused_chains,
                         arena_bytes: cg.arena_bytes,
                         compile_ms, compile_cached_ms,
+                        micro, gibs, int8_ops_per_s: ops, roofline_frac: rf,
                     });
                 }
 
@@ -671,6 +750,7 @@ pub fn arena_ablation(
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
                     let cg = exec.compiled();
+                    let micro = micro_summary(cg);
                     let label = format!("arena {precision} (tuned)");
                     t.row(vec![
                         batch.to_string(), lname.clone(), label.clone(),
@@ -678,7 +758,10 @@ pub fn arena_ablation(
                         cg.steps.len().to_string(),
                         kib(cg.arena_bytes),
                         cg.fused_chains.to_string(),
+                        micro.clone(),
                     ]);
+                    let (gibs, ops, rf) =
+                        row_metrics(image, batch, precision == "int8", stats.mean_ms);
                     rows.push(ArenaRow {
                         batch, layout: lname.clone(), precision: precision.into(),
                         config: label, fused: fuse, threads,
@@ -687,6 +770,7 @@ pub fn arena_ablation(
                         steps: cg.steps.len(), fused_chains: cg.fused_chains,
                         arena_bytes: cg.arena_bytes,
                         compile_ms, compile_cached_ms,
+                        micro, gibs, int8_ops_per_s: ops, roofline_frac: rf,
                     });
                 }
             }

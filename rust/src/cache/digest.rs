@@ -27,8 +27,8 @@
 
 use std::fmt;
 
-use crate::executor::Banding;
-use crate::graph::compile::{ClassKey, ScheduleOverrides, StepSched};
+use crate::executor::{Banding, PACK_FORMAT_VERSION};
+use crate::graph::compile::{ClassKey, ScheduleOverrides, ShapeKey, StepSched};
 use crate::graph::ir::{ConstValue, Graph, IrDType, Layout, Op, TensorTy};
 
 // ---------------------------------------------------------------------------
@@ -405,6 +405,40 @@ fn put_sched(h: &mut Sha256, s: &StepSched) {
         }
     }
     h.put_usize(s.max_bands);
+    match s.micro {
+        None => {
+            h.put_tag(0);
+            h.put_u64(0);
+            h.put_u64(0);
+            h.put_u64(0);
+        }
+        Some(m) => {
+            h.put_tag(1);
+            h.put_usize(m.mr);
+            h.put_usize(m.nr);
+            h.put_usize(m.ku);
+        }
+    }
+}
+
+/// Feed one [`ClassKey`] (op family + optional layout) into the hash.
+fn put_class_key(h: &mut Sha256, k: &ClassKey) {
+    h.put_tag(match k.op {
+        crate::graph::compile::AnchorOp::Conv2d => 0,
+        crate::graph::compile::AnchorOp::QConv2d => 1,
+        crate::graph::compile::AnchorOp::Dense => 2,
+        crate::graph::compile::AnchorOp::QDense => 3,
+    });
+    match k.layout {
+        None => {
+            h.put_tag(0);
+            h.put_u64(0);
+        }
+        Some(l) => {
+            h.put_tag(1);
+            h.put_layout(l);
+        }
+    }
 }
 
 /// Digest of a schedule-override table plus the fuse flag.  The pool
@@ -413,7 +447,11 @@ fn put_sched(h: &mut Sha256, s: &StepSched) {
 /// own thread count before compiling.
 pub fn overrides_digest(ovr: &ScheduleOverrides, fuse: bool) -> Digest {
     let mut h = Sha256::new();
-    h.update(b"tvmq-overrides-v1");
+    // v2: StepSched gained the register-tile knob, the table gained the
+    // per-shape tier, and the pre-packed-weight format version is folded
+    // in — a microkernel layout change can never serve a stale plan.
+    h.update(b"tvmq-overrides-v2");
+    h.put_u64(PACK_FORMAT_VERSION);
     h.put_tag(fuse as u8);
     h.put_usize(ovr.max_stack_lanes);
     put_sched(&mut h, &ovr.default_sched);
@@ -421,24 +459,30 @@ pub fn overrides_digest(ovr: &ScheduleOverrides, fuse: bool) -> Digest {
     entries.sort_by_key(|(k, _)| **k);
     h.put_usize(entries.len());
     for (k, s) in entries {
-        h.put_tag(match k.op {
-            crate::graph::compile::AnchorOp::Conv2d => 0,
-            crate::graph::compile::AnchorOp::QConv2d => 1,
-            crate::graph::compile::AnchorOp::Dense => 2,
-            crate::graph::compile::AnchorOp::QDense => 3,
-        });
-        match k.layout {
-            None => {
-                h.put_tag(0);
-                h.put_u64(0);
-            }
-            Some(l) => {
-                h.put_tag(1);
-                h.put_layout(l);
-            }
+        put_class_key(&mut h, k);
+        put_sched(&mut h, s);
+    }
+    let mut shape_entries: Vec<(&ShapeKey, &StepSched)> = ovr.per_shape.iter().collect();
+    shape_entries.sort_by(|a, b| a.0.cmp(b.0));
+    h.put_usize(shape_entries.len());
+    for (k, s) in shape_entries {
+        put_class_key(&mut h, &k.class);
+        h.put_usize(k.shape.len());
+        for &d in &k.shape {
+            h.put_usize(d);
         }
         put_sched(&mut h, s);
     }
+    h.finalize()
+}
+
+/// Domain-separated content digest of a raw byte payload — the store
+/// uses it to pin pre-packed weight panels without persisting them.
+pub fn bytes_digest(domain: &str, b: &[u8]) -> Digest {
+    let mut h = Sha256::new();
+    h.update(domain.as_bytes());
+    h.put_usize(b.len());
+    h.update(b);
     h.finalize()
 }
 

@@ -20,8 +20,10 @@
 //!   key, and re-batched bucket graphs get distinct keys that share a
 //!   constant-pool digest.
 //! - **overrides digest** ([`digest::overrides_digest`]) — the schedule
-//!   table (per-class banding/band-cap knobs, the lane-accumulator stack
-//!   bound, the default schedule) plus the fuse flag.
+//!   table (per-class and per-shape banding/band-cap/register-tile knobs,
+//!   the lane-accumulator stack bound, the default schedule) plus the
+//!   fuse flag and the pre-packed-weight format version
+//!   ([`crate::executor::PACK_FORMAT_VERSION`]).
 //! - **threads** — the pool width spill windows were sized for.
 //!
 //! # What invalidates

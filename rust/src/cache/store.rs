@@ -41,22 +41,32 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::digest::{graph_digest, CacheKey, Digest};
-use crate::executor::{ArenaExec, Banding, Executor};
+use super::digest::{bytes_digest, graph_digest, CacheKey, Digest};
+use crate::executor::microkernel::pack_weight;
+use crate::executor::{ArenaExec, Banding, Executor, PACK_FORMAT_VERSION};
 use crate::graph::compile::{
-    CompiledGraph, Epilogue, Residual, Slot, SpillSpec, Step, StepOp, StepSched,
+    CompiledGraph, Epilogue, PackedWeight, Residual, Slot, SpillSpec, Step, StepOp,
+    StepSched,
 };
 use crate::graph::ir::{ConstValue, Graph, IrDType, Layout, Op, TensorTy};
 use crate::graph::passes::{DeadCodeElim, Pass};
 use crate::memplan::StaticPlan;
 use crate::runtime::TensorData;
-use crate::tune::knobs::{banding_str, layout_str, parse_banding_str, parse_layout_str};
+use crate::tune::knobs::{
+    banding_str, layout_str, micro_str, parse_banding_str, parse_layout_str,
+    parse_micro_str,
+};
 use crate::tune::TuneRecords;
 use crate::util::json::Json;
 use crate::util::rng::Rng64;
 
 pub const STORE_KIND: &str = "tvmq-compile-cache";
-pub const STORE_VERSION: u64 = 1;
+/// v2: steps carry the register-tile schedule knob and an optional
+/// pre-packed weight reference, and the entry records the pack format
+/// version plus per-panel metadata (source const, layout, length, content
+/// digest).  Packed *bytes* are never stored — a hit re-derives them from
+/// the digest-verified constant pool and cross-checks the metadata.
+pub const STORE_VERSION: u64 = 2;
 
 /// File name the auto-merged tune records are written under (and skipped
 /// when re-scanning, so the merge's inputs stay the primary files).
@@ -307,6 +317,7 @@ fn sched_to_json(s: &StepSched) -> Json {
     Json::obj(vec![
         ("banding", Json::str(banding_str(s.banding))),
         ("max_bands", Json::num(s.max_bands as f64)),
+        ("micro", Json::str(micro_str(s.micro))),
     ])
 }
 
@@ -314,6 +325,11 @@ fn sched_from_json(j: &Json) -> Result<StepSched> {
     Ok(StepSched {
         banding: parse_banding_str(j.get("banding")?.as_str()?)?,
         max_bands: j.get("max_bands")?.as_usize()?,
+        // Absent in v1 entries — scalar kernels.
+        micro: match j.opt("micro") {
+            Some(v) => parse_micro_str(v.as_str()?)?,
+            None => None,
+        },
     })
 }
 
@@ -358,6 +374,10 @@ fn step_to_json(s: &Step) -> Json {
             "spill",
             s.spill.as_ref().map(spill_to_json).unwrap_or(Json::Null),
         ),
+        (
+            "packed",
+            s.packed.map(|i| Json::num(i as f64)).unwrap_or(Json::Null),
+        ),
         ("name", Json::str(s.name.clone())),
     ])
 }
@@ -382,9 +402,21 @@ fn step_from_json(j: &Json) -> Result<Step> {
             None => None,
             Some(s) => Some(spill_from_json(s)?),
         },
+        packed: match j.opt("packed") {
+            None => None,
+            Some(p) => Some(p.as_usize()?),
+        },
         name: j.get("name")?.as_str()?.to_string(),
     })
 }
+
+/// Byte view of an int8 payload (for content digests only).
+fn i8_bytes(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+/// Domain string for the pre-packed-panel content digests.
+const PACKED_DIGEST_DOMAIN: &str = "tvmq-packed-v1";
 
 /// Serialize a compiled program under its cache key.  The constant pool
 /// is represented only by per-entry metadata (dtype + element count) —
@@ -397,6 +429,29 @@ pub fn compiled_to_json(cg: &CompiledGraph, key: &CacheKey) -> Json {
         ("const_pool_digest", Json::str(key.const_pool.hex())),
         ("overrides_digest", Json::str(key.overrides.hex())),
         ("threads", Json::num(key.threads as f64)),
+        ("pack_format", Json::num(PACK_FORMAT_VERSION as f64)),
+        (
+            "packed",
+            Json::Arr(
+                cg.packed
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("src", Json::num(p.src as f64)),
+                            ("layout", Json::str(layout_str(p.layout))),
+                            ("len", Json::num(p.data.len() as f64)),
+                            (
+                                "digest",
+                                Json::str(
+                                    bytes_digest(PACKED_DIGEST_DOMAIN, i8_bytes(&p.data))
+                                        .hex(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("steps", Json::Arr(cg.steps.iter().map(step_to_json).collect())),
         (
             "consts",
@@ -483,6 +538,42 @@ pub fn compiled_from_json(j: &Json, g: &Graph, key: &CacheKey) -> Result<Compile
         }
     }
 
+    // Re-derive the pre-packed weight panels from the digest-verified
+    // constant pool and cross-check them against the entry's metadata.
+    // The packed bytes themselves are never persisted; any disagreement
+    // (format version, source index, layout, length, content digest) is
+    // corruption — a logged miss, so a microkernel-layout change can
+    // never serve a stale pre-packed plan.
+    let mut packed: Vec<PackedWeight> = Vec::new();
+    if let Some(pf) = j.opt("pack_format") {
+        if pf.as_u64()? != PACK_FORMAT_VERSION {
+            bail!(
+                "entry pack format {} != supported {PACK_FORMAT_VERSION}",
+                pf.as_u64()?
+            );
+        }
+        for (i, m) in j.get("packed")?.as_arr()?.iter().enumerate() {
+            let src = m.get("src")?.as_usize()?;
+            let layout = parse_layout_str(m.get("layout")?.as_str()?)?;
+            let (c, ty) = consts
+                .get(src)
+                .ok_or_else(|| anyhow!("packed panel {i} sources constant {src} beyond pool"))?;
+            let ConstValue::I8(w) = c else {
+                bail!("packed panel {i} sources non-int8 constant {src}");
+            };
+            let data = pack_weight(layout, w, &ty.shape);
+            if data.len() != m.get("len")?.as_usize()? {
+                bail!("packed panel {i} length mismatch");
+            }
+            let want = Digest::from_hex(m.get("digest")?.as_str()?)
+                .ok_or_else(|| anyhow!("packed panel {i} carries a bad digest"))?;
+            if bytes_digest(PACKED_DIGEST_DOMAIN, i8_bytes(&data)) != want {
+                bail!("packed panel {i} payload digest mismatch");
+            }
+            packed.push(PackedWeight { src, layout, data: std::sync::Arc::new(data) });
+        }
+    }
+
     let steps = j
         .get("steps")?
         .as_arr()?
@@ -505,6 +596,11 @@ pub fn compiled_from_json(j: &Json, g: &Graph, key: &CacheKey) -> Result<Compile
                 }
             }
         }
+        if let Some(pi) = step.packed {
+            if pi >= packed.len() {
+                bail!("step {si} references packed panel {pi} beyond pool of {}", packed.len());
+            }
+        }
     }
 
     let plan = StaticPlan::from_json(j.get("plan")?)?;
@@ -517,6 +613,7 @@ pub fn compiled_from_json(j: &Json, g: &Graph, key: &CacheKey) -> Result<Compile
     Ok(CompiledGraph {
         steps,
         consts,
+        packed,
         plan,
         arena_bytes,
         input_ty: ty_from_json(j.get("input_ty")?)?,

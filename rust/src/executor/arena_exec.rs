@@ -56,11 +56,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{anyhow, Result};
 
+use super::microkernel::{dot_i8, Isa};
 use super::pool::{Banding, WorkerPool};
 use super::{ExecCounters, ExecSnapshot, Executor};
 use crate::graph::compile::{
-    compile_graph_with, CompiledGraph, Epilogue, Residual, ScheduleOverrides, Slot, Step,
-    StepOp, StepSched, MAX_FUSED_QCONV_CB,
+    compile_graph_with, CompiledGraph, Epilogue, MicroKernel, Residual, ScheduleOverrides,
+    Slot, Step, StepOp, StepSched, MAX_FUSED_QCONV_CB,
 };
 use crate::graph::ir::{ConstValue, Graph, IrDType, Layout};
 use crate::graph::kernels as gk;
@@ -85,6 +86,9 @@ pub struct ArenaExec {
     /// Persistent kernel fan-out workers; `None` when `threads == 1`.
     pool: Option<WorkerPool>,
     threads: usize,
+    /// Widest int8 dot-product ISA detected at construction; every
+    /// microkernel dispatch reads this instead of re-probing CPUID.
+    isa: Isa,
     name: String,
     batch: usize,
     counters: ExecCounters,
@@ -130,6 +134,7 @@ impl ArenaExec {
             arena: RefCell::new(vec![0u64; words]),
             pool,
             threads,
+            isa: Isa::detect(),
             name,
             batch,
             counters: ExecCounters::default(),
@@ -154,6 +159,14 @@ impl ArenaExec {
                     ));
                 }
             }
+            if let Some(pi) = step.packed {
+                if pi >= cg.packed.len() {
+                    return Err(anyhow!(
+                        "step {i} references packed weight {pi}, pool holds {}",
+                        cg.packed.len()
+                    ));
+                }
+            }
         }
         let words = cg.arena_bytes / 8 + 1;
         let batch = cg.input_ty.shape.first().copied().unwrap_or(1);
@@ -164,6 +177,7 @@ impl ArenaExec {
             arena: RefCell::new(vec![0u64; words]),
             pool,
             threads,
+            isa: Isa::detect(),
             name,
             batch,
             counters: ExecCounters::default(),
@@ -341,19 +355,42 @@ impl ArenaExec {
                     }
                     // Standalone int8 convs (the unfused ablation, or bare
                     // int8 graphs): i32 out, never an epilogue — fused
-                    // chains always end in f32.
-                    (IrDType::S8, Layout::Nchw) if epi.is_identity() => conv2d_nchw_i8(
-                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, i32s_mut(dst_b)?, os, rc,
-                    ),
-                    (IrDType::S8, Layout::Nhwc) if epi.is_identity() => conv2d_nhwc_i8(
-                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, i32s_mut(dst_b)?, os, rc,
-                    ),
-                    (IrDType::S8, Layout::Nchwc(cb)) if epi.is_identity() => conv2d_nchwc_i8(
-                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        *stride, *padding, *cb, i32s_mut(dst_b)?, os, rc,
-                    ),
+                    // chains always end in f32.  A pre-packed weight picks
+                    // the register-blocked microkernel body; i32 addition
+                    // is order-exact either way.
+                    (IrDType::S8, Layout::Nchw) if epi.is_identity() => match step.packed {
+                        Some(pi) => conv2d_nchw_i8_micro(
+                            i8s(xb), &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            *stride, *padding, i32s_mut(dst_b)?, os, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => conv2d_nchw_i8(
+                            i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                            *stride, *padding, i32s_mut(dst_b)?, os, rc,
+                        ),
+                    },
+                    (IrDType::S8, Layout::Nhwc) if epi.is_identity() => match step.packed {
+                        Some(pi) => conv2d_nhwc_i8_micro(
+                            i8s(xb), &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            *stride, *padding, i32s_mut(dst_b)?, os, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => conv2d_nhwc_i8(
+                            i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                            *stride, *padding, i32s_mut(dst_b)?, os, rc,
+                        ),
+                    },
+                    (IrDType::S8, Layout::Nchwc(cb)) if epi.is_identity() => match step.packed {
+                        Some(pi) => conv2d_nchwc_i8_micro(
+                            i8s(xb), &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            *stride, *padding, *cb, i32s_mut(dst_b)?, os, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => conv2d_nchwc_i8(
+                            i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                            *stride, *padding, *cb, i32s_mut(dst_b)?, os, rc,
+                        ),
+                    },
                     other => {
                         return Err(anyhow!(
                             "arena conv: unsupported operands {:?} (int8 epilogues never fuse)",
@@ -381,14 +418,28 @@ impl ArenaExec {
                 quantize_into(f32s(xb)?, *qscale, xq);
                 let ev = self.epi_vals(step, epi, base)?;
                 match layout {
-                    Layout::Nchw => qconv2d_nchw(
-                        xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                        *dqscale, ev, f32s_mut(dst_b)?, os, rc,
-                    ),
-                    Layout::Nhwc => qconv2d_nhwc(
-                        xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                        *dqscale, ev, f32s_mut(dst_b)?, os, rc,
-                    ),
+                    Layout::Nchw => match step.packed {
+                        Some(pi) => qconv2d_nchw_micro(
+                            xq, &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            *stride, *padding, *dqscale, ev, f32s_mut(dst_b)?, os, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => qconv2d_nchw(
+                            xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                            *dqscale, ev, f32s_mut(dst_b)?, os, rc,
+                        ),
+                    },
+                    Layout::Nhwc => match step.packed {
+                        Some(pi) => qconv2d_nhwc_micro(
+                            xq, &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            *stride, *padding, *dqscale, ev, f32s_mut(dst_b)?, os, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => qconv2d_nhwc(
+                            xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                            *dqscale, ev, f32s_mut(dst_b)?, os, rc,
+                        ),
+                    },
                     Layout::Nchwc(cb) => {
                         if wt.shape[4] != *cb || wt.shape[5] != *cb {
                             return Err(anyhow!(
@@ -397,10 +448,18 @@ impl ArenaExec {
                             ));
                         }
                         let spill = self.spill_windows(step, scratch, base, *cb)?;
-                        qconv2d_nchwc(
-                            xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
-                            *cb, *dqscale, ev, spill, f32s_mut(dst_b)?, os, rc,
-                        );
+                        match step.packed {
+                            Some(pi) => qconv2d_nchwc_micro(
+                                xq, &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                                *stride, *padding, *cb, *dqscale, ev, spill,
+                                f32s_mut(dst_b)?, os, rc,
+                                step.sched.micro.unwrap_or_default(), self.isa,
+                            ),
+                            None => qconv2d_nchwc(
+                                xq, &xt.shape, i8s(wb), &wt.shape, *stride, *padding,
+                                *cb, *dqscale, ev, spill, f32s_mut(dst_b)?, os, rc,
+                            ),
+                        }
                     }
                 }
             }
@@ -421,10 +480,17 @@ impl ArenaExec {
                             ev, f32s_mut(dst_b)?, rc,
                         );
                     }
-                    IrDType::S8 if epi.is_identity() => dense_i8(
-                        i8s(xb), &xt.shape, i8s(wb), &wt.shape,
-                        i32s_mut(dst_b)?, rc,
-                    ),
+                    IrDType::S8 if epi.is_identity() => match step.packed {
+                        Some(pi) => dense_i8_micro(
+                            i8s(xb), &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                            i32s_mut(dst_b)?, rc,
+                            step.sched.micro.unwrap_or_default(), self.isa,
+                        ),
+                        None => dense_i8(
+                            i8s(xb), &xt.shape, i8s(wb), &wt.shape,
+                            i32s_mut(dst_b)?, rc,
+                        ),
+                    },
                     other => return Err(anyhow!("arena dense: unsupported {:?} operands", other)),
                 }
             }
@@ -439,10 +505,17 @@ impl ArenaExec {
                 let xq = i8s_mut(qb);
                 quantize_into(f32s(xb)?, *qscale, xq);
                 let ev = self.epi_vals(step, epi, base)?;
-                qdense(
-                    xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, ev,
-                    f32s_mut(dst_b)?, rc,
-                );
+                match step.packed {
+                    Some(pi) => qdense_micro(
+                        xq, &xt.shape, &self.cg.packed[pi].data, &wt.shape,
+                        *dqscale, ev, f32s_mut(dst_b)?, rc,
+                        step.sched.micro.unwrap_or_default(), self.isa,
+                    ),
+                    None => qdense(
+                        xq, &xt.shape, i8s(wb), &wt.shape, *dqscale, ev,
+                        f32s_mut(dst_b)?, rc,
+                    ),
+                }
             }
             StepOp::BiasAdd { layout } => {
                 let (xb, xt) = (self.src_bytes(&step.srcs[0].0, base), &step.srcs[0].1);
@@ -1285,6 +1358,392 @@ fn qdense(
                 acc += x[i * k + kk] as i32 * w[kk * n + j] as i32;
             }
             *slot = epi_apply(acc as f32 * dqscale, None, ev.relu, ev.res, i * n + j);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Register-blocked int8 microkernels.  Each mirrors the scalar kernel of
+// the same layout exactly — same row mapping, same banding default, same
+// epilogue order — but reads the compiler's pre-packed weight panel
+// (`CompiledGraph::packed`) and reduces contiguous spans through
+// [`dot_i8`].  The `MicroKernel` knobs shape the loops only (mr output
+// positions per tile, nr output lanes per tile, ku scalar-chunk width):
+// i32 accumulation is associative+commutative, so no knob setting and no
+// ISA tier can change a single output bit.  See `executor::microkernel`
+// module docs for the packed layouts.
+// ---------------------------------------------------------------------------
+
+/// One int8 NCHW output element over the identity-packed weight: the
+/// interior fast path hands the whole `s`-wide filter row to [`dot_i8`];
+/// clipped windows fall back to the scalar walk (same as [`i8_conv_acc`]).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_conv_acc_micro_nchw(
+    x: &[i8], wp: &[i8], c: usize, h: usize, wd: usize, r: usize, s: usize,
+    stride: usize, padding: usize, ni: usize, ki: usize, oy: usize, ox: usize,
+    ku: usize, isa: Isa,
+) -> i32 {
+    let mut acc = 0i32;
+    let x0 = ox * stride;
+    let interior_x = x0 >= padding && x0 + s <= wd + padding;
+    for ci in 0..c {
+        let xplane = (ni * c + ci) * h;
+        let wbase = (ki * c + ci) * r;
+        for ry in 0..r {
+            let iy = oy * stride + ry;
+            if iy < padding || iy >= h + padding {
+                continue;
+            }
+            let iy = iy - padding;
+            if interior_x {
+                let xrow = (xplane + iy) * wd + (x0 - padding);
+                let wrow = (wbase + ry) * s;
+                acc += dot_i8(isa, ku, &x[xrow..xrow + s], &wp[wrow..wrow + s]);
+            } else {
+                for sx in 0..s {
+                    let ix = x0 + sx;
+                    if ix < padding || ix >= wd + padding {
+                        continue;
+                    }
+                    let ix = ix - padding;
+                    acc += x[(xplane + iy) * wd + ix] as i32
+                        * wp[(wbase + ry) * s + sx] as i32;
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// One int8 NHWC output element over the `[K][R][S][C]`-packed weight:
+/// every surviving filter tap reduces the full channel axis as one
+/// contiguous dot product (data is channels-last, the pack made the
+/// weight panel match).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn i8_conv_acc_micro_nhwc(
+    x: &[i8], wp: &[i8], c: usize, h: usize, wd: usize, r: usize, s: usize,
+    stride: usize, padding: usize, ni: usize, ki: usize, oy: usize, ox: usize,
+    ku: usize, isa: Isa,
+) -> i32 {
+    let mut acc = 0i32;
+    let wpanel = ki * r * s * c;
+    for ry in 0..r {
+        let iy = oy * stride + ry;
+        if iy < padding || iy >= h + padding {
+            continue;
+        }
+        let iy = iy - padding;
+        for sx in 0..s {
+            let ix = ox * stride + sx;
+            if ix < padding || ix >= wd + padding {
+                continue;
+            }
+            let ix = ix - padding;
+            let xbase = ((ni * h + iy) * wd + ix) * c;
+            let wbase = wpanel + (ry * s + sx) * c;
+            acc += dot_i8(isa, ku, &x[xbase..xbase + c], &wp[wbase..wbase + c]);
+        }
+    }
+    acc
+}
+
+/// Register-blocked standalone int8 NCHW conv: `mr` output positions per
+/// tile along `ox`, each reduced via [`i8_conv_acc_micro_nchw`].
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchw_i8_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [i32], os: &[usize],
+    rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (c, h, wd) = (xs[1], xs[2], xs[3]);
+    let (k, r, s) = (ws[0], ws[2], ws[3]);
+    let (oh, ow) = (os[2], os[3]);
+    let mr = mk.mr.max(1);
+    par_rows(rc, Banding::Contiguous, out, oh * ow, |_, row, plane| {
+        let (ni, ki) = (row / k, row % k);
+        for oy in 0..oh {
+            let mut ox0 = 0;
+            while ox0 < ow {
+                let oxe = (ox0 + mr).min(ow);
+                for ox in ox0..oxe {
+                    plane[oy * ow + ox] = i8_conv_acc_micro_nchw(
+                        x, wp, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                        mk.ku, isa,
+                    );
+                }
+                ox0 = oxe;
+            }
+        }
+    });
+}
+
+/// Register-blocked standalone int8 NHWC conv: `nr` output lanes per tile
+/// along the channel axis, each a full-channel dot per filter tap.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nhwc_i8_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, out: &mut [i32], os: &[usize],
+    rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (h, wd, c) = (xs[1], xs[2], xs[3]);
+    let (r, s, k) = (ws[0], ws[1], ws[3]);
+    let (oh, ow) = (os[1], os[2]);
+    let nr = mk.nr.max(1);
+    par_rows(rc, Banding::Interleaved, out, ow * k, |_, row, slab| {
+        let (ni, oy) = (row / oh, row % oh);
+        for ox in 0..ow {
+            let mut kt = 0;
+            while kt < k {
+                let ke = (kt + nr).min(k);
+                for ki in kt..ke {
+                    slab[ox * k + ki] = i8_conv_acc_micro_nhwc(
+                        x, wp, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                        mk.ku, isa,
+                    );
+                }
+                kt = ke;
+            }
+        }
+    });
+}
+
+/// Register-blocked standalone int8 packed conv over the
+/// `[K/b][C/b][R][S][kb][cb]`-packed weight: per output lane `ki`, the
+/// tap's `cb` input lanes reduce as one contiguous dot product.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_nchwc_i8_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, cb: usize, out: &mut [i32], os: &[usize],
+    rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (co, h, wd) = (xs[1], xs[2], xs[3]);
+    let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
+    let (oh, ow) = (os[2], os[3]);
+    par_rows(rc, Banding::Contiguous, out, oh * ow * kb, |_, row, plane| {
+        let (ni, ok) = (row / ko, row % ko);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = (oy * ow + ox) * kb;
+                plane[obase..obase + kb].fill(0);
+                for oc in 0..co {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                            let xspan = &x[xbase..xbase + cb];
+                            let tap = (((ok * co + oc) * r + ry) * s + sx) * kb;
+                            for ki in 0..kb {
+                                let wrow = (tap + ki) * cb;
+                                plane[obase + ki] +=
+                                    dot_i8(isa, mk.ku, xspan, &wp[wrow..wrow + cb]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Fused quantized NCHW conv on the microkernel path: [`qconv2d_nchw`]
+/// with the register-blocked accumulator.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nchw_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (c, h, wd) = (xs[1], xs[2], xs[3]);
+    let (k, r, s) = (ws[0], ws[2], ws[3]);
+    let (oh, ow) = (os[2], os[3]);
+    let ohw = oh * ow;
+    let mr = mk.mr.max(1);
+    par_rows(rc, Banding::Contiguous, out, ohw, |_, row, plane| {
+        let (ni, ki) = (row / k, row % k);
+        let b = ev.bias.map(|b| b[ki]);
+        let plane_base = row * ohw;
+        for oy in 0..oh {
+            let mut ox0 = 0;
+            while ox0 < ow {
+                let oxe = (ox0 + mr).min(ow);
+                for ox in ox0..oxe {
+                    let acc = i8_conv_acc_micro_nchw(
+                        x, wp, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                        mk.ku, isa,
+                    );
+                    plane[oy * ow + ox] = epi_apply(
+                        acc as f32 * dqscale, b, ev.relu, ev.res,
+                        plane_base + oy * ow + ox,
+                    );
+                }
+                ox0 = oxe;
+            }
+        }
+    });
+}
+
+/// Fused quantized NHWC conv on the microkernel path: [`qconv2d_nhwc`]
+/// with nr-lane tiles of full-channel dot products.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nhwc_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, dqscale: f32, ev: EpiVals<'_>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (h, wd, c) = (xs[1], xs[2], xs[3]);
+    let (r, s, k) = (ws[0], ws[1], ws[3]);
+    let (oh, ow) = (os[1], os[2]);
+    let row_len = ow * k;
+    let nr = mk.nr.max(1);
+    par_rows(rc, Banding::Interleaved, out, row_len, |_, row, slab| {
+        let (ni, oy) = (row / oh, row % oh);
+        let row_base = row * row_len;
+        for ox in 0..ow {
+            let mut kt = 0;
+            while kt < k {
+                let ke = (kt + nr).min(k);
+                for ki in kt..ke {
+                    let acc = i8_conv_acc_micro_nhwc(
+                        x, wp, c, h, wd, r, s, stride, padding, ni, ki, oy, ox,
+                        mk.ku, isa,
+                    );
+                    slab[ox * k + ki] = epi_apply(
+                        acc as f32 * dqscale, ev.bias.map(|b| b[ki]), ev.relu,
+                        ev.res, row_base + ox * k + ki,
+                    );
+                }
+                kt = ke;
+            }
+        }
+    });
+}
+
+/// Fused quantized packed conv on the microkernel path: same
+/// stack-or-spill `kb`-lane accumulator discipline as [`qconv2d_nchwc`],
+/// with each lane's tap reduced by a contiguous dot product over the
+/// packed `[kb][cb]` trailing block.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d_nchwc_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    stride: usize, padding: usize, cb: usize, dqscale: f32, ev: EpiVals<'_>,
+    spill: Option<(SendPtr<i32>, usize)>,
+    out: &mut [f32], os: &[usize], rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let (co, h, wd) = (xs[1], xs[2], xs[3]);
+    let (ko, r, s, kb) = (ws[0], ws[2], ws[3], ws[5]);
+    let (oh, ow) = (os[2], os[3]);
+    let row_len = oh * ow * kb;
+    par_rows(rc, Banding::Contiguous, out, row_len, |band, row, plane| {
+        let (ni, ok) = (row / ko, row % ko);
+        let plane_base = row * row_len;
+        let mut stack = [0i32; MAX_FUSED_QCONV_CB];
+        // SAFETY (spill arm): identical to `qconv2d_nchwc` — band ids
+        // never reach the plan's window count, windows are disjoint per
+        // band and from every other byte range this step touches, and one
+        // band's rows run sequentially.
+        let acc: &mut [i32] = match spill {
+            Some((sbase, stride_i32)) => unsafe {
+                std::slice::from_raw_parts_mut(sbase.0.add(band * stride_i32), kb)
+            },
+            None => &mut stack[..kb],
+        };
+        for oy in 0..oh {
+            for ox in 0..ow {
+                acc[..kb].fill(0);
+                for oc in 0..co {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        if iy < padding || iy >= h + padding {
+                            continue;
+                        }
+                        let iy = iy - padding;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            if ix < padding || ix >= wd + padding {
+                                continue;
+                            }
+                            let ix = ix - padding;
+                            let xbase = (((ni * co + oc) * h + iy) * wd + ix) * cb;
+                            let xspan = &x[xbase..xbase + cb];
+                            let tap = (((ok * co + oc) * r + ry) * s + sx) * kb;
+                            for ki in 0..kb {
+                                let wrow = (tap + ki) * cb;
+                                acc[ki] +=
+                                    dot_i8(isa, mk.ku, xspan, &wp[wrow..wrow + cb]);
+                            }
+                        }
+                    }
+                }
+                let obase = (oy * ow + ox) * kb;
+                for ki in 0..kb {
+                    plane[obase + ki] = epi_apply(
+                        acc[ki] as f32 * dqscale,
+                        ev.bias.map(|b| b[ok * kb + ki]),
+                        ev.relu,
+                        ev.res,
+                        plane_base + obase + ki,
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Standalone int8 dense over the `[N][K]`-packed (transposed) weight:
+/// each output column is one contiguous K-axis dot product, tiled `nr`
+/// columns at a time.
+#[allow(clippy::too_many_arguments)]
+fn dense_i8_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize], out: &mut [i32],
+    rc: RowCfg<'_>, mk: MicroKernel, isa: Isa,
+) {
+    let k = xs[1];
+    let n = ws[1];
+    let nr = mk.nr.max(1);
+    par_rows(rc, Banding::Contiguous, out, n, |_, i, row| {
+        let xrow = &x[i * k..(i + 1) * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let je = (j0 + nr).min(n);
+            for j in j0..je {
+                row[j] = dot_i8(isa, mk.ku, xrow, &wp[j * k..(j + 1) * k]);
+            }
+            j0 = je;
+        }
+    });
+}
+
+/// Fused quantized dense on the microkernel path.
+#[allow(clippy::too_many_arguments)]
+fn qdense_micro(
+    x: &[i8], xs: &[usize], wp: &[i8], ws: &[usize],
+    dqscale: f32, ev: EpiVals<'_>, out: &mut [f32], rc: RowCfg<'_>,
+    mk: MicroKernel, isa: Isa,
+) {
+    let k = xs[1];
+    let n = ws[1];
+    let nr = mk.nr.max(1);
+    par_rows(rc, Banding::Contiguous, out, n, |_, i, row| {
+        let xrow = &x[i * k..(i + 1) * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let je = (j0 + nr).min(n);
+            for j in j0..je {
+                let acc = dot_i8(isa, mk.ku, xrow, &wp[j * k..(j + 1) * k]);
+                row[j] = epi_apply(acc as f32 * dqscale, None, ev.relu, ev.res, i * n + j);
+            }
+            j0 = je;
         }
     });
 }

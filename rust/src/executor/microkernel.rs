@@ -1,0 +1,380 @@
+//! Register-blocked int8 microkernel primitives: the SIMD dot-product
+//! tiles and the ahead-of-time weight pre-packing the arena executor's
+//! int8 kernels dispatch into when a step carries a
+//! [`MicroKernel`](crate::graph::compile::MicroKernel) schedule knob.
+//!
+//! # Primitive
+//!
+//! One primitive does all the arithmetic: [`dot_i8`], an int8×int8 →
+//! i32 dot product over two equal-length contiguous spans.  Every layout's
+//! microkernel decomposes its reduction into such spans (NHWC: the
+//! channel axis per filter tap; NCHW: the `s`-wide filter row where the
+//! window is interior; NCHW{c}: the `cb` input lanes per tap; dense: the
+//! whole `K` axis), so the same three implementations back every kernel:
+//!
+//! - **AVX2**: 16 bytes per step — `_mm256_cvtepi8_epi16` sign-extension
+//!   into one 256-bit register, then `_mm256_madd_epi16` (the `pmaddwd`
+//!   family the paper's tensorized schedules build on) accumulating
+//!   pairwise i32 lanes.
+//! - **SSE2** (always present on x86_64): the classic
+//!   unpack + `_mm_srai_epi16` sign-extension, then `_mm_madd_epi16`.
+//!   `pmaddubsw` is deliberately *not* used: it multiplies u8×i8 and
+//!   saturates, which is not bit-exact for signed×signed inputs.
+//! - **Scalar tile** (always available, the only path off x86_64): the
+//!   same reduction chunked by the `ku` knob.
+//!
+//! Integer addition is associative and commutative, so all three produce
+//! identical i32 results for identical spans — the interpreter-oracle
+//! differential gate holds for every ISA without a per-ISA tolerance.
+//! (i32 accumulation can wrap only where the scalar oracle would wrap
+//! too; the domains are identical.)
+//!
+//! # Feature-dispatch contract
+//!
+//! [`Isa::detect`] picks the widest ISA the *running* CPU supports
+//! (`is_x86_feature_detected!`), clamped by the `TVMQ_MICRO_ISA`
+//! environment variable (`avx2` / `sse2` / `scalar`) so CI can exercise
+//! the scalar tile on AVX2 hosts.  Detection runs once per executor
+//! construction; the chosen [`Isa`] is a plain enum copied into every
+//! kernel dispatch (no function pointers, no per-call feature probing,
+//! no allocation).  The `unsafe` SIMD entry points are only reachable
+//! after the matching feature was detected.
+//!
+//! # Pre-pack layout
+//!
+//! [`pack_weight`] rewrites an int8 weight constant into **per-output-lane
+//! contiguous panels** so every microkernel span read is unit-stride:
+//!
+//! | anchor layout | source weight | packed panels |
+//! |---|---|---|
+//! | NCHW  | `[K][C][R][S]` (OIHW) | identical — OIHW already stores each output channel's `[C][R][S]` taps contiguously |
+//! | NHWC  | `[R][S][C][K]` (HWIO) | `[K][R][S][C]`: per output channel, taps in row-major tap order, channel innermost |
+//! | NCHW{c} | `[K/b][C/b][R][S][cb][kb]` (OIHW{i}{o}) | `[K/b][C/b][R][S][kb][cb]`: the trailing `[cb][kb]` block transposed so each output lane's `cb` inputs are contiguous |
+//! | dense | `[K][N]` | `[N][K]`: one `K`-long panel per output feature |
+//!
+//! The packed form is a pure permutation of the source payload (same
+//! length, no padding — span lengths handle all tails), a deterministic
+//! function of `(payload, shape, layout)` alone.  The compile cache
+//! therefore never stores packed bytes: a warm start re-derives them from
+//! the digest-verified constant pool and cross-checks length + content
+//! digest against the entry's metadata ([`PACK_FORMAT_VERSION`] is folded
+//! into the cache key, so a layout change here can never resurrect a
+//! stale plan).
+//!
+//! The `mr`/`nr` knobs shape the *loop order* of the kernels in
+//! `arena_exec` (output-position and output-lane tiling), not the packed
+//! bytes; `ku` shapes the scalar tile's unroll chunk.  All three are
+//! searched by `crate::tune` like any other schedule knob — none can
+//! change a result bit.
+
+/// Version of the pre-packed weight layout described in the module docs.
+/// Folded into the schedule-table digest (`cache::digest`) and checked
+/// against every store entry, so changing the panel layout invalidates
+/// every cached plan that embedded the old one.
+pub const PACK_FORMAT_VERSION: u64 = 1;
+
+use crate::graph::ir::Layout;
+
+/// The instruction set the dot-product tile runs on.  Ordered narrow →
+/// wide; `detect` returns the widest supported (and permitted) one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable chunked-scalar tile (the only variant off x86_64).
+    Scalar,
+    /// `_mm_madd_epi16` over 16-byte steps (baseline x86_64).
+    Sse2,
+    /// `_mm256_madd_epi16` over 16-byte loads widened to 256-bit lanes.
+    Avx2,
+}
+
+impl Isa {
+    /// Widest ISA the running CPU supports, clamped by `TVMQ_MICRO_ISA`
+    /// (`avx2`/`sse2`/`scalar`, case-insensitive; unknown values are
+    /// ignored).  Called once per executor construction.
+    pub fn detect() -> Isa {
+        let cap = Self::hw_widest();
+        match std::env::var("TVMQ_MICRO_ISA") {
+            Ok(v) => {
+                let want = match v.to_ascii_lowercase().as_str() {
+                    "scalar" => Isa::Scalar,
+                    "sse2" => Isa::Sse2,
+                    "avx2" => Isa::Avx2,
+                    _ => cap,
+                };
+                // The env var can only narrow: requesting avx2 on a
+                // non-avx2 host stays at the hardware's widest.
+                if (want as u8) <= (cap as u8) { want } else { cap }
+            }
+            Err(_) => cap,
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn hw_widest() -> Isa {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Isa::Avx2
+        } else {
+            // SSE2 is part of the x86_64 baseline.
+            Isa::Sse2
+        }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn hw_widest() -> Isa {
+        Isa::Scalar
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// int8×int8 → i32 dot product over two equal-length spans, on the given
+/// ISA.  `ku` is the scalar tile's unroll chunk (ignored by the SIMD
+/// paths, whose step is their register width).  Allocation-free.
+#[inline]
+pub fn dot_i8(isa: Isa, ku: usize, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot_i8_scalar(ku, a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::detect` only yields these variants when the
+        // feature was detected on the running CPU.
+        Isa::Sse2 => unsafe { x86::dot_i8_sse2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_i8_avx2(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot_i8_scalar(ku, a, b),
+    }
+}
+
+/// The portable tile: the reduction chunked by `ku` so the compiler can
+/// keep a `ku`-wide partial sum in registers.  Bit-identical to the naive
+/// loop (integer addition reassociates freely).
+fn dot_i8_scalar(ku: usize, a: &[i8], b: &[i8]) -> i32 {
+    let ku = ku.max(1);
+    let n = a.len();
+    let mut sum = 0i32;
+    let mut i = 0;
+    while i + ku <= n {
+        let mut t = 0i32;
+        for j in 0..ku {
+            t += a[i + j] as i32 * b[i + j] as i32;
+        }
+        sum += t;
+        i += ku;
+    }
+    while i < n {
+        sum += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the four i32 lanes of `v`.
+    #[inline]
+    unsafe fn hsum_epi32(v: __m128i) -> i32 {
+        // [2,3,0,1] then [1,0,3,2]: after both adds every lane holds the
+        // total; extract lane 0.
+        let s = _mm_add_epi32(v, _mm_shuffle_epi32::<0x4E>(v));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// # Safety
+    /// Requires SSE2 (the x86_64 baseline) and `a.len() == b.len()`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_i8_sse2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            // Sign-extend i8 → i16: duplicate each byte into a 16-bit
+            // slot, then arithmetic-shift the copy down.
+            let a_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(va, va));
+            let a_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(va, va));
+            let b_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(vb, vb));
+            let b_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(vb, vb));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
+            i += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while i < n {
+            sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Requires AVX2 (checked by `Isa::detect`) and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let wa = _mm256_cvtepi8_epi16(va);
+            let wb = _mm256_cvtepi8_epi16(vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+            i += 16;
+        }
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let mut sum = hsum_epi32(_mm_add_epi32(lo, hi));
+        while i < n {
+            sum += *a.get_unchecked(i) as i32 * *b.get_unchecked(i) as i32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AOT weight pre-packing (compile-time only; the serving path never packs)
+// ---------------------------------------------------------------------------
+
+/// Pack an int8 anchor weight into the per-output-lane panel form the
+/// microkernels read (see the module docs' table).  `layout` is the
+/// anchor's data layout (`None` for dense); `ws` the source weight shape.
+/// A pure permutation: `out.len() == w.len()`, deterministic in
+/// `(w, ws, layout)` alone.
+pub fn pack_weight(layout: Option<Layout>, w: &[i8], ws: &[usize]) -> Vec<i8> {
+    match layout {
+        // OIHW already stores each output channel's `[C][R][S]` panel
+        // contiguously; the owned copy is the panel form.
+        Some(Layout::Nchw) => w.to_vec(),
+        Some(Layout::Nhwc) => {
+            // [R][S][C][K] → [K][R][S][C]
+            let (r, s, c, k) = (ws[0], ws[1], ws[2], ws[3]);
+            let mut out = vec![0i8; w.len()];
+            for ry in 0..r {
+                for sx in 0..s {
+                    for ci in 0..c {
+                        let src = ((ry * s + sx) * c + ci) * k;
+                        for ki in 0..k {
+                            out[((ki * r + ry) * s + sx) * c + ci] = w[src + ki];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        Some(Layout::Nchwc(_)) => {
+            // [K/b][C/b][R][S][cb][kb] → [K/b][C/b][R][S][kb][cb]
+            let (ko, co, r, s, cb, kb) = (ws[0], ws[1], ws[2], ws[3], ws[4], ws[5]);
+            let mut out = vec![0i8; w.len()];
+            let taps = ko * co * r * s;
+            for t in 0..taps {
+                let base = t * cb * kb;
+                for ci in 0..cb {
+                    for ki in 0..kb {
+                        out[base + ki * cb + ci] = w[base + ci * kb + ki];
+                    }
+                }
+            }
+            out
+        }
+        // Dense [K][N] → [N][K]
+        None => {
+            let (k, n) = (ws[0], ws[1]);
+            let mut out = vec![0i8; w.len()];
+            for kk in 0..k {
+                for j in 0..n {
+                    out[j * k + kk] = w[kk * n + j];
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dot(a: &[i8], b: &[i8]) -> i32 {
+        a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+    }
+
+    #[test]
+    fn every_isa_and_chunk_matches_the_naive_dot() {
+        use crate::util::rng::Rng64;
+        let mut rng = Rng64::seed_from_u64(0x5eed_d07);
+        // Lengths straddling the 16-byte SIMD step and the scalar chunk
+        // boundaries, including the tails.
+        for n in [0usize, 1, 3, 7, 15, 16, 17, 31, 32, 33, 64, 100] {
+            let a: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+            let b: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+            let want = naive_dot(&a, &b);
+            for ku in [1usize, 2, 4, 8, 16] {
+                assert_eq!(dot_i8(Isa::Scalar, ku, &a, &b), want, "scalar ku={ku} n={n}");
+            }
+            #[cfg(target_arch = "x86_64")]
+            {
+                assert_eq!(dot_i8(Isa::Sse2, 4, &a, &b), want, "sse2 n={n}");
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    assert_eq!(dot_i8(Isa::Avx2, 4, &a, &b), want, "avx2 n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_a_pure_permutation() {
+        use crate::util::rng::Rng64;
+        let mut rng = Rng64::seed_from_u64(7);
+        // NHWC [2][3][5][4]
+        let ws = [2usize, 3, 5, 4];
+        let w: Vec<i8> = (0..ws.iter().product::<usize>()).map(|_| rng.i8()).collect();
+        let p = pack_weight(Some(Layout::Nhwc), &w, &ws);
+        assert_eq!(p.len(), w.len());
+        let (r, s, c, k) = (ws[0], ws[1], ws[2], ws[3]);
+        for ry in 0..r {
+            for sx in 0..s {
+                for ci in 0..c {
+                    for ki in 0..k {
+                        assert_eq!(
+                            p[((ki * r + ry) * s + sx) * c + ci],
+                            w[((ry * s + sx) * c + ci) * k + ki]
+                        );
+                    }
+                }
+            }
+        }
+        // NCHWc [1][2][1][1][4][4]: trailing block transposed.
+        let ws = [1usize, 2, 1, 1, 4, 4];
+        let w: Vec<i8> = (0..32).map(|_| rng.i8()).collect();
+        let p = pack_weight(Some(Layout::Nchwc(4)), &w, &ws);
+        for t in 0..2 {
+            for ci in 0..4 {
+                for ki in 0..4 {
+                    assert_eq!(p[t * 16 + ki * 4 + ci], w[t * 16 + ci * 4 + ki]);
+                }
+            }
+        }
+        // Dense [3][5] transposes; NCHW is the identity copy.
+        let w: Vec<i8> = (0..15).map(|_| rng.i8()).collect();
+        let p = pack_weight(None, &w, &[3, 5]);
+        for kk in 0..3 {
+            for j in 0..5 {
+                assert_eq!(p[j * 3 + kk], w[kk * 5 + j]);
+            }
+        }
+        let p = pack_weight(Some(Layout::Nchw), &w, &[5, 3, 1, 1]);
+        assert_eq!(p, w);
+    }
+}

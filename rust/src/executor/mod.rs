@@ -32,6 +32,7 @@
 mod arena_exec;
 pub mod factory;
 mod graph_exec;
+pub mod microkernel;
 // Crate-visible (not `pub`): `crate::check` runs the pool's generic epoch
 // protocol under its model scheduler, but the SyncOps surface stays out of
 // the public API.
@@ -46,6 +47,7 @@ use anyhow::{anyhow, Result};
 pub use arena_exec::ArenaExec;
 pub use factory::{ArtifactFactory, EngineFactory, NativeArenaFactory};
 pub use graph_exec::GraphExecutor;
+pub use microkernel::{Isa, PACK_FORMAT_VERSION};
 pub use pool::{Banding, WorkerPool};
 pub use spec::{EngineKind, EngineSpec, LayoutTag, Precision, Schedule};
 pub use vm::{VmExecutor, VmInstr};

@@ -137,8 +137,35 @@ pub struct ClassKey {
     pub layout: Option<Layout>,
 }
 
+/// Register-blocked microkernel geometry for an int8 anchor step: the
+/// cache-tiling factors the tuner searches alongside banding.  Setting it
+/// routes the step through the pre-packed panel kernels in
+/// [`crate::executor::microkernel`]; `None` keeps the historical scalar
+/// loops.  Like every schedule knob it is semantics-free: integer
+/// accumulation is order-exact, so no tile geometry can change a bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MicroKernel {
+    /// Output-position (m) tile: how many output columns one weight-panel
+    /// pass covers before moving on (register/L1 reuse of the panel).
+    pub mr: usize,
+    /// Output-lane (n) tile: output channels/features grouped per
+    /// activation-span pass.  NCHW rows own a single output channel and
+    /// NCHW{c} tiles its fixed `kb` lanes, so those kernels ignore it.
+    pub nr: usize,
+    /// Reduction (k) unroll chunk of the scalar fallback tile (the SIMD
+    /// paths step by their register width instead).
+    pub ku: usize,
+}
+
+impl Default for MicroKernel {
+    fn default() -> Self {
+        MicroKernel { mr: 4, nr: 8, ku: 8 }
+    }
+}
+
 /// Per-step schedule knobs the executor reads instead of constants: how
-/// the kernel's independent output rows fan out over the worker pool.
+/// the kernel's independent output rows fan out over the worker pool,
+/// and whether/how the int8 inner loops run register-blocked.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StepSched {
     /// Row-banding mode; `None` keeps the kernel's built-in default
@@ -147,12 +174,27 @@ pub struct StepSched {
     /// Cap on the bands one kernel dispatch uses (the tuner's
     /// thread-count knob); `0` means the full pool width.
     pub max_bands: usize,
+    /// Register-blocked microkernel geometry; `None` = scalar loops.
+    /// Inert for fp32 anchors and anchors whose weight is not an int8
+    /// constant (no panel to pre-pack).
+    pub micro: Option<MicroKernel>,
 }
 
 impl Default for StepSched {
     fn default() -> Self {
-        StepSched { banding: None, max_bands: 0 }
+        StepSched { banding: None, max_bands: 0, micro: None }
     }
+}
+
+/// A shape-specific override key: an anchor class plus the step's exact
+/// output shape.  The per-shape table beats the per-class table, which
+/// remains the fallback — so a records file tuned on one geometry still
+/// transfers its class-level winners to unseen shapes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeKey {
+    pub class: ClassKey,
+    /// The anchor step's destination shape.
+    pub shape: Vec<usize>,
 }
 
 /// Compile-time schedule table: the knobs `graph::compile` resolves into
@@ -169,6 +211,9 @@ pub struct ScheduleOverrides {
     /// Schedule for anchor classes without an explicit entry.
     pub default_sched: StepSched,
     pub per_class: HashMap<ClassKey, StepSched>,
+    /// Shape-specific overrides (exact anchor output shape); beats
+    /// `per_class`, which stays the fallback for unseen shapes.
+    pub per_shape: HashMap<ShapeKey, StepSched>,
 }
 
 impl Default for ScheduleOverrides {
@@ -178,6 +223,7 @@ impl Default for ScheduleOverrides {
             threads: 1,
             default_sched: StepSched::default(),
             per_class: HashMap::new(),
+            per_shape: HashMap::new(),
         }
     }
 }
@@ -190,6 +236,23 @@ impl ScheduleOverrides {
             .unwrap_or(self.default_sched)
     }
 
+    /// [`ScheduleOverrides::sched_for`] with per-shape resolution: an
+    /// exact `(class, dst shape)` entry wins, then the class entry, then
+    /// the default.  The compiler resolves every anchor step through
+    /// this, so two same-class anchors of different geometry can run
+    /// different schedules.
+    pub fn sched_for_shape(&self, key: Option<ClassKey>, shape: &[usize]) -> StepSched {
+        if let Some(k) = key {
+            if !self.per_shape.is_empty() {
+                let sk = ShapeKey { class: k, shape: shape.to_vec() };
+                if let Some(s) = self.per_shape.get(&sk) {
+                    return *s;
+                }
+            }
+        }
+        self.sched_for(key)
+    }
+
     /// Whether this table changes anything an executor would do relative
     /// to the hard-coded defaults (thread count excluded — it only sizes
     /// spill windows).
@@ -197,6 +260,7 @@ impl ScheduleOverrides {
         self.max_stack_lanes >= MAX_FUSED_QCONV_CB
             && self.default_sched == StepSched::default()
             && self.per_class.values().all(|s| *s == StepSched::default())
+            && self.per_shape.values().all(|s| *s == StepSched::default())
     }
 }
 
@@ -355,8 +419,26 @@ pub struct Step {
     /// Lane-accumulator spill windows for a fused packed q-conv whose
     /// block exceeds the stack bound.
     pub spill: Option<SpillSpec>,
+    /// Index into [`CompiledGraph::packed`] when this step's int8 weight
+    /// was pre-packed for a microkernel ([`StepSched::micro`]); `None`
+    /// runs the scalar kernel.
+    pub packed: Option<usize>,
     /// Defining IR node's name (diagnostics).
     pub name: String,
+}
+
+/// One ahead-of-time pre-packed int8 weight: the panel form of
+/// [`crate::executor::microkernel::pack_weight`], built once at compile
+/// time and stored beside the constant pool.  A pure permutation of
+/// `consts[src]`, so warm starts re-derive it deterministically.
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    /// Constant-pool index of the source weight.
+    pub src: usize,
+    /// Anchor data layout the panels follow (`None` = dense).
+    pub layout: Option<Layout>,
+    /// The packed panel bytes.
+    pub data: std::sync::Arc<Vec<i8>>,
 }
 
 /// The compiled program: steps + constant pool + the arena plan.
@@ -364,6 +446,9 @@ pub struct Step {
 pub struct CompiledGraph {
     pub steps: Vec<Step>,
     pub consts: Vec<(ConstValue, TensorTy)>,
+    /// Pre-packed microkernel weight panels (possibly empty), indexed by
+    /// [`Step::packed`].
+    pub packed: Vec<PackedWeight>,
     /// The static plan (aligned first-fit over value lifetimes).  Verified
     /// overlap-free at compile time; `arena_bytes` is its extent.
     pub plan: StaticPlan,
@@ -584,7 +669,8 @@ pub fn compile_graph_with(
         } else {
             None
         };
-        let sched = ovr.sched_for(p.op.class_key());
+        let sched =
+            ovr.sched_for_shape(p.op.class_key(), &g.nodes[p.def_node].ty.shape);
         steps.push(Step {
             op: p.op,
             srcs,
@@ -593,8 +679,52 @@ pub fn compile_graph_with(
             scratch,
             sched,
             spill: p.spill,
+            packed: None,
             name: p.name,
         });
+    }
+
+    // ---- AOT weight pre-packing (microkernel panels) ----
+    // An anchor step whose schedule asks for a microkernel and whose
+    // weight is an int8 constant gets its weight packed once, here, into
+    // the per-output-lane panel form the register-blocked kernels read.
+    // Steps sharing a weight share one panel.  fp32 anchors and
+    // non-constant weights fall through with `packed = None` (the micro
+    // knob is inert for them — the executor runs the scalar kernel).
+    let mut packed: Vec<PackedWeight> = Vec::new();
+    let mut packed_by: HashMap<(usize, Option<Layout>), usize> = HashMap::new();
+    for step in &mut steps {
+        if step.sched.micro.is_none() || step.op.class_key().is_none() {
+            continue;
+        }
+        let Some(&(Slot::Const(ci), ref wt)) = step.srcs.get(1) else {
+            continue;
+        };
+        if wt.dtype != IrDType::S8 {
+            continue;
+        }
+        let layout = step.op.conv_layout();
+        let pi = match packed_by.get(&(ci, layout)) {
+            Some(&pi) => pi,
+            None => {
+                let ConstValue::I8(w) = &consts[ci].0 else {
+                    return Err(anyhow!(
+                        "step '{}': int8 weight const {ci} holds a non-i8 payload",
+                        step.name
+                    ));
+                };
+                let data =
+                    crate::executor::microkernel::pack_weight(layout, w, &wt.shape);
+                packed.push(PackedWeight {
+                    src: ci,
+                    layout,
+                    data: std::sync::Arc::new(data),
+                });
+                packed_by.insert((ci, layout), packed.len() - 1);
+                packed.len() - 1
+            }
+        };
+        step.packed = Some(pi);
     }
 
     // Defense in depth: a two-input epilogue step reads its residual
@@ -620,6 +750,7 @@ pub fn compile_graph_with(
     Ok(CompiledGraph {
         steps,
         consts,
+        packed,
         plan,
         arena_bytes,
         input_ty: g.nodes[g.input].ty.clone(),

@@ -27,7 +27,7 @@ pub use builder::{
 };
 pub use compile::{
     compile_calls, compile_graph, compile_graph_with, AnchorOp, ClassKey, CompiledGraph,
-    ScheduleOverrides, StepSched,
+    MicroKernel, PackedWeight, ScheduleOverrides, ShapeKey, StepSched,
 };
 pub use interp::evaluate;
 pub use ir::{Graph, IrDType, Layout, Node, NodeId, Op, TensorTy};

@@ -77,6 +77,10 @@ COMMANDS:
                     per-variant ns/iter records] [--tuned [records.json]
                     adds a tuned row per cell: from the records file, or
                     an inline micro-tune (--tune-budget 6) when bare]
+                    [--micro on|off  pins the register-blocked int8
+                    microkernels on the default-schedule rows (off =
+                    scalar loops); TVMQ_MICRO_ISA=scalar|sse2|avx2 caps
+                    the dispatched instruction set]
   bench-serve       Arena bucket serving vs per-request run (no artifacts)
                     [--requests 256 --clients 16 --buckets 1,4,8 --image 32
                     --threads 1 --batch-timeout-ms 2 --workers 1]
@@ -277,12 +281,18 @@ fn print_arena_ablation(args: &Args) -> Result<()> {
         }),
         None => None,
     };
+    let force_micro = match args.str("micro", "off").as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("--micro takes on|off, got {other:?}"),
+    };
     let (table, rows) = arena_ablation(
         &arena_opts,
         &args.usize_list("batches", if quick { &[1, 2] } else { &[1, 8] })?,
         image,
         threads,
         tuned.as_ref(),
+        force_micro,
     )?;
     table.print();
     if let Some(path) = args.opt_str("json") {
@@ -411,6 +421,10 @@ fn write_arena_json(
                 ("arena_bytes", Json::num(r.arena_bytes as f64)),
                 ("compile_ms", Json::num(r.compile_ms)),
                 ("compile_cached_ms", Json::num(r.compile_cached_ms)),
+                ("micro", Json::str(r.micro.clone())),
+                ("gibs", Json::num(r.gibs)),
+                ("int8_ops_per_s", Json::num(r.int8_ops_per_s)),
+                ("roofline_frac", Json::num(r.roofline_frac)),
             ])
         })
         .collect();

@@ -109,12 +109,17 @@ pub fn int8_alu_factor(m: &MachineModel) -> f64 {
 }
 
 /// Cost prior for the arena schedule autotuner (`crate::tune`): the
-/// two-term roofline with the two schedule axes the analytic model can
+/// two-term roofline with the three schedule axes the analytic model can
 /// see.  Unfused plans materialize every epilogue intermediate, roughly
 /// doubling activation traffic; band caps divide the compute term (a
-/// capped fan-out idles cores) but not the single-stream bandwidth term.
-/// This is an *ordering heuristic* for which candidates to measure first
-/// under a small budget — measurements, not the prior, pick the winner.
+/// capped fan-out idles cores) but not the single-stream bandwidth term;
+/// and the register-tile term models the microkernel axis: int8 plans
+/// only reach the wide-MAC compute rate when the register-blocked dot
+/// tiles are actually selected (`micro`) — scalar int8 loops retire MACs
+/// at roughly the fp32 rate, which is exactly the paper's point about
+/// tensorization.  This is an *ordering heuristic* for which candidates
+/// to measure first under a small budget — measurements, not the prior,
+/// pick the winner.
 pub fn tune_prior_ms(
     m: &MachineModel,
     flops: f64,
@@ -122,10 +127,11 @@ pub fn tune_prior_ms(
     int8: bool,
     fused: bool,
     bands: usize,
+    micro: bool,
 ) -> f64 {
     let traffic = if fused { act_bytes } else { act_bytes * 2.0 };
-    let compute_rate = if int8 {
-        m.peak_fp32_gflops * m.int8_dot_width as f64
+    let compute_rate = if int8 && micro {
+        m.peak_fp32_gflops * int8_alu_factor(m)
     } else {
         m.peak_fp32_gflops
     } * 1e9;
@@ -145,6 +151,23 @@ pub fn roofline_ms(m: &MachineModel, flops: f64, bytes: f64, int8: bool) -> f64 
     let compute_s = flops / compute_rate;
     let mem_s = bytes / (m.mem_bw_gbs * 1e9);
     compute_s.max(mem_s) * 1e3
+}
+
+/// Fraction of the two-term roofline bound a measured time achieves
+/// (1.0 = running exactly at the model's bound; > 1 means the model is
+/// pessimistic for this cell).  The machine-readable compute-bound vs
+/// memory-bound contrast `bench-arena --json` rows carry.
+pub fn roofline_fraction(
+    m: &MachineModel,
+    flops: f64,
+    bytes: f64,
+    int8: bool,
+    measured_ms: f64,
+) -> f64 {
+    if measured_ms <= 0.0 {
+        return 0.0;
+    }
+    roofline_ms(m, flops, bytes, int8) / measured_ms
 }
 
 /// FLOPs of a conv layer.

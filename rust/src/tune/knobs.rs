@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::executor::Banding;
 use crate::graph::compile::{
-    AnchorOp, ClassKey, ScheduleOverrides, StepSched, MAX_FUSED_QCONV_CB,
+    AnchorOp, ClassKey, MicroKernel, ScheduleOverrides, StepSched, MAX_FUSED_QCONV_CB,
 };
 use crate::graph::{compile_graph, Graph, Layout};
 use crate::util::rng::Rng64;
@@ -52,7 +52,13 @@ impl SchedulePlan {
             threads: threads.max(1),
             default_sched: StepSched::default(),
             per_class: self.per_class.iter().copied().collect(),
+            per_shape: Default::default(),
         }
+    }
+
+    /// Whether any class runs the register-blocked microkernel path.
+    pub fn uses_micro(&self) -> bool {
+        self.per_class.iter().any(|(_, s)| s.micro.is_some())
     }
 
     /// Compact human/JSON-stable description — also the plan's identity
@@ -66,11 +72,12 @@ impl SchedulePlan {
         );
         for (key, sched) in &self.per_class {
             s.push_str(&format!(
-                " {}[{}]={},b{}",
+                " {}[{}]={},b{},{}",
                 key.op.as_str(),
                 layout_str(key.layout),
                 banding_str(sched.banding),
-                sched.max_bands
+                sched.max_bands,
+                micro_str(sched.micro)
             ));
         }
         s
@@ -114,6 +121,27 @@ pub fn banding_str(b: Option<Banding>) -> String {
     }
 }
 
+/// Canonical microkernel token (`"-"` = scalar kernels, no pre-packing;
+/// otherwise `m{mr}n{nr}k{ku}` — the register-tile factors).
+pub fn micro_str(m: Option<MicroKernel>) -> String {
+    match m {
+        None => "-".into(),
+        Some(mk) => format!("m{}n{}k{}", mk.mr, mk.nr, mk.ku),
+    }
+}
+
+/// Inverse of [`micro_str`].
+pub fn parse_micro_str(s: &str) -> Result<Option<MicroKernel>> {
+    if s == "-" {
+        return Ok(None);
+    }
+    let bad = || anyhow::anyhow!("bad micro token {s:?}");
+    let rest = s.strip_prefix('m').ok_or_else(bad)?;
+    let (mr, rest) = rest.split_once('n').ok_or_else(bad)?;
+    let (nr, ku) = rest.split_once('k').ok_or_else(bad)?;
+    Ok(Some(MicroKernel { mr: mr.parse()?, nr: nr.parse()?, ku: ku.parse()? }))
+}
+
 /// Inverse of [`banding_str`].
 pub fn parse_banding_str(s: &str) -> Result<Option<Banding>> {
     Ok(match s {
@@ -145,6 +173,16 @@ const BANDING_CHOICES: [Option<Banding>; 6] = [
 /// stack, smaller values force the arena-spill strategy earlier).
 const LANE_CHOICES: [usize; 4] = [MAX_FUSED_QCONV_CB, 32, 8, 2];
 
+/// Register-tile choices for int8-bearing classes (`None` = the scalar
+/// kernels, no pre-packing).  Every choice is bit-exact — the tiles shape
+/// loops only — so the sampler may pick freely.
+const MICRO_CHOICES: [Option<MicroKernel>; 4] = [
+    None,
+    Some(MicroKernel { mr: 4, nr: 4, ku: 4 }),
+    Some(MicroKernel { mr: 4, nr: 8, ku: 8 }),
+    Some(MicroKernel { mr: 4, nr: 16, ku: 16 }),
+];
+
 /// The knob space of one model at one pool width: the anchor classes its
 /// fused compile emits (with a representative output shape per class, for
 /// the records file) plus rough model-level cost terms for the
@@ -155,6 +193,11 @@ pub struct KnobSpace {
     /// Representative destination shape per class (parallel to
     /// `classes`): the first matching step's output.
     pub shapes: Vec<Vec<usize>>,
+    /// Whether each class carries an int8 weight (parallel to `classes`)
+    /// — the microkernel axis only exists for those; on fp32 classes the
+    /// compiler would ignore the knob, so sampling it would just create
+    /// duplicate candidates.
+    pub micro_live: Vec<bool>,
     pub threads: usize,
     /// Approximate anchor FLOPs of one inference (prior input).
     pub flops: f64,
@@ -169,21 +212,40 @@ impl KnobSpace {
     /// default schedule.
     pub fn for_graph(g: &Graph, threads: usize) -> Result<KnobSpace> {
         let cg = compile_graph(g, true)?;
-        let mut seen: Vec<(ClassKey, Vec<usize>)> = Vec::new();
+        let mut seen: Vec<(ClassKey, Vec<usize>, bool)> = Vec::new();
         for step in &cg.steps {
             if let Some(key) = step.op.class_key() {
-                if !seen.iter().any(|(k, _)| *k == key) {
-                    seen.push((key, step.dst_ty.shape.clone()));
+                let s8w = step
+                    .srcs
+                    .get(1)
+                    .is_some_and(|(_, t)| t.dtype == crate::graph::ir::IrDType::S8);
+                if !seen.iter().any(|(k, _, _)| *k == key) {
+                    seen.push((key, step.dst_ty.shape.clone(), s8w));
                 }
             }
         }
-        seen.sort_by_key(|(k, _)| *k);
+        seen.sort_by_key(|(k, _, _)| *k);
         let int8 = seen
             .iter()
-            .any(|(k, _)| matches!(k.op, AnchorOp::QConv2d | AnchorOp::QDense));
+            .any(|(k, _, _)| matches!(k.op, AnchorOp::QConv2d | AnchorOp::QDense));
         let (flops, act_bytes) = graph_cost(g);
-        let (classes, shapes) = seen.into_iter().unzip();
-        Ok(KnobSpace { classes, shapes, threads: threads.max(1), flops, act_bytes, int8 })
+        let mut classes = Vec::with_capacity(seen.len());
+        let mut shapes = Vec::with_capacity(seen.len());
+        let mut micro_live = Vec::with_capacity(seen.len());
+        for (k, sh, live) in seen {
+            classes.push(k);
+            shapes.push(sh);
+            micro_live.push(live);
+        }
+        Ok(KnobSpace {
+            classes,
+            shapes,
+            micro_live,
+            threads: threads.max(1),
+            flops,
+            act_bytes,
+            int8,
+        })
     }
 
     /// Whether the lane-accumulator knob is live (a packed quantized
@@ -218,10 +280,16 @@ impl KnobSpace {
             per_class: self
                 .classes
                 .iter()
-                .map(|&key| {
+                .enumerate()
+                .map(|(i, &key)| {
                     let sched = StepSched {
                         banding: BANDING_CHOICES[rng.range_usize(0, BANDING_CHOICES.len() - 1)],
                         max_bands: bands[rng.range_usize(0, bands.len() - 1)],
+                        micro: if self.micro_live[i] {
+                            MICRO_CHOICES[rng.range_usize(0, MICRO_CHOICES.len() - 1)]
+                        } else {
+                            None
+                        },
                     };
                     (key, sched)
                 })
@@ -260,6 +328,15 @@ impl KnobSpace {
                     let mut p = plan.clone();
                     p.per_class[i].1.max_bands = bands;
                     out.push(p);
+                }
+            }
+            if self.micro_live.get(i).copied().unwrap_or(false) {
+                for micro in MICRO_CHOICES {
+                    if micro != cur.micro {
+                        let mut p = plan.clone();
+                        p.per_class[i].1.micro = micro;
+                        out.push(p);
+                    }
                 }
             }
         }
@@ -316,8 +393,13 @@ mod tests {
         for l in [None, Some(Layout::Nchw), Some(Layout::Nhwc), Some(Layout::Nchwc(8))] {
             assert_eq!(parse_layout_str(&layout_str(l)).unwrap(), l);
         }
+        for m in MICRO_CHOICES {
+            assert_eq!(parse_micro_str(&micro_str(m)).unwrap(), m);
+        }
         assert!(parse_banding_str("stolen").is_err());
         assert!(parse_layout_str("NCHWxc").is_err());
+        assert!(parse_micro_str("m4x8").is_err());
+        assert!(parse_micro_str("tile").is_err());
     }
 
     #[test]

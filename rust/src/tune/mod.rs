@@ -42,7 +42,7 @@ pub mod measure;
 pub mod records;
 pub mod search;
 
-pub use knobs::{KnobSpace, SchedulePlan};
+pub use knobs::{micro_str, parse_micro_str, KnobSpace, SchedulePlan};
 pub use measure::{Measure, Measurement, MeasureOpts, Measurer};
 pub use records::{merge, RunMeta, TaskKey, TuneRecord, TuneRecords, RECORDS_VERSION};
 pub use search::{tune_graph, tune_with_measurer, Trial, TuneOptions, TuneOutcome};

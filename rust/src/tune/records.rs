@@ -31,10 +31,13 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use super::knobs::{
-    banding_str, layout_str, parse_banding_str, parse_layout_str, SchedulePlan,
+    banding_str, layout_str, micro_str, parse_banding_str, parse_layout_str,
+    parse_micro_str, SchedulePlan,
 };
 use super::search::TuneOutcome;
-use crate::graph::compile::{AnchorOp, ClassKey, ScheduleOverrides, StepSched};
+use crate::graph::compile::{
+    AnchorOp, ClassKey, ScheduleOverrides, ShapeKey, StepSched,
+};
 use crate::util::json::Json;
 
 /// The cache key of one tuned task, as persisted.
@@ -107,10 +110,11 @@ fn precision_of(op: AnchorOp) -> &'static str {
     }
 }
 
-/// Current schema version.  v1 files (no per-task `ns_per_iter`) still
-/// load; versions beyond this fail `load` (and fall back to defaults via
-/// [`TuneRecords::load_lenient`]).
-pub const RECORDS_VERSION: u64 = 2;
+/// Current schema version.  v3 adds the per-task `micro` register-tile
+/// token; v2 added per-task `ns_per_iter`.  Older files still load (the
+/// missing fields default to `None`); versions beyond this fail `load`
+/// (and fall back to defaults via [`TuneRecords::load_lenient`]).
+pub const RECORDS_VERSION: u64 = 3;
 
 impl TuneRecords {
     /// Freeze a search outcome into its persisted form.
@@ -160,17 +164,27 @@ impl TuneRecords {
     /// The compiler override table this records file selects.  `threads`
     /// is the pool width of the engine being built (spill windows are
     /// re-sized for it; the per-class knobs transfer as-is).
+    ///
+    /// Every task also lands in the exact-shape table (`per_shape`), so
+    /// merged files holding several shapes of the same class resolve
+    /// per shape; the class-level entry (first task of each class, in
+    /// file order) remains the fallback for shapes no run has tuned.
     pub fn overrides(&self, threads: usize) -> ScheduleOverrides {
-        let per_class: HashMap<ClassKey, StepSched> = self
-            .records
-            .iter()
-            .map(|r| (r.key.class(), r.sched))
-            .collect();
+        let mut per_class: HashMap<ClassKey, StepSched> = HashMap::new();
+        let mut per_shape: HashMap<ShapeKey, StepSched> = HashMap::new();
+        for r in &self.records {
+            per_class.entry(r.key.class()).or_insert(r.sched);
+            per_shape.insert(
+                ShapeKey { class: r.key.class(), shape: r.key.shape.clone() },
+                r.sched,
+            );
+        }
         ScheduleOverrides {
             max_stack_lanes: self.max_stack_lanes,
             threads: threads.max(1),
             default_sched: StepSched::default(),
             per_class,
+            per_shape,
         }
     }
 
@@ -208,6 +222,7 @@ impl TuneRecords {
                     ("threads", Json::num(r.key.threads as f64)),
                     ("banding", Json::str(banding_str(r.sched.banding))),
                     ("max_bands", Json::num(r.sched.max_bands as f64)),
+                    ("micro", Json::str(micro_str(r.sched.micro))),
                     (
                         "ns_per_iter",
                         r.ns_per_iter.map(Json::num).unwrap_or(Json::Null),
@@ -260,6 +275,11 @@ impl TuneRecords {
                 let sched = StepSched {
                     banding: parse_banding_str(t.get("banding")?.as_str()?)?,
                     max_bands: t.get("max_bands")?.as_usize()?,
+                    // Absent before schema v3 — scalar kernels.
+                    micro: match t.opt("micro") {
+                        Some(v) => parse_micro_str(v.as_str()?)?,
+                        None => None,
+                    },
                 };
                 Ok(TuneRecord {
                     key: TaskKey {

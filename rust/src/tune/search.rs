@@ -197,5 +197,13 @@ fn prior_ms(m: &MachineModel, space: &KnobSpace, plan: &SchedulePlan) -> f64 {
         .min()
         .unwrap_or(space.threads)
         .max(1);
-    tune_prior_ms(m, space.flops, space.act_bytes, space.int8, plan.fuse, bands)
+    tune_prior_ms(
+        m,
+        space.flops,
+        space.act_bytes,
+        space.int8,
+        plan.fuse,
+        bands,
+        plan.uses_micro(),
+    )
 }

@@ -160,6 +160,42 @@ fn run_into_is_allocation_free_for_fused_packed_int8() {
     }
 }
 
+#[test]
+fn run_into_is_allocation_free_with_forced_microkernels() {
+    use tvmq::graph::compile::{ScheduleOverrides, StepSched};
+    use tvmq::graph::MicroKernel;
+
+    let _serial = SERIAL.lock().unwrap();
+
+    // Register-blocked int8 microkernels with AOT pre-packed weights: the
+    // packed panels were materialized at compile time next to the
+    // constant pool and the dot tiles run over arena spans, so forcing
+    // the microkernels onto every anchor must not add a single heap
+    // allocation to the serving path — at threads 1 AND 4, including the
+    // packed NCHW{c} tier (ISSUE 9 acceptance).
+    let ovr = ScheduleOverrides {
+        default_sched: StepSched {
+            banding: None,
+            max_bands: 0,
+            micro: Some(MicroKernel::default()),
+        },
+        ..ScheduleOverrides::default()
+    };
+    for layout in [Layout::Nchw, Layout::Nchwc(8)] {
+        let g = build_resnet_ir_in(1, 12, 7, layout).unwrap();
+        let qg = quantized(&g);
+        for t in [1usize, 4] {
+            let exec = ArenaExec::with_schedule(&qg, true, t, &ovr).unwrap();
+            assert!(
+                exec.compiled().steps.iter().any(|s| s.packed.is_some()),
+                "{layout:?}: forced micro never reached a pre-packed weight panel"
+            );
+            let x = calibrate_ir(&qg, 2);
+            assert_zero_alloc_steady_state(&exec, &x, &format!("micro {layout:?} t{t}"));
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Serve loop: the executor path stays allocation-free end-to-end
 // ---------------------------------------------------------------------------

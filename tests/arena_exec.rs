@@ -257,6 +257,52 @@ fn arena_matches_interp_int8_all_layouts() {
 }
 
 #[test]
+fn forced_microkernel_tile_boundaries_match_oracle() {
+    // Tile-boundary differentials for the register-blocked int8
+    // microkernels: geometries chosen against the model's dims so every
+    // tail case runs — ow = 12 with mr ∈ {5, 3} leaves m-tails, the
+    // 10-class dense / conv channel counts with nr ∈ {3, 16} leave
+    // n-tails (or clamp whole), and reduction spans c·r·s with
+    // ku ∈ {7, 16, 64} leave k-tails in the chunked scalar fallback.
+    // Integer accumulation is order-independent, so every geometry must
+    // be bit-for-bit the interpreter's answer in all three layouts.
+    use tvmq::graph::compile::{ScheduleOverrides, StepSched};
+    use tvmq::graph::MicroKernel;
+
+    let tiles = [
+        MicroKernel { mr: 5, nr: 3, ku: 7 },
+        MicroKernel { mr: 8, nr: 16, ku: 16 },
+        MicroKernel { mr: 3, nr: 5, ku: 64 },
+    ];
+    for layout in [Layout::Nchw, Layout::Nhwc, Layout::Nchwc(4)] {
+        let g = build_resnet_ir_in(1, 12, 11, layout).unwrap();
+        let calib = calibrate_ir(&g, 5);
+        let scales = calibrate_graph(&g, &calib).unwrap();
+        let qg = QuantizeRealize { scales }.run(&g).unwrap();
+        let x = calibrate_ir(&qg, 6);
+        let want = evaluate(&qg, &x).unwrap();
+        for mk in tiles {
+            let ovr = ScheduleOverrides {
+                default_sched: StepSched { banding: None, max_bands: 0, micro: Some(mk) },
+                ..ScheduleOverrides::default()
+            };
+            for threads in [1usize, 2] {
+                let exec = ArenaExec::with_schedule(&qg, true, threads, &ovr).unwrap();
+                assert!(
+                    exec.compiled().steps.iter().any(|s| s.packed.is_some()),
+                    "{layout:?} {mk:?}: no step took the pre-packed microkernel path"
+                );
+                let got = exec.run(&x).unwrap();
+                assert_eq!(
+                    want, got,
+                    "{layout:?} {mk:?} t{threads}: tile boundary diverged from the oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn arena_matches_interp_fp32_packed_epilogues() {
     // fp32 epilogue fusion on the packed layouts (bias+relu+residual
     // folded into NHWC / NCHW{c} conv steps) — previously these lowered

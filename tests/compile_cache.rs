@@ -10,7 +10,7 @@ use tvmq::cache::{graph_digest, overrides_digest, CacheKey, CompileCache};
 use tvmq::executor::{ArenaExec, Banding, Executor};
 use tvmq::graph::{
     build_resnet_ir_in, calibrate_ir, evaluate, rebatch_graph, AnchorOp, ClassKey, Graph, Layout,
-    Op, ScheduleOverrides, StepSched, TensorTy,
+    MicroKernel, Op, ScheduleOverrides, ShapeKey, StepSched, TensorTy,
 };
 use tvmq::tune::{merge, TaskKey, TuneRecord, TuneRecords, RECORDS_VERSION};
 
@@ -96,9 +96,31 @@ fn overrides_digest_tracks_knobs_but_not_threads() {
     let mut per_class = ScheduleOverrides::default();
     per_class.per_class.insert(
         ClassKey { op: AnchorOp::Dense, layout: None },
-        StepSched { banding: Some(Banding::Interleaved), max_bands: 2 },
+        StepSched { banding: Some(Banding::Interleaved), max_bands: 2, micro: None },
     );
     assert_ne!(d0, overrides_digest(&per_class, true));
+
+    // The register-tile knob is keyed: a microkernel geometry change can
+    // never serve a plan compiled for another tile.
+    let mut micro = ScheduleOverrides::default();
+    micro.default_sched.micro = Some(MicroKernel::default());
+    assert_ne!(d0, overrides_digest(&micro, true), "register tile is keyed");
+    let mut micro2 = micro.clone();
+    micro2.default_sched.micro = Some(MicroKernel { mr: 4, nr: 4, ku: 4 });
+    assert_ne!(
+        overrides_digest(&micro, true),
+        overrides_digest(&micro2, true),
+        "distinct tile geometries must key differently"
+    );
+
+    // Per-shape entries are keyed too (the per-shape tier beats per-class
+    // at compile time, so it must invalidate like any other knob).
+    let mut shaped = ScheduleOverrides::default();
+    shaped.per_shape.insert(
+        ShapeKey { class: ClassKey { op: AnchorOp::Dense, layout: None }, shape: vec![1, 4] },
+        StepSched { banding: Some(Banding::Interleaved), max_bands: 2, micro: None },
+    );
+    assert_ne!(d0, overrides_digest(&shaped, true), "per-shape entries are keyed");
 
     // And keys built from them differ too.
     let g = two_dense(false, 1.0);
@@ -199,6 +221,83 @@ fn corrupt_and_future_entries_are_logged_misses() {
     let _ = fs::remove_dir_all(&dir);
 }
 
+#[test]
+fn corrupt_packed_payload_is_rejected_as_a_logged_miss() {
+    use tvmq::graph::passes::{calibrate_graph, Pass, QuantizeRealize};
+
+    let dir = scratch("packed");
+    let cache = CompileCache::open(&dir).unwrap();
+
+    // A quantized packed-layout model under forced microkernels: the
+    // stored entry carries pre-packed weight-panel metadata (src, layout,
+    // len, digest) — the panels themselves are rebuilt from the constant
+    // pool on load and re-verified against the recorded digest.
+    let g1 = build_resnet_ir_in(1, 12, 7, Layout::Nchwc(4)).unwrap();
+    let calib = calibrate_ir(&g1, 1);
+    let scales = calibrate_graph(&g1, &calib).unwrap();
+    let g = QuantizeRealize { scales }.run(&g1).unwrap();
+    let ovr = ScheduleOverrides {
+        default_sched: StepSched {
+            banding: None,
+            max_bands: 0,
+            micro: Some(MicroKernel::default()),
+        },
+        ..ScheduleOverrides::default()
+    };
+    let exec = ArenaExec::with_schedule(&g, true, 1, &ovr).unwrap();
+    assert!(
+        !exec.compiled().packed.is_empty(),
+        "forced-micro int8 model must pre-pack at least one weight panel"
+    );
+    let key = CacheKey::of(&g, &ovr, true, 1);
+    cache.store(&key, exec.compiled()).unwrap();
+
+    // Sanity: the untampered entry hits, the warm engine re-packs the
+    // panels deterministically, and both engines match the oracle.
+    let cg = cache.load(&key, &g).expect("fresh packed entry must hit");
+    assert_eq!(cg.packed.len(), exec.compiled().packed.len());
+    let warm = ArenaExec::from_compiled(cg, 1).unwrap();
+    let x = calibrate_ir(&g, 42);
+    let want = evaluate(&g, &x).unwrap();
+    assert_eq!(want, exec.run(&x).unwrap(), "cold packed engine diverged");
+    assert_eq!(want, warm.run(&x).unwrap(), "warm packed engine diverged");
+
+    let entry = dir.join(format!("{}.json", key.file_stem()));
+    let text = fs::read_to_string(&entry).unwrap();
+
+    // Tamper the first packed panel's recorded digest: the rebuilt panel
+    // no longer matches, so the entry is a logged miss — never an error,
+    // never a silently wrong engine.
+    let pi = text.find("\"packed\"").expect("entry must carry packed metadata");
+    let di = text[pi..].find("\"digest\"").expect("panel must carry a digest") + pi;
+    let start = di + text[di..].find(':').unwrap() + 1;
+    let start = start + text[start..].find('"').unwrap() + 1;
+    let old = text.as_bytes()[start] as char;
+    let new = if old == '0' { '1' } else { '0' };
+    let mut tampered = text.clone();
+    tampered.replace_range(start..start + 1, &new.to_string());
+    assert_ne!(tampered, text);
+    fs::write(&entry, &tampered).unwrap();
+    assert!(cache.load(&key, &g).is_none(), "corrupt packed digest must miss");
+
+    // A future pre-pack format version: same story (the layout contract
+    // changed, so the whole entry is unusable).
+    let future = text.replace("\"pack_format\": 1", "\"pack_format\": 999");
+    assert_ne!(future, text, "pack_format field must be present to rewrite");
+    fs::write(&entry, &future).unwrap();
+    assert!(cache.load(&key, &g).is_none(), "future pack_format must miss");
+
+    let s = cache.stats();
+    assert_eq!(s.hits, 1);
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.rejected, 2, "both tampered entries count as rejected");
+
+    // The cold path overwrites and the key serves again.
+    cache.store(&key, exec.compiled()).unwrap();
+    assert!(cache.load(&key, &g).is_some());
+    let _ = fs::remove_dir_all(&dir);
+}
+
 /// A hand-built single-record run for merge tests.
 fn run(ns: f64, best_ns: f64, max_bands: usize, banding: Option<Banding>) -> TuneRecords {
     TuneRecords {
@@ -218,7 +317,7 @@ fn run(ns: f64, best_ns: f64, max_bands: usize, banding: Option<Banding>) -> Tun
                 shape: vec![1, 16, 8, 8],
                 threads: 1,
             },
-            sched: StepSched { banding, max_bands },
+            sched: StepSched { banding, max_bands, micro: None },
             ns_per_iter: Some(ns),
         }],
         trials: 4,

@@ -48,15 +48,23 @@ fn add_residual(g: &mut Graph, rng: &mut Rng64, name: String, t: NodeId, skip: N
     g.add(name, Op::Add, inputs).unwrap()
 }
 
-/// Uniform draw over the three layout families.  Channel counts in the
-/// generator are multiples of 4, so every block width here divides every
-/// channel count and any stage can host any layout.
-fn rand_layout(rng: &mut Rng64) -> Layout {
-    match rng.range_usize(0, 2) {
-        0 => Layout::Nchw,
-        1 => Layout::Nhwc,
-        _ => Layout::Nchwc([2usize, 4][rng.range_usize(0, 1)]),
+/// Channel palette: deliberately ragged.  4 and 8 host every block
+/// width; 6 only blocks by 2; 5 blocks by nothing — so conv reduction
+/// spans (`c·r·s`) and output-channel counts routinely land off the
+/// register tile (k-tail, n-tail) and off the NCHW{c} block widths.
+const CHANNELS: [usize; 4] = [4, 5, 6, 8];
+
+/// Draw a layout a stage with `c` running channels can host: the
+/// unblocked families always, a channel-blocked NCHW{c} only when the
+/// block width divides `c` (ragged counts fall back to NCHW/NHWC).
+fn rand_layout_for(rng: &mut Rng64, c: usize) -> Layout {
+    let mut choices = vec![Layout::Nchw, Layout::Nhwc];
+    for cb in [2usize, 4] {
+        if c % cb == 0 {
+            choices.push(Layout::Nchwc(cb));
+        }
     }
+    choices[rng.range_usize(0, choices.len() - 1)]
 }
 
 /// A random conv weight constant in `layout`'s weight format (OIHW /
@@ -88,14 +96,14 @@ fn random_graph(rng: &mut Rng64) -> Graph {
     let mut g = Graph::new();
     let batch = rng.range_usize(1, 2);
     let mut image = rng.range_usize(5, 9);
-    let mut c = [4usize, 8][rng.range_usize(0, 1)];
-    let mut layout = rand_layout(rng);
+    let mut c = CHANNELS[rng.range_usize(0, CHANNELS.len() - 1)];
+    let mut layout = rand_layout_for(rng, c);
     let x = g.add_input("x", TensorTy::f32(shape_of(batch, c, image, image, layout)));
     let mut cur = x;
     for i in 0..rng.range_usize(1, 3) {
         // Mixed-layout coverage: hop to a fresh layout through a cast node
         // whenever the draw disagrees with the running tensor's layout.
-        let next = rand_layout(rng);
+        let next = rand_layout_for(rng, c);
         if next != layout {
             cur = g
                 .add(
@@ -110,8 +118,17 @@ fn random_graph(rng: &mut Rng64) -> Graph {
         let pad = kernel / 2;
         let stride = rng.range_usize(1, 2);
         // Half the stages keep the channel count so residual links stay
-        // shape-compatible.
-        let cout = if rng.bool() { c } else { [4usize, 8][rng.range_usize(0, 1)] };
+        // shape-compatible; otherwise draw from the palette, filtered to
+        // the block width when this stage is channel-blocked (the ragged
+        // counts keep flowing through the unblocked layouts).
+        let cout = if rng.bool() {
+            c
+        } else {
+            let cb = if let Layout::Nchwc(cb) = layout { cb } else { 1 };
+            let pool: Vec<usize> =
+                CHANNELS.iter().copied().filter(|&cc| cc % cb == 0).collect();
+            pool[rng.range_usize(0, pool.len() - 1)]
+        };
         let wid = add_weight(&mut g, rng, format!("c{i}.w"), cout, c, kernel, layout);
         let conv = g
             .add(
@@ -294,6 +311,7 @@ fn fuzz_overridden_schedule_matches_oracle() {
         default_sched: StepSched {
             banding: Some(Banding::Dynamic { chunk: 1 }),
             max_bands: 0,
+            micro: None,
         },
         ..ScheduleOverrides::default()
     };
@@ -327,6 +345,73 @@ fn fuzz_overridden_schedule_matches_oracle() {
     assert!(
         spill_steps >= 1,
         "override pass never exercised the spill-accumulator path"
+    );
+}
+
+/// The tentpole's oracle gate: the full 200-seed corpus again, with the
+/// register-blocked int8 microkernels FORCED onto every anchor
+/// (`default_sched.micro = Some(..)`), at threads 1 / 2 / 4.  Three tile
+/// geometries are cycled across the corpus — the shipped default, a tiny
+/// tile where every loop is tail, and an oversized tile that clamps on
+/// every layer — so the ragged channel palette exercises k-tail, m-tail,
+/// and n-tail in every layout, fused chains included.  Microkernels are
+/// a pure reassociation of i32 adds, so the bit-for-bit oracle equality
+/// must hold on every seed; on x86_64 hosts the dispatched ISA is
+/// whatever the machine (or `TVMQ_MICRO_ISA`) provides, so CI runs this
+/// under both the SIMD and the scalar paths.
+#[test]
+fn fuzz_forced_microkernel_matches_oracle() {
+    use tvmq::graph::compile::{ScheduleOverrides, StepSched};
+    use tvmq::graph::MicroKernel;
+
+    let tiles = [
+        MicroKernel { mr: 4, nr: 8, ku: 8 },
+        MicroKernel { mr: 1, nr: 2, ku: 3 },
+        MicroKernel { mr: 7, nr: 16, ku: 32 },
+    ];
+    let mut packed_steps = 0usize;
+    for case in 0..CASES {
+        let mut rng = Rng64::seed_from_u64(BASE_SEED ^ case);
+        let g = random_graph(&mut rng);
+        let g = maybe_quantize(&g, &mut rng);
+        let x = calibrate_ir(&g, rng.next_u64());
+        let want = evaluate(&g, &x)
+            .unwrap_or_else(|e| panic!("case {case}: oracle failed: {e}"));
+        let ovr = ScheduleOverrides {
+            default_sched: StepSched {
+                banding: None,
+                max_bands: 0,
+                micro: Some(tiles[case as usize % tiles.len()]),
+            },
+            ..ScheduleOverrides::default()
+        };
+        for t in [1usize, 2, 4] {
+            let exec = ArenaExec::with_schedule(&g, true, t, &ovr)
+                .unwrap_or_else(|e| panic!("case {case} t{t}: micro compile failed: {e}"));
+            if t == 1 {
+                packed_steps += exec
+                    .compiled()
+                    .steps
+                    .iter()
+                    .filter(|s| s.packed.is_some())
+                    .count();
+            }
+            let mut out = TensorData::zeros(want.dtype, want.shape.clone());
+            exec.run_into(&x, &mut out)
+                .unwrap_or_else(|e| panic!("case {case} t{t}: micro run failed: {e}"));
+            assert_eq!(
+                want, out,
+                "case {case} t{t}: forced microkernel diverged from the oracle"
+            );
+        }
+    }
+    // Only quantized anchors have an int8 const weight panel to pre-pack
+    // (half the corpus, random anchor subsets) — but the forced override
+    // must have actually reached the microkernels, not compiled around
+    // them.
+    assert!(
+        packed_steps >= 50,
+        "forced-micro corpus pre-packed only {packed_steps} weight panels"
     );
 }
 

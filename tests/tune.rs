@@ -63,6 +63,38 @@ fn same_seed_and_budget_yield_the_same_best_config() {
     assert_eq!(a.trials[0].plan.describe(), SchedulePlan::default_for(&a.space.classes).describe());
 }
 
+/// The register-tile knob is a live search dimension exactly where it can
+/// matter: int8-weight anchors.  fp32 anchors never sample it (it would
+/// be inert — no panel to pre-pack), quantized anchors do, and a sampled
+/// plan carrying a tile survives `overrides()` into the compiler.
+#[test]
+fn knob_space_exposes_micro_dimension_only_for_int8_anchors() {
+    let g = build_resnet_ir(1, 8, 7).unwrap();
+    let qg = quantized(&g);
+    let fp = KnobSpace::for_graph(&g, 2).unwrap();
+    assert!(
+        fp.micro_live.iter().all(|&live| !live),
+        "fp32 anchors must not expose the register-tile knob"
+    );
+    let q = KnobSpace::for_graph(&qg, 2).unwrap();
+    assert!(
+        q.micro_live.iter().any(|&live| live),
+        "quantized anchors must expose the register-tile knob"
+    );
+    let mut rng = Rng64::seed_from_u64(7);
+    let plan = (0..64)
+        .map(|_| q.sample(&mut rng))
+        .find(|p| p.uses_micro())
+        .expect("sampling the quantized space never chose a register tile");
+    let ovr = plan.overrides(2);
+    let tiled = ovr
+        .per_class
+        .values()
+        .chain(ovr.per_shape.values())
+        .any(|s| s.micro.is_some());
+    assert!(tiled, "a sampled register tile must survive into ScheduleOverrides");
+}
+
 // ---------------------------------------------------------------------------
 // Oracle rejection
 // ---------------------------------------------------------------------------
@@ -285,7 +317,7 @@ fn every_banding_override_is_bit_exact_on_a_residual_net() {
         ] {
             for max_bands in [0usize, 1, 3] {
                 let ovr = ScheduleOverrides {
-                    default_sched: StepSched { banding: Some(banding), max_bands },
+                    default_sched: StepSched { banding: Some(banding), max_bands, micro: None },
                     ..ScheduleOverrides::default()
                 };
                 let exec = ArenaExec::with_schedule(graph, true, 4, &ovr).unwrap();
