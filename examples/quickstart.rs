@@ -88,10 +88,18 @@ fn main() -> Result<()> {
         served as f64 / wall,
         stats.mean_batch()
     );
-    println!(
-        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms  (batches={}, padded slots={})",
-        lat.p50_ms, lat.p95_ms, lat.p99_ms, stats.batches, stats.padded_slots
-    );
+    match &lat.stats {
+        Some(s) => println!(
+            "latency p50/p95/p99: {:.2}/{:.2}/{:.2} ms over {} sample(s)  \
+             (batches={}, padded slots={})",
+            s.p50_ms, s.p95_ms, s.p99_ms, lat.samples_seen,
+            stats.batches, stats.padded_slots
+        ),
+        None => println!(
+            "latency: no settled requests  (batches={}, padded slots={})",
+            stats.batches, stats.padded_slots
+        ),
+    }
     println!("quickstart OK");
     Ok(())
 }

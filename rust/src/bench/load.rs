@@ -34,6 +34,7 @@ use crate::executor::{EngineKind, EngineSpec, NativeArenaFactory};
 use crate::graph::evaluate;
 use crate::metrics::{fmt_ms, EpochStats, Table};
 use crate::runtime::{synthetic_images, TensorData};
+use crate::telem::{DriftConfig, GaugeId, HistId, Telemetry};
 use crate::util::rng::Rng64;
 
 /// Distinct request images per run; oracle logits are precomputed once
@@ -101,11 +102,20 @@ pub struct LoadRow {
     pub other_errors: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
-    pub p50_ms: f64,
-    pub p99_ms: f64,
-    pub p999_ms: f64,
+    /// Reply latency percentiles — `None` when the trace served nothing
+    /// (e.g. everything shed), never silently 0.
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+    pub p999_ms: Option<f64>,
     pub shed_rate: f64,
     pub mean_batch: f64,
+    /// Peak admission-queue depth observed by the registry during this
+    /// trace (the `queue_depth_max` gauge, reset between traces).
+    pub queue_depth_max: u64,
+    /// Queue-wait percentiles from the registry's `queue_wait_us`
+    /// histogram delta over this trace — `None` when no job was gathered.
+    pub queue_wait_p50_ms: Option<f64>,
+    pub queue_wait_p99_ms: Option<f64>,
 }
 
 /// Cumulative arrival offsets (seconds) with exponential inter-arrivals.
@@ -254,7 +264,14 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
         workers: opts.workers,
         queue_bound: opts.queue_bound,
     };
-    let server = Arc::new(InferenceServer::start_with(factory, cfg)?);
+    // Telemetry spine: queue depth/wait come from the registry, not from
+    // client-side clocks — the same cells `tvmq serve` exports.
+    let telem = Telemetry::new(DriftConfig::default());
+    let server = Arc::new(InferenceServer::start_with_telemetry(
+        factory,
+        cfg,
+        Some(Arc::clone(&telem)),
+    )?);
 
     let mut t = Table::new(
         format!(
@@ -263,7 +280,8 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
             opts.requests, opts.rate_rps, opts.workers, opts.queue_bound, buckets, opts.image
         ),
         &["Trace", "Served", "Shed", "Shed %", "Req/s", "p50 (ms)", "p99 (ms)",
-          "p999 (ms)", "Mean batch", "Errors"],
+          "p999 (ms)", "Mean batch", "Q depth max", "Q wait p50 (ms)",
+          "Q wait p99 (ms)", "Errors"],
     );
 
     let traces: [(&str, Vec<f64>); 2] = [
@@ -273,8 +291,14 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
     let mut rows = Vec::with_capacity(traces.len());
     for (name, offsets) in traces {
         let before = server.stats();
+        telem.registry.gauge_reset(GaugeId::QueueDepthMax);
+        let wait_before = telem.registry.hist(HistId::QueueWaitUs);
         let outcome = run_trace(&server, &images, &oracle, &offsets)?;
         let after = server.stats();
+        let queue_depth_max = telem.registry.gauge(GaugeId::QueueDepthMax);
+        let wait = telem.registry.hist(HistId::QueueWaitUs).delta(&wait_before);
+        let wait_ms = |q: f64| wait.quantile(q).map(|us| us as f64 / 1e3);
+        let (qw50, qw99) = (wait_ms(0.50), wait_ms(0.99));
         if outcome.mismatches > 0 {
             bail!(
                 "{name}: {} replies were NOT bit-identical to the interpreter oracle",
@@ -288,6 +312,8 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
                 outcome.timeouts, outcome.worker_died, outcome.other_errors
             );
         }
+        // A fully-shed trace has no latency samples; keep that typed
+        // rather than reporting zeros.
         let lat = EpochStats::from_samples(&outcome.latencies_ms, 0);
         // Mean gathered batch over THIS trace's batches only.
         let d_req = after.requests.saturating_sub(before.requests);
@@ -296,16 +322,21 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
             if d_batches == 0 { 0.0 } else { d_req as f64 / d_batches as f64 };
         let shed_rate = outcome.shed as f64 / offsets.len().max(1) as f64;
         let throughput = outcome.served as f64 / outcome.wall_s.max(1e-9);
+        let dash = || "-".to_string();
+        let opt_ms = |v: Option<f64>| v.map(fmt_ms).unwrap_or_else(dash);
         t.row(vec![
             name.into(),
             outcome.served.to_string(),
             outcome.shed.to_string(),
             format!("{:.1}%", 100.0 * shed_rate),
             format!("{throughput:.1}"),
-            fmt_ms(lat.p50_ms),
-            fmt_ms(lat.p99_ms),
-            fmt_ms(lat.p999_ms),
+            opt_ms(lat.map(|s| s.p50_ms)),
+            opt_ms(lat.map(|s| s.p99_ms)),
+            opt_ms(lat.map(|s| s.p999_ms)),
             format!("{mean_batch:.2}"),
+            queue_depth_max.to_string(),
+            opt_ms(qw50),
+            opt_ms(qw99),
             (outcome.timeouts + outcome.worker_died + outcome.other_errors).to_string(),
         ]);
         rows.push(LoadRow {
@@ -318,11 +349,14 @@ pub fn load_bench(opts: &LoadOpts) -> Result<(Table, Vec<LoadRow>)> {
             other_errors: outcome.other_errors,
             wall_s: outcome.wall_s,
             throughput_rps: throughput,
-            p50_ms: lat.p50_ms,
-            p99_ms: lat.p99_ms,
-            p999_ms: lat.p999_ms,
+            p50_ms: lat.map(|s| s.p50_ms),
+            p99_ms: lat.map(|s| s.p99_ms),
+            p999_ms: lat.map(|s| s.p999_ms),
             shed_rate,
             mean_batch,
+            queue_depth_max,
+            queue_wait_p50_ms: qw50,
+            queue_wait_p99_ms: qw99,
         });
     }
 

@@ -485,6 +485,28 @@ pub struct ArenaRow {
     /// (1.0 = at the model's bound) — the machine-readable
     /// compute-bound vs memory-bound contrast.
     pub roofline_frac: f64,
+    /// Per-step attribution of this row's engine (a few profiled
+    /// inferences after the timed measurement, so the timing itself is
+    /// unaffected): ns per fused step keyed by op/shape/layout/precision/
+    /// ISA/micro — the `bench-arena --json` per-step breakdown.  Empty
+    /// for interpreter rows.
+    pub step_rows: Vec<crate::telem::ProfileRow>,
+}
+
+/// Profile one engine's steps: attach a fresh sink, run a few sampled
+/// inferences, detach.  Runs *after* the timed measurement so the row's
+/// reported latency never includes profiling clocks.
+fn profile_steps(
+    exec: &mut crate::executor::ArenaExec,
+    x: &TensorData,
+) -> Result<Vec<crate::telem::ProfileRow>> {
+    let sink = crate::telem::ProfileSink::new();
+    exec.set_profiling(1, &sink);
+    for _ in 0..3 {
+        exec.run(x)?;
+    }
+    exec.set_profiling(0, &sink);
+    Ok(sink.rows())
 }
 
 /// The register-tile token a compiled program actually runs under: the
@@ -651,6 +673,7 @@ pub fn arena_ablation(
                     fused_chains: 0, arena_bytes: 0,
                     compile_ms: 0.0, compile_cached_ms: 0.0,
                     micro: "-".into(), gibs, int8_ops_per_s: ops, roofline_frac: rf,
+                    step_rows: vec![],
                 });
 
                 let qi = measure(opts.epochs, opts.warmup, || evaluate(&qg, &x).map(|_| ()))?;
@@ -668,6 +691,7 @@ pub fn arena_ablation(
                     fused_chains: 0, arena_bytes: 0,
                     compile_ms: 0.0, compile_cached_ms: 0.0,
                     micro: "-".into(), gibs, int8_ops_per_s: ops, roofline_frac: rf,
+                    step_rows: vec![],
                 });
             }
 
@@ -678,12 +702,14 @@ pub fn arena_ablation(
                         if fuse { "fused" } else { "unfused" }
                     );
                     let t0 = std::time::Instant::now();
-                    let exec = ArenaExec::with_schedule(graph, fuse, threads, &default_ovr)?;
+                    let mut exec =
+                        ArenaExec::with_schedule(graph, fuse, threads, &default_ovr)?;
                     let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
                     let compile_cached_ms =
                         cached_build_ms(&exec, graph, &default_ovr, fuse, threads)?;
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
+                    let step_rows = profile_steps(&mut exec, &x)?;
                     let cg = exec.compiled();
                     let micro = micro_summary(cg);
                     t.row(vec![
@@ -705,6 +731,7 @@ pub fn arena_ablation(
                         arena_bytes: cg.arena_bytes,
                         compile_ms, compile_cached_ms,
                         micro, gibs, int8_ops_per_s: ops, roofline_frac: rf,
+                        step_rows,
                     });
                 }
 
@@ -743,12 +770,13 @@ pub fn arena_ablation(
                         }
                     };
                     let t0 = std::time::Instant::now();
-                    let exec = ArenaExec::with_schedule(graph, fuse, threads, &ovr)?;
+                    let mut exec = ArenaExec::with_schedule(graph, fuse, threads, &ovr)?;
                     let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
                     let compile_cached_ms =
                         cached_build_ms(&exec, graph, &ovr, fuse, threads)?;
                     let stats =
                         measure(opts.epochs, opts.warmup, || exec.run(&x).map(|_| ()))?;
+                    let step_rows = profile_steps(&mut exec, &x)?;
                     let cg = exec.compiled();
                     let micro = micro_summary(cg);
                     let label = format!("arena {precision} (tuned)");
@@ -771,6 +799,7 @@ pub fn arena_ablation(
                         arena_bytes: cg.arena_bytes,
                         compile_ms, compile_cached_ms,
                         micro, gibs, int8_ops_per_s: ops, roofline_frac: rf,
+                        step_rows,
                     });
                 }
             }
@@ -852,10 +881,14 @@ pub fn serve_bench(
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     let lat = stats.latency_stats();
+    let (p50, p95, p99) = match &lat.stats {
+        Some(s) => (fmt_ms(s.p50_ms), fmt_ms(s.p95_ms), fmt_ms(s.p99_ms)),
+        None => ("-".into(), "-".into(), "-".into()),
+    };
     t.row(vec![
         "serve (arena buckets)".into(),
         format!("{:.1}", total as f64 / wall),
-        fmt_ms(lat.p50_ms), fmt_ms(lat.p95_ms), fmt_ms(lat.p99_ms),
+        p50, p95, p99,
         format!("{:.2}", stats.mean_batch()),
         stats.padded_slots.to_string(),
         errors.to_string(),
@@ -884,7 +917,8 @@ pub fn serve_bench(
             f(x)?;
             samples.push(t0.elapsed().as_secs_f64() * 1e3);
         }
-        let st = EpochStats::from_samples(&samples, 0);
+        let st = EpochStats::from_samples(&samples, 0)
+            .ok_or_else(|| anyhow::anyhow!("direct_row: no samples"))?;
         let wall_ms: f64 = samples.iter().sum();
         t.row(vec![
             label.into(),

@@ -638,6 +638,19 @@ pub struct CacheStats {
     pub rejected: u64,
 }
 
+impl CacheStats {
+    /// Fraction of lookups that hit: `hits / (hits + misses)`, `0.0`
+    /// before any lookup has happened (a cold cache is honestly 0%, not
+    /// NaN).  Rejects are already counted inside `misses`.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / lookups as f64
+    }
+}
+
 /// A content-addressed compile cache rooted at one directory.  Lookups
 /// and stores are thread-safe; the factory shares one handle across the
 /// serving tier's worker threads.
@@ -762,6 +775,7 @@ impl CompileCache {
             ("misses", Json::num(s.misses as f64)),
             ("stores", Json::num(s.stores as f64)),
             ("rejected", Json::num(s.rejected as f64)),
+            ("hit_rate", Json::num(s.hit_rate())),
         ])
     }
 

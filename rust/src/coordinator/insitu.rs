@@ -39,15 +39,17 @@
 //! bytes.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cache::{CacheKey, CompileCache};
 use crate::executor::{ArenaExec, EngineFactory, Executor, NativeArenaFactory};
 use crate::graph::{calibrate_ir, compile_graph_with};
+use crate::telem::{CounterId, Telemetry};
 use crate::tune::{tune_graph, TuneOptions};
 
 /// A published engine replacement for one serving bucket.
@@ -163,7 +165,7 @@ pub fn spawn_insitu_tuner(
         .name("tvmq-insitu-tuner".into())
         .spawn(move || {
             for b in EngineFactory::buckets(&*factory) {
-                if let Err(e) = tune_one_bucket(&factory, &slot, &opts, cache.as_deref(), b) {
+                if let Err(e) = retune_bucket(&factory, &slot, &opts, cache.as_deref(), b) {
                     eprintln!("tvmq: insitu: bucket {b}: tuning failed (engine unchanged): {e:#}");
                 }
             }
@@ -171,13 +173,19 @@ pub fn spawn_insitu_tuner(
         .expect("spawn insitu tuner thread")
 }
 
-fn tune_one_bucket(
+/// Run one oracle-gated tuning pass over `bucket`'s live graph and
+/// publish a hot-swap upgrade when (and only when) the winner measured
+/// strictly faster than the default schedule.  Returns whether an
+/// upgrade was published.  Shared by the one-shot startup tuner
+/// ([`spawn_insitu_tuner`]) and the drift-driven re-tuner
+/// ([`spawn_drift_retuner`]).
+pub fn retune_bucket(
     factory: &NativeArenaFactory,
     slot: &UpgradeSlot,
     opts: &TuneOptions,
     cache: Option<&CompileCache>,
     bucket: usize,
-) -> Result<()> {
+) -> Result<bool> {
     let g = factory.graph(bucket)?;
     let x = calibrate_ir(&g, opts.seed);
     let mut opts = *opts;
@@ -189,7 +197,7 @@ fn tune_one_bucket(
              ({:.0} ns/iter) — no swap",
             outcome.default_ns
         );
-        return Ok(());
+        return Ok(false);
     }
     let fuse = outcome.best.plan.fuse;
     let ovr = outcome.best.plan.overrides(opts.threads);
@@ -222,7 +230,78 @@ fn tune_one_bucket(
                 as Box<dyn Executor>)
         }),
     );
-    Ok(())
+    Ok(true)
+}
+
+/// Continuous re-tuning, driven by serving-latency drift: a background
+/// thread that waits for the telemetry spine's [`Telemetry`] drift
+/// detector to arm a re-tune request (sustained latency regression vs
+/// the frozen baseline window) and then runs [`retune_bucket`] passes.
+///
+/// Bucket order comes from live traffic: the shape recorder's tasks,
+/// hottest first — so the re-tune budget lands on the shapes production
+/// actually serves (the "per-shape tuning task" feed).  Buckets never
+/// observed (yet) fall back to the factory's full bucket list.  Each
+/// completed pass bumps the `retune_passes` counter; requests arriving
+/// *while* a pass runs coalesce into one follow-up pass (the detector
+/// re-baselines on trigger, so a fixed regression does not re-fire).
+///
+/// The thread exits when `stop` is raised.  It polls at a coarse
+/// interval — drift is a minutes-scale signal, not a hot path.
+pub fn spawn_drift_retuner(
+    factory: Arc<NativeArenaFactory>,
+    slot: Arc<UpgradeSlot>,
+    opts: TuneOptions,
+    cache: Option<Arc<CompileCache>>,
+    telem: Arc<Telemetry>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("tvmq-drift-retuner".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if !telem.take_retune_request() {
+                    std::thread::sleep(Duration::from_millis(50));
+                    continue;
+                }
+                let buckets = retune_order(&factory, &telem);
+                eprintln!(
+                    "tvmq: insitu: latency drift detected — re-tuning buckets {buckets:?}"
+                );
+                for b in buckets {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match retune_bucket(&factory, &slot, &opts, cache.as_deref(), b) {
+                        Ok(_) => telem.registry.count(CounterId::RetunePasses, 1),
+                        Err(e) => eprintln!(
+                            "tvmq: insitu: bucket {b}: drift re-tune failed \
+                             (engine unchanged): {e:#}"
+                        ),
+                    }
+                }
+            }
+        })
+        .expect("spawn drift retuner thread")
+}
+
+/// Buckets to re-tune, hottest-traffic first: the shape recorder's
+/// observed buckets (by request count) filtered to buckets the factory
+/// can actually build, then any factory buckets never seen in traffic.
+fn retune_order(factory: &NativeArenaFactory, telem: &Telemetry) -> Vec<usize> {
+    let known = EngineFactory::buckets(factory);
+    let mut order: Vec<usize> = Vec::with_capacity(known.len());
+    for task in telem.shapes.tasks() {
+        if known.contains(&task.batch) && !order.contains(&task.batch) {
+            order.push(task.batch);
+        }
+    }
+    for b in known {
+        if !order.contains(&b) {
+            order.push(b);
+        }
+    }
+    order
 }
 
 #[cfg(test)]

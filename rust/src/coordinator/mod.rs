@@ -60,6 +60,7 @@ use crate::executor::{ArtifactFactory, EngineFactory, EngineSpec, Executor};
 use crate::manifest::Manifest;
 use crate::metrics::EpochStats;
 use crate::runtime::TensorData;
+use crate::telem::{CounterId, GaugeId, HistId, Telemetry};
 use crate::util::rng::Rng64;
 
 use queue::{q_pop, q_push, q_shutdown, PopTimed, PushOutcome, StdQueue};
@@ -333,9 +334,29 @@ impl LatencyReservoir {
         &self.samples
     }
 
-    pub fn stats(&self) -> EpochStats {
-        EpochStats::from_samples(&self.samples, 0)
+    pub fn stats(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            samples_seen: self.seen,
+            sampled: self.seen > self.samples.len() as u64,
+            stats: EpochStats::from_samples(&self.samples, 0),
+        }
     }
+}
+
+/// Percentiles derived from a [`LatencyReservoir`], with the honesty
+/// bits attached: once the reservoir overflows its cap the percentiles
+/// come from a uniform *sample* (Algorithm R), not the full population —
+/// `sampled` says so, and `samples_seen` is the true observation count.
+/// `stats` is `None` when nothing was observed at all (an idle server
+/// reports "no data", never all-zero latencies).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySnapshot {
+    /// Total observations ever recorded (not the resident sample count).
+    pub samples_seen: u64,
+    /// True once percentiles are estimated from a reservoir sample
+    /// rather than computed exactly over every observation.
+    pub sampled: bool,
+    pub stats: Option<EpochStats>,
 }
 
 /// Aggregate serving statistics.
@@ -360,7 +381,7 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
-    pub fn latency_stats(&self) -> EpochStats {
+    pub fn latency_stats(&self) -> LatencySnapshot {
         self.latencies.stats()
     }
 
@@ -391,6 +412,9 @@ pub struct InferenceServer {
     pub buckets: Vec<usize>,
     queue_bound: usize,
     workers: usize,
+    /// Live observability spine (None = telemetry off; every publish
+    /// point is skipped with one branch).
+    telem: Option<Arc<Telemetry>>,
 }
 
 /// Per-worker exit guard (runs during unwind too): decrements the live
@@ -436,6 +460,22 @@ impl InferenceServer {
     where
         F: EngineFactory + Send + Sync + 'static,
     {
+        Self::start_with_telemetry(factory, cfg, None)
+    }
+
+    /// [`InferenceServer::start_with`] plus a live [`Telemetry`] spine:
+    /// workers publish queue depth/wait, gather time, batch and latency
+    /// histograms, engine generation, and shed/error counters into the
+    /// registry as they serve.  Every publish is lock-free atomics on
+    /// pre-registered cells, so the request path stays zero-alloc.
+    pub fn start_with_telemetry<F>(
+        factory: F,
+        cfg: ServeConfig,
+        telem: Option<Arc<Telemetry>>,
+    ) -> Result<Self>
+    where
+        F: EngineFactory + Send + Sync + 'static,
+    {
         let mut buckets = factory.buckets();
         buckets.sort_unstable();
         buckets.dedup();
@@ -459,6 +499,7 @@ impl InferenceServer {
             let worker_queue = Arc::clone(&queue);
             let worker_stats = Arc::clone(&stats);
             let worker_buckets = buckets.clone();
+            let worker_telem = telem.clone();
             let guard = WorkerGuard {
                 down: Arc::clone(&down),
                 alive: Arc::clone(&alive),
@@ -475,6 +516,7 @@ impl InferenceServer {
                         worker_buckets,
                         worker_queue,
                         worker_stats,
+                        worker_telem,
                         ready_tx,
                     )
                 }) {
@@ -519,7 +561,10 @@ impl InferenceServer {
             }
             return Err(e);
         }
-        Ok(Self { queue, stats, handles, down, alive, buckets, queue_bound, workers })
+        if let Some(t) = &telem {
+            t.registry.gauge_set(GaugeId::Workers, workers as u64);
+        }
+        Ok(Self { queue, stats, handles, down, alive, buckets, queue_bound, workers, telem })
     }
 
     fn submit_sink(&self, image: TensorData, reply: ReplySink) -> Result<()> {
@@ -529,6 +574,9 @@ impl InferenceServer {
         match q_push(&*self.queue, Job { image, enqueued: Instant::now(), reply }) {
             PushOutcome::Accepted => Ok(()),
             PushOutcome::Shed { depth } => {
+                if let Some(t) = &self.telem {
+                    t.registry.count(CounterId::Shed, 1);
+                }
                 Err(anyhow::Error::new(Rejected::Overloaded { depth, bound: self.queue_bound }))
             }
             PushOutcome::Closed => Err(anyhow::Error::new(Rejected::Down)),
@@ -677,6 +725,7 @@ fn worker_loop<F: EngineFactory>(
     buckets: Vec<usize>,
     queue: Arc<StdQueue<Job>>,
     stats: Arc<Mutex<ServerStats>>,
+    telem: Option<Arc<Telemetry>>,
     ready: std::sync::mpsc::Sender<Result<()>>,
 ) -> Result<()> {
     set_worker_id(Some(worker));
@@ -714,20 +763,38 @@ fn worker_loop<F: EngineFactory>(
             Some(j) => j,
             None => return Ok(()),
         };
+        let gather_t0 = Instant::now();
         let mut jobs = vec![first];
         // Gather until the batch fills or the timeout expires.  The
         // deadline-bounded pop is production-only (timing is outside the
         // model checker's scope); shutdown mid-gather just ends the
         // gather — the batch in hand is still served, and the next
         // `q_pop` drains or exits.
-        let deadline = Instant::now() + cfg.batch_timeout;
+        let deadline = gather_t0 + cfg.batch_timeout;
         while jobs.len() < max_batch {
             match queue.pop_until(deadline) {
                 PopTimed::Got(j) => jobs.push(j),
                 PopTimed::TimedOut | PopTimed::Closed => break,
             }
         }
-        process_batch(&mut engines, &buckets, jobs, &stats);
+        if let Some(t) = &telem {
+            // Publish the gather's shape before serving: time spent
+            // filling the batch, per-job time-in-queue, and the queue
+            // depth left behind (its high-water mark survives resets of
+            // the instantaneous gauge).  All lock-free atomics.
+            t.registry.record(HistId::GatherUs, gather_t0.elapsed().as_micros() as u64);
+            for j in &jobs {
+                t.registry.record(HistId::QueueWaitUs, j.enqueued.elapsed().as_micros() as u64);
+            }
+            let (_, depth) = queue.shed_and_depth();
+            t.registry.gauge_set(GaugeId::QueueDepth, depth as u64);
+            t.registry.gauge_max(GaugeId::QueueDepthMax, depth as u64);
+            t.registry.record(HistId::QueueDepth, depth as u64);
+            if let Some(gen) = engines.iter().map(|e| e.generation).max() {
+                t.registry.gauge_max(GaugeId::EngineGeneration, gen);
+            }
+        }
+        process_batch(&mut engines, &buckets, jobs, &stats, telem.as_deref());
     }
 }
 
@@ -821,9 +888,17 @@ fn serve_batch(eng: &mut BucketEngine, jobs: &[Job]) -> Result<()> {
 
 /// Fail every job in the batch with the same message: count the errors
 /// in one short critical section, send the replies outside the lock.
-fn fail_batch(jobs: Vec<Job>, stats: &Arc<Mutex<ServerStats>>, e: anyhow::Error) {
+fn fail_batch(
+    jobs: Vec<Job>,
+    stats: &Arc<Mutex<ServerStats>>,
+    telem: Option<&Telemetry>,
+    e: anyhow::Error,
+) {
     let msg = format!("{e}");
     lock_stats(stats).errors += jobs.len() as u64;
+    if let Some(t) = telem {
+        t.registry.count(CounterId::Errors, jobs.len() as u64);
+    }
     for job in jobs {
         job.reply.send_err(anyhow!("batch failed: {msg}"));
     }
@@ -869,6 +944,7 @@ fn process_batch(
     buckets: &[usize],
     jobs: Vec<Job>,
     stats: &Arc<Mutex<ServerStats>>,
+    telem: Option<&Telemetry>,
 ) {
     if jobs.is_empty() {
         return;
@@ -881,6 +957,9 @@ fn process_batch(
         jobs.into_iter().partition(|j| image_fits(row_desc, &j.image));
     if !invalid.is_empty() {
         lock_stats(stats).errors += invalid.len() as u64;
+        if let Some(t) = telem {
+            t.registry.count(CounterId::Errors, invalid.len() as u64);
+        }
         for job in invalid {
             job.reply.send_err(anyhow!(
                 "request image {:?}/{:?} does not fit engine input {:?}/{:?}",
@@ -897,14 +976,16 @@ fn process_batch(
     }
     let bucket = match pick_bucket(buckets, n) {
         Ok(b) => b,
-        Err(e) => return fail_batch(valid, stats, e),
+        Err(e) => return fail_batch(valid, stats, telem, e),
     };
     let eng = match engines.iter_mut().find(|e| e.batch == bucket) {
         Some(e) => e,
-        None => return fail_batch(valid, stats, anyhow!("no engine for bucket {bucket}")),
+        None => {
+            return fail_batch(valid, stats, telem, anyhow!("no engine for bucket {bucket}"))
+        }
     };
     if let Err(e) = serve_batch_contained(eng, &valid) {
-        return fail_batch(valid, stats, e);
+        return fail_batch(valid, stats, telem, e);
     }
 
     let out_row = eng.out.byte_len() / eng.batch;
@@ -925,6 +1006,21 @@ fn process_batch(
         s.padded_slots += (bucket - n) as u64;
         for l in &latencies {
             s.latencies.push(l.as_secs_f64() * 1e3);
+        }
+    }
+    if let Some(t) = telem {
+        // Registry publishes happen outside the stats lock — they are
+        // lock-free atomics and the drift detector has its own mutex.
+        t.registry.count(CounterId::Requests, n as u64);
+        t.registry.count(CounterId::Batches, 1);
+        t.registry.record(HistId::BatchSize, n as u64);
+        for l in &latencies {
+            t.observe_latency_us(l.as_micros() as u64);
+        }
+        if let Some(row) = valid.first().map(|j| &j.image.shape) {
+            // Row shape minus the leading batch-1 dim, keyed by the
+            // bucket that served it — the per-shape tuning-task feed.
+            t.shapes.record(bucket, row.get(1..).unwrap_or(&[]));
         }
     }
 
@@ -1038,10 +1134,24 @@ mod tests {
         }
         assert_eq!(r.seen(), 100);
         assert_eq!(r.samples().len(), 100);
-        // Exact: every observation still present, so percentiles are true.
-        let stats = r.stats();
+        // Exact: every observation still present, so percentiles are true
+        // and the snapshot says so.
+        let snap = r.stats();
+        assert_eq!(snap.samples_seen, 100);
+        assert!(!snap.sampled, "below the cap the percentiles are exact");
+        let stats = snap.stats.expect("non-empty reservoir has stats");
         assert_eq!(stats.p50_ms, 50.0);
         assert!((stats.mean_ms - 49.5).abs() < 1e-9);
+    }
+
+    /// An idle server reports "no data", never all-zero latencies.
+    #[test]
+    fn empty_reservoir_snapshot_is_typed_not_zero() {
+        let r = LatencyReservoir::default();
+        let snap = r.stats();
+        assert_eq!(snap.samples_seen, 0);
+        assert!(!snap.sampled);
+        assert!(snap.stats.is_none());
     }
 
     /// A panic on a worker thread while holding the stats lock must not
@@ -1073,6 +1183,9 @@ mod tests {
         }
         assert_eq!(r.seen(), (LATENCY_RESERVOIR_CAP * 3) as u64);
         assert_eq!(r.samples().len(), LATENCY_RESERVOIR_CAP);
+        let snap = r.stats();
+        assert_eq!(snap.samples_seen, (LATENCY_RESERVOIR_CAP * 3) as u64);
+        assert!(snap.sampled, "past the cap the percentiles are estimates");
         // The reservoir must contain late observations too (replacement
         // actually happens), not just the first `cap`.
         let late = r

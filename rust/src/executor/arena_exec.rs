@@ -67,6 +67,7 @@ use crate::graph::ir::{ConstValue, Graph, IrDType, Layout};
 use crate::graph::kernels as gk;
 use crate::quant::QMAX;
 use crate::runtime::{DType, TensorData};
+use crate::telem::{ProfileSink, StepKey, StepProfiler};
 
 fn to_dtype(ir: IrDType) -> DType {
     match ir {
@@ -92,6 +93,9 @@ pub struct ArenaExec {
     name: String,
     batch: usize,
     counters: ExecCounters,
+    /// Sampled per-step attribution ([`ArenaExec::set_profiling`]);
+    /// `None` = profiling off (the default, and the zero-cost path).
+    profiler: Option<StepProfiler>,
 }
 
 impl ArenaExec {
@@ -138,6 +142,7 @@ impl ArenaExec {
             name,
             batch,
             counters: ExecCounters::default(),
+            profiler: None,
         })
     }
 
@@ -181,6 +186,7 @@ impl ArenaExec {
             name,
             batch,
             counters: ExecCounters::default(),
+            profiler: None,
         })
     }
 
@@ -190,6 +196,65 @@ impl ArenaExec {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Enable sampled per-step profiling: every `every`-th inference runs
+    /// with per-step timestamps, attributed into `sink` under keys of
+    /// (op, output shape, layout, precision, ISA, micro tile) — the
+    /// paper's Table-1 attribution axes, for live traffic.  `every == 0`
+    /// disables.  Key construction (and the sink interning) allocates,
+    /// so this happens at build/configure time; the sampled inference
+    /// itself only reads clocks and bumps pre-registered atomics, keeping
+    /// the serve path zero-alloc whether or not a run is sampled.
+    pub fn set_profiling(&mut self, every: u64, sink: &ProfileSink) {
+        if every == 0 {
+            self.profiler = None;
+            return;
+        }
+        let keys: Vec<StepKey> = self.cg.steps.iter().map(|s| self.step_key(s)).collect();
+        self.profiler = Some(StepProfiler::new(every, sink, keys));
+    }
+
+    /// Attribution key of one compiled step (see [`StepKey`]).
+    fn step_key(&self, step: &Step) -> StepKey {
+        let (op, layout) = match &step.op {
+            StepOp::LoadInput => ("load_input", None),
+            StepOp::Conv2d { layout, .. } => ("conv2d", Some(*layout)),
+            StepOp::QConv2d { layout, .. } => ("qconv2d", Some(*layout)),
+            StepOp::Dense { .. } => ("dense", None),
+            StepOp::QDense { .. } => ("qdense", None),
+            StepOp::BiasAdd { layout } => ("bias_add", Some(*layout)),
+            StepOp::Relu => ("relu", None),
+            StepOp::Add => ("add", None),
+            StepOp::MaxPool { layout, .. } => ("max_pool", Some(*layout)),
+            StepOp::GlobalAvgPool { layout } => ("global_avg_pool", Some(*layout)),
+            StepOp::Quantize { .. } => ("quantize", None),
+            StepOp::Dequantize { .. } => ("dequantize", None),
+            StepOp::LayoutTransform { .. } => ("layout_transform", None),
+        };
+        let layout = match layout {
+            None => "-".to_string(),
+            Some(Layout::Nchw) => "nchw".into(),
+            Some(Layout::Nhwc) => "nhwc".into(),
+            Some(Layout::Nchwc(cb)) => format!("nchw{cb}c"),
+        };
+        // Precision = the *compute* precision: quantized anchors and int8
+        // operands are int8 work even when the fused destination is f32.
+        let int8 = matches!(&step.op, StepOp::QConv2d { .. } | StepOp::QDense { .. })
+            || step.srcs.first().map(|s| s.1.dtype == IrDType::S8).unwrap_or(false);
+        let precision = if int8 { "int8" } else { "fp32" };
+        let micro = match step.sched.micro {
+            None => "-".to_string(),
+            Some(m) => format!("m{}n{}k{}", m.mr, m.nr, m.ku),
+        };
+        StepKey {
+            op: op.to_string(),
+            shape: step.dst_ty.shape.clone(),
+            layout,
+            precision: precision.to_string(),
+            isa: format!("{:?}", self.isa).to_ascii_lowercase(),
+            micro,
+        }
     }
 
     /// Execute into a caller-provided output tensor: the zero-allocation
@@ -227,9 +292,25 @@ impl ArenaExec {
         // disjointly.
         let mut arena = self.arena.borrow_mut();
         let base = arena.as_mut_ptr() as *mut u8;
-        for step in &self.cg.steps {
-            self.exec_step(step, base, input)
-                .map_err(|e| e.context(format!("step '{}'", step.name)))?;
+        match &self.profiler {
+            // Sampled run: timestamp every step.  Clock reads and the
+            // profiler's atomic adds allocate nothing, so even sampled
+            // inferences stay zero-heap-alloc (the allocation-counting
+            // test covers the profiler-attached configuration).
+            Some(p) if p.should_sample() => {
+                for (i, step) in self.cg.steps.iter().enumerate() {
+                    let t0 = std::time::Instant::now();
+                    self.exec_step(step, base, input)
+                        .map_err(|e| e.context(format!("step '{}'", step.name)))?;
+                    p.record(i, t0.elapsed().as_nanos() as u64);
+                }
+            }
+            _ => {
+                for step in &self.cg.steps {
+                    self.exec_step(step, base, input)
+                        .map_err(|e| e.context(format!("step '{}'", step.name)))?;
+                }
+            }
         }
         let (off, bytes) = match self.cg.output_slot {
             Slot::Arena { offset, bytes } => (offset, bytes),

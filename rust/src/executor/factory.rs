@@ -215,6 +215,9 @@ pub struct NativeArenaFactory {
     /// In-situ hot-swap mailbox handed to coordinator workers via
     /// [`EngineFactory::upgrade_slot`].
     upgrade_slot: Option<Arc<UpgradeSlot>>,
+    /// Per-step profiling: (sampling period, shared attribution sink).
+    /// Attached to every built engine; `None` = profiling off.
+    profiling: Option<(u64, Arc<crate::telem::ProfileSink>)>,
 }
 
 impl NativeArenaFactory {
@@ -256,6 +259,7 @@ impl NativeArenaFactory {
             template,
             cache: None,
             upgrade_slot: None,
+            profiling: None,
         })
     }
 
@@ -288,6 +292,15 @@ impl NativeArenaFactory {
     /// it at batch boundaries and hot-swap published engines.
     pub fn with_upgrade_slot(mut self, slot: Arc<UpgradeSlot>) -> Self {
         self.upgrade_slot = Some(slot);
+        self
+    }
+
+    /// Enable sampled per-step profiling on every engine this factory
+    /// builds: each built [`ArenaExec`] times every `every`-th inference
+    /// step-by-step into the shared `sink` (see
+    /// [`ArenaExec::set_profiling`]).  `every == 0` leaves profiling off.
+    pub fn with_profiling(mut self, every: u64, sink: Arc<crate::telem::ProfileSink>) -> Self {
+        self.profiling = if every == 0 { None } else { Some((every, sink)) };
         self
     }
 
@@ -349,25 +362,43 @@ impl EngineFactory for NativeArenaFactory {
 
     fn build(&self, batch: usize) -> Result<Box<dyn Executor>> {
         let g = self.graph(batch)?;
-        let Some(cache) = &self.cache else {
-            return Ok(Box::new(match &self.overrides {
+        let mut exec = match &self.cache {
+            None => match &self.overrides {
                 Some(ovr) => ArenaExec::with_schedule(&g, self.fuse, self.threads, ovr)?,
                 None => ArenaExec::with_options(&g, self.fuse, self.threads)?,
-            }));
+            },
+            Some(cache) => {
+                // Warm-start path: key the exact (graph, schedule,
+                // threads) configuration this build would compile, and
+                // skip the compiler entirely on a verified hit.
+                let ovr = self.effective_overrides();
+                let key = CacheKey::of(&g, &ovr, self.fuse, self.threads);
+                match cache.load(&key, &g) {
+                    Some(cg) => {
+                        println!(
+                            "tvmq: cache hit: bucket {batch} ({}) — compile skipped",
+                            key.file_stem()
+                        );
+                        ArenaExec::from_compiled(cg, self.threads)?
+                    }
+                    None => {
+                        println!(
+                            "tvmq: cache miss: bucket {batch} ({}) — compiling",
+                            key.file_stem()
+                        );
+                        let exec = ArenaExec::with_schedule(&g, self.fuse, self.threads, &ovr)?;
+                        if let Err(e) = cache.store(&key, exec.compiled()) {
+                            eprintln!(
+                                "tvmq: cache: failed to store bucket {batch} entry: {e:#}"
+                            );
+                        }
+                        exec
+                    }
+                }
+            }
         };
-        // Warm-start path: key the exact (graph, schedule, threads)
-        // configuration this build would compile, and skip the compiler
-        // entirely on a verified hit.
-        let ovr = self.effective_overrides();
-        let key = CacheKey::of(&g, &ovr, self.fuse, self.threads);
-        if let Some(cg) = cache.load(&key, &g) {
-            println!("tvmq: cache hit: bucket {batch} ({}) — compile skipped", key.file_stem());
-            return Ok(Box::new(ArenaExec::from_compiled(cg, self.threads)?));
-        }
-        println!("tvmq: cache miss: bucket {batch} ({}) — compiling", key.file_stem());
-        let exec = ArenaExec::with_schedule(&g, self.fuse, self.threads, &ovr)?;
-        if let Err(e) = cache.store(&key, exec.compiled()) {
-            eprintln!("tvmq: cache: failed to store bucket {batch} entry: {e:#}");
+        if let Some((every, sink)) = &self.profiling {
+            exec.set_profiling(*every, sink);
         }
         Ok(Box::new(exec))
     }

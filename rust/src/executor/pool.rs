@@ -474,6 +474,10 @@ impl SyncOps for StdSync {
 pub struct WorkerPool {
     shared: Arc<StdSync>,
     workers: Vec<JoinHandle<()>>,
+    /// Kernel fan-outs ever issued through [`WorkerPool::run`] (including
+    /// inline single-band ones) — observability for "did this executor
+    /// actually parallelize", at one relaxed add per dispatch.
+    dispatches: std::sync::atomic::AtomicU64,
 }
 
 impl WorkerPool {
@@ -489,12 +493,17 @@ impl WorkerPool {
                     .expect("spawn arena worker")
             })
             .collect();
-        WorkerPool { shared, workers }
+        WorkerPool { shared, workers, dispatches: std::sync::atomic::AtomicU64::new(0) }
     }
 
     /// Total parallel width: the workers plus the dispatching thread.
     pub fn threads(&self) -> usize {
         self.workers.len() + 1
+    }
+
+    /// Kernel dispatches issued so far (see the field docs).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Run `job(band)` once for every `band < min(bands, threads())`:
@@ -510,6 +519,7 @@ impl WorkerPool {
         if bands == 0 {
             return;
         }
+        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if bands == 1 || self.workers.is_empty() {
             for band in 0..bands.min(self.threads()) {
                 job(band);
@@ -547,6 +557,7 @@ mod tests {
         for h in &hits {
             assert_eq!(h.load(Ordering::Relaxed), 100);
         }
+        assert_eq!(pool.dispatches(), 100, "one dispatch counted per run()");
     }
 
     #[test]

@@ -40,6 +40,10 @@
 //!   graph digests, the versioned on-disk store behind
 //!   `serve --cache-dir` warm starts, and cross-run tune-record merging
 //! - [`metrics`]  — the paper's epoch measurement protocol + table emitters
+//! - [`telem`]    — the allocation-free observability spine: pre-registered
+//!   atomic counters/gauges/log2 histograms, sampled per-step profiling,
+//!   the drift detector behind continuous in-situ re-tuning, serve-path
+//!   shape recording, and versioned JSON metric snapshots
 //! - [`bench`]    — harnesses that regenerate every paper table & figure
 
 // TensorData stores little-endian bytes, and the zero-copy views plus the
@@ -62,6 +66,7 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
+pub mod telem;
 pub mod tune;
 pub mod util;
 

@@ -66,6 +66,24 @@ COMMANDS:
                     background and hot-swaps strictly-better verified
                     schedules into the serving workers at batch
                     boundaries (--tune-budget N bounds the search).
+                    --metrics-json PATH writes a versioned live-metrics
+                    snapshot (counters, gauges, histograms, cache
+                    hit-rate, per-shape traffic, per-step profile) every
+                    --metrics-every SECS (default 1) and once at exit,
+                    via tmp+rename so readers never see a torn file.
+                    --profile-every N samples every Nth inference for
+                    per-step attribution (0 = off; sampled rows land in
+                    the snapshot's \"profile\" array).
+                    --drift-retune watches served latency for sustained
+                    regressions and re-tunes the live bucket graphs
+                    in-situ when one is detected (arena only; hottest
+                    recorded shapes are re-tuned first).
+  profile           Per-step attribution table for the arena engine:
+                    run N seeded inferences with sampled step timing and
+                    print ns-per-step keyed by op/shape/layout/precision/
+                    ISA/micro tile [--batch 1 --image 32 --threads 1
+                    --iters 30 --profile-every 1 --layout NCHW
+                    --precision int8 --tuned records.json --json PATH]
   bench-table1      Table 1 (executor comparison)      [--epochs 110 --warmup 10]
   bench-table2      Table 2 (schedule sweep)           [--epochs 110 --warmup 10]
   bench-table3      Table 3 (batch sweep)              [--batches 1,16,64]
@@ -139,6 +157,7 @@ fn main() -> Result<()> {
         Some("inspect") => inspect(&artifacts)?,
         Some("run") => run_one(&artifacts, &args)?,
         Some("tune") => tune_cmd(&args)?,
+        Some("profile") => profile_cmd(&args)?,
         Some("serve") => serve_demo(&artifacts, &args)?,
         Some("bench-table1") => {
             table1(&BenchCtx::new(&artifacts, opts)?)?.0.print();
@@ -355,6 +374,9 @@ fn write_load_json(
     opts: &tvmq::bench::LoadOpts,
 ) -> Result<()> {
     use tvmq::util::json::Json;
+    // Latency and queue-wait percentiles are typed-optional: a trace that
+    // served nothing records null, never a silent 0.
+    let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
     let rows_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -368,11 +390,14 @@ fn write_load_json(
                 ("other_errors", Json::num(r.other_errors as f64)),
                 ("wall_s", Json::num(r.wall_s)),
                 ("throughput_rps", Json::num(r.throughput_rps)),
-                ("p50_ms", Json::num(r.p50_ms)),
-                ("p99_ms", Json::num(r.p99_ms)),
-                ("p999_ms", Json::num(r.p999_ms)),
+                ("p50_ms", opt(r.p50_ms)),
+                ("p99_ms", opt(r.p99_ms)),
+                ("p999_ms", opt(r.p999_ms)),
                 ("shed_rate", Json::num(r.shed_rate)),
                 ("mean_batch", Json::num(r.mean_batch)),
+                ("queue_depth_max", Json::num(r.queue_depth_max as f64)),
+                ("queue_wait_p50_ms", opt(r.queue_wait_p50_ms)),
+                ("queue_wait_p99_ms", opt(r.queue_wait_p99_ms)),
             ])
         })
         .collect();
@@ -425,6 +450,10 @@ fn write_arena_json(
                 ("gibs", Json::num(r.gibs)),
                 ("int8_ops_per_s", Json::num(r.int8_ops_per_s)),
                 ("roofline_frac", Json::num(r.roofline_frac)),
+                (
+                    "step_rows",
+                    Json::Arr(r.step_rows.iter().map(|s| s.to_json()).collect()),
+                ),
             ])
         })
         .collect();
@@ -635,6 +664,96 @@ fn merge_records_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `tvmq profile` — per-step attribution on the arena engine.  Builds
+/// the seeded model, attaches a fresh profile sink with `--profile-every`
+/// sampling (default: every inference), runs `--iters` seeded
+/// inferences, and prints ns-per-step keyed by (op, shape, layout,
+/// precision, ISA, micro tile) — heaviest steps first, with each step's
+/// share of the sampled total.  `--json PATH` writes the same rows
+/// machine-readably.
+fn profile_cmd(args: &Args) -> Result<()> {
+    use tvmq::executor::{ArenaExec, Executor};
+    use tvmq::graph::calibrate_ir;
+    use tvmq::metrics::Table;
+    use tvmq::telem::ProfileSink;
+    use tvmq::tune::TuneRecords;
+    use tvmq::util::json::Json;
+
+    let spec = {
+        let mut spec = EngineSpec::new(EngineKind::Arena);
+        spec.layout = args.str("layout", spec.layout.as_str()).parse()?;
+        spec.precision = args.str("precision", spec.precision.as_str()).parse()?;
+        spec
+    };
+    let batch = args.usize("batch", 1)?;
+    let image = args.usize("image", 32)?;
+    let threads = args.usize("threads", env_threads())?;
+    let iters = args.usize("iters", 30)?.max(1);
+    let every = args.u64("profile-every", 1)?.max(1);
+    let seed = args.u64("seed", 42)?;
+
+    let g = build_arena_model(spec, batch, image)?;
+    let mut exec = match args.opt_str("tuned") {
+        Some(path) => {
+            let records = TuneRecords::load(&path)?;
+            println!("profiling tuned schedule from {path}: {}", records.knob_summary());
+            ArenaExec::with_schedule(&g, records.fuse, threads, &records.overrides(threads))?
+        }
+        None => ArenaExec::with_options(&g, true, threads)?,
+    };
+    let sink = ProfileSink::new();
+    exec.set_profiling(every, &sink);
+    let x = calibrate_ir(&g, seed);
+    for _ in 0..iters {
+        exec.run(&x)?;
+    }
+
+    let rows = sink.rows();
+    let total_ns: u64 = rows.iter().map(|r| r.total_ns).sum();
+    let mut t = Table::new(
+        format!(
+            "tvmq profile — per-step attribution ({} {} batch {batch}, image {image}, \
+             {threads} thread(s), {iters} inference(s), sampled every {every})",
+            spec.layout, spec.precision
+        ),
+        &["Step op", "Shape", "Layout", "Prec", "ISA", "Micro", "Hits",
+          "Mean (µs)", "Total (ms)", "Share"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.key.op.clone(),
+            format!("{:?}", r.key.shape),
+            r.key.layout.clone(),
+            r.key.precision.clone(),
+            r.key.isa.clone(),
+            r.key.micro.clone(),
+            r.hits.to_string(),
+            format!("{:.1}", r.mean_ns() / 1e3),
+            format!("{:.3}", r.total_ns as f64 / 1e6),
+            format!("{:.1}%", 100.0 * r.total_ns as f64 / total_ns.max(1) as f64),
+        ]);
+    }
+    t.print();
+
+    if let Some(path) = args.opt_str("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("profile")),
+            ("layout", Json::str(spec.layout.as_str())),
+            ("precision", Json::str(spec.precision.as_str())),
+            ("batch", Json::num(batch as f64)),
+            ("image", Json::num(image as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("iters", Json::num(iters as f64)),
+            ("profile_every", Json::num(every as f64)),
+            ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("wrote {} profile rows to {path}", rows.len());
+    }
+    Ok(())
+}
+
 fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let spec = parse_spec(args)?;
     let cfg = ServeConfig {
@@ -647,14 +766,24 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let requests = args.usize("requests", 512)?;
     let clients = args.usize("clients", 32)?.max(1);
 
+    use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
     use tvmq::cache::{scan_tune_records, CompileCache, MERGED_RECORDS_FILE};
-    use tvmq::coordinator::insitu::{spawn_insitu_tuner, UpgradeSlot};
+    use tvmq::coordinator::insitu::{spawn_drift_retuner, spawn_insitu_tuner, UpgradeSlot};
+    use tvmq::telem::{CounterId, DriftConfig, Telemetry};
     use tvmq::tune::{TuneOptions, TuneRecords};
+
+    // The telemetry spine every worker publishes into: counters, gauges,
+    // histograms, the drift detector, and the per-step profile sink.
+    let telem = Telemetry::new(DriftConfig::default());
+    let metrics_json: Option<PathBuf> = args.opt_str("metrics-json").map(PathBuf::from);
+    let metrics_every = args.u64("metrics-every", 1)?.max(1);
+    let stop = Arc::new(AtomicBool::new(false));
 
     // Arena-only extras, reported on after the load finishes.
     let mut cache: Option<Arc<CompileCache>> = None;
     let mut tuner: Option<(std::thread::JoinHandle<()>, Arc<UpgradeSlot>)> = None;
+    let mut retuner: Option<std::thread::JoinHandle<()>> = None;
 
     // The arena engine serves natively compiled bucket engines (no
     // artifacts); the graph/vm engines serve AOT bundles from the
@@ -710,10 +839,17 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
             }
         }
 
-        // In-situ tuning: a background thread tunes the live bucket
-        // graphs and publishes strictly-better verified configs; workers
-        // hot-swap them at batch boundaries while serving continues.
-        if args.flag("insitu-tune") {
+        // Sampled per-step attribution: every Nth inference on every
+        // worker engine records ns-per-step into the shared sink, which
+        // the metrics snapshot exports as the "profile" array.
+        factory = factory.with_profiling(args.u64("profile-every", 0)?, telem.profile.clone());
+
+        // In-situ tuning and drift-driven re-tuning share the upgrade
+        // slot: a background thread tunes the live bucket graphs and
+        // publishes strictly-better verified configs; workers hot-swap
+        // them at batch boundaries while serving continues.
+        let drift_retune = args.flag("drift-retune");
+        if args.flag("insitu-tune") || drift_retune {
             let slot = UpgradeSlot::new();
             factory = factory.with_upgrade_slot(slot.clone());
             let opts = TuneOptions {
@@ -724,12 +860,29 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 iters: 3,
                 use_prior: true,
             };
-            let handle =
-                spawn_insitu_tuner(Arc::new(factory.clone()), slot.clone(), opts, cache.clone());
-            tuner = Some((handle, slot));
+            if args.flag("insitu-tune") {
+                let handle = spawn_insitu_tuner(
+                    Arc::new(factory.clone()),
+                    slot.clone(),
+                    opts,
+                    cache.clone(),
+                );
+                tuner = Some((handle, slot.clone()));
+            }
+            if drift_retune {
+                retuner = Some(spawn_drift_retuner(
+                    Arc::new(factory.clone()),
+                    slot,
+                    opts,
+                    cache.clone(),
+                    Arc::clone(&telem),
+                    Arc::clone(&stop),
+                ));
+            }
         }
 
-        let server = InferenceServer::start_with(factory, cfg)?;
+        let server =
+            InferenceServer::start_with_telemetry(factory, cfg, Some(Arc::clone(&telem)))?;
         // NHWC models take channels-last images; NCHW and packed NCHWc
         // models both take plain NCHW (the packed stem is unblocked).
         let rest = if spec.layout == LayoutTag::Nhwc {
@@ -753,6 +906,31 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         server.buckets,
         server.workers()
     );
+
+    // Periodic metrics snapshots (tmp+rename, so a reader never sees a
+    // torn file); one final snapshot is written after serving finishes.
+    let writer: Option<std::thread::JoinHandle<()>> = metrics_json.as_ref().map(|path| {
+        let telem = Arc::clone(&telem);
+        let cache = cache.clone();
+        let path = path.clone();
+        let stop = Arc::clone(&stop);
+        let every = Duration::from_secs(metrics_every);
+        std::thread::spawn(move || {
+            loop {
+                let stats = cache.as_ref().map(|c| c.stats());
+                if let Err(e) = telem.write_snapshot(&path, stats.as_ref()) {
+                    eprintln!("tvmq: warning: metrics snapshot: {e:#}");
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                while t0.elapsed() < every && !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        })
+    });
 
     let t0 = std::time::Instant::now();
     let per_client = (requests / clients).max(1);
@@ -788,16 +966,28 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         // Err, so adding client_errors here would double-count.
         stats.errors
     );
-    println!(
-        "latency ms: p50={:.2} p95={:.2} p99={:.2} p999={:.2}  mean batch={:.1}  \
-         batches={} padded={} shed={}",
-        lat.p50_ms, lat.p95_ms, lat.p99_ms, lat.p999_ms, stats.mean_batch(),
-        stats.batches, stats.padded_slots, stats.shed
-    );
+    match &lat.stats {
+        Some(s) => println!(
+            "latency ms: p50={:.2} p95={:.2} p99={:.2} p999={:.2} \
+             ({} sample(s){})  mean batch={:.1}  batches={} padded={} shed={}",
+            s.p50_ms, s.p95_ms, s.p99_ms, s.p999_ms,
+            lat.samples_seen,
+            if lat.sampled { ", reservoir-sampled" } else { "" },
+            stats.mean_batch(), stats.batches, stats.padded_slots, stats.shed
+        ),
+        None => println!(
+            "latency ms: no settled requests  mean batch={:.1}  \
+             batches={} padded={} shed={}",
+            stats.mean_batch(), stats.batches, stats.padded_slots, stats.shed
+        ),
+    }
     println!(
         "bucket histogram: {:?}  gathered histogram: {:?}",
         stats.batch_histogram, stats.gathered_histogram
     );
+    // Serving is done: stop the drift retuner and the metrics writer
+    // (the writer emits one final snapshot reflecting the finished run).
+    stop.store(true, Ordering::Relaxed);
     if let Some((handle, slot)) = tuner {
         // The tuner owns its own factory clone, so joining here only
         // waits on the search — serving already finished above.
@@ -806,6 +996,20 @@ fn serve_demo(artifacts: &PathBuf, args: &Args) -> Result<()> {
         println!("in-situ tuner finished: {} upgrade(s) published", ups.len());
         for u in ups {
             println!("  gen {}: {}", u.generation, u.describe);
+        }
+    }
+    if let Some(handle) = retuner {
+        let _ = handle.join();
+        println!(
+            "drift retuner: {} trigger(s), {} re-tune pass(es)",
+            telem.registry.counter(CounterId::DriftTriggers),
+            telem.registry.counter(CounterId::RetunePasses),
+        );
+    }
+    if let Some(handle) = writer {
+        let _ = handle.join();
+        if let Some(path) = &metrics_json {
+            println!("metrics snapshot -> {}", path.display());
         }
     }
     if let Some(c) = &cache {

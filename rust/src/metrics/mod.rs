@@ -26,32 +26,37 @@ pub struct EpochStats {
 }
 
 impl EpochStats {
-    pub fn from_samples(samples_ms: &[f64], warmup: usize) -> EpochStats {
+    /// Summarize the post-warmup samples.  Returns `None` when nothing
+    /// was measured (empty input, or warmup consumed every sample) — the
+    /// typed empty result.  It used to return all-zero stats for that
+    /// case, which read as "perfect latency" downstream; every caller
+    /// now decides explicitly what an empty measurement means.
+    pub fn from_samples(samples_ms: &[f64], warmup: usize) -> Option<EpochStats> {
         let measured = &samples_ms[warmup.min(samples_ms.len())..];
-        let n = measured.len().max(1);
+        if measured.is_empty() {
+            return None;
+        }
+        let n = measured.len();
         let mean = measured.iter().sum::<f64>() / n as f64;
         let var = measured.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
         let mut sorted: Vec<f64> = measured.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
         let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
             let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
             sorted[idx]
         };
-        EpochStats {
+        Some(EpochStats {
             epochs: samples_ms.len(),
             warmup,
             mean_ms: mean,
             std_ms: var.sqrt(),
-            min_ms: sorted.first().copied().unwrap_or(0.0),
+            min_ms: sorted[0],
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
             p999_ms: pct(0.999),
-            max_ms: sorted.last().copied().unwrap_or(0.0),
-        }
+            max_ms: sorted[n - 1],
+        })
     }
 }
 
@@ -67,7 +72,8 @@ pub fn measure<F: FnMut() -> anyhow::Result<()>>(
         f()?;
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    Ok(EpochStats::from_samples(&samples, warmup))
+    EpochStats::from_samples(&samples, warmup)
+        .ok_or_else(|| anyhow::anyhow!("measure: no post-warmup epochs ({epochs} epochs, {warmup} warmup)"))
 }
 
 /// "Improvement" in the paper's sense: baseline_time / this_time, as a

@@ -196,6 +196,44 @@ fn run_into_is_allocation_free_with_forced_microkernels() {
     }
 }
 
+#[test]
+fn run_into_is_allocation_free_with_telemetry_profiling_attached() {
+    use tvmq::telem::ProfileSink;
+
+    let _serial = SERIAL.lock().unwrap();
+
+    // Telemetry-on serving must not cost the zero-alloc contract: the
+    // profiler's cells were interned at build time, `should_sample` is
+    // one relaxed fetch_add per inference, and even a *sampled*
+    // inference only reads clocks and bumps pre-allocated atomics.
+    let g = build_conv_net(&NetSpec::small(1)).unwrap();
+    let qg = quantized(&g);
+    for t in [1usize, 4] {
+        // Sampling OFF on the measured inferences: with a huge period
+        // only the very first inference (tick 0, during warm-up) is
+        // sampled — the steady-state window runs the unsampled path.
+        let mut exec = ArenaExec::with_options(&qg, true, t).unwrap();
+        let sink = ProfileSink::new();
+        exec.set_profiling(1_000_000, &sink);
+        let x = calibrate_ir(&qg, 2);
+        assert_zero_alloc_steady_state(&exec, &x, &format!("profiled-off int8 t{t}"));
+
+        // Sampling ON for every inference: the sampled path itself is
+        // also allocation-free (clock reads + relaxed atomic adds).
+        let mut exec = ArenaExec::with_options(&qg, true, t).unwrap();
+        let sink = ProfileSink::new();
+        exec.set_profiling(1, &sink);
+        assert_zero_alloc_steady_state(&exec, &x, &format!("profiled-on int8 t{t}"));
+        let rows = sink.rows();
+        assert!(!rows.is_empty(), "sampled inferences recorded no steps");
+        assert!(rows.iter().all(|r| r.hits > 0), "every step was sampled 7 times");
+        assert!(
+            rows.iter().map(|r| r.total_ns).sum::<u64>() > 0,
+            "profile rows must carry real timings: {rows:?}"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Serve loop: the executor path stays allocation-free end-to-end
 // ---------------------------------------------------------------------------

@@ -168,6 +168,104 @@ fn faulty_upgrades_never_leak_and_each_reply_is_one_generation() {
     server.shutdown().unwrap();
 }
 
+/// Drift-driven re-tune end to end, fault-injected: a planted latency
+/// step-change must arm **exactly one** re-tune request, and the swap it
+/// drives must survive an injected failing build without dropping a
+/// request or leaking a rejected engine into a reply.
+#[test]
+fn planted_drift_triggers_exactly_one_retune_and_swap_survives_faults() {
+    use tvmq::telem::{DriftConfig, Telemetry};
+
+    const RETUNED_TAG: f32 = 2.0;
+    let telem = Telemetry::new(DriftConfig {
+        baseline: 64,
+        window: 16,
+        ratio: 1.5,
+        sustain: 2,
+    });
+    let slot = UpgradeSlot::new();
+    let server = InferenceServer::start_with_telemetry(
+        TagFactory { slot: slot.clone() },
+        ServeConfig {
+            spec: EngineSpec::new(EngineKind::Arena),
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(1),
+            workers: 2,
+            ..ServeConfig::default()
+        },
+        Some(Arc::clone(&telem)),
+    )
+    .unwrap();
+
+    // Phase 1 — stationary seeded traffic: jittered ~800µs latencies
+    // (bucket-stable around p50) must never read as drift.
+    let mut rng = Rng64::seed_from_u64(17);
+    for _ in 0..200 {
+        telem.observe_latency_us(750 + (rng.f32() * 100.0) as u64);
+    }
+    assert_eq!(telem.drift_triggers(), 0, "stationary trace must not trigger");
+    assert!(!telem.retune_pending());
+
+    // Phase 2 — planted step-change: a sustained ~8× regression must
+    // trigger exactly once (the detector re-baselines after firing, so
+    // the persisting slow level is the new normal, not a second drift).
+    for _ in 0..200 {
+        telem.observe_latency_us(6200 + (rng.f32() * 400.0) as u64);
+    }
+    assert_eq!(telem.drift_triggers(), 1, "planted regression triggers exactly once");
+    assert!(telem.retune_pending());
+    assert!(telem.take_retune_request(), "the armed request is claimable");
+    assert!(
+        !telem.take_retune_request(),
+        "claims coalesce: one trigger, one re-tune pass"
+    );
+
+    // Phase 3 — the drift-driven rebuild, fault-injected: the first
+    // build fails (must be skipped, gen 0 keeps serving), then the good
+    // rebuilds land for both buckets and the workers adopt them at a
+    // batch boundary while requests keep flowing.
+    slot.publish(
+        1,
+        1.0,
+        2.0,
+        "injected failing drift rebuild".into(),
+        Box::new(|| Err(anyhow!("injected drift-rebuild failure"))),
+    );
+    for b in [1usize, 2] {
+        slot.publish(
+            b,
+            1.0,
+            2.0,
+            format!("drift re-tune bucket {b}"),
+            Box::new(move || {
+                Ok(Box::new(TagExec { batch: b, tag: RETUNED_TAG }) as Box<dyn Executor>)
+            }),
+        );
+    }
+    let img = TensorData::from_f32(vec![1, DIM], &[0.5; DIM]).unwrap();
+    let mut saw_retuned = false;
+    for i in 0..200usize {
+        let out = server.submit_blocking(img.clone()).unwrap();
+        let logits = out.logits.as_f32().unwrap();
+        let first = logits[0];
+        assert!(
+            logits.iter().all(|v| v.to_bits() == first.to_bits()),
+            "request {i}: mixed-generation reply {logits:?}"
+        );
+        assert!(
+            first == 0.0 || first == RETUNED_TAG,
+            "request {i}: served by a rejected engine (tag {first})"
+        );
+        saw_retuned |= first == RETUNED_TAG;
+    }
+    assert!(saw_retuned, "the drift-driven rebuild was never adopted");
+
+    let stats = server.stats();
+    assert_eq!(stats.errors, 0, "no request may fail across the drift re-tune");
+    assert_eq!(stats.requests, 200);
+    server.shutdown().unwrap();
+}
+
 const IMAGE: usize = 12;
 
 fn seeded_image(seed: u64) -> TensorData {
